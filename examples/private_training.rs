@@ -1,0 +1,90 @@
+//! Privacy-hardened federated training: AES-sealed transport, pairwise-
+//! mask secure aggregation, and differential privacy with an (ε, δ)
+//! accountant — the paper's §3.1 "Ensure Data Security" phase plus its
+//! encryption / differential-privacy discussion, end to end.
+//!
+//!     cargo run --release --example private_training
+
+use crossfed::cluster::ClusterSpec;
+use crossfed::config::preset;
+use crossfed::coordinator::Coordinator;
+use crossfed::crypto::he_cost;
+use crossfed::model::{Manifest, ParamSet};
+use crossfed::privacy::DpConfig;
+use crossfed::runtime::StepRuntime;
+use crossfed::util::bytes::{human_bytes, human_duration};
+
+fn main() -> anyhow::Result<()> {
+    crossfed::util::logging::init();
+    let manifest = Manifest::load(std::path::Path::new("artifacts"), "tiny")?;
+    let backend = StepRuntime::load(&manifest)?;
+    let cluster = ClusterSpec::paper_default();
+
+    let variants: Vec<(&str, Box<dyn Fn(&mut crossfed::config::ExperimentConfig)>)> = vec![
+        ("baseline (no crypto)", Box::new(|c| {
+            c.encrypt = false;
+        })),
+        ("aes transport", Box::new(|c| {
+            c.encrypt = true;
+        })),
+        ("aes + secure-agg", Box::new(|c| {
+            c.encrypt = true;
+            c.secure_agg = true;
+        })),
+        // NOTE on the noise multiplier: with only N=3 cross-silo clients
+        // there is no averaging over thousands of updates, so meaningful
+        // (ε < 10) DP noise would destroy this small model. z=0.02 shows
+        // the full mechanism (clip → noise → accountant) with honest —
+        // i.e. weak — ε, which we report as such.
+        ("aes + secure-agg + dp", Box::new(|c| {
+            c.encrypt = true;
+            c.secure_agg = true;
+            c.dp = DpConfig { clip_norm: 2.0, noise_multiplier: 0.02, delta: 1e-5 };
+        })),
+    ];
+
+    println!("{:<24} {:>10} {:>10} {:>8} {:>8} {:>10}",
+             "variant", "eval_loss", "acc", "comm", "time", "epsilon");
+    for (name, tweak) in variants {
+        let mut cfg = preset("paper-fedavg").unwrap();
+        cfg.name = name.to_string();
+        cfg.rounds = 30;
+        cfg.target_loss = None;
+        cfg.eval_every = 5;
+        tweak(&mut cfg);
+        cfg.validate()?;
+        let init = ParamSet::init(&manifest, cfg.seed);
+        let mut coord = Coordinator::new(
+            cfg,
+            cluster.clone(),
+            &backend,
+            init,
+            manifest.model.batch_size,
+            manifest.model.seq_len,
+        )?;
+        let r = coord.run()?;
+        let eps = r.history.last().map(|h| h.epsilon).unwrap_or(0.0);
+        println!(
+            "{name:<24} {:>10.3} {:>9.1}% {:>8} {:>8} {:>10}",
+            r.final_eval_loss,
+            r.acc_pct(),
+            human_bytes(r.wire_bytes),
+            human_duration(r.sim_secs),
+            if eps > 0.0 { format!("{eps:.1}") } else { "-".into() },
+        );
+    }
+
+    // price the homomorphic-encryption alternative the paper names
+    let n = manifest.model.n_params;
+    let he = he_cost();
+    println!(
+        "\nfor reference, Paillier-2048 HE on this model ({n} params):\n  \
+         {} per update on the wire (vs {} masked) and ~{} extra per round",
+        human_bytes(he.wire_bytes(n)),
+        human_bytes((n * 4) as u64),
+        human_duration(he.round_secs(3, n)),
+    );
+    println!("masking-based secure aggregation delivers the same sum-only \
+              visibility at ~zero cost — see DESIGN.md §Substitutions");
+    Ok(())
+}

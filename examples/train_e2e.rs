@@ -1,0 +1,104 @@
+//! End-to-end validation driver (DESIGN.md / EXPERIMENTS.md §E2E).
+//!
+//! Trains the transformer LM federatedly across the three simulated
+//! clouds for a few hundred rounds with gradient aggregation (the
+//! paper's best algorithm), on the synthetic topic corpus, and logs the
+//! full loss curve. This is the run recorded in EXPERIMENTS.md.
+//!
+//!     make artifacts
+//!     cargo run --release --example train_e2e [-- --rounds 300 --model tiny]
+//!
+//! Outputs: target/report/e2e_curve.csv + a summary block on stdout.
+
+use crossfed::cluster::ClusterSpec;
+use crossfed::compress::Compression;
+use crossfed::config::preset;
+use crossfed::coordinator::Coordinator;
+use crossfed::data::CorpusConfig;
+use crossfed::model::{Manifest, ParamSet};
+use crossfed::report;
+use crossfed::runtime::{execution_count, StepRuntime};
+use crossfed::util::bytes::{human_bytes, human_duration};
+
+fn arg(name: &str, default: &str) -> String {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1).cloned())
+        .unwrap_or_else(|| default.to_string())
+}
+
+fn main() -> anyhow::Result<()> {
+    crossfed::util::logging::init();
+    let rounds: usize = arg("--rounds", "300").parse()?;
+    let model: String = arg("--model", "tiny");
+
+    let manifest = Manifest::load(std::path::Path::new("artifacts"), &model)?;
+    let backend = StepRuntime::load(&manifest)?;
+    println!(
+        "e2e: {} preset, {:.2}M params, {} rounds x 3 platforms x local steps",
+        model,
+        manifest.model.n_params as f64 / 1e6,
+        rounds
+    );
+
+    let mut cfg = preset("paper-gradient").expect("builtin");
+    cfg.name = format!("e2e-{model}");
+    cfg.rounds = rounds;
+    cfg.target_loss = None; // run the full schedule, record the curve
+    cfg.eval_every = 10;
+    cfg.eval_batches = 8;
+    cfg.local_steps = 4;
+    cfg.compression = Compression::TopK { ratio: 0.25 };
+    cfg.error_feedback = true;
+    cfg.corpus = CorpusConfig {
+        n_docs: 600,
+        doc_sentences: 12,
+        n_topics: 6,
+        seed: 1234,
+    };
+
+    let cluster = ClusterSpec::paper_default();
+    let init = ParamSet::init(&manifest, cfg.seed);
+    let t0 = std::time::Instant::now();
+    let mut coord = Coordinator::new(
+        cfg,
+        cluster,
+        &backend,
+        init,
+        manifest.model.batch_size,
+        manifest.model.seq_len,
+    )?;
+    let result = coord.run()?;
+    let host = t0.elapsed().as_secs_f64();
+
+    report::save("e2e_curve.csv", &result.curve_csv());
+    println!("\nloss curve written to target/report/e2e_curve.csv");
+    println!("\n=== E2E summary ===");
+    let first_eval = result
+        .history
+        .iter()
+        .find_map(|r| r.eval_loss)
+        .unwrap_or(f32::NAN);
+    println!("rounds run          : {}", result.rounds_run);
+    println!("eval loss           : {first_eval:.3} -> {:.3}", result.final_eval_loss);
+    println!("token accuracy      : {:.1}%", result.acc_pct());
+    println!("wire bytes          : {}", human_bytes(result.wire_bytes));
+    println!("simulated time      : {}", human_duration(result.sim_secs));
+    println!("host wall-clock     : {}", human_duration(host));
+    println!("PJRT executions     : {}", execution_count());
+    println!(
+        "host compute share  : {:.0}% of wall-clock inside PJRT+agg",
+        100.0 * result.host_compute_secs / host
+    );
+
+    // the run is only a valid E2E check if the model actually learned
+    anyhow::ensure!(
+        result.final_eval_loss < first_eval * 0.75,
+        "E2E FAILED: eval loss did not improve enough \
+         ({first_eval:.3} -> {:.3})",
+        result.final_eval_loss
+    );
+    println!("\nE2E OK: loss curve decreased as expected");
+    Ok(())
+}

@@ -1,0 +1,133 @@
+"""AOT lowering: JAX (L2 + L1) -> HLO text + manifest.json for the rust runtime.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the image's xla_extension
+0.5.1 (behind the published ``xla`` 0.1.6 crate) rejects
+(``proto.id() <= INT_MAX``). The HLO text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Outputs, per model preset, under ``--out`` (default ../artifacts):
+
+  train_<preset>.hlo.txt   train_step(params..., tokens, targets)
+                             -> tuple(loss, grads...)
+  eval_<preset>.hlo.txt    eval_step(params..., tokens, targets)
+                             -> tuple(loss, n_correct)
+  manifest_<preset>.json   model dims + ordered param specs + io schema
+
+Run once via ``make artifacts``; python never appears on the training path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model as model_lib
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def lower_preset(preset: str, out_dir: str) -> dict:
+    """Lower train/eval for one preset; returns the manifest dict."""
+    cfg = model_lib.PRESETS[preset]
+    specs = model_lib.param_specs(cfg)
+
+    param_args = [jax.ShapeDtypeStruct(s.shape, jnp.float32) for s in specs]
+    tokens = jax.ShapeDtypeStruct((cfg.batch_size, cfg.seq_len), jnp.int32)
+    targets = jax.ShapeDtypeStruct((cfg.batch_size, cfg.seq_len), jnp.int32)
+
+    def train_fn(*args):
+        params = list(args[: len(specs)])
+        return model_lib.train_step(params, args[-2], args[-1], cfg)
+
+    def eval_fn(*args):
+        params = list(args[: len(specs)])
+        return model_lib.eval_step(params, args[-2], args[-1], cfg)
+
+    files = {}
+    for name, fn in (("train", train_fn), ("eval", eval_fn)):
+        lowered = jax.jit(fn).lower(*param_args, tokens, targets)
+        text = to_hlo_text(lowered)
+        fname = f"{name}_{preset}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        files[name] = fname
+        print(f"  wrote {fname} ({len(text) / 1e6:.2f} MB hlo text)")
+
+    manifest = {
+        "preset": preset,
+        "model": {
+            "vocab_size": cfg.vocab_size,
+            "d_model": cfg.d_model,
+            "n_heads": cfg.n_heads,
+            "n_layers": cfg.n_layers,
+            "d_ff": cfg.d_ff,
+            "seq_len": cfg.seq_len,
+            "batch_size": cfg.batch_size,
+            "n_params": model_lib.n_params(cfg),
+        },
+        "params": [
+            {
+                "name": s.name,
+                "shape": list(s.shape),
+                "init": s.init,
+                "std": s.std,
+            }
+            for s in specs
+        ],
+        "io": {
+            # argument order: params..., tokens, targets
+            "extra_inputs": [
+                {"name": "tokens",
+                 "shape": [cfg.batch_size, cfg.seq_len], "dtype": "i32"},
+                {"name": "targets",
+                 "shape": [cfg.batch_size, cfg.seq_len], "dtype": "i32"},
+            ],
+            # tuple outputs
+            "train_outputs": ["loss"] + [f"grad:{s.name}" for s in specs],
+            "eval_outputs": ["loss", "n_correct"],
+        },
+        "artifacts": files,
+    }
+    mname = os.path.join(out_dir, f"manifest_{preset}.json")
+    with open(mname, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"  wrote manifest_{preset}.json "
+          f"({manifest['model']['n_params']/1e6:.2f}M params)")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="output directory for HLO text + manifests")
+    ap.add_argument("--presets", default="tiny,small",
+                    help="comma-separated preset names "
+                         f"(available: {','.join(model_lib.PRESETS)})")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    for preset in args.presets.split(","):
+        preset = preset.strip()
+        if preset not in model_lib.PRESETS:
+            sys.exit(f"unknown preset {preset!r}; "
+                     f"available: {', '.join(model_lib.PRESETS)}")
+        print(f"lowering preset {preset} ...")
+        lower_preset(preset, args.out)
+
+
+if __name__ == "__main__":
+    main()

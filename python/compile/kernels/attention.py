@@ -1,0 +1,196 @@
+"""L1: fused multi-head self-attention as Pallas kernels (fwd + bwd).
+
+The paper's compute hot-spot (the transformer's attention) is written as a
+pair of Pallas kernels wired together with ``jax.custom_vjp`` so the whole
+fwd+bwd trains through the kernels and lowers into the single AOT HLO module
+the rust runtime executes.
+
+TPU adaptation (see DESIGN.md §Hardware-Adaptation):
+  * grid = (batch * heads,): one grid cell owns the full (S, D) Q/K/V tiles
+    in VMEM. For the model sizes this repo targets (S <= 256, D <= 64) the
+    per-cell footprint is Q+K+V+O+dO+scratch ~= 6*S*D*4B + S*S*4B < 1 MiB,
+    far under the ~16 MiB VMEM budget — no inner K/V loop needed.
+  * the (S,D)x(D,S) and (S,S)x(S,D) matmuls are MXU-shaped with
+    ``preferred_element_type=jnp.float32``.
+  * ``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+    custom-calls; interpret mode lowers to plain HLO so the same module runs
+    under the rust CPU client. Real-TPU performance is *estimated* in
+    DESIGN.md §Perf, not measured.
+
+The forward kernel saves the per-row log-sum-exp so the backward kernel can
+re-materialize the probability matrix without re-running the softmax
+reduction (the standard flash-attention recompute formulation).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Interpret mode is mandatory on this image (CPU PJRT): real TPU lowering
+# emits a Mosaic custom-call the CPU plugin rejects.
+INTERPRET = True
+
+_NEG_INF = -1e30
+
+
+def _causal_mask(s: int) -> jnp.ndarray:
+    """(s, s) additive mask: 0 on/below the diagonal, -inf above."""
+    row = jax.lax.broadcasted_iota(jnp.int32, (s, s), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (s, s), 1)
+    return jnp.where(row >= col, 0.0, _NEG_INF).astype(jnp.float32)
+
+
+def _mxu_matmul(a, b, dims):
+    """dot_general with f32 accumulate — the MXU-shaped contraction."""
+    return jax.lax.dot_general(
+        a, b, dimension_numbers=(dims, ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# forward kernel
+# ---------------------------------------------------------------------------
+
+
+def _attn_fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, *, scale: float,
+                     causal: bool):
+    """One grid cell = one (batch, head) pair; full sequence in VMEM.
+
+    Block shapes per cell: q/k/v/o: (1, S, D), lse: (1, S).
+    """
+    q = q_ref[0].astype(jnp.float32)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+
+    # (S, S) score matrix on the MXU: s = q k^T * scale
+    s = _mxu_matmul(q, k, ((1,), (1,))) * scale
+    if causal:
+        s = s + _causal_mask(q.shape[0])
+
+    # numerically stable softmax with saved log-sum-exp
+    m = jnp.max(s, axis=1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=1, keepdims=True)
+    o = _mxu_matmul(p, v, ((1,), (0,))) / l
+    o_ref[0] = o.astype(o_ref.dtype)
+    lse_ref[0] = (m[:, 0] + jnp.log(l[:, 0])).astype(lse_ref.dtype)
+
+
+def _attn_fwd_call(q, k, v, *, scale: float, causal: bool):
+    """q/k/v: (BH, S, D) -> (o: (BH, S, D), lse: (BH, S))."""
+    bh, s, d = q.shape
+    block = pl.BlockSpec((1, s, d), lambda i: (i, 0, 0))
+    lse_block = pl.BlockSpec((1, s), lambda i: (i, 0))
+    kernel = functools.partial(_attn_fwd_kernel, scale=scale, causal=causal)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(bh,),
+        in_specs=[block, block, block],
+        out_specs=[block, lse_block],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+            jax.ShapeDtypeStruct((bh, s), jnp.float32),
+        ],
+        interpret=INTERPRET,
+    )(q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# backward kernel
+# ---------------------------------------------------------------------------
+
+
+def _attn_bwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, do_ref,
+                     dq_ref, dk_ref, dv_ref, *, scale: float, causal: bool):
+    """Recompute-formulation backward for one (batch, head) cell."""
+    q = q_ref[0].astype(jnp.float32)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    o = o_ref[0].astype(jnp.float32)
+    lse = lse_ref[0].astype(jnp.float32)
+    do = do_ref[0].astype(jnp.float32)
+
+    s = _mxu_matmul(q, k, ((1,), (1,))) * scale
+    if causal:
+        s = s + _causal_mask(q.shape[0])
+    # p is the exact softmax matrix (re-materialized from the saved lse)
+    p = jnp.exp(s - lse[:, None])
+
+    # dV = P^T dO
+    dv = _mxu_matmul(p, do, ((0,), (0,)))
+    # dP = dO V^T
+    dp = _mxu_matmul(do, v, ((1,), (1,)))
+    # delta_i = sum_j dO_ij O_ij  (softmax jacobian diagonal term)
+    delta = jnp.sum(do * o, axis=1, keepdims=True)
+    ds = p * (dp - delta)
+    # dQ = dS K * scale ; dK = dS^T Q * scale
+    dq = _mxu_matmul(ds, k, ((1,), (0,))) * scale
+    dk = _mxu_matmul(ds, q, ((0,), (0,))) * scale
+
+    dq_ref[0] = dq.astype(dq_ref.dtype)
+    dk_ref[0] = dk.astype(dk_ref.dtype)
+    dv_ref[0] = dv.astype(dv_ref.dtype)
+
+
+def _attn_bwd_call(q, k, v, o, lse, do, *, scale: float, causal: bool):
+    bh, s, d = q.shape
+    block = pl.BlockSpec((1, s, d), lambda i: (i, 0, 0))
+    lse_block = pl.BlockSpec((1, s), lambda i: (i, 0))
+    kernel = functools.partial(_attn_bwd_kernel, scale=scale, causal=causal)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(bh,),
+        in_specs=[block, block, block, block, lse_block, block],
+        out_specs=[block, block, block],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+            jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+            jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        ],
+        interpret=INTERPRET,
+    )(q, k, v, o, lse, do)
+
+
+# ---------------------------------------------------------------------------
+# public API: custom_vjp attention over (B, H, S, D)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def attention(q, k, v, causal: bool = True):
+    """Fused multi-head attention. q/k/v: (B, H, S, D) -> (B, H, S, D).
+
+    Forward and backward both run as Pallas kernels; gradients w.r.t.
+    q, k and v flow through ``jax.custom_vjp``.
+    """
+    out, _ = _attention_fwd_rule(q, k, v, causal)
+    return out
+
+
+def _attention_fwd_rule(q, k, v, causal: bool):
+    b, h, s, d = q.shape
+    scale = 1.0 / (d ** 0.5)
+    qf = q.reshape(b * h, s, d)
+    kf = k.reshape(b * h, s, d)
+    vf = v.reshape(b * h, s, d)
+    o, lse = _attn_fwd_call(qf, kf, vf, scale=scale, causal=causal)
+    return o.reshape(b, h, s, d), (qf, kf, vf, o, lse, (b, h, s, d))
+
+
+def _attention_bwd_rule(causal: bool, res, g):
+    qf, kf, vf, o, lse, (b, h, s, d) = res
+    scale = 1.0 / (d ** 0.5)
+    gf = g.reshape(b * h, s, d)
+    dq, dk, dv = _attn_bwd_call(qf, kf, vf, o, lse, gf,
+                                scale=scale, causal=causal)
+    return (dq.reshape(b, h, s, d), dk.reshape(b, h, s, d),
+            dv.reshape(b, h, s, d))
+
+
+attention.defvjp(_attention_fwd_rule, _attention_bwd_rule)

@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the Pallas kernels.
+
+Everything here is reference-quality, not performance-quality: the pytest
+suite asserts the Pallas kernels (and their custom_vjp gradients) match
+these functions to tight tolerances.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, causal: bool = True):
+    """Reference multi-head attention. q/k/v: (B, H, S, D)."""
+    b, h, s, d = q.shape
+    scale = 1.0 / (d ** 0.5)
+    scores = jnp.einsum("bhsd,bhtd->bhst", q, k).astype(jnp.float32) * scale
+    if causal:
+        row = jnp.arange(s)[:, None]
+        col = jnp.arange(s)[None, :]
+        scores = jnp.where(row >= col, scores, _NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", probs, v).astype(q.dtype)
+
+
+def attention_lse_ref(q, k, v, causal: bool = True):
+    """Reference per-row log-sum-exp, matching the fwd kernel's save."""
+    b, h, s, d = q.shape
+    scale = 1.0 / (d ** 0.5)
+    scores = jnp.einsum("bhsd,bhtd->bhst", q, k).astype(jnp.float32) * scale
+    if causal:
+        row = jnp.arange(s)[:, None]
+        col = jnp.arange(s)[None, :]
+        scores = jnp.where(row >= col, scores, _NEG_INF)
+    return jax.scipy.special.logsumexp(scores, axis=-1)

@@ -1,0 +1,212 @@
+"""L2: GPT-style transformer language model in JAX (build-time only).
+
+The federated workload of the paper is "a pre-trained large-scale language
+model" trained on WikiText-103 across three clouds. This module defines the
+scaled-down stand-in (see DESIGN.md substitution table): a pre-LN causal
+transformer LM whose attention runs through the L1 Pallas kernels.
+
+Everything the rust coordinator needs at runtime is lowered AOT by
+``aot.py`` into two HLO modules:
+
+  * ``train_step(params..., tokens, targets) -> (loss, grads...)``
+  * ``eval_step(params..., tokens, targets)  -> (loss, n_correct)``
+
+Parameters are handled as a *flat ordered list* of leaves; the ordering is
+the single source of truth shared with rust via ``manifest.json``
+(name/shape/init per leaf, in argument order).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.attention import attention
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Dimensions of the transformer LM."""
+
+    vocab_size: int = 96
+    d_model: int = 64
+    n_heads: int = 2
+    n_layers: int = 2
+    d_ff: int = 256
+    seq_len: int = 64
+    batch_size: int = 8
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+# Named presets shared with the rust side (manifest records the one used).
+PRESETS: Dict[str, ModelConfig] = {
+    # unit-test scale: seconds per artifact build
+    "tiny": ModelConfig(vocab_size=96, d_model=64, n_heads=2, n_layers=2,
+                        d_ff=256, seq_len=64, batch_size=8),
+    # bench scale for the paper tables
+    "small": ModelConfig(vocab_size=96, d_model=128, n_heads=4, n_layers=4,
+                         d_ff=512, seq_len=128, batch_size=8),
+    # end-to-end example scale (~6.4M params)
+    "e2e": ModelConfig(vocab_size=96, d_model=256, n_heads=8, n_layers=8,
+                       d_ff=1024, seq_len=128, batch_size=8),
+}
+
+
+# ---------------------------------------------------------------------------
+# parameter schema
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    name: str
+    shape: Tuple[int, ...]
+    init: str        # "normal" | "zeros" | "ones"
+    std: float = 0.0  # for init == "normal"
+
+
+def param_specs(cfg: ModelConfig) -> List[ParamSpec]:
+    """The flat, ordered parameter schema. Order == HLO argument order."""
+    w_std = 0.02
+    # residual-branch output projections get the GPT-2 depth-scaled init
+    o_std = 0.02 / (2.0 * cfg.n_layers) ** 0.5
+    specs: List[ParamSpec] = [
+        ParamSpec("tok_emb", (cfg.vocab_size, cfg.d_model), "normal", w_std),
+        ParamSpec("pos_emb", (cfg.seq_len, cfg.d_model), "normal", w_std),
+    ]
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        specs += [
+            ParamSpec(p + "ln1.scale", (cfg.d_model,), "ones"),
+            ParamSpec(p + "ln1.bias", (cfg.d_model,), "zeros"),
+            ParamSpec(p + "attn.wq", (cfg.d_model, cfg.d_model), "normal", w_std),
+            ParamSpec(p + "attn.wk", (cfg.d_model, cfg.d_model), "normal", w_std),
+            ParamSpec(p + "attn.wv", (cfg.d_model, cfg.d_model), "normal", w_std),
+            ParamSpec(p + "attn.wo", (cfg.d_model, cfg.d_model), "normal", o_std),
+            ParamSpec(p + "ln2.scale", (cfg.d_model,), "ones"),
+            ParamSpec(p + "ln2.bias", (cfg.d_model,), "zeros"),
+            ParamSpec(p + "mlp.w1", (cfg.d_model, cfg.d_ff), "normal", w_std),
+            ParamSpec(p + "mlp.b1", (cfg.d_ff,), "zeros"),
+            ParamSpec(p + "mlp.w2", (cfg.d_ff, cfg.d_model), "normal", o_std),
+            ParamSpec(p + "mlp.b2", (cfg.d_model,), "zeros"),
+        ]
+    specs += [
+        ParamSpec("ln_f.scale", (cfg.d_model,), "ones"),
+        ParamSpec("ln_f.bias", (cfg.d_model,), "zeros"),
+    ]
+    return specs
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> List[jnp.ndarray]:
+    """Initialize the flat parameter list (used by python tests; the rust
+    runtime re-implements the same init from the manifest)."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for spec in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if spec.init == "normal":
+            params.append(
+                jax.random.normal(sub, spec.shape, jnp.float32) * spec.std)
+        elif spec.init == "zeros":
+            params.append(jnp.zeros(spec.shape, jnp.float32))
+        elif spec.init == "ones":
+            params.append(jnp.ones(spec.shape, jnp.float32))
+        else:  # pragma: no cover - schema is closed
+            raise ValueError(spec.init)
+    return params
+
+
+def n_params(cfg: ModelConfig) -> int:
+    total = 0
+    for spec in param_specs(cfg):
+        n = 1
+        for d in spec.shape:
+            n *= d
+        total += n
+    return total
+
+
+# ---------------------------------------------------------------------------
+# forward pass
+# ---------------------------------------------------------------------------
+
+
+def _layer_norm(x, scale, bias, eps: float = 1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+def _unpack(params: List[jnp.ndarray], cfg: ModelConfig):
+    """Flat list -> name-addressable dict, following param_specs order."""
+    return {spec.name: p for spec, p in zip(param_specs(cfg), params)}
+
+
+def forward(params: List[jnp.ndarray], tokens: jnp.ndarray,
+            cfg: ModelConfig) -> jnp.ndarray:
+    """tokens: i32 (B, S) -> logits f32 (B, S, V)."""
+    p = _unpack(params, cfg)
+    b, s = tokens.shape
+    x = p["tok_emb"][tokens] + p["pos_emb"][None, :s, :]
+
+    for i in range(cfg.n_layers):
+        pre = f"layer{i}."
+        h = _layer_norm(x, p[pre + "ln1.scale"], p[pre + "ln1.bias"])
+        q = h @ p[pre + "attn.wq"]
+        k = h @ p[pre + "attn.wk"]
+        v = h @ p[pre + "attn.wv"]
+        # (B, S, D) -> (B, H, S, Dh) for the Pallas kernel
+        def split(t):
+            return t.reshape(b, s, cfg.n_heads, cfg.head_dim).transpose(
+                0, 2, 1, 3)
+        o = attention(split(q), split(k), split(v), True)
+        o = o.transpose(0, 2, 1, 3).reshape(b, s, cfg.d_model)
+        x = x + o @ p[pre + "attn.wo"]
+
+        h = _layer_norm(x, p[pre + "ln2.scale"], p[pre + "ln2.bias"])
+        h = jax.nn.gelu(h @ p[pre + "mlp.w1"] + p[pre + "mlp.b1"])
+        x = x + h @ p[pre + "mlp.w2"] + p[pre + "mlp.b2"]
+
+    x = _layer_norm(x, p["ln_f.scale"], p["ln_f.bias"])
+    # tied output head
+    return x @ p["tok_emb"].T
+
+
+def loss_fn(params: List[jnp.ndarray], tokens: jnp.ndarray,
+            targets: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Mean cross-entropy over all (B, S) positions."""
+    logits = forward(params, tokens, cfg)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+# ---------------------------------------------------------------------------
+# AOT entry points
+# ---------------------------------------------------------------------------
+
+
+def train_step(params: List[jnp.ndarray], tokens: jnp.ndarray,
+               targets: jnp.ndarray, cfg: ModelConfig):
+    """-> (loss, *grads). The rust side owns the optimizer update."""
+    loss, grads = jax.value_and_grad(
+        lambda ps: loss_fn(ps, tokens, targets, cfg))(params)
+    return (loss, *grads)
+
+
+def eval_step(params: List[jnp.ndarray], tokens: jnp.ndarray,
+              targets: jnp.ndarray, cfg: ModelConfig):
+    """-> (loss, n_correct) where n_correct counts top-1 next-token hits."""
+    logits = forward(params, tokens, cfg)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    pred = jnp.argmax(logits, axis=-1)
+    n_correct = jnp.sum((pred == targets).astype(jnp.int32))
+    return jnp.mean(nll), n_correct

@@ -1,0 +1,131 @@
+"""L2 correctness: transformer LM shapes, loss behaviour, grads."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as m
+from compile.kernels import ref as ref_lib
+
+
+CFG = m.ModelConfig(vocab_size=17, d_model=16, n_heads=2, n_layers=2,
+                    d_ff=32, seq_len=12, batch_size=3)
+
+
+def data(cfg, seed=0):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    tok = jax.random.randint(k1, (cfg.batch_size, cfg.seq_len), 0,
+                             cfg.vocab_size)
+    tgt = jax.random.randint(k2, (cfg.batch_size, cfg.seq_len), 0,
+                             cfg.vocab_size)
+    return tok, tgt
+
+
+def test_param_specs_count_and_order():
+    specs = m.param_specs(CFG)
+    # 2 emb + 12/layer + 2 final
+    assert len(specs) == 2 + 12 * CFG.n_layers + 2
+    assert specs[0].name == "tok_emb"
+    assert specs[-1].name == "ln_f.bias"
+    # names unique
+    names = [s.name for s in specs]
+    assert len(set(names)) == len(names)
+    assert m.n_params(CFG) == sum(int(np.prod(s.shape)) for s in specs)
+
+
+def test_forward_shape_and_dtype():
+    params = m.init_params(CFG, 0)
+    tok, _ = data(CFG)
+    logits = m.forward(params, tok, CFG)
+    assert logits.shape == (CFG.batch_size, CFG.seq_len, CFG.vocab_size)
+    assert logits.dtype == jnp.float32
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_initial_loss_near_uniform():
+    params = m.init_params(CFG, 0)
+    tok, tgt = data(CFG)
+    loss = m.loss_fn(params, tok, tgt, CFG)
+    assert abs(float(loss) - np.log(CFG.vocab_size)) < 0.3
+
+
+def test_train_step_output_arity():
+    params = m.init_params(CFG, 0)
+    tok, tgt = data(CFG)
+    out = m.train_step(params, tok, tgt, CFG)
+    assert len(out) == 1 + len(params)
+    for g, p in zip(out[1:], params):
+        assert g.shape == p.shape
+        assert np.isfinite(np.asarray(g)).all()
+
+
+def test_sgd_overfits_single_batch():
+    params = m.init_params(CFG, 0)
+    tok, tgt = data(CFG)
+    step = jax.jit(lambda ps: m.train_step(ps, tok, tgt, CFG))
+    loss0 = float(step(params)[0])
+    for _ in range(40):
+        out = step(params)
+        params = [p - 0.5 * g for p, g in zip(params, out[1:])]
+    loss1 = float(m.loss_fn(params, tok, tgt, CFG))
+    assert loss1 < loss0 - 1.0, f"{loss0} -> {loss1}"
+
+
+def test_eval_step_consistent_with_loss():
+    params = m.init_params(CFG, 1)
+    tok, tgt = data(CFG, 2)
+    loss, n_correct = m.eval_step(params, tok, tgt, CFG)
+    assert float(loss) == pytest.approx(
+        float(m.loss_fn(params, tok, tgt, CFG)), rel=1e-6)
+    assert 0 <= int(n_correct) <= CFG.batch_size * CFG.seq_len
+
+
+def test_eval_perfect_when_targets_are_argmax():
+    params = m.init_params(CFG, 3)
+    tok, _ = data(CFG, 3)
+    logits = m.forward(params, tok, CFG)
+    tgt = jnp.argmax(logits, axis=-1)
+    _, n_correct = m.eval_step(params, tok, tgt, CFG)
+    assert int(n_correct) == CFG.batch_size * CFG.seq_len
+
+
+def test_causal_dependency_structure():
+    """Logits at position i must not depend on tokens after i."""
+    params = m.init_params(CFG, 4)
+    tok, _ = data(CFG, 4)
+    logits = m.forward(params, tok, CFG)
+    tok2 = tok.at[:, -1].set((tok[:, -1] + 1) % CFG.vocab_size)
+    logits2 = m.forward(params, tok2, CFG)
+    np.testing.assert_allclose(np.asarray(logits[:, :-1]),
+                               np.asarray(logits2[:, :-1]),
+                               rtol=1e-5, atol=1e-6)
+    assert not np.allclose(np.asarray(logits[:, -1]),
+                           np.asarray(logits2[:, -1]))
+
+
+def test_model_uses_pallas_attention_matches_ref_model():
+    """Swapping the Pallas attention for the jnp reference must not change
+    the forward output (same math, different kernel)."""
+    import compile.model as model_mod
+    params = m.init_params(CFG, 5)
+    tok, _ = data(CFG, 5)
+    out_pallas = m.forward(params, tok, CFG)
+
+    orig = model_mod.attention
+    model_mod.attention = (
+        lambda q, k, v, causal=True: ref_lib.attention_ref(q, k, v, causal))
+    try:
+        out_ref = m.forward(params, tok, CFG)
+    finally:
+        model_mod.attention = orig
+    np.testing.assert_allclose(np.asarray(out_pallas), np.asarray(out_ref),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_presets_are_valid():
+    for name, cfg in m.PRESETS.items():
+        assert cfg.d_model % cfg.n_heads == 0, name
+        specs = m.param_specs(cfg)
+        assert specs, name
+        assert m.n_params(cfg) > 0

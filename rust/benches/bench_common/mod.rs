@@ -1,0 +1,96 @@
+//! Shared bench plumbing: backend selection + run helpers.
+//!
+//! Every bench accepts `CROSSFED_BENCH_BACKEND=mock` to run against the
+//! quadratic mock (fast, artifact-free, CI-friendly); the default is the
+//! real PJRT runtime over `artifacts/` (tiny preset), which is what the
+//! EXPERIMENTS.md numbers use.
+
+use std::path::Path;
+
+use crossfed::cluster::ClusterSpec;
+use crossfed::config::ExperimentConfig;
+use crossfed::coordinator::Coordinator;
+use crossfed::metrics::RunResult;
+use crossfed::model::{Manifest, ParamSet};
+use crossfed::runtime::{ComputeBackend, MockRuntime, StepRuntime};
+
+pub enum Backend {
+    Real { runtime: StepRuntime, manifest: Manifest },
+    Mock(MockRuntime),
+}
+
+impl Backend {
+    /// Resolve from env + artifact availability.
+    pub fn detect() -> Backend {
+        let want_mock = std::env::var("CROSSFED_BENCH_BACKEND")
+            .map(|v| v == "mock")
+            .unwrap_or(false);
+        let artifacts = Path::new("artifacts");
+        if !want_mock && artifacts.join("manifest_tiny.json").exists() {
+            let manifest =
+                Manifest::load(artifacts, "tiny").expect("manifest parses");
+            let runtime = StepRuntime::load(&manifest).expect("artifacts load");
+            Backend::Real { runtime, manifest }
+        } else {
+            if !want_mock {
+                eprintln!(
+                    "note: artifacts/ missing — falling back to the mock \
+                     backend (run `make artifacts` for the real numbers)"
+                );
+            }
+            Backend::Mock(MockRuntime::new(0.4))
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Real { .. } => "pjrt-tiny",
+            Backend::Mock(_) => "mock",
+        }
+    }
+
+    /// Run one experiment on this backend with the paper's 3-cloud
+    /// cluster.
+    pub fn run(&self, cfg: &ExperimentConfig) -> RunResult {
+        self.run_on(cfg, ClusterSpec::paper_default())
+    }
+
+    pub fn run_on(&self, cfg: &ExperimentConfig, cluster: ClusterSpec) -> RunResult {
+        match self {
+            Backend::Real { runtime, manifest } => {
+                let init = ParamSet::init(manifest, cfg.seed);
+                let mut coord = Coordinator::new(
+                    cfg.clone(),
+                    cluster,
+                    runtime,
+                    init,
+                    manifest.model.batch_size,
+                    manifest.model.seq_len,
+                )
+                .expect("coordinator");
+                coord.run().expect("run")
+            }
+            Backend::Mock(mock) => {
+                let init = ParamSet {
+                    leaves: vec![vec![2.0f32; 64], vec![-1.0f32; 32]],
+                };
+                let mut cfg = cfg.clone();
+                // the mock quadratic needs bigger steps to move
+                cfg.local_lr = cfg.local_lr.max(3.0);
+                cfg.server_lr = cfg.server_lr.max(3.0);
+                let mut coord =
+                    Coordinator::new(cfg, cluster, mock, init, 4, 16)
+                        .expect("coordinator");
+                coord.run().expect("run")
+            }
+        }
+    }
+}
+
+/// Convenience: `f(base_backend)` for ComputeBackend-generic helpers.
+pub fn tokens_per_batch(b: &Backend) -> u32 {
+    match b {
+        Backend::Real { runtime, .. } => runtime.tokens_per_batch(),
+        Backend::Mock(m) => m.tokens_per_batch(),
+    }
+}

@@ -1,0 +1,86 @@
+//! Regenerates the security/privacy ablation (paper §3.1 "Ensure Data
+//! Security" + the encryption / differential-privacy discussion):
+//! overhead and accuracy cost of AES transport sealing, secure
+//! aggregation, DP, and the homomorphic-encryption cost model.
+//!
+//!     cargo bench --bench fig_privacy
+
+mod bench_common;
+
+use bench_common::Backend;
+use crossfed::config::preset;
+use crossfed::crypto::he_cost;
+use crossfed::privacy::DpConfig;
+use crossfed::report;
+
+fn main() {
+    crossfed::util::logging::init();
+    let backend = Backend::detect();
+    println!("backend: {}", backend.name());
+
+    let mut rows: Vec<(String, crossfed::metrics::RunResult)> = Vec::new();
+    let mut csv = String::from("variant,comm_mb,sim_hours,eval_loss,epsilon\n");
+    type Tweak = Box<dyn Fn(&mut crossfed::config::ExperimentConfig)>;
+    let variants: Vec<(&str, Tweak)> = vec![
+        ("plaintext", Box::new(|c| c.encrypt = false)),
+        ("aes", Box::new(|c| c.encrypt = true)),
+        ("aes+secureagg", Box::new(|c| {
+            c.encrypt = true;
+            c.secure_agg = true;
+        })),
+        ("aes+sa+dp(z=.02)", Box::new(|c| {
+            c.encrypt = true;
+            c.secure_agg = true;
+            c.dp = DpConfig { clip_norm: 2.0, noise_multiplier: 0.02, delta: 1e-5 };
+        })),
+    ];
+
+    for (name, tweak) in variants {
+        let mut cfg = preset("privacy-off").expect("builtin");
+        cfg.name = name.to_string();
+        tweak(&mut cfg);
+        cfg.validate().expect("valid variant");
+        let r = backend.run(&cfg);
+        let eps = r.history.last().map(|h| h.epsilon).unwrap_or(0.0);
+        println!(
+            "{name:<18} comm={:>8.2} MB  time={:.2} h  loss={:.3}  eps={}",
+            r.wire_bytes as f64 / 1e6,
+            r.sim_hours(),
+            r.final_eval_loss,
+            if eps > 0.0 { format!("{eps:.1}") } else { "-".into() }
+        );
+        csv.push_str(&format!(
+            "{name},{:.2},{:.3},{:.4},{eps:.2}\n",
+            r.wire_bytes as f64 / 1e6,
+            r.sim_hours(),
+            r.final_eval_loss
+        ));
+        rows.push((name.to_string(), r));
+    }
+    report::save("fig_privacy.csv", &csv);
+
+    // the HE alternative, priced from the cost model
+    let n = 109_824; // tiny-preset params (manifest value)
+    let he = he_cost();
+    println!(
+        "\nHE (Paillier-2048) cost model on this update size: {:.1} MB/update \
+         wire ({}x masking), +{:.1} min/round compute",
+        he.wire_bytes(n) as f64 / 1e6,
+        (he.bytes_per_elem / 4.0) as u64,
+        he.round_secs(3, n) / 60.0
+    );
+
+    // checks
+    let get = |n: &str| &rows.iter().find(|(m, _)| m == n).unwrap().1;
+    let plain = get("plaintext");
+    let aes = get("aes");
+    let overhead =
+        aes.wire_bytes as f64 / plain.wire_bytes as f64 - 1.0;
+    println!(
+        "\nchecks: AES byte overhead {:.2}% (should be <1%: {}), \
+         secure-agg loss delta {:.3} (should be ~0)",
+        overhead * 100.0,
+        if overhead < 0.01 { "OK" } else { "MISMATCH" },
+        (get("aes+secureagg").final_eval_loss - aes.final_eval_loss).abs()
+    );
+}

@@ -1,0 +1,130 @@
+//! Hot-path microbenchmarks (EXPERIMENTS.md §Perf): the L3 operations
+//! that run once or more per round, measured standalone so the perf
+//! pass can track them.
+//!
+//!     cargo bench --bench hotpath
+//!
+//! Targets (memory-bound roofline class): ≥1 GB/s per core for the
+//! f32-vector kernels (axpy / aggregate / compress-none), crypto at
+//! AES-CTR software speed, PJRT step time reported for reference.
+
+mod bench_common;
+
+use crossfed::aggregation::{Aggregator, ClientUpdate, DynamicWeighted, FedAvg};
+use crossfed::compress::{Compression, Compressor};
+use crossfed::crypto::{open, seal, TransportKey};
+use crossfed::model::ParamSet;
+use crossfed::netsim::{Link, Protocol, Wan};
+use crossfed::testkit::bench_kit::BenchSet;
+use crossfed::util::rng::Pcg64;
+
+const N: usize = 1_000_000; // 4 MB of f32 — a mid-size model update
+
+fn vecs(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg64::new(seed, 1);
+    (0..n).map(|_| rng.normal_ms(0.0, 0.1) as f32).collect()
+}
+
+fn params(n: usize, seed: u64) -> ParamSet {
+    ParamSet { leaves: vec![vecs(n, seed)] }
+}
+
+fn main() {
+    let bytes = (N * 4) as f64;
+
+    // --- ParamSet linear algebra (inner loop of every aggregator)
+    let mut b = BenchSet::new("paramset ops (1M f32)");
+    b.measure_iters = 20;
+    let mut p = params(N, 1);
+    let q = params(N, 2);
+    b.bench_throughput("axpy", bytes, || p.axpy(0.5, &q));
+    b.bench_throughput("l2_norm", bytes, || p.l2_norm());
+    b.bench_throughput("sub", bytes, || p.sub(&q));
+    b.bench_throughput("to_flat", bytes, || p.to_flat());
+    b.report();
+
+    // --- aggregation algorithms over 3 workers
+    let mut b = BenchSet::new("aggregation (3 workers x 1M params)");
+    b.measure_iters = 10;
+    let updates: Vec<ClientUpdate> = (0..3)
+        .map(|w| ClientUpdate {
+            worker: w,
+            n_samples: 1000 + w * 100,
+            local_loss: 2.0 + w as f32 * 0.1,
+            delta: params(N, w as u64 + 10),
+            staleness: 0,
+        })
+        .collect();
+    let mut global = params(N, 99);
+    b.bench_throughput("fedavg", 3.0 * bytes, || {
+        FedAvg.aggregate(&mut global, &updates)
+    });
+    b.bench_throughput("dynamic", 3.0 * bytes, || {
+        DynamicWeighted::default().aggregate(&mut global, &updates)
+    });
+    b.report();
+
+    // --- compression codecs
+    let mut b = BenchSet::new("compression (1M f32)");
+    b.measure_iters = 10;
+    let xs = vecs(N, 3);
+    for (name, scheme) in [
+        ("none", Compression::None),
+        ("fp16", Compression::Fp16),
+        ("int8", Compression::Int8),
+        ("topk-1%", Compression::TopK { ratio: 0.01 }),
+        ("randk-1%", Compression::RandK { ratio: 0.01 }),
+    ] {
+        let mut c = Compressor::new(scheme, 7);
+        b.bench_throughput(name, bytes, || c.compress(&xs));
+    }
+    let mut c = Compressor::new(Compression::TopK { ratio: 0.01 }, 7);
+    let payload = c.compress(&xs);
+    b.bench_throughput("decompress topk-1%", bytes, || {
+        Compressor::decompress(&payload).unwrap()
+    });
+    b.report();
+
+    // --- crypto
+    let mut b = BenchSet::new("crypto (4 MB payload)");
+    b.measure_iters = 10;
+    let plaintext = vec![0xA5u8; N * 4];
+    let mut key = TransportKey::derive(b"bench", "ctx");
+    b.bench_throughput("seal (aes-ctr+hmac)", bytes, || seal(&mut key, &plaintext));
+    let sealed = seal(&mut key, &plaintext);
+    b.bench_throughput("open", bytes, || open(&key, &sealed).unwrap());
+    b.report();
+
+    // --- netsim transfer computation (pure model, no payload copies)
+    let mut b = BenchSet::new("netsim transfer ops");
+    b.measure_iters = 20;
+    let mut wan = Wan::uniform(3, Link::new(1e9, 0.04), 5);
+    b.bench_throughput("transfer calc x1000", 1000.0, || {
+        for i in 0..1000u64 {
+            wan.transfer(0, 1, 1_000_000 + i, Protocol::Quic, 16);
+        }
+    });
+    b.report();
+
+    // --- PJRT step (reference point for the whole stack)
+    let backend = bench_common::Backend::detect();
+    if let bench_common::Backend::Real { runtime, manifest } = &backend {
+        let mut b = BenchSet::new("pjrt train/eval step (tiny model)");
+        b.measure_iters = 10;
+        let init = ParamSet::init(manifest, 1);
+        let mut rng = Pcg64::new(1, 2);
+        let n = manifest.model.batch_size * manifest.model.seq_len;
+        let batch = crossfed::runtime::Batch {
+            tokens: (0..n).map(|_| rng.below(96) as i32).collect(),
+            targets: (0..n).map(|_| rng.below(96) as i32).collect(),
+        };
+        let flops_fwd_bwd = 6.0 * manifest.model.n_params as f64 * n as f64;
+        b.bench_throughput("train_step (flops)", flops_fwd_bwd, || {
+            runtime.train_step(&init, &batch).unwrap()
+        });
+        b.bench("eval_step", || runtime.eval_step(&init, &batch).unwrap());
+        b.report();
+    } else {
+        println!("\n(pjrt step bench skipped: artifacts not built)");
+    }
+}

@@ -1,0 +1,73 @@
+//! Regenerates **Table 2**: communication overhead (GB) and training time
+//! (hours) for FedAvg / dynamic weighted / gradient aggregation.
+//!
+//!     cargo bench --bench table2_comm_overhead
+//!
+//! Paper values (testbed-specific absolutes; we reproduce the *ordering*
+//! and rough factors — see EXPERIMENTS.md):
+//!   FedAvg 4.5 GB / 12 h, Dynamic 3.8 GB / 10.5 h, Gradient 3.6 GB / 9.8 h
+
+mod bench_common;
+
+use bench_common::Backend;
+use crossfed::config::preset;
+use crossfed::metrics::RunResult;
+use crossfed::report;
+
+const PAPER: [(&str, f64, f64); 3] = [
+    ("paper-fedavg", 4.5, 12.0),
+    ("paper-dynamic", 3.8, 10.5),
+    ("paper-gradient", 3.6, 9.8),
+];
+
+fn main() {
+    crossfed::util::logging::init();
+    let backend = Backend::detect();
+    println!("backend: {}", backend.name());
+
+    let mut results: Vec<RunResult> = Vec::new();
+    let mut configs = Vec::new();
+    for (name, _, _) in PAPER {
+        let cfg = preset(name).expect("builtin preset");
+        configs.push(cfg.clone());
+        let t0 = std::time::Instant::now();
+        let r = backend.run(&cfg);
+        println!(
+            "{name}: {} rounds, {:.2} GB, {:.1} sim-h ({:.1}s host){}",
+            r.rounds_run,
+            r.comm_gb(),
+            r.sim_hours(),
+            t0.elapsed().as_secs_f64(),
+            if r.reached_target { " [target reached]" } else { "" },
+        );
+        results.push(r);
+    }
+
+    let refs: Vec<&RunResult> = results.iter().collect();
+    let crefs: Vec<&crossfed::config::ExperimentConfig> =
+        configs.iter().collect();
+    let t1 = report::table1(&crefs);
+    let t2 = report::table2(&refs);
+    println!("\n{t1}");
+    println!("{t2}");
+    println!("paper reference:");
+    for (name, gb, h) in PAPER {
+        println!("  {name:<18} {gb:>5.1} GB {h:>6.1} h");
+    }
+
+    // reproduction checks: ordering must match the paper
+    let gb: Vec<f64> = results.iter().map(|r| r.comm_gb()).collect();
+    let hours: Vec<f64> = results.iter().map(|r| r.sim_hours()).collect();
+    let ok_comm = gb[0] >= gb[1] && gb[1] >= gb[2];
+    let ok_time = hours[0] >= hours[1] && hours[1] >= hours[2];
+    println!(
+        "\nordering check: comm fedavg>=dynamic>=gradient: {} | \
+         time fedavg>=dynamic>=gradient: {}",
+        if ok_comm { "OK" } else { "MISMATCH" },
+        if ok_time { "OK" } else { "MISMATCH" },
+    );
+    report::save(
+        "table2.txt",
+        &format!("{t1}\n{t2}\nordering comm={ok_comm} time={ok_time}\n"),
+    );
+}

@@ -1,0 +1,416 @@
+//! The four aggregation algorithms.
+
+use crate::model::ParamSet;
+use crate::optimizer::Optimizer;
+
+/// What a worker's `delta` payload means.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UpdateKind {
+    /// w_i − w^t : parameter delta after E local steps
+    ParamDelta,
+    /// mean local gradient over the round (formula 3's ∇w_i)
+    Gradient,
+}
+
+/// One worker's contribution to a round.
+#[derive(Clone, Debug)]
+pub struct ClientUpdate {
+    pub worker: usize,
+    /// n_i — local sample count (FedAvg weights, formula 1)
+    pub n_samples: usize,
+    /// L_i — local training loss this round (dynamic weights, formula 2)
+    pub local_loss: f32,
+    /// the update payload (delta or gradient per [`UpdateKind`])
+    pub delta: ParamSet,
+    /// rounds elapsed since this worker's base model (async staleness)
+    pub staleness: u64,
+}
+
+/// Aggregation algorithm selector (paper Table 1).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum AggregationKind {
+    FedAvg,
+    DynamicWeighted { temperature: f32 },
+    GradientAgg,
+    Async { alpha: f32 },
+}
+
+impl AggregationKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AggregationKind::FedAvg => "fedavg",
+            AggregationKind::DynamicWeighted { .. } => "dynamic",
+            AggregationKind::GradientAgg => "gradient",
+            AggregationKind::Async { .. } => "async",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<AggregationKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "fedavg" => Some(AggregationKind::FedAvg),
+            "dynamic" => Some(AggregationKind::DynamicWeighted { temperature: 1.0 }),
+            "gradient" => Some(AggregationKind::GradientAgg),
+            "async" => Some(AggregationKind::Async { alpha: 0.6 }),
+            _ => None,
+        }
+    }
+
+    /// Which payload the workers must produce for this aggregator.
+    pub fn update_kind(&self) -> UpdateKind {
+        match self {
+            AggregationKind::GradientAgg => UpdateKind::Gradient,
+            _ => UpdateKind::ParamDelta,
+        }
+    }
+}
+
+/// Common interface. `aggregate` mutates the global model in place.
+pub trait Aggregator: Send {
+    fn name(&self) -> &'static str;
+    /// Synchronous round aggregation over all updates.
+    fn aggregate(&mut self, global: &mut ParamSet, updates: &[ClientUpdate]);
+    /// Asynchronous single-update application (default: unsupported).
+    fn apply_one(&mut self, _global: &mut ParamSet, _update: &ClientUpdate) {
+        panic!("{} is a synchronous aggregator", self.name());
+    }
+    fn is_async(&self) -> bool {
+        false
+    }
+}
+
+// ---------------------------------------------------------------------------
+// formula (1): FedAvg
+// ---------------------------------------------------------------------------
+
+/// w = Σ_i (n_i / n) w_i, applied in delta form: w += Σ (n_i/n) Δ_i.
+#[derive(Clone, Debug, Default)]
+pub struct FedAvg;
+
+impl Aggregator for FedAvg {
+    fn name(&self) -> &'static str {
+        "fedavg"
+    }
+
+    fn aggregate(&mut self, global: &mut ParamSet, updates: &[ClientUpdate]) {
+        assert!(!updates.is_empty());
+        let n: f64 = updates.iter().map(|u| u.n_samples as f64).sum();
+        assert!(n > 0.0, "fedavg needs positive sample counts");
+        for u in updates {
+            global.axpy((u.n_samples as f64 / n) as f32, &u.delta);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// formula (2): dynamic weighted aggregation
+// ---------------------------------------------------------------------------
+
+/// α_i = exp(−L_i/τ) / Σ_j exp(−L_j/τ); w += Σ α_i Δ_i.
+///
+/// τ (temperature) generalizes the paper's formula (τ=1 reproduces it
+/// exactly); lower τ concentrates weight on the best-performing platform.
+#[derive(Clone, Debug)]
+pub struct DynamicWeighted {
+    pub temperature: f32,
+}
+
+impl Default for DynamicWeighted {
+    fn default() -> Self {
+        DynamicWeighted { temperature: 1.0 }
+    }
+}
+
+impl DynamicWeighted {
+    /// The softmax weights for a set of losses (exposed for tests/benches).
+    pub fn weights(&self, losses: &[f32]) -> Vec<f32> {
+        assert!(!losses.is_empty());
+        let t = self.temperature.max(1e-6);
+        // subtract min loss for numerical stability (shift-invariant)
+        let lo = losses.iter().cloned().fold(f32::INFINITY, f32::min);
+        let exps: Vec<f32> =
+            losses.iter().map(|&l| (-(l - lo) / t).exp()).collect();
+        let z: f32 = exps.iter().sum();
+        exps.iter().map(|e| e / z).collect()
+    }
+}
+
+impl Aggregator for DynamicWeighted {
+    fn name(&self) -> &'static str {
+        "dynamic"
+    }
+
+    fn aggregate(&mut self, global: &mut ParamSet, updates: &[ClientUpdate]) {
+        assert!(!updates.is_empty());
+        let losses: Vec<f32> = updates.iter().map(|u| u.local_loss).collect();
+        let weights = self.weights(&losses);
+        for (u, &w) in updates.iter().zip(&weights) {
+            global.axpy(w, &u.delta);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// formula (3): gradient aggregation
+// ---------------------------------------------------------------------------
+
+/// w^{t+1} = w^t − η Σ_i (n_i/n) ∇w_i, with the step applied through a
+/// server [`Optimizer`] (SGD reproduces the formula verbatim; momentum /
+/// Adam are the standard strengthening for heterogeneous clients).
+pub struct GradientAgg {
+    pub server_opt: Optimizer,
+}
+
+impl GradientAgg {
+    pub fn new(server_opt: Optimizer) -> GradientAgg {
+        GradientAgg { server_opt }
+    }
+}
+
+impl Aggregator for GradientAgg {
+    fn name(&self) -> &'static str {
+        "gradient"
+    }
+
+    fn aggregate(&mut self, global: &mut ParamSet, updates: &[ClientUpdate]) {
+        assert!(!updates.is_empty());
+        let n: f64 = updates.iter().map(|u| u.n_samples as f64).sum();
+        assert!(n > 0.0);
+        // weighted mean gradient
+        let mut agg = ParamSet {
+            leaves: global.leaves.iter().map(|l| vec![0.0; l.len()]).collect(),
+        };
+        for u in updates {
+            agg.axpy((u.n_samples as f64 / n) as f32, &u.delta);
+        }
+        self.server_opt.step(global, &agg);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// formula (4): asynchronous aggregation
+// ---------------------------------------------------------------------------
+
+/// w^{t+1} = w^t + α_i (w_i − w^t), per arriving update. The mixing rate
+/// is staleness-discounted: α_i = α₀ / (1 + staleness), the standard
+/// fix for stale async updates (Xie et al., FedAsync).
+#[derive(Clone, Debug)]
+pub struct AsyncAgg {
+    pub alpha0: f32,
+}
+
+impl Default for AsyncAgg {
+    fn default() -> Self {
+        AsyncAgg { alpha0: 0.6 }
+    }
+}
+
+impl AsyncAgg {
+    pub fn mixing_rate(&self, staleness: u64) -> f32 {
+        self.alpha0 / (1.0 + staleness as f32)
+    }
+}
+
+impl Aggregator for AsyncAgg {
+    fn name(&self) -> &'static str {
+        "async"
+    }
+
+    fn aggregate(&mut self, global: &mut ParamSet, updates: &[ClientUpdate]) {
+        // applying a batch sequentially is well-defined (arrival order)
+        for u in updates {
+            self.apply_one(global, u);
+        }
+    }
+
+    fn apply_one(&mut self, global: &mut ParamSet, update: &ClientUpdate) {
+        // update.delta is (w_i − w_base); relative to the *current* global
+        // this is an approximation whose error the staleness discount
+        // bounds — exactly the trade the paper describes for async mode.
+        global.axpy(self.mixing_rate(update.staleness), &update.delta);
+    }
+
+    fn is_async(&self) -> bool {
+        true
+    }
+}
+
+/// Factory from the config enum.
+pub fn build(kind: AggregationKind, server_opt: Optimizer) -> Box<dyn Aggregator> {
+    match kind {
+        AggregationKind::FedAvg => Box::new(FedAvg),
+        AggregationKind::DynamicWeighted { temperature } => {
+            Box::new(DynamicWeighted { temperature })
+        }
+        AggregationKind::GradientAgg => Box::new(GradientAgg::new(server_opt)),
+        AggregationKind::Async { alpha } => Box::new(AsyncAgg { alpha0: alpha }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizer::OptimizerKind;
+
+    fn ps(vals: &[f32]) -> ParamSet {
+        ParamSet { leaves: vec![vals.to_vec()] }
+    }
+
+    fn upd(worker: usize, n: usize, loss: f32, delta: &[f32]) -> ClientUpdate {
+        ClientUpdate {
+            worker,
+            n_samples: n,
+            local_loss: loss,
+            delta: ps(delta),
+            staleness: 0,
+        }
+    }
+
+    #[test]
+    fn fedavg_weights_by_sample_count() {
+        // formula 1: with deltas [1,0] (n=3) and [0,1] (n=1):
+        // w += 0.75*[1,0] + 0.25*[0,1]
+        let mut g = ps(&[0.0, 0.0]);
+        FedAvg.aggregate(&mut g, &[
+            upd(0, 3, 1.0, &[1.0, 0.0]),
+            upd(1, 1, 1.0, &[0.0, 1.0]),
+        ]);
+        assert!((g.leaves[0][0] - 0.75).abs() < 1e-6);
+        assert!((g.leaves[0][1] - 0.25).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fedavg_equal_samples_is_plain_mean() {
+        let mut g = ps(&[10.0]);
+        FedAvg.aggregate(&mut g, &[
+            upd(0, 5, 0.0, &[2.0]),
+            upd(1, 5, 0.0, &[4.0]),
+        ]);
+        assert!((g.leaves[0][0] - 13.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn dynamic_weights_are_softmax_of_neg_loss() {
+        // formula 2 at τ=1: losses [0, ln 3] -> weights [3/4, 1/4]
+        let dw = DynamicWeighted::default();
+        let w = dw.weights(&[0.0, (3.0f32).ln()]);
+        assert!((w[0] - 0.75).abs() < 1e-5, "{w:?}");
+        assert!((w[1] - 0.25).abs() < 1e-5);
+        assert!((w.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn dynamic_favors_low_loss_platform() {
+        let mut g = ps(&[0.0]);
+        DynamicWeighted::default().aggregate(&mut g, &[
+            upd(0, 1, 0.5, &[1.0]),  // good model
+            upd(1, 1, 5.0, &[-1.0]), // bad model
+        ]);
+        assert!(g.leaves[0][0] > 0.9, "g={}", g.leaves[0][0]);
+    }
+
+    #[test]
+    fn dynamic_equal_losses_is_uniform() {
+        let dw = DynamicWeighted::default();
+        let w = dw.weights(&[2.0, 2.0, 2.0]);
+        for x in w {
+            assert!((x - 1.0 / 3.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn dynamic_is_shift_invariant_and_stable() {
+        let dw = DynamicWeighted::default();
+        let a = dw.weights(&[1.0, 2.0]);
+        let b = dw.weights(&[101.0, 102.0]); // huge losses must not NaN
+        assert!((a[0] - b[0]).abs() < 1e-6);
+        assert!(b.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn temperature_sharpens() {
+        let sharp = DynamicWeighted { temperature: 0.1 }.weights(&[1.0, 2.0]);
+        let soft = DynamicWeighted { temperature: 10.0 }.weights(&[1.0, 2.0]);
+        assert!(sharp[0] > 0.99);
+        assert!(soft[0] < 0.6);
+    }
+
+    #[test]
+    fn gradient_agg_formula3_with_sgd() {
+        // w^{t+1} = w^t − η Σ (n_i/n) g_i
+        let mut g = ps(&[1.0, 1.0]);
+        let mut agg = GradientAgg::new(Optimizer::new(OptimizerKind::Sgd, 0.5));
+        agg.aggregate(&mut g, &[
+            upd(0, 1, 0.0, &[2.0, 0.0]),
+            upd(1, 1, 0.0, &[0.0, 4.0]),
+        ]);
+        // mean grad = [1, 2]; w = [1,1] - 0.5*[1,2] = [0.5, 0.0]
+        assert!((g.leaves[0][0] - 0.5).abs() < 1e-6);
+        assert!((g.leaves[0][1] - 0.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn async_formula4_mixing() {
+        // w ← w + α (w_i − w); with w=0, delta=1, α=0.6
+        let mut g = ps(&[0.0]);
+        let mut a = AsyncAgg::default();
+        a.apply_one(&mut g, &upd(0, 1, 0.0, &[1.0]));
+        assert!((g.leaves[0][0] - 0.6).abs() < 1e-6);
+    }
+
+    #[test]
+    fn async_staleness_discount() {
+        let a = AsyncAgg { alpha0: 0.8 };
+        assert!((a.mixing_rate(0) - 0.8).abs() < 1e-6);
+        assert!((a.mixing_rate(3) - 0.2).abs() < 1e-6);
+        let mut g = ps(&[0.0]);
+        let mut agg = AsyncAgg { alpha0: 0.8 };
+        let mut u = upd(0, 1, 0.0, &[1.0]);
+        u.staleness = 7;
+        agg.apply_one(&mut g, &u);
+        assert!((g.leaves[0][0] - 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "synchronous")]
+    fn sync_aggregators_reject_apply_one() {
+        let mut g = ps(&[0.0]);
+        FedAvg.apply_one(&mut g, &upd(0, 1, 0.0, &[1.0]));
+    }
+
+    #[test]
+    fn parse_and_update_kinds() {
+        assert_eq!(AggregationKind::parse("fedavg"), Some(AggregationKind::FedAvg));
+        assert_eq!(
+            AggregationKind::parse("gradient").unwrap().update_kind(),
+            UpdateKind::Gradient
+        );
+        assert_eq!(
+            AggregationKind::parse("dynamic").unwrap().update_kind(),
+            UpdateKind::ParamDelta
+        );
+        assert!(AggregationKind::parse("async").unwrap().name() == "async");
+        assert_eq!(AggregationKind::parse("median"), None);
+    }
+
+    #[test]
+    fn convergence_on_heterogeneous_quadratics() {
+        // three clients with optima at -1, 0, 2 (weights 1,1,2):
+        // weighted optimum = (−1+0+2·2)/4 = 0.75. FedAvg with exact local
+        // solves must converge there.
+        let optima = [(-1.0f32, 1usize), (0.0, 1), (2.0, 2)];
+        let mut w = ps(&[10.0]);
+        for _ in 0..60 {
+            let updates: Vec<ClientUpdate> = optima
+                .iter()
+                .enumerate()
+                .map(|(i, &(t, n))| {
+                    // one local GD step with lr 0.5: delta = 0.5(t − w)
+                    let delta = 0.5 * (t - w.leaves[0][0]);
+                    upd(i, n, (w.leaves[0][0] - t).abs(), &[delta])
+                })
+                .collect();
+            FedAvg.aggregate(&mut w, &updates);
+        }
+        assert!((w.leaves[0][0] - 0.75).abs() < 1e-3, "w={}", w.leaves[0][0]);
+    }
+}

@@ -1,0 +1,22 @@
+//! Model aggregation algorithms — the paper's §3.3, formulas (1)–(4).
+//!
+//! * [`FedAvg`] — formula (1): sample-count weighted parameter average.
+//! * [`DynamicWeighted`] — formula (2): α_i = softmax(−L_i) performance
+//!   weighting.
+//! * [`GradientAgg`] — formula (3): aggregate gradients, apply through a
+//!   server optimizer.
+//! * [`AsyncAgg`] — formula (4): per-arrival mixing
+//!   w ← w + α_i (w_i − w), with staleness-discounted α.
+//!
+//! All aggregators consume [`ClientUpdate`]s whose `delta` field carries
+//! either the parameter delta (w_i − w^t) or the accumulated local
+//! gradient, depending on [`UpdateKind`]. Operating on deltas makes the
+//! three synchronous algorithms directly comparable and keeps secure
+//! aggregation (sums of masked deltas) compatible with all of them.
+
+mod algorithms;
+
+pub use algorithms::{
+    build, AggregationKind, Aggregator, AsyncAgg, ClientUpdate,
+    DynamicWeighted, FedAvg, GradientAgg, UpdateKind,
+};

@@ -1,0 +1,188 @@
+//! Checkpointing: persist / restore the global model and run state.
+//!
+//! Long cross-cloud runs (the paper's 100-round × hours-per-round regime)
+//! need restartability — a leader crash must not lose a day of training.
+//! Format: a JSON header (`<name>.json`) describing shape/round/config
+//! hash, plus a raw little-endian f32 blob (`<name>.bin`) with the
+//! parameter leaves in manifest order.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::ParamSet;
+use crate::util::bytes::{f32s_to_le, le_to_f32s};
+use crate::util::json::Json;
+
+/// Run state stored alongside the parameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    pub params: ParamSet,
+    pub round: usize,
+    pub global_version: u64,
+    pub sim_secs: f64,
+    pub wire_bytes: u64,
+    /// free-form tag (config name) to catch cross-experiment restores
+    pub experiment: String,
+}
+
+fn paths(base: &Path) -> (PathBuf, PathBuf) {
+    (base.with_extension("json"), base.with_extension("bin"))
+}
+
+impl Checkpoint {
+    /// Write `<base>.json` + `<base>.bin` atomically-ish (tmp + rename).
+    pub fn save(&self, base: &Path) -> Result<()> {
+        let (jpath, bpath) = paths(base);
+        if let Some(dir) = base.parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        let header = Json::obj(vec![
+            ("experiment", Json::str(self.experiment.clone())),
+            ("round", Json::num(self.round as f64)),
+            ("global_version", Json::num(self.global_version as f64)),
+            ("sim_secs", Json::num(self.sim_secs)),
+            ("wire_bytes", Json::num(self.wire_bytes as f64)),
+            (
+                "leaf_sizes",
+                Json::arr(
+                    self.params
+                        .leaves
+                        .iter()
+                        .map(|l| Json::num(l.len() as f64)),
+                ),
+            ),
+        ]);
+        let tmp_j = jpath.with_extension("json.tmp");
+        let tmp_b = bpath.with_extension("bin.tmp");
+        std::fs::write(&tmp_j, header.to_string_pretty())
+            .with_context(|| format!("writing {tmp_j:?}"))?;
+        std::fs::write(&tmp_b, f32s_to_le(&self.params.to_flat()))
+            .with_context(|| format!("writing {tmp_b:?}"))?;
+        std::fs::rename(&tmp_j, &jpath)?;
+        std::fs::rename(&tmp_b, &bpath)?;
+        Ok(())
+    }
+
+    /// Load a checkpoint written by [`Checkpoint::save`].
+    pub fn load(base: &Path) -> Result<Checkpoint> {
+        let (jpath, bpath) = paths(base);
+        let header = Json::parse(
+            &std::fs::read_to_string(&jpath)
+                .with_context(|| format!("reading {jpath:?}"))?,
+        )?;
+        let leaf_sizes: Vec<usize> = header
+            .req("leaf_sizes")?
+            .as_arr()
+            .context("leaf_sizes not an array")?
+            .iter()
+            .map(|v| v.as_usize().context("bad leaf size"))
+            .collect::<Result<_>>()?;
+        let blob = std::fs::read(&bpath)
+            .with_context(|| format!("reading {bpath:?}"))?;
+        let flat = le_to_f32s(&blob).context("ragged f32 blob")?;
+        let total: usize = leaf_sizes.iter().sum();
+        if flat.len() != total {
+            bail!(
+                "checkpoint blob has {} f32s, header says {total}",
+                flat.len()
+            );
+        }
+        let mut leaves = Vec::with_capacity(leaf_sizes.len());
+        let mut off = 0;
+        for n in leaf_sizes {
+            leaves.push(flat[off..off + n].to_vec());
+            off += n;
+        }
+        Ok(Checkpoint {
+            params: ParamSet { leaves },
+            round: header.req_usize("round")?,
+            global_version: header.req_f64("global_version")? as u64,
+            sim_secs: header.req_f64("sim_secs")?,
+            wire_bytes: header.req_f64("wire_bytes")? as u64,
+            experiment: header.req_str("experiment")?.to_string(),
+        })
+    }
+
+    /// Guard: refuse restoring into a differently-shaped model.
+    pub fn check_compatible(&self, like: &ParamSet) -> Result<()> {
+        if self.params.n_leaves() != like.n_leaves() {
+            bail!(
+                "checkpoint has {} leaves, model expects {}",
+                self.params.n_leaves(),
+                like.n_leaves()
+            );
+        }
+        for (i, (a, b)) in
+            self.params.leaves.iter().zip(&like.leaves).enumerate()
+        {
+            if a.len() != b.len() {
+                bail!("leaf {i}: checkpoint {} vs model {}", a.len(), b.len());
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            params: ParamSet {
+                leaves: vec![vec![1.5, -2.0, 3.25], vec![0.0; 5]],
+            },
+            round: 17,
+            global_version: 42,
+            sim_secs: 1234.5,
+            wire_bytes: 987654,
+            experiment: "paper-gradient".into(),
+        }
+    }
+
+    fn tmp_base(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("crossfed-ckpt-test-{name}"))
+    }
+
+    #[test]
+    fn roundtrip() {
+        let base = tmp_base("roundtrip");
+        let c = sample();
+        c.save(&base).unwrap();
+        let back = Checkpoint::load(&base).unwrap();
+        assert_eq!(back, c);
+        std::fs::remove_file(base.with_extension("json")).ok();
+        std::fs::remove_file(base.with_extension("bin")).ok();
+    }
+
+    #[test]
+    fn detects_truncated_blob() {
+        let base = tmp_base("trunc");
+        sample().save(&base).unwrap();
+        let bpath = base.with_extension("bin");
+        let blob = std::fs::read(&bpath).unwrap();
+        std::fs::write(&bpath, &blob[..blob.len() - 4]).unwrap();
+        assert!(Checkpoint::load(&base).is_err());
+        std::fs::remove_file(base.with_extension("json")).ok();
+        std::fs::remove_file(bpath).ok();
+    }
+
+    #[test]
+    fn compatibility_guard() {
+        let c = sample();
+        c.check_compatible(&c.params).unwrap();
+        let wrong =
+            ParamSet { leaves: vec![vec![0.0; 3], vec![0.0; 6]] };
+        assert!(c.check_compatible(&wrong).is_err());
+        let fewer = ParamSet { leaves: vec![vec![0.0; 3]] };
+        assert!(c.check_compatible(&fewer).is_err());
+    }
+
+    #[test]
+    fn missing_files_error_cleanly() {
+        let base = tmp_base("missing-nonexistent");
+        let err = Checkpoint::load(&base).unwrap_err();
+        assert!(format!("{err:#}").contains("reading"));
+    }
+}

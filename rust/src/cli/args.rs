@@ -1,0 +1,126 @@
+//! Tiny argument parser: `--key value`, `--flag`, positionals.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, thiserror::Error)]
+pub enum ArgsError {
+    #[error("unknown option --{0}")]
+    Unknown(String),
+    #[error("option --{0} requires a value")]
+    MissingValue(String),
+    #[error("invalid value for --{key}: {value:?}")]
+    Invalid { key: String, value: String },
+}
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw args (no argv[0]). `flag_names` lists boolean flags;
+    /// everything else starting with `--` takes a value.
+    pub fn parse(
+        raw: &[String],
+        flag_names: &[&str],
+    ) -> Result<Args, ArgsError> {
+        let mut a = Args::default();
+        let mut it = raw.iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(key) = tok.strip_prefix("--") {
+                // --key=value form
+                if let Some((k, v)) = key.split_once('=') {
+                    a.options.insert(k.to_string(), v.to_string());
+                    continue;
+                }
+                if flag_names.contains(&key) {
+                    a.flags.push(key.to_string());
+                } else {
+                    match it.next() {
+                        Some(v) if !v.starts_with("--") => {
+                            a.options.insert(key.to_string(), v.clone());
+                        }
+                        _ => return Err(ArgsError::MissingValue(key.into())),
+                    }
+                }
+            } else {
+                a.positional.push(tok.clone());
+            }
+        }
+        Ok(a)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<Option<usize>, ArgsError> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v.parse().map(Some).map_err(|_| ArgsError::Invalid {
+                key: key.into(),
+                value: v.into(),
+            }),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<Option<f64>, ArgsError> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v.parse().map(Some).map_err(|_| ArgsError::Invalid {
+                key: key.into(),
+                value: v.into(),
+            }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = Args::parse(
+            &s(&["train", "--preset", "quick", "--rounds", "5", "--verbose"]),
+            &["verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.get("preset"), Some("quick"));
+        assert_eq!(a.get_usize("rounds").unwrap(), Some(5));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = Args::parse(&s(&["--preset=paper-fedavg"]), &[]).unwrap();
+        assert_eq!(a.get("preset"), Some("paper-fedavg"));
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(Args::parse(&s(&["--preset"]), &[]).is_err());
+        assert!(Args::parse(&s(&["--a", "--b", "x"]), &[]).is_err());
+    }
+
+    #[test]
+    fn invalid_numbers_rejected() {
+        let a = Args::parse(&s(&["--rounds", "five"]), &[]).unwrap();
+        assert!(a.get_usize("rounds").is_err());
+        let b = Args::parse(&s(&["--lr", "0.5"]), &[]).unwrap();
+        assert_eq!(b.get_f64("lr").unwrap(), Some(0.5));
+    }
+}

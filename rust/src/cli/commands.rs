@@ -1,0 +1,358 @@
+//! CLI subcommand implementations.
+
+use anyhow::{bail, Context, Result};
+use std::path::PathBuf;
+
+use crate::cli::args::Args;
+use crate::cluster::ClusterSpec;
+use crate::config::{preset, preset_names, ExperimentConfig};
+use crate::coordinator::Coordinator;
+use crate::data::SyntheticCorpus;
+use crate::metrics::RunResult;
+use crate::model::{Manifest, ParamSet};
+use crate::partition::PartitionPlanner;
+use crate::report;
+use crate::runtime::{MockRuntime, StepRuntime};
+use crate::util::bytes::{human_bytes, human_duration};
+
+const FLAGS: [&str; 3] = ["mock", "no-encrypt", "curve"];
+
+const USAGE: &str = "\
+crossfed — cross-cloud federated LLM training (Yang et al. 2024 reproduction)
+
+USAGE:
+  crossfed train [--preset NAME | --config FILE] [--agg A] [--rounds N]
+                 [--protocol P] [--compression C] [--partition S]
+                 [--artifacts DIR] [--model-preset M] [--seed N]
+                 [--save-checkpoint PATH] [--resume PATH]
+                 [--mock] [--curve]
+  crossfed sweep --presets a,b,c [--artifacts DIR] [--mock]
+  crossfed inspect [--preset NAME]
+  crossfed partition-plan [--strategy S] [--platforms N]
+  crossfed list-presets
+
+Artifacts default to ./artifacts (built by `make artifacts`). --mock swaps
+the PJRT backend for the quadratic mock (no artifacts needed).";
+
+/// Entry point used by main.rs. Returns process exit code.
+pub fn run_cli(raw: &[String]) -> Result<i32> {
+    let args = Args::parse(raw, &FLAGS)?;
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "train" => cmd_train(&args),
+        "sweep" => cmd_sweep(&args),
+        "inspect" => cmd_inspect(&args),
+        "partition-plan" => cmd_partition_plan(&args),
+        "list-presets" => {
+            for p in preset_names() {
+                println!("{p}");
+            }
+            Ok(0)
+        }
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(0)
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n\n{USAGE}");
+            Ok(2)
+        }
+    }
+}
+
+/// Build the config from --preset/--config + overrides.
+fn build_config(args: &Args) -> Result<ExperimentConfig> {
+    let mut cfg = if let Some(path) = args.get("config") {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path}"))?;
+        ExperimentConfig::from_json(&text)?
+    } else {
+        let name = args.get("preset").unwrap_or("quick");
+        preset(name).with_context(|| {
+            format!("unknown preset {name:?}; see `crossfed list-presets`")
+        })?
+    };
+    if let Some(a) = args.get("agg") {
+        cfg.aggregation = crate::aggregation::AggregationKind::parse(a)
+            .with_context(|| format!("unknown aggregation {a:?}"))?;
+    }
+    if let Some(r) = args.get_usize("rounds")? {
+        cfg.rounds = r;
+    }
+    if let Some(p) = args.get("protocol") {
+        cfg.protocol = crate::netsim::Protocol::parse(p)
+            .with_context(|| format!("unknown protocol {p:?}"))?;
+    }
+    if let Some(c) = args.get("compression") {
+        cfg.compression = crate::compress::Compression::parse(c)
+            .with_context(|| format!("unknown compression {c:?}"))?;
+    }
+    if let Some(s) = args.get("partition") {
+        cfg.partition = crate::partition::PartitionStrategy::parse(s)
+            .with_context(|| format!("unknown partition {s:?}"))?;
+    }
+    if let Some(seed) = args.get_usize("seed")? {
+        cfg.seed = seed as u64;
+    }
+    if args.flag("no-encrypt") {
+        cfg.encrypt = false;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.get("artifacts").unwrap_or("artifacts"))
+}
+
+/// Run one experiment, backend chosen by --mock.
+pub fn run_experiment(
+    cfg: &ExperimentConfig,
+    mock: bool,
+    artifacts: &std::path::Path,
+    model_preset: &str,
+) -> Result<RunResult> {
+    run_experiment_ckpt(cfg, mock, artifacts, model_preset, None, None)
+}
+
+/// `run_experiment` with optional checkpoint restore/save paths.
+pub fn run_experiment_ckpt(
+    cfg: &ExperimentConfig,
+    mock: bool,
+    artifacts: &std::path::Path,
+    model_preset: &str,
+    resume: Option<&std::path::Path>,
+    save: Option<&std::path::Path>,
+) -> Result<RunResult> {
+    use crate::checkpoint::Checkpoint;
+    let cluster = ClusterSpec::paper_default();
+    if mock {
+        let backend = MockRuntime::new(0.4);
+        let init = ParamSet { leaves: vec![vec![2.0; 64], vec![-1.0; 32]] };
+        let mut coord =
+            Coordinator::new(cfg.clone(), cluster, &backend, init, 4, 16)?;
+        if let Some(path) = resume {
+            coord.restore(&Checkpoint::load(path)?)?;
+            log::info!("resumed from {path:?}");
+        }
+        let r = coord.run()?;
+        if let Some(path) = save {
+            coord.checkpoint().save(path)?;
+            log::info!("checkpoint saved to {path:?}");
+        }
+        Ok(r)
+    } else {
+        let manifest = Manifest::load(artifacts, model_preset)?;
+        let backend = StepRuntime::load(&manifest)?;
+        let init = ParamSet::init(&manifest, cfg.seed);
+        let (b, s) = (manifest.model.batch_size, manifest.model.seq_len);
+        let mut coord =
+            Coordinator::new(cfg.clone(), cluster, &backend, init, b, s)?;
+        if let Some(path) = resume {
+            coord.restore(&Checkpoint::load(path)?)?;
+            log::info!("resumed from {path:?}");
+        }
+        let r = coord.run()?;
+        if let Some(path) = save {
+            coord.checkpoint().save(path)?;
+            log::info!("checkpoint saved to {path:?}");
+        }
+        Ok(r)
+    }
+}
+
+fn print_result(r: &RunResult, curve: bool) {
+    println!(
+        "run {:<18} rounds={:<4} comm={:<10} time={:<10} eval_loss={:.3} acc={:.1}% {}",
+        r.name,
+        r.rounds_run,
+        human_bytes(r.wire_bytes),
+        human_duration(r.sim_secs),
+        r.final_eval_loss,
+        r.acc_pct(),
+        if r.reached_target { "(target reached)" } else { "" },
+    );
+    if curve {
+        println!("{}", r.curve_csv());
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<i32> {
+    let cfg = build_config(args)?;
+    let model_preset = args.get("model-preset").unwrap_or("tiny");
+    let resume = args.get("resume").map(std::path::PathBuf::from);
+    let save = args.get("save-checkpoint").map(std::path::PathBuf::from);
+    let r = run_experiment_ckpt(
+        &cfg,
+        args.flag("mock"),
+        &artifacts_dir(args),
+        model_preset,
+        resume.as_deref(),
+        save.as_deref(),
+    )?;
+    print_result(&r, args.flag("curve"));
+    Ok(0)
+}
+
+fn cmd_sweep(args: &Args) -> Result<i32> {
+    let list = args
+        .get("presets")
+        .unwrap_or("paper-fedavg,paper-dynamic,paper-gradient");
+    let model_preset = args.get("model-preset").unwrap_or("tiny");
+    let mut results = Vec::new();
+    let mut configs = Vec::new();
+    for name in list.split(',') {
+        let cfg = preset(name.trim())
+            .with_context(|| format!("unknown preset {name:?}"))?;
+        configs.push(cfg.clone());
+        log::info!("sweep: running {name}");
+        let r = run_experiment(
+            &cfg,
+            args.flag("mock"),
+            &artifacts_dir(args),
+            model_preset,
+        )?;
+        print_result(&r, false);
+        results.push(r);
+    }
+    let refs: Vec<&ExperimentConfig> = configs.iter().collect();
+    let rrefs: Vec<&RunResult> = results.iter().collect();
+    println!("\n{}", report::table1(&refs));
+    println!("{}", report::table2(&rrefs));
+    println!("{}", report::table3(&rrefs));
+    Ok(0)
+}
+
+fn cmd_inspect(args: &Args) -> Result<i32> {
+    let name = args.get("preset").unwrap_or("paper-fedavg");
+    let cfg = preset(name)
+        .with_context(|| format!("unknown preset {name:?}"))?;
+    println!("{}", cfg.to_json().to_string_pretty());
+    println!("\n{}", report::table1(&[&cfg]));
+    Ok(0)
+}
+
+fn cmd_partition_plan(args: &Args) -> Result<i32> {
+    let strategy = args.get("strategy").unwrap_or("dynamic");
+    let strategy = crate::partition::PartitionStrategy::parse(strategy)
+        .with_context(|| format!("unknown strategy {strategy:?}"))?;
+    let n = args.get_usize("platforms")?.unwrap_or(3);
+    if n == 0 {
+        bail!("--platforms must be >= 1");
+    }
+    let cluster = if n == 3 {
+        ClusterSpec::paper_default()
+    } else {
+        ClusterSpec::heterogeneous(n, 3.0)
+    };
+    let corpus = SyntheticCorpus::generate(&Default::default());
+    let caps: Vec<f64> =
+        cluster.platforms.iter().map(|p| p.compute_speed).collect();
+    let mut planner = PartitionPlanner::new(strategy, 42);
+    let plan = planner.plan(&corpus, &cluster, &caps);
+    println!(
+        "partition plan: strategy={} generation={} encrypted={}",
+        plan.strategy.name(),
+        plan.generation,
+        plan.require_encryption
+    );
+    for (shard, p) in plan.shards.iter().zip(&cluster.platforms) {
+        println!(
+            "  {:<8} speed={:<5.2} docs={:<5} tokens={:<8} topics={:?}",
+            p.name,
+            p.compute_speed,
+            shard.doc_ids.len(),
+            shard.n_tokens(),
+            shard.topic_counts
+        );
+    }
+    println!("  distribution cost: {}", human_bytes(plan.distribution_bytes()));
+    Ok(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn help_and_list() {
+        assert_eq!(run_cli(&s(&["help"])).unwrap(), 0);
+        assert_eq!(run_cli(&s(&["list-presets"])).unwrap(), 0);
+        assert_eq!(run_cli(&s(&["frobnicate"])).unwrap(), 2);
+    }
+
+    #[test]
+    fn inspect_and_partition_plan() {
+        assert_eq!(
+            run_cli(&s(&["inspect", "--preset", "paper-gradient"])).unwrap(),
+            0
+        );
+        assert_eq!(
+            run_cli(&s(&["partition-plan", "--strategy", "fixed"])).unwrap(),
+            0
+        );
+        assert!(run_cli(&s(&["inspect", "--preset", "zzz"])).is_err());
+    }
+
+    #[test]
+    fn train_mock_quick() {
+        assert_eq!(
+            run_cli(&s(&["train", "--preset", "quick", "--rounds", "3", "--mock"]))
+                .unwrap(),
+            0
+        );
+    }
+
+    #[test]
+    fn config_overrides_apply() {
+        let args = Args::parse(
+            &s(&["train", "--preset", "quick", "--agg", "gradient",
+                 "--rounds", "7", "--protocol", "quic",
+                 "--compression", "topk:0.1", "--no-encrypt"]),
+            &FLAGS,
+        )
+        .unwrap();
+        let cfg = build_config(&args).unwrap();
+        assert_eq!(cfg.aggregation.name(), "gradient");
+        assert_eq!(cfg.rounds, 7);
+        assert_eq!(cfg.protocol.name(), "quic");
+        assert!(!cfg.encrypt);
+    }
+
+    #[test]
+    fn train_with_checkpoint_roundtrip() {
+        let base = std::env::temp_dir().join("crossfed-cli-ckpt");
+        let b = base.to_str().unwrap();
+        assert_eq!(
+            run_cli(&s(&["train", "--preset", "quick", "--rounds", "3",
+                         "--mock", "--save-checkpoint", b]))
+            .unwrap(),
+            0
+        );
+        assert_eq!(
+            run_cli(&s(&["train", "--preset", "quick", "--rounds", "2",
+                         "--mock", "--resume", b]))
+            .unwrap(),
+            0
+        );
+        // wrong-shape resume (real model vs mock ckpt) must error cleanly
+        std::fs::remove_file(base.with_extension("json")).ok();
+        std::fs::remove_file(base.with_extension("bin")).ok();
+    }
+
+    #[test]
+    fn bad_overrides_rejected() {
+        for bad in [
+            vec!["train", "--agg", "x"],
+            vec!["train", "--protocol", "x"],
+            vec!["train", "--compression", "x"],
+        ] {
+            let args = Args::parse(&s(&bad), &FLAGS).unwrap();
+            assert!(build_config(&args).is_err(), "{bad:?}");
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! Hand-rolled CLI (no `clap` in the offline image).
+//!
+//! Subcommands:
+//!   train          — run one federated experiment
+//!   inspect        — print a preset / config and the Table-1 header
+//!   partition-plan — show the partition a strategy produces
+//!   sweep          — run a preset list and print Tables 2+3
+//!   list-presets   — enumerate preset names
+
+mod args;
+mod commands;
+
+pub use args::{Args, ArgsError};
+pub use commands::run_cli;

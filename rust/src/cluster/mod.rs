@@ -1,0 +1,177 @@
+//! Simulated cloud platforms.
+//!
+//! The paper's testbed is "three major cloud platforms (such as AWS,
+//! Google Cloud, and Azure)". This module models each platform's compute
+//! capability and cost so the coordinator can reason about heterogeneity;
+//! the WAN between platforms lives in [`crate::netsim`].
+
+use crate::util::rng::Pcg64;
+
+/// One cloud platform participating in federated training.
+#[derive(Clone, Debug)]
+pub struct CloudPlatform {
+    pub name: String,
+    /// relative training-step speed: 1.0 = baseline; 2.0 = twice as fast.
+    /// Simulated step time = measured_step_time / compute_speed.
+    pub compute_speed: f64,
+    /// USD per hour of compute (for the paper's training-cost claims)
+    pub cost_per_hour: f64,
+    /// region label (used by the WAN topology presets)
+    pub region: String,
+    /// per-step slowdown probability (transient stragglers)
+    pub straggler_prob: f64,
+    /// multiplicative slowdown when straggling
+    pub straggler_factor: f64,
+}
+
+impl CloudPlatform {
+    pub fn new(name: &str, compute_speed: f64) -> CloudPlatform {
+        CloudPlatform {
+            name: name.to_string(),
+            compute_speed,
+            cost_per_hour: 3.0,
+            region: "us".to_string(),
+            straggler_prob: 0.0,
+            straggler_factor: 3.0,
+        }
+    }
+
+    /// Simulated duration of work that takes `base_secs` on the baseline
+    /// platform, with straggler injection from `rng`.
+    pub fn step_time(&self, base_secs: f64, rng: &mut Pcg64) -> f64 {
+        assert!(self.compute_speed > 0.0);
+        let mut t = base_secs / self.compute_speed;
+        if self.straggler_prob > 0.0 && rng.uniform() < self.straggler_prob {
+            t *= self.straggler_factor;
+        }
+        t
+    }
+}
+
+/// The set of platforms in one experiment.
+#[derive(Clone, Debug)]
+pub struct ClusterSpec {
+    pub platforms: Vec<CloudPlatform>,
+}
+
+impl ClusterSpec {
+    pub fn n(&self) -> usize {
+        self.platforms.len()
+    }
+
+    /// The paper's 3-platform setup: heterogeneous compute speeds and
+    /// costs shaped like AWS / GCP / Azure GPU instances.
+    pub fn paper_default() -> ClusterSpec {
+        ClusterSpec {
+            platforms: vec![
+                CloudPlatform {
+                    name: "aws".into(),
+                    compute_speed: 1.00,
+                    cost_per_hour: 3.06, // p3.2xlarge-like
+                    region: "us-east".into(),
+                    straggler_prob: 0.05,
+                    straggler_factor: 2.5,
+                },
+                CloudPlatform {
+                    name: "gcp".into(),
+                    compute_speed: 0.85,
+                    cost_per_hour: 2.48,
+                    region: "us-central".into(),
+                    straggler_prob: 0.05,
+                    straggler_factor: 2.5,
+                },
+                CloudPlatform {
+                    name: "azure".into(),
+                    compute_speed: 0.70,
+                    cost_per_hour: 3.40,
+                    region: "eu-west".into(),
+                    straggler_prob: 0.08,
+                    straggler_factor: 3.0,
+                },
+            ],
+        }
+    }
+
+    /// Homogeneous cluster of `n` identical platforms (ablation baseline).
+    pub fn homogeneous(n: usize) -> ClusterSpec {
+        ClusterSpec {
+            platforms: (0..n)
+                .map(|i| CloudPlatform::new(&format!("cloud{i}"), 1.0))
+                .collect(),
+        }
+    }
+
+    /// Strongly heterogeneous cluster (speeds spread geometrically) used
+    /// by the partitioning/straggler ablations.
+    pub fn heterogeneous(n: usize, spread: f64) -> ClusterSpec {
+        assert!(n >= 1);
+        assert!(spread >= 1.0);
+        let platforms = (0..n)
+            .map(|i| {
+                // speeds from 1.0 down to 1/spread
+                let f = if n == 1 {
+                    1.0
+                } else {
+                    (1.0 / spread).powf(i as f64 / (n - 1) as f64)
+                };
+                let mut p = CloudPlatform::new(&format!("cloud{i}"), f);
+                p.straggler_prob = 0.05;
+                p
+            })
+            .collect();
+        ClusterSpec { platforms }
+    }
+
+    /// Total cost of `hours` wall-clock on all platforms.
+    pub fn cost(&self, hours: f64) -> f64 {
+        self.platforms.iter().map(|p| p.cost_per_hour * hours).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_default_has_three_heterogeneous_platforms() {
+        let c = ClusterSpec::paper_default();
+        assert_eq!(c.n(), 3);
+        let speeds: Vec<f64> =
+            c.platforms.iter().map(|p| p.compute_speed).collect();
+        assert!(speeds[0] > speeds[1] && speeds[1] > speeds[2]);
+    }
+
+    #[test]
+    fn step_time_scales_with_speed() {
+        let mut rng = Pcg64::new(1, 0);
+        let fast = CloudPlatform::new("f", 2.0);
+        let slow = CloudPlatform::new("s", 0.5);
+        assert!((fast.step_time(1.0, &mut rng) - 0.5).abs() < 1e-12);
+        assert!((slow.step_time(1.0, &mut rng) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stragglers_slow_down_sometimes() {
+        let mut rng = Pcg64::new(2, 0);
+        let mut p = CloudPlatform::new("x", 1.0);
+        p.straggler_prob = 0.5;
+        p.straggler_factor = 10.0;
+        let times: Vec<f64> =
+            (0..200).map(|_| p.step_time(1.0, &mut rng)).collect();
+        let slow = times.iter().filter(|&&t| t > 5.0).count();
+        assert!(slow > 50 && slow < 150, "slow={slow}");
+    }
+
+    #[test]
+    fn heterogeneous_spread() {
+        let c = ClusterSpec::heterogeneous(4, 4.0);
+        assert_eq!(c.platforms[0].compute_speed, 1.0);
+        assert!((c.platforms[3].compute_speed - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cost_accumulates() {
+        let c = ClusterSpec::homogeneous(2);
+        assert!((c.cost(2.0) - 12.0).abs() < 1e-9);
+    }
+}

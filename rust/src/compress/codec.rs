@@ -1,0 +1,498 @@
+//! Compression codecs over flat f32 update vectors.
+
+use anyhow::{bail, Result};
+
+use crate::util::bytes::{f32s_to_le, le_to_f32s, le_to_u32s, u32s_to_le};
+use crate::util::rng::Pcg64;
+
+/// Compression scheme selector (paper §3.2).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Compression {
+    /// dense f32 — the FedAvg baseline
+    None,
+    /// keep the k largest-magnitude coordinates (sparsification)
+    TopK { ratio: f64 },
+    /// keep k *random* coordinates (cheaper, unbiased when rescaled)
+    RandK { ratio: f64 },
+    /// per-chunk affine int8 quantization with stochastic rounding
+    Int8,
+    /// f32 -> f16 truncation (2x)
+    Fp16,
+}
+
+impl Compression {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Compression::None => "none",
+            Compression::TopK { .. } => "topk",
+            Compression::RandK { .. } => "randk",
+            Compression::Int8 => "int8",
+            Compression::Fp16 => "fp16",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Compression> {
+        let s = s.to_ascii_lowercase();
+        if s == "none" {
+            Some(Compression::None)
+        } else if s == "int8" {
+            Some(Compression::Int8)
+        } else if s == "fp16" {
+            Some(Compression::Fp16)
+        } else if let Some(r) = s.strip_prefix("topk:") {
+            r.parse().ok().map(|ratio| Compression::TopK { ratio })
+        } else if let Some(r) = s.strip_prefix("randk:") {
+            r.parse().ok().map(|ratio| Compression::RandK { ratio })
+        } else {
+            None
+        }
+    }
+}
+
+/// A compressed update: opaque bytes + the codec needed to reopen them.
+#[derive(Clone, Debug)]
+pub struct CompressedPayload {
+    pub scheme: Compression,
+    pub n: usize,
+    pub data: Vec<u8>,
+}
+
+impl CompressedPayload {
+    pub fn byte_len(&self) -> u64 {
+        // + small header: scheme tag (1) + element count (8)
+        self.data.len() as u64 + 9
+    }
+}
+
+/// Stateful compressor (owns the RNG for stochastic schemes).
+#[derive(Clone, Debug)]
+pub struct Compressor {
+    pub scheme: Compression,
+    rng: Pcg64,
+}
+
+const INT8_CHUNK: usize = 4096;
+
+impl Compressor {
+    pub fn new(scheme: Compression, seed: u64) -> Compressor {
+        Compressor { scheme, rng: Pcg64::new(seed, 0xC0DEC) }
+    }
+
+    /// Compress a flat vector. Exactly reversible layout via `decompress`.
+    pub fn compress(&mut self, xs: &[f32]) -> CompressedPayload {
+        let data = match self.scheme {
+            Compression::None => f32s_to_le(xs),
+            Compression::Fp16 => {
+                // perf: preallocated tight loop (see EXPERIMENTS.md §Perf);
+                // the flat_map form costs ~40% more on this path
+                let mut out = Vec::with_capacity(xs.len() * 2);
+                for &x in xs {
+                    out.extend_from_slice(&f32_to_f16_bits(x).to_le_bytes());
+                }
+                out
+            }
+            Compression::Int8 => int8_encode(xs, &mut self.rng),
+            Compression::TopK { ratio } => {
+                let k = k_of(xs.len(), ratio);
+                let idx = top_k_indices(xs, k);
+                sparse_encode(xs, &idx, 1.0)
+            }
+            Compression::RandK { ratio } => {
+                let k = k_of(xs.len(), ratio);
+                let idx = self.rng.sample_indices(xs.len(), k);
+                // unbiased: scale kept coords by n/k
+                let scale = xs.len() as f32 / k.max(1) as f32;
+                sparse_encode(xs, &idx, scale)
+            }
+        };
+        CompressedPayload { scheme: self.scheme, n: xs.len(), data }
+    }
+
+    /// Decompress back to a dense vector of length `payload.n`.
+    pub fn decompress(payload: &CompressedPayload) -> Result<Vec<f32>> {
+        let n = payload.n;
+        match payload.scheme {
+            Compression::None => {
+                let xs = le_to_f32s(&payload.data)
+                    .ok_or_else(|| anyhow::anyhow!("ragged f32 payload"))?;
+                if xs.len() != n {
+                    bail!("dense payload length {} != {}", xs.len(), n);
+                }
+                Ok(xs)
+            }
+            Compression::Fp16 => {
+                if payload.data.len() != n * 2 {
+                    bail!("fp16 payload length mismatch");
+                }
+                Ok(payload
+                    .data
+                    .chunks_exact(2)
+                    .map(|c| f16_bits_to_f32(u16::from_le_bytes([c[0], c[1]])))
+                    .collect())
+            }
+            Compression::Int8 => int8_decode(&payload.data, n),
+            Compression::TopK { .. } | Compression::RandK { .. } => {
+                sparse_decode(&payload.data, n)
+            }
+        }
+    }
+
+    /// Compression ratio estimate (payload bytes / dense bytes).
+    pub fn ratio_estimate(&self, n: usize) -> f64 {
+        if n == 0 {
+            return 1.0;
+        }
+        let dense = (n * 4) as f64;
+        match self.scheme {
+            Compression::None => 1.0,
+            Compression::Fp16 => 0.5,
+            Compression::Int8 => (n as f64 + (n.div_ceil(INT8_CHUNK) * 8) as f64) / dense,
+            Compression::TopK { ratio } | Compression::RandK { ratio } => {
+                (k_of(n, ratio) * 8) as f64 / dense
+            }
+        }
+    }
+}
+
+fn k_of(n: usize, ratio: f64) -> usize {
+    ((n as f64 * ratio).round() as usize).clamp(1, n)
+}
+
+/// Indices of the k largest |x| (O(n) select via partial sort of a copy).
+fn top_k_indices(xs: &[f32], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    if k < xs.len() {
+        idx.select_nth_unstable_by(k - 1, |&a, &b| {
+            xs[b].abs().partial_cmp(&xs[a].abs()).unwrap()
+        });
+        idx.truncate(k);
+    }
+    idx
+}
+
+/// layout: [k u32 count][k u32 indices][k f32 values]
+fn sparse_encode(xs: &[f32], idx: &[usize], scale: f32) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 + idx.len() * 8);
+    out.extend_from_slice(&(idx.len() as u32).to_le_bytes());
+    out.extend_from_slice(&u32s_to_le(
+        &idx.iter().map(|&i| i as u32).collect::<Vec<_>>(),
+    ));
+    out.extend_from_slice(&f32s_to_le(
+        &idx.iter().map(|&i| xs[i] * scale).collect::<Vec<_>>(),
+    ));
+    out
+}
+
+fn sparse_decode(data: &[u8], n: usize) -> Result<Vec<f32>> {
+    if data.len() < 4 {
+        bail!("sparse payload too short");
+    }
+    let k = u32::from_le_bytes([data[0], data[1], data[2], data[3]]) as usize;
+    let want = 4 + k * 8;
+    if data.len() != want {
+        bail!("sparse payload length {} != {}", data.len(), want);
+    }
+    let idx = le_to_u32s(&data[4..4 + 4 * k]).unwrap();
+    let vals = le_to_f32s(&data[4 + 4 * k..]).unwrap();
+    let mut out = vec![0.0f32; n];
+    for (&i, &v) in idx.iter().zip(&vals) {
+        let i = i as usize;
+        if i >= n {
+            bail!("sparse index {i} out of range {n}");
+        }
+        out[i] = v;
+    }
+    Ok(out)
+}
+
+/// int8: per-chunk [min f32][scale f32][n_chunk u8 codes] with stochastic
+/// rounding so quantization is unbiased in expectation.
+fn int8_encode(xs: &[f32], rng: &mut Pcg64) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() + xs.len().div_ceil(INT8_CHUNK) * 8);
+    for chunk in xs.chunks(INT8_CHUNK) {
+        let lo = chunk.iter().cloned().fold(f32::INFINITY, f32::min);
+        let hi = chunk.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let scale = if hi > lo { (hi - lo) / 255.0 } else { 0.0 };
+        out.extend_from_slice(&lo.to_le_bytes());
+        out.extend_from_slice(&scale.to_le_bytes());
+        if scale == 0.0 {
+            out.resize(out.len() + chunk.len(), 0);
+            continue;
+        }
+        // perf (EXPERIMENTS.md §Perf): hoist 1/scale, draw two random
+        // lanes per PRNG step, keep the loop branch-light
+        let inv_scale = 1.0 / scale;
+        let mut i = 0;
+        while i < chunk.len() {
+            let r = rng.next_u64();
+            let r0 = ((r >> 40) as u32) as f32 * (1.0 / (1u32 << 24) as f32);
+            let r1 = (((r >> 8) & 0xff_ffff) as u32) as f32
+                * (1.0 / (1u32 << 24) as f32);
+            for (x, rnd) in chunk[i..chunk.len().min(i + 2)]
+                .iter()
+                .zip([r0, r1])
+            {
+                let exact = (x - lo) * inv_scale;
+                let base = exact.floor();
+                let code = base + f32::from(rnd < exact - base);
+                out.push(code.clamp(0.0, 255.0) as u8);
+            }
+            i += 2;
+        }
+    }
+    out
+}
+
+fn int8_decode(data: &[u8], n: usize) -> Result<Vec<f32>> {
+    let mut out = Vec::with_capacity(n);
+    let mut pos = 0;
+    let mut left = n;
+    while left > 0 {
+        if data.len() < pos + 8 {
+            bail!("int8 payload truncated");
+        }
+        let lo = f32::from_le_bytes(data[pos..pos + 4].try_into().unwrap());
+        let scale =
+            f32::from_le_bytes(data[pos + 4..pos + 8].try_into().unwrap());
+        pos += 8;
+        let m = left.min(INT8_CHUNK);
+        if data.len() < pos + m {
+            bail!("int8 payload truncated");
+        }
+        for &b in &data[pos..pos + m] {
+            out.push(lo + scale * b as f32);
+        }
+        pos += m;
+        left -= m;
+    }
+    if pos != data.len() {
+        bail!("int8 payload has {} trailing bytes", data.len() - pos);
+    }
+    Ok(out)
+}
+
+// ---- f16 conversion (no `half` crate offline) -----------------------------
+
+pub(crate) fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let mut exp = ((bits >> 23) & 0xff) as i32;
+    let mut frac = bits & 0x007f_ffff;
+    if exp == 0xff {
+        // inf / nan
+        return sign | 0x7c00 | if frac != 0 { 0x200 } else { 0 };
+    }
+    exp = exp - 127 + 15;
+    if exp >= 0x1f {
+        return sign | 0x7c00; // overflow -> inf
+    }
+    if exp <= 0 {
+        // subnormal or zero
+        if exp < -10 {
+            return sign;
+        }
+        frac |= 0x0080_0000;
+        let shift = 14 - exp;
+        let half = frac >> shift;
+        // round to nearest even
+        let rem = frac & ((1 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let rounded = match rem.cmp(&halfway) {
+            std::cmp::Ordering::Greater => half + 1,
+            std::cmp::Ordering::Equal => half + (half & 1),
+            std::cmp::Ordering::Less => half,
+        };
+        return sign | rounded as u16;
+    }
+    // normal: round mantissa 23 -> 10 bits, nearest even
+    let half = frac >> 13;
+    let rem = frac & 0x1fff;
+    let mut out = ((exp as u32) << 10) | half;
+    match rem.cmp(&0x1000) {
+        std::cmp::Ordering::Greater => out += 1,
+        std::cmp::Ordering::Equal => out += out & 1,
+        std::cmp::Ordering::Less => {}
+    }
+    sign | out as u16
+}
+
+pub(crate) fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let frac = (h & 0x3ff) as u32;
+    let bits = if exp == 0 {
+        if frac == 0 {
+            sign
+        } else {
+            // subnormal: normalize
+            let mut e = -1i32;
+            let mut f = frac;
+            while f & 0x400 == 0 {
+                f <<= 1;
+                e -= 1;
+            }
+            f &= 0x3ff;
+            sign | (((127 - 15 + e + 1) as u32) << 23) | (f << 13)
+        }
+    } else if exp == 0x1f {
+        sign | 0x7f80_0000 | (frac << 13)
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (frac << 13)
+    };
+    f32::from_bits(bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg64::new(seed, 1);
+        (0..n).map(|_| rng.normal_ms(0.0, 0.1) as f32).collect()
+    }
+
+    #[test]
+    fn none_roundtrips_exactly() {
+        let xs = sample(1000, 1);
+        let mut c = Compressor::new(Compression::None, 0);
+        let p = c.compress(&xs);
+        assert_eq!(Compressor::decompress(&p).unwrap(), xs);
+        assert_eq!(p.byte_len(), 4009);
+    }
+
+    #[test]
+    fn fp16_halves_and_approximates() {
+        let xs = sample(1000, 2);
+        let mut c = Compressor::new(Compression::Fp16, 0);
+        let p = c.compress(&xs);
+        assert_eq!(p.data.len(), 2000);
+        let ys = Compressor::decompress(&p).unwrap();
+        for (x, y) in xs.iter().zip(&ys) {
+            assert!((x - y).abs() < 2e-3 * x.abs().max(0.1), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn f16_special_values() {
+        for x in [0.0f32, -0.0, 1.0, -1.0, 65504.0, 1e-7, f32::INFINITY] {
+            let y = f16_bits_to_f32(f32_to_f16_bits(x));
+            if x.is_finite() && x.abs() > 1e-4 {
+                assert!((x - y).abs() / x.abs().max(1e-3) < 1e-3, "{x} -> {y}");
+            }
+        }
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(1e9)), f32::INFINITY);
+    }
+
+    #[test]
+    fn topk_keeps_largest() {
+        let xs = vec![0.1, -5.0, 0.2, 3.0, -0.05, 0.0, 1.0, -0.3];
+        let mut c = Compressor::new(Compression::TopK { ratio: 0.25 }, 0);
+        let p = c.compress(&xs);
+        let ys = Compressor::decompress(&p).unwrap();
+        assert_eq!(ys[1], -5.0);
+        assert_eq!(ys[3], 3.0);
+        assert_eq!(ys.iter().filter(|&&y| y != 0.0).count(), 2);
+    }
+
+    #[test]
+    fn topk_payload_smaller() {
+        let xs = sample(10_000, 3);
+        let mut c = Compressor::new(Compression::TopK { ratio: 0.01 }, 0);
+        let p = c.compress(&xs);
+        assert!(p.byte_len() < 2000, "{}", p.byte_len());
+        assert!((c.ratio_estimate(10_000) - 0.02).abs() < 0.01);
+    }
+
+    #[test]
+    fn randk_unbiased_in_expectation() {
+        let xs = vec![1.0f32; 512];
+        let mut c = Compressor::new(Compression::RandK { ratio: 0.25 }, 7);
+        let mut acc = vec![0.0f64; 512];
+        let trials = 400;
+        for _ in 0..trials {
+            let ys = Compressor::decompress(&c.compress(&xs)).unwrap();
+            for (a, y) in acc.iter_mut().zip(&ys) {
+                *a += *y as f64;
+            }
+        }
+        let mean: f64 = acc.iter().sum::<f64>() / (512.0 * trials as f64);
+        assert!((mean - 1.0).abs() < 0.05, "mean={mean}");
+    }
+
+    #[test]
+    fn int8_bounded_error_and_unbiased() {
+        let xs = sample(8192, 4);
+        let mut c = Compressor::new(Compression::Int8, 5);
+        let p = c.compress(&xs);
+        // ~1 byte/elem + 8B header per 4096 chunk
+        assert!(p.data.len() <= 8192 + 2 * 8);
+        let ys = Compressor::decompress(&p).unwrap();
+        let span = {
+            let lo = xs.iter().cloned().fold(f32::INFINITY, f32::min);
+            let hi = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            hi - lo
+        };
+        let step = span / 255.0;
+        let mut bias = 0.0f64;
+        for (x, y) in xs.iter().zip(&ys) {
+            assert!((x - y).abs() <= step * 1.001, "{x} vs {y}");
+            bias += (*y - *x) as f64;
+        }
+        assert!(bias.abs() / 8192.0 < step as f64 * 0.1, "bias={bias}");
+    }
+
+    #[test]
+    fn int8_constant_chunk() {
+        let xs = vec![3.5f32; 100];
+        let mut c = Compressor::new(Compression::Int8, 6);
+        let ys = Compressor::decompress(&c.compress(&xs)).unwrap();
+        assert_eq!(ys, xs);
+    }
+
+    #[test]
+    fn parse_schemes() {
+        assert_eq!(Compression::parse("none"), Some(Compression::None));
+        assert_eq!(
+            Compression::parse("topk:0.01"),
+            Some(Compression::TopK { ratio: 0.01 })
+        );
+        assert_eq!(
+            Compression::parse("randk:0.1"),
+            Some(Compression::RandK { ratio: 0.1 })
+        );
+        assert_eq!(Compression::parse("int8"), Some(Compression::Int8));
+        assert_eq!(Compression::parse("zstd"), None);
+    }
+
+    #[test]
+    fn corrupt_payloads_rejected() {
+        let xs = sample(100, 8);
+        let mut c = Compressor::new(Compression::TopK { ratio: 0.1 }, 0);
+        let mut p = c.compress(&xs);
+        p.data.truncate(p.data.len() - 1);
+        assert!(Compressor::decompress(&p).is_err());
+
+        let mut c2 = Compressor::new(Compression::Int8, 0);
+        let mut p2 = c2.compress(&xs);
+        p2.data.push(0);
+        assert!(Compressor::decompress(&p2).is_err());
+    }
+
+    #[test]
+    fn sparse_rejects_out_of_range_index() {
+        let data = {
+            let mut d = Vec::new();
+            d.extend_from_slice(&1u32.to_le_bytes());
+            d.extend_from_slice(&999u32.to_le_bytes());
+            d.extend_from_slice(&1.0f32.to_le_bytes());
+            d
+        };
+        let p = CompressedPayload {
+            scheme: Compression::TopK { ratio: 0.1 },
+            n: 10,
+            data,
+        };
+        assert!(Compressor::decompress(&p).is_err());
+    }
+}

@@ -1,0 +1,15 @@
+//! Gradient/update compression (§3.2: "Compressing or sparsifying model
+//! parameters can significantly reduce the volume of data that needs to
+//! be transmitted").
+//!
+//! All compressors are *real*: they produce actual byte payloads whose
+//! lengths feed the communication ledger, and they decompress back into
+//! dense vectors the aggregator consumes. Error feedback (Seide et al.)
+//! keeps compression from stalling convergence: the residual of each
+//! lossy step is added back before the next one.
+
+mod codec;
+mod error_feedback;
+
+pub use codec::{CompressedPayload, Compression, Compressor};
+pub use error_feedback::ErrorFeedback;

@@ -1,0 +1,310 @@
+//! Typed experiment configuration + JSON loading + paper presets.
+
+mod presets;
+
+pub use presets::{preset, preset_names};
+
+use anyhow::{bail, Context, Result};
+
+use crate::aggregation::AggregationKind;
+use crate::compress::Compression;
+use crate::data::CorpusConfig;
+use crate::netsim::Protocol;
+use crate::optimizer::OptimizerKind;
+use crate::partition::PartitionStrategy;
+use crate::privacy::DpConfig;
+use crate::util::json::Json;
+
+/// Full experiment configuration. Everything a run needs, in one place;
+/// JSON-loadable so experiments are reproducible artifacts.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub seed: u64,
+    /// maximum aggregation rounds
+    pub rounds: usize,
+    /// stop early once eval loss <= target (Table 2's "training time to
+    /// convergence" semantics)
+    pub target_loss: Option<f64>,
+    pub eval_every: usize,
+    /// eval batches per evaluation
+    pub eval_batches: usize,
+
+    pub aggregation: AggregationKind,
+    pub partition: PartitionStrategy,
+    pub protocol: Protocol,
+    pub streams: usize,
+    pub compression: Compression,
+    pub error_feedback: bool,
+    pub encrypt: bool,
+    pub secure_agg: bool,
+    pub dp: DpConfig,
+
+    /// local SGD steps per round (the granularity knob)
+    pub local_steps: usize,
+    /// scale each platform's local steps by its shard share (one "local
+    /// epoch over the partition" semantics — what makes capacity-
+    /// weighted partitioning balance round times). Off by default so
+    /// the aggregation comparisons run at exactly equal step counts.
+    pub proportional_local_work: bool,
+    pub adaptive_granularity: bool,
+    pub local_lr: f32,
+    pub server_opt: OptimizerKind,
+    pub server_lr: f32,
+
+    pub corpus: CorpusConfig,
+    /// simulated seconds per local step on a speed-1.0 platform (scales
+    /// the compute half of Table 2's training-time column)
+    pub base_step_secs: f64,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            name: "default".into(),
+            seed: 42,
+            rounds: 100,
+            target_loss: None,
+            eval_every: 5,
+            eval_batches: 4,
+            aggregation: AggregationKind::FedAvg,
+            partition: PartitionStrategy::DirichletSkew { alpha: 0.3 },
+            protocol: Protocol::Grpc,
+            streams: 16,
+            compression: Compression::None,
+            error_feedback: false,
+            encrypt: true,
+            secure_agg: false,
+            dp: DpConfig::disabled(),
+            local_steps: 4,
+            proportional_local_work: false,
+            adaptive_granularity: false,
+            local_lr: 0.3,
+            server_opt: OptimizerKind::Momentum { beta: 0.9 },
+            server_lr: 0.3,
+            corpus: CorpusConfig::default(),
+            base_step_secs: 18.0,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Sanity-check cross-field constraints.
+    pub fn validate(&self) -> Result<()> {
+        if self.rounds == 0 {
+            bail!("rounds must be >= 1");
+        }
+        if self.local_steps == 0 {
+            bail!("local_steps must be >= 1");
+        }
+        if !(self.local_lr > 0.0) || !(self.server_lr > 0.0) {
+            bail!("learning rates must be positive");
+        }
+        if self.streams == 0 {
+            bail!("streams must be >= 1");
+        }
+        if self.secure_agg {
+            // masked sums are only compatible with fixed pre-scaling:
+            // FedAvg / gradient mean, not loss-dependent dynamic weights
+            if matches!(self.aggregation, AggregationKind::DynamicWeighted { .. })
+            {
+                bail!(
+                    "secure aggregation hides individual updates, so \
+                     loss-weighted (dynamic) aggregation cannot be applied \
+                     server-side; use fedavg or gradient"
+                );
+            }
+            if matches!(self.aggregation, AggregationKind::Async { .. }) {
+                bail!("secure aggregation requires a synchronous barrier");
+            }
+            if !matches!(self.compression, Compression::None) {
+                bail!(
+                    "secure aggregation masks updates with dense noise; \
+                     compression must be 'none'"
+                );
+            }
+        }
+        if self.dp.enabled() && self.dp.clip_norm <= 0.0 {
+            bail!("DP requires clip_norm > 0");
+        }
+        if let Some(t) = self.target_loss {
+            if !(t > 0.0) {
+                bail!("target_loss must be positive");
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse from JSON (fields default to `ExperimentConfig::default()`).
+    pub fn from_json(text: &str) -> Result<ExperimentConfig> {
+        let v = Json::parse(text).context("config JSON")?;
+        let mut c = ExperimentConfig::default();
+        if let Some(s) = v.get("name").and_then(Json::as_str) {
+            c.name = s.to_string();
+        }
+        c.seed = v.opt_usize("seed", c.seed as usize) as u64;
+        c.rounds = v.opt_usize("rounds", c.rounds);
+        if let Some(t) = v.get("target_loss").and_then(Json::as_f64) {
+            c.target_loss = Some(t);
+        }
+        c.eval_every = v.opt_usize("eval_every", c.eval_every);
+        c.eval_batches = v.opt_usize("eval_batches", c.eval_batches);
+        if let Some(s) = v.get("aggregation").and_then(Json::as_str) {
+            c.aggregation = AggregationKind::parse(s)
+                .with_context(|| format!("unknown aggregation {s:?}"))?;
+        }
+        if let Some(s) = v.get("partition").and_then(Json::as_str) {
+            c.partition = PartitionStrategy::parse(s)
+                .with_context(|| format!("unknown partition {s:?}"))?;
+        }
+        if let Some(s) = v.get("protocol").and_then(Json::as_str) {
+            c.protocol = Protocol::parse(s)
+                .with_context(|| format!("unknown protocol {s:?}"))?;
+        }
+        c.streams = v.opt_usize("streams", c.streams);
+        if let Some(s) = v.get("compression").and_then(Json::as_str) {
+            c.compression = Compression::parse(s)
+                .with_context(|| format!("unknown compression {s:?}"))?;
+        }
+        c.error_feedback = v.opt_bool("error_feedback", c.error_feedback);
+        c.encrypt = v.opt_bool("encrypt", c.encrypt);
+        c.secure_agg = v.opt_bool("secure_agg", c.secure_agg);
+        if let Some(dp) = v.get("dp") {
+            c.dp = DpConfig {
+                clip_norm: dp.opt_f64("clip_norm", 1.0),
+                noise_multiplier: dp.opt_f64("noise_multiplier", 0.0),
+                delta: dp.opt_f64("delta", 1e-5),
+            };
+        }
+        c.local_steps = v.opt_usize("local_steps", c.local_steps);
+        c.proportional_local_work =
+            v.opt_bool("proportional_local_work", c.proportional_local_work);
+        c.adaptive_granularity =
+            v.opt_bool("adaptive_granularity", c.adaptive_granularity);
+        c.local_lr = v.opt_f64("local_lr", c.local_lr as f64) as f32;
+        if let Some(s) = v.get("server_opt").and_then(Json::as_str) {
+            c.server_opt = OptimizerKind::parse(s)
+                .with_context(|| format!("unknown optimizer {s:?}"))?;
+        }
+        c.server_lr = v.opt_f64("server_lr", c.server_lr as f64) as f32;
+        if let Some(co) = v.get("corpus") {
+            c.corpus = CorpusConfig {
+                n_docs: co.opt_usize("n_docs", c.corpus.n_docs),
+                doc_sentences: co.opt_usize("doc_sentences", c.corpus.doc_sentences),
+                n_topics: co.opt_usize("n_topics", c.corpus.n_topics),
+                seed: co.opt_usize("seed", c.corpus.seed as usize) as u64,
+            };
+        }
+        c.base_step_secs = v.opt_f64("base_step_secs", c.base_step_secs);
+        c.validate()?;
+        Ok(c)
+    }
+
+    /// Serialize to JSON (the run header recorded with every result).
+    pub fn to_json(&self) -> Json {
+        let dp = Json::obj(vec![
+            ("clip_norm", Json::num(self.dp.clip_norm)),
+            ("noise_multiplier", Json::num(self.dp.noise_multiplier)),
+            ("delta", Json::num(self.dp.delta)),
+        ]);
+        let compression = match self.compression {
+            Compression::TopK { ratio } => format!("topk:{ratio}"),
+            Compression::RandK { ratio } => format!("randk:{ratio}"),
+            other => other.name().to_string(),
+        };
+        let partition = match self.partition {
+            PartitionStrategy::DirichletSkew { alpha } => {
+                format!("dirichlet:{alpha}")
+            }
+            other => other.name().to_string(),
+        };
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("seed", Json::num(self.seed as f64)),
+            ("rounds", Json::num(self.rounds as f64)),
+            (
+                "target_loss",
+                self.target_loss.map_or(Json::Null, Json::num),
+            ),
+            ("eval_every", Json::num(self.eval_every as f64)),
+            ("eval_batches", Json::num(self.eval_batches as f64)),
+            ("aggregation", Json::str(self.aggregation.name())),
+            ("partition", Json::str(partition)),
+            ("protocol", Json::str(self.protocol.name())),
+            ("streams", Json::num(self.streams as f64)),
+            ("compression", Json::str(compression)),
+            ("error_feedback", Json::Bool(self.error_feedback)),
+            ("encrypt", Json::Bool(self.encrypt)),
+            ("secure_agg", Json::Bool(self.secure_agg)),
+            ("dp", dp),
+            ("local_steps", Json::num(self.local_steps as f64)),
+            (
+                "proportional_local_work",
+                Json::Bool(self.proportional_local_work),
+            ),
+            ("adaptive_granularity", Json::Bool(self.adaptive_granularity)),
+            ("local_lr", Json::num(self.local_lr as f64)),
+            ("server_opt", Json::str(self.server_opt.name())),
+            ("server_lr", Json::num(self.server_lr as f64)),
+            ("base_step_secs", Json::num(self.base_step_secs)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_validates() {
+        ExperimentConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let text = r#"{
+            "name": "t2", "rounds": 50, "aggregation": "gradient",
+            "partition": "dirichlet:0.3", "protocol": "quic",
+            "compression": "topk:0.05", "error_feedback": true,
+            "local_steps": 8, "target_loss": 2.5,
+            "dp": {"clip_norm": 1.0, "noise_multiplier": 0.5}
+        }"#;
+        let c = ExperimentConfig::from_json(text).unwrap();
+        assert_eq!(c.name, "t2");
+        assert_eq!(c.rounds, 50);
+        assert_eq!(c.aggregation, AggregationKind::GradientAgg);
+        assert_eq!(c.protocol, Protocol::Quic);
+        assert!(matches!(c.compression, Compression::TopK { ratio } if (ratio - 0.05).abs() < 1e-9));
+        assert!(c.error_feedback);
+        assert_eq!(c.target_loss, Some(2.5));
+        assert!(c.dp.enabled());
+        // serialize contains the same fields
+        let j = c.to_json().to_string();
+        assert!(j.contains("\"aggregation\":\"gradient\""));
+        assert!(j.contains("\"protocol\":\"quic\""));
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        assert!(ExperimentConfig::from_json(r#"{"rounds": 0}"#).is_err());
+        assert!(ExperimentConfig::from_json(r#"{"aggregation": "x"}"#).is_err());
+        assert!(ExperimentConfig::from_json(r#"{"protocol": "smtp"}"#).is_err());
+        assert!(ExperimentConfig::from_json("{").is_err());
+    }
+
+    #[test]
+    fn secure_agg_constraints() {
+        let c = ExperimentConfig::from_json(
+            r#"{"secure_agg": true, "aggregation": "dynamic"}"#,
+        );
+        assert!(c.is_err());
+        let c = ExperimentConfig::from_json(
+            r#"{"secure_agg": true, "compression": "topk:0.1"}"#,
+        );
+        assert!(c.is_err());
+        let c = ExperimentConfig::from_json(
+            r#"{"secure_agg": true, "aggregation": "fedavg"}"#,
+        );
+        assert!(c.is_ok());
+    }
+}

@@ -1,0 +1,324 @@
+//! Coordinator construction and shared round machinery.
+
+use anyhow::{Context, Result};
+
+use crate::aggregation::{self, Aggregator, ClientUpdate};
+use crate::cluster::ClusterSpec;
+use crate::compress::Compressor;
+use crate::config::ExperimentConfig;
+use crate::crypto::SecureAggregator;
+use crate::data::{BatchIter, SyntheticCorpus};
+use crate::metrics::{RoundRecord, RunResult};
+use crate::model::ParamSet;
+use crate::netsim::Wan;
+use crate::optimizer::Optimizer;
+use crate::partition::{GranularityController, LoadMonitor, PartitionPlan, PartitionPlanner};
+use crate::privacy::PrivacyAccountant;
+use crate::runtime::ComputeBackend;
+use crate::transport::Channel;
+use crate::worker::CloudWorker;
+
+/// Fraction of documents held out for evaluation.
+const EVAL_FRACTION: f64 = 0.1;
+
+/// The federation leader plus its simulated platforms.
+pub struct Coordinator<'a, B: ComputeBackend + ?Sized> {
+    pub cfg: ExperimentConfig,
+    pub cluster: ClusterSpec,
+    pub(crate) backend: &'a B,
+    pub(crate) wan: Wan,
+    pub(crate) workers: Vec<CloudWorker>,
+    /// per-worker uplink / downlink channels (leader is node 0's colo;
+    /// worker w uses WAN node w, leader node 0 — worker 0 is local)
+    pub(crate) up: Vec<Channel>,
+    pub(crate) down: Vec<Channel>,
+    pub(crate) global: ParamSet,
+    pub(crate) aggregator: Box<dyn Aggregator>,
+    pub(crate) monitor: LoadMonitor,
+    pub(crate) granularity: GranularityController,
+    pub(crate) planner: PartitionPlanner,
+    pub(crate) plan: PartitionPlan,
+    pub(crate) accountant: PrivacyAccountant,
+    pub(crate) secure: Option<SecureAggregator>,
+    pub(crate) eval_iter: BatchIter,
+    pub(crate) corpus: SyntheticCorpus,
+    // running totals
+    pub(crate) sim_secs: f64,
+    pub(crate) wire_bytes: u64,
+    pub(crate) host_secs: f64,
+    pub(crate) global_version: u64,
+    pub(crate) history: Vec<RoundRecord>,
+    pub(crate) batch_size: usize,
+    pub(crate) seq_len: usize,
+}
+
+impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
+    /// Build a coordinator: generates the corpus, plans the partition,
+    /// distributes shards (counting the encrypted distribution bytes) and
+    /// wires the channels.
+    ///
+    /// `batch_size`/`seq_len` must match the backend's compiled shapes.
+    pub fn new(
+        cfg: ExperimentConfig,
+        cluster: ClusterSpec,
+        backend: &'a B,
+        init: ParamSet,
+        batch_size: usize,
+        seq_len: usize,
+    ) -> Result<Coordinator<'a, B>> {
+        cfg.validate()?;
+        anyhow::ensure!(cluster.n() >= 1, "need at least one platform");
+
+        let corpus = SyntheticCorpus::generate(&cfg.corpus);
+        let n_eval = ((corpus.docs.len() as f64 * EVAL_FRACTION) as usize).max(1);
+        let train_corpus = SyntheticCorpus {
+            docs: corpus.docs[..corpus.docs.len() - n_eval].to_vec(),
+            n_topics: corpus.n_topics,
+        };
+        let eval_tokens: Vec<i32> = {
+            let tok = crate::data::CharTokenizer;
+            corpus.docs[corpus.docs.len() - n_eval..]
+                .iter()
+                .flat_map(|d| tok.encode(&d.text))
+                .collect()
+        };
+        let eval_iter =
+            BatchIter::new(&eval_tokens, batch_size, seq_len, cfg.seed ^ 0xE7A1);
+
+        // Capacities are *learned*, not assumed: the initial plan uses
+        // uniform estimates; the load monitor's measurements drive
+        // re-planning ("Monitor and Adjust in Real-Time", Figure 2).
+        let capacities: Vec<f64> = vec![1.0; cluster.n()];
+        let mut planner = PartitionPlanner::new(cfg.partition, cfg.seed);
+        let plan = planner.plan(&train_corpus, &cluster, &capacities);
+
+        let wan = Wan::from_cluster(&cluster, cfg.seed);
+        let n_params = init.numel();
+        let secret: Option<&[u8]> =
+            cfg.encrypt.then_some(b"crossfed-session-secret".as_slice());
+
+        let mut workers = Vec::with_capacity(cluster.n());
+        let mut up = Vec::with_capacity(cluster.n());
+        let mut down = Vec::with_capacity(cluster.n());
+        for (i, platform) in cluster.platforms.iter().enumerate() {
+            workers.push(CloudWorker::new(
+                i,
+                platform.clone(),
+                &plan.shards[i].tokens,
+                batch_size,
+                seq_len,
+                cfg.seed,
+            ));
+            up.push(Channel::new(
+                i,
+                0,
+                cfg.protocol,
+                cfg.streams,
+                Compressor::new(cfg.compression, cfg.seed ^ i as u64),
+                cfg.error_feedback,
+                n_params,
+                secret,
+            ));
+            down.push(Channel::new(
+                0,
+                i,
+                cfg.protocol,
+                cfg.streams,
+                Compressor::new(crate::compress::Compression::None, 0),
+                false,
+                n_params,
+                secret,
+            ));
+        }
+
+        let secure = cfg
+            .secure_agg
+            .then(|| SecureAggregator::new(cluster.n(), b"crossfed-sa"));
+
+        let aggregator = aggregation::build(
+            cfg.aggregation,
+            Optimizer::new(cfg.server_opt, cfg.server_lr),
+        );
+        let monitor = LoadMonitor::new(cluster.n(), 0.25, 3);
+        let granularity = GranularityController::new(
+            cfg.local_steps,
+            1,
+            (cfg.local_steps * 16).max(cfg.local_steps),
+        );
+        let accountant = PrivacyAccountant::new(cfg.dp);
+
+        let mut coord = Coordinator {
+            monitor,
+            granularity,
+            accountant,
+            secure,
+            aggregator,
+            cfg,
+            cluster,
+            backend,
+            wan,
+            workers,
+            up,
+            down,
+            global: init,
+            planner,
+            plan,
+            eval_iter,
+            corpus: train_corpus,
+            sim_secs: 0.0,
+            wire_bytes: 0,
+            host_secs: 0.0,
+            global_version: 0,
+            history: Vec::new(),
+            batch_size,
+            seq_len,
+        };
+        // initial distribution: every platform receives its (encrypted)
+        // shard once — "Ensure Data Security" phase of the Figure-2 cycle
+        coord.account_distribution()?;
+        Ok(coord)
+    }
+
+    /// Charge the WAN for distributing the current plan's shards.
+    pub(crate) fn account_distribution(&mut self) -> Result<()> {
+        let mut max_secs = 0.0f64;
+        for shard in &self.plan.shards {
+            if shard.platform == 0 {
+                continue; // leader-colocated: local copy
+            }
+            let bytes = (shard.n_tokens() * 4) as u64
+                + if self.plan.require_encryption {
+                    crate::crypto::SEAL_OVERHEAD_BYTES
+                } else {
+                    0
+                };
+            let stats = self.wan.transfer(
+                0,
+                shard.platform,
+                bytes,
+                self.cfg.protocol,
+                self.cfg.streams,
+            );
+            self.wire_bytes += stats.wire_bytes;
+            max_secs = max_secs.max(stats.time_s);
+        }
+        self.sim_secs += max_secs;
+        Ok(())
+    }
+
+    /// Held-out evaluation of the global model.
+    pub(crate) fn evaluate(&mut self) -> Result<(f32, f64)> {
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0u64;
+        let mut total = 0u64;
+        for _ in 0..self.cfg.eval_batches.max(1) {
+            let batch = self.eval_iter.next_batch();
+            let out = self
+                .backend
+                .eval(&self.global, &batch)
+                .context("eval step")?;
+            loss_sum += out.loss as f64;
+            correct += out.n_correct as u64;
+            total += out.n_total as u64;
+        }
+        Ok((
+            (loss_sum / self.cfg.eval_batches.max(1) as f64) as f32,
+            correct as f64 / total.max(1) as f64,
+        ))
+    }
+
+    /// Secure-aggregation path: mask pre-scaled updates, sum, unmask.
+    /// Returns the aggregate delta the leader applies.
+    pub(crate) fn secure_aggregate(
+        &mut self,
+        updates: &[ClientUpdate],
+    ) -> ParamSet {
+        let sa = self.secure.as_ref().expect("secure agg enabled");
+        let n_total: f64 = updates.iter().map(|u| u.n_samples as f64).sum();
+        let round = self.global_version;
+        let masked: Vec<crate::crypto::MaskedUpdate> = updates
+            .iter()
+            .map(|u| {
+                // pre-scale by n_i/n so the masked *sum* is the FedAvg /
+                // mean-gradient aggregate
+                let mut scaled = u.delta.clone();
+                scaled.scale((u.n_samples as f64 / n_total) as f32);
+                sa.mask(u.worker, round, &scaled.to_flat())
+            })
+            .collect();
+        let sum = sa.unmask_sum(&masked);
+        ParamSet::from_flat(&sum, &updates[0].delta).expect("shape preserved")
+    }
+
+    /// Current partition generation (diagnostics / tests).
+    pub fn partition_generation(&self) -> u64 {
+        self.plan.generation
+    }
+
+    /// Global model (read access for examples / tests).
+    pub fn global(&self) -> &ParamSet {
+        &self.global
+    }
+
+    /// Total simulated seconds so far.
+    pub fn sim_secs(&self) -> f64 {
+        self.sim_secs
+    }
+
+    /// Total wire bytes so far.
+    pub fn wire_bytes(&self) -> u64 {
+        self.wire_bytes
+    }
+
+    /// Snapshot the current run state (see [`crate::checkpoint`]).
+    pub fn checkpoint(&self) -> crate::checkpoint::Checkpoint {
+        crate::checkpoint::Checkpoint {
+            params: self.global.clone(),
+            round: self.history.len(),
+            global_version: self.global_version,
+            sim_secs: self.sim_secs,
+            wire_bytes: self.wire_bytes,
+            experiment: self.cfg.name.clone(),
+        }
+    }
+
+    /// Restore model + counters from a checkpoint (shape-checked).
+    pub fn restore(&mut self, ckpt: &crate::checkpoint::Checkpoint) -> Result<()> {
+        ckpt.check_compatible(&self.global)?;
+        self.global = ckpt.params.clone();
+        self.global_version = ckpt.global_version;
+        self.sim_secs = ckpt.sim_secs;
+        self.wire_bytes = ckpt.wire_bytes;
+        Ok(())
+    }
+
+    /// Run the configured experiment to completion.
+    pub fn run(&mut self) -> Result<RunResult> {
+        if self.aggregator.is_async() {
+            self.run_async()
+        } else {
+            self.run_sync()
+        }
+    }
+
+    pub(crate) fn finish(&mut self, reached_target: bool) -> Result<RunResult> {
+        let (eval_loss, eval_acc) = self.evaluate()?;
+        let final_train = self
+            .history
+            .last()
+            .map(|r| r.train_loss)
+            .unwrap_or(f32::NAN);
+        Ok(RunResult {
+            name: self.cfg.name.clone(),
+            history: self.history.clone(),
+            rounds_run: self.history.len(),
+            sim_secs: self.sim_secs,
+            wire_bytes: self.wire_bytes,
+            final_train_loss: final_train,
+            final_eval_loss: eval_loss,
+            final_eval_acc: eval_acc,
+            reached_target,
+            host_compute_secs: self.host_secs,
+        })
+    }
+}

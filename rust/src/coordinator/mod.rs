@@ -1,0 +1,13 @@
+//! The federation leader — the paper's coordination contribution.
+//!
+//! Owns the global model, the WAN, the partition plan and the aggregation
+//! algorithm; drives synchronous rounds (FedAvg / dynamic weighted /
+//! gradient aggregation) or the asynchronous event loop (formula 4), with
+//! the full §3.1 partitioning cycle (granularity control, load balancing,
+//! encrypted distribution, real-time monitoring) in the loop.
+
+mod build;
+mod run_async;
+mod run_sync;
+
+pub use build::Coordinator;

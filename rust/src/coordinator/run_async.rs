@@ -1,0 +1,183 @@
+//! Asynchronous aggregation event loop (paper formula 4).
+//!
+//! No barrier: each platform trains against its latest model copy and
+//! ships its delta when done; the leader applies it immediately with the
+//! staleness-discounted mixing rate and unicasts the fresh model back.
+//! Simulated time advances through an event queue ordered by completion
+//! time, so fast platforms lap slow ones — exactly the behaviour that
+//! makes async aggregation shine under stragglers.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::aggregation::ClientUpdate;
+use crate::coordinator::build::Coordinator;
+use crate::metrics::{RoundRecord, RunResult};
+use crate::model::ParamSet;
+use crate::runtime::ComputeBackend;
+
+/// A worker finishing local training at `at` sim-seconds.
+struct Completion {
+    at: f64,
+    worker: usize,
+}
+
+impl PartialEq for Completion {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.worker == other.worker
+    }
+}
+impl Eq for Completion {}
+impl PartialOrd for Completion {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Completion {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // min-heap by time (BinaryHeap is a max-heap)
+        other
+            .at
+            .partial_cmp(&self.at)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.worker.cmp(&self.worker))
+    }
+}
+
+impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
+    /// Run the async loop for `cfg.rounds * n_workers` aggregations
+    /// (so "round" granularity matches the sync schedulers: one round ==
+    /// every platform contributing once on average).
+    pub(crate) fn run_async(&mut self) -> Result<RunResult> {
+        let n = self.workers.len();
+        let total_aggs = self.cfg.rounds * n;
+        let kind = self.cfg.aggregation.update_kind();
+
+        let mut queue = BinaryHeap::new();
+        // in-flight updates awaiting pickup, per worker
+        let mut pending: Vec<Option<(ParamSet, f32)>> =
+            (0..n).map(|_| None).collect();
+
+        // kick off every platform at t = now, all from the same global
+        let t_base = self.sim_secs;
+        for w in 0..n {
+            self.workers[w].base_version = self.global_version;
+            let global = self.global.clone();
+            let r = self.workers[w].local_round(
+                self.backend,
+                &global,
+                kind,
+                self.cfg.local_steps,
+                self.cfg.local_lr,
+                self.cfg.base_step_secs,
+                &self.cfg.dp,
+            )?;
+            self.host_secs += r.host_secs;
+            queue.push(Completion { at: t_base + r.compute_secs, worker: w });
+            pending[w] = Some((r.update, r.mean_loss));
+        }
+
+        let mut aggs = 0usize;
+        let mut train_loss_acc = 0.0f32;
+        let mut reached = false;
+        while aggs < total_aggs {
+            let Completion { at, worker } = queue.pop().expect("queue nonempty");
+
+            // --- uplink
+            let (update, mean_loss) =
+                pending[worker].take().expect("pending update");
+            let (delivered, up_secs) = if worker == 0 {
+                (update, 0.0)
+            } else {
+                let d = self.up[worker].send_update(
+                    &update,
+                    mean_loss,
+                    self.workers[worker].n_samples,
+                    &mut self.wan,
+                )?;
+                self.wire_bytes += d.wire_bytes;
+                (d.update, d.secs)
+            };
+            let arrive = at + up_secs;
+            self.sim_secs = self.sim_secs.max(arrive);
+
+            // --- apply with staleness discount (formula 4)
+            let staleness =
+                self.global_version - self.workers[worker].base_version;
+            let cu = ClientUpdate {
+                worker,
+                n_samples: self.workers[worker].n_samples,
+                local_loss: mean_loss,
+                delta: delivered,
+                staleness,
+            };
+            let t0 = Instant::now();
+            self.aggregator.apply_one(&mut self.global, &cu);
+            self.host_secs += t0.elapsed().as_secs_f64();
+            self.accountant.record_round();
+            self.global_version += 1;
+            aggs += 1;
+            train_loss_acc += mean_loss;
+
+            // --- unicast fresh model back, then restart the worker
+            let down_secs = if worker == 0 {
+                0.0
+            } else {
+                let (secs, wire) =
+                    self.down[worker].send_params(&self.global, &mut self.wan)?;
+                self.wire_bytes += wire;
+                secs
+            };
+            let restart_at = arrive + down_secs;
+            self.workers[worker].base_version = self.global_version;
+            let global = self.global.clone();
+            let r = self.workers[worker].local_round(
+                self.backend,
+                &global,
+                kind,
+                self.cfg.local_steps,
+                self.cfg.local_lr,
+                self.cfg.base_step_secs,
+                &self.cfg.dp,
+            )?;
+            self.host_secs += r.host_secs;
+            queue.push(Completion { at: restart_at + r.compute_secs, worker });
+            pending[worker] = Some((r.update, r.mean_loss));
+
+            // --- pseudo-round bookkeeping: every n aggregations
+            if aggs % n == 0 {
+                let round = aggs / n - 1;
+                let do_eval = round % self.cfg.eval_every.max(1) == 0
+                    || aggs == total_aggs;
+                let (eval_loss, eval_acc) = if do_eval {
+                    let (l, a) = self.evaluate()?;
+                    (Some(l), Some(a))
+                } else {
+                    (None, None)
+                };
+                self.history.push(RoundRecord {
+                    round,
+                    sim_secs: self.sim_secs,
+                    wire_bytes: self.wire_bytes,
+                    train_loss: train_loss_acc / n as f32,
+                    eval_loss,
+                    eval_acc,
+                    platform_secs: vec![],
+                    epsilon: self.accountant.epsilon(),
+                    partition_gen: self.plan.generation,
+                });
+                train_loss_acc = 0.0;
+                if let (Some(l), Some(t)) = (eval_loss, self.cfg.target_loss) {
+                    if (l as f64) <= t {
+                        reached = true;
+                        break;
+                    }
+                }
+            }
+        }
+        self.finish(reached)
+    }
+}

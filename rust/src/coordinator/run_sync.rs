@@ -1,0 +1,215 @@
+//! Synchronous round loop: FedAvg / dynamic weighted / gradient
+//! aggregation with the full Figure-2 partitioning cycle.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::aggregation::ClientUpdate;
+use crate::coordinator::build::Coordinator;
+use crate::metrics::{RoundRecord, RunResult};
+use crate::runtime::ComputeBackend;
+
+impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
+    /// Run synchronous rounds until `cfg.rounds` or the loss target.
+    pub(crate) fn run_sync(&mut self) -> Result<RunResult> {
+        let mut reached = false;
+        for round in 0..self.cfg.rounds {
+            let record = self.sync_round(round)?;
+            let hit_target = match (record.eval_loss, self.cfg.target_loss) {
+                (Some(l), Some(t)) => (l as f64) <= t,
+                _ => false,
+            };
+            self.history.push(record);
+            if hit_target {
+                reached = true;
+                log::info!(
+                    "round {round}: eval loss target {:?} reached",
+                    self.cfg.target_loss
+                );
+                break;
+            }
+        }
+        self.finish(reached)
+    }
+
+    /// One synchronous round: local training on every platform →
+    /// (DP → compress → encrypt → WAN) → barrier → aggregate → broadcast
+    /// → monitor/re-partition.
+    fn sync_round(&mut self, round: usize) -> Result<RoundRecord> {
+        let base_steps = if self.cfg.adaptive_granularity {
+            self.granularity.local_steps()
+        } else {
+            self.cfg.local_steps
+        };
+        let kind = self.cfg.aggregation.update_kind();
+
+        // "local epoch over the partition" semantics: each platform's
+        // step count tracks its shard share, so partition sizing controls
+        // per-round load (the Figure-2 balancing lever)
+        let total_samples: f64 = self
+            .workers
+            .iter()
+            .map(|w| w.n_samples as f64)
+            .sum();
+        let proportional = self.cfg.proportional_local_work;
+        let budget = (base_steps * self.workers.len()) as f64;
+        let step_counts: Vec<usize> = self
+            .workers
+            .iter()
+            .map(|w| {
+                if proportional {
+                    ((budget * w.n_samples as f64 / total_samples).round()
+                        as usize)
+                        .max(1)
+                } else {
+                    base_steps
+                }
+            })
+            .collect();
+
+        // --- phase 1: local training (platforms run in parallel in sim
+        // time; sequentially on the host against the shared backend)
+        let mut locals = Vec::with_capacity(self.workers.len());
+        for w in 0..self.workers.len() {
+            let steps = step_counts[w];
+            let r = self.workers[w].local_round(
+                self.backend,
+                &self.global,
+                kind,
+                steps,
+                self.cfg.local_lr,
+                self.cfg.base_step_secs,
+                &self.cfg.dp,
+            )?;
+            self.host_secs += r.host_secs;
+            locals.push(r);
+        }
+
+        // --- phase 2: uplink through the real pipeline
+        let mut updates = Vec::with_capacity(self.workers.len());
+        let mut platform_secs = Vec::with_capacity(self.workers.len());
+        let mut round_wire = 0u64;
+        for (w, local) in locals.iter().enumerate() {
+            let (delivered, up_secs, wire) = if w == 0 {
+                // leader-colocated platform: loopback, no WAN
+                (local.update.clone(), 0.0, 0u64)
+            } else {
+                let d = self.up[w].send_update(
+                    &local.update,
+                    local.mean_loss,
+                    self.workers[w].n_samples,
+                    &mut self.wan,
+                )?;
+                (d.update, d.secs, d.wire_bytes)
+            };
+            round_wire += wire;
+            platform_secs.push(local.compute_secs + up_secs);
+            updates.push(ClientUpdate {
+                worker: w,
+                n_samples: self.workers[w].n_samples,
+                local_loss: local.mean_loss,
+                delta: delivered,
+                staleness: 0,
+            });
+        }
+
+        // --- phase 3: barrier + aggregation (leader host CPU measured)
+        let barrier_secs =
+            platform_secs.iter().cloned().fold(0.0f64, f64::max);
+        let t0 = Instant::now();
+        if self.secure.is_some() {
+            let agg = self.secure_aggregate(&updates);
+            // masked path: FedAvg-style application of the summed delta
+            match self.cfg.aggregation.update_kind() {
+                crate::aggregation::UpdateKind::ParamDelta => {
+                    self.global.axpy(1.0, &agg);
+                }
+                crate::aggregation::UpdateKind::Gradient => {
+                    // the masked sum is the weighted mean gradient
+                    self.global.axpy(-self.cfg.server_lr, &agg);
+                }
+            }
+        } else {
+            self.aggregator.aggregate(&mut self.global, &updates);
+        }
+        let agg_host = t0.elapsed().as_secs_f64();
+        self.host_secs += agg_host;
+        self.accountant.record_round();
+        self.global_version += 1;
+
+        // --- phase 4: broadcast the new global model
+        let mut bcast_secs = 0.0f64;
+        for w in 1..self.workers.len() {
+            let (secs, wire) = self.down[w].send_params(&self.global, &mut self.wan)?;
+            bcast_secs = bcast_secs.max(secs);
+            round_wire += wire;
+        }
+
+        self.wire_bytes += round_wire;
+        self.sim_secs += barrier_secs + agg_host + bcast_secs;
+
+        // --- phase 5: monitor & adjust (Figure-2 cycle)
+        let compute_times: Vec<f64> =
+            locals.iter().map(|l| l.compute_secs).collect();
+        if self.cfg.adaptive_granularity {
+            let comm = barrier_secs - compute_times.iter().cloned().fold(0.0, f64::max)
+                + bcast_secs;
+            self.granularity
+                .observe(compute_times.iter().cloned().fold(0.0, f64::max), comm.max(0.0));
+        }
+        if self.monitor.observe(&compute_times) {
+            let caps = self.monitor.capacity_estimates();
+            if let Some(plan) =
+                self.planner.replan(&self.corpus, &self.cluster, &caps)
+            {
+                log::info!(
+                    "round {round}: re-partitioning (gen {} -> {}), caps {:?}",
+                    self.plan.generation,
+                    plan.generation,
+                    caps
+                );
+                self.plan = plan;
+                for (w, shard) in self.plan.shards.iter().enumerate() {
+                    self.workers[w].set_shard(
+                        &shard.tokens,
+                        self.batch_size,
+                        self.seq_len,
+                        self.cfg.seed ^ self.plan.generation,
+                    );
+                }
+                self.account_distribution()?;
+            }
+        }
+
+        // --- eval
+        let (eval_loss, eval_acc) = if round % self.cfg.eval_every.max(1) == 0
+            || round + 1 == self.cfg.rounds
+        {
+            let (l, a) = self.evaluate()?;
+            (Some(l), Some(a))
+        } else {
+            (None, None)
+        };
+
+        let train_loss = locals.iter().map(|l| l.mean_loss).sum::<f32>()
+            / locals.len() as f32;
+        log::debug!(
+            "round {round}: train={train_loss:.3} eval={eval_loss:?} sim={:.0}s wire={}",
+            self.sim_secs,
+            self.wire_bytes
+        );
+
+        Ok(RoundRecord {
+            round,
+            sim_secs: self.sim_secs,
+            wire_bytes: self.wire_bytes,
+            train_loss,
+            eval_loss,
+            eval_acc,
+            platform_secs: compute_times,
+            epsilon: self.accountant.epsilon(),
+            partition_gen: self.plan.generation,
+        })
+    }
+}

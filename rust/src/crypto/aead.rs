@@ -1,0 +1,240 @@
+//! AES-128-CTR + HMAC-SHA256 encrypt-then-MAC sealing.
+//!
+//! (The vendored RustCrypto set has `aes`, `cipher`, `hmac`, `sha2` but no
+//! AEAD crate, so we compose the classic EtM construction: unique nonce per
+//! seal, MAC over nonce || ciphertext, constant-time tag comparison via the
+//! `subtle`-backed `hmac::verify_slice`.)
+
+use anyhow::{bail, Result};
+use hmac::{Hmac, Mac};
+use sha2::{Digest, Sha256};
+
+type Aes128Ctr = ctr_impl::Ctr128BE<aes::Aes128>;
+type HmacSha256 = Hmac<Sha256>;
+
+mod ctr_impl {
+    //! Minimal CTR mode over the block cipher (the `ctr` crate is not
+    //! vendored). Big-endian 128-bit counter, as in NIST SP 800-38A.
+    use aes::cipher::{
+        generic_array::GenericArray, BlockEncrypt, KeyInit, KeySizeUser,
+    };
+
+    pub struct Ctr128BE<C: BlockEncrypt + KeyInit> {
+        cipher: C,
+        counter: u128,
+        keystream: [u8; 16],
+        used: usize,
+    }
+
+    impl<C: BlockEncrypt + KeyInit> Ctr128BE<C> {
+        fn refill(&mut self) {
+            let mut block = GenericArray::clone_from_slice(
+                &self.counter.to_be_bytes(),
+            );
+            self.cipher.encrypt_block(&mut block);
+            self.keystream.copy_from_slice(&block);
+            self.counter = self.counter.wrapping_add(1);
+            self.used = 0;
+        }
+    }
+
+    impl<C: BlockEncrypt + KeyInit + KeySizeUser> super::KeyIvInitCompat for Ctr128BE<C> {
+        fn new_compat(key: &[u8], iv: &[u8; 16]) -> Self {
+            let cipher = C::new_from_slice(key).expect("key size");
+            let mut s = Ctr128BE {
+                cipher,
+                counter: u128::from_be_bytes(*iv),
+                keystream: [0u8; 16],
+                used: 16,
+            };
+            s.refill();
+            s.used = 0;
+            s
+        }
+    }
+
+    impl<C: BlockEncrypt + KeyInit> super::StreamCipherCompat for Ctr128BE<C> {
+        fn apply_keystream_compat(&mut self, data: &mut [u8]) {
+            for b in data {
+                if self.used == 16 {
+                    self.refill();
+                }
+                *b ^= self.keystream[self.used];
+                self.used += 1;
+            }
+        }
+    }
+}
+
+/// Compat traits so the impl reads like the `ctr` crate's API.
+trait KeyIvInitCompat {
+    fn new_compat(key: &[u8], iv: &[u8; 16]) -> Self;
+}
+trait StreamCipherCompat {
+    fn apply_keystream_compat(&mut self, data: &mut [u8]);
+}
+
+/// Per-pair transport key material (enc key + mac key).
+#[derive(Clone)]
+pub struct TransportKey {
+    enc: [u8; 16],
+    mac: [u8; 32],
+    /// monotonically increasing nonce counter (per sender)
+    seq: u64,
+}
+
+/// nonce(16) + tag(32)
+pub const SEAL_OVERHEAD_BYTES: u64 = 48;
+
+impl TransportKey {
+    /// Derive a key pair from a shared secret + context label (HKDF-lite:
+    /// two labeled SHA-256 expansions).
+    pub fn derive(secret: &[u8], context: &str) -> TransportKey {
+        let mut h1 = Sha256::new();
+        h1.update(b"crossfed-enc");
+        h1.update(secret);
+        h1.update(context.as_bytes());
+        let enc_full = h1.finalize();
+
+        let mut h2 = Sha256::new();
+        h2.update(b"crossfed-mac");
+        h2.update(secret);
+        h2.update(context.as_bytes());
+        let mac_full = h2.finalize();
+
+        let mut enc = [0u8; 16];
+        enc.copy_from_slice(&enc_full[..16]);
+        let mut mac = [0u8; 32];
+        mac.copy_from_slice(&mac_full);
+        TransportKey { enc, mac, seq: 0 }
+    }
+}
+
+/// An encrypted, authenticated payload.
+#[derive(Clone, Debug)]
+pub struct SealedPayload {
+    pub nonce: [u8; 16],
+    pub ciphertext: Vec<u8>,
+    pub tag: [u8; 32],
+}
+
+impl SealedPayload {
+    pub fn byte_len(&self) -> u64 {
+        self.ciphertext.len() as u64 + SEAL_OVERHEAD_BYTES
+    }
+}
+
+/// Encrypt-then-MAC. The nonce is seq-derived — never reused per key.
+pub fn seal(key: &mut TransportKey, plaintext: &[u8]) -> SealedPayload {
+    let mut nonce = [0u8; 16];
+    nonce[..8].copy_from_slice(&key.seq.to_be_bytes());
+    key.seq += 1;
+
+    let mut ciphertext = plaintext.to_vec();
+    let mut ctr = <Aes128Ctr as KeyIvInitCompat>::new_compat(&key.enc, &nonce);
+    StreamCipherCompat::apply_keystream_compat(&mut ctr, &mut ciphertext);
+
+    let mut mac = <HmacSha256 as Mac>::new_from_slice(&key.mac).unwrap();
+    mac.update(&nonce);
+    mac.update(&ciphertext);
+    let tag_bytes = mac.finalize().into_bytes();
+    let mut tag = [0u8; 32];
+    tag.copy_from_slice(&tag_bytes);
+
+    SealedPayload { nonce, ciphertext, tag }
+}
+
+/// Verify + decrypt. Fails on any tampering.
+pub fn open(key: &TransportKey, sealed: &SealedPayload) -> Result<Vec<u8>> {
+    let mut mac = <HmacSha256 as Mac>::new_from_slice(&key.mac).unwrap();
+    mac.update(&sealed.nonce);
+    mac.update(&sealed.ciphertext);
+    if mac.verify_slice(&sealed.tag).is_err() {
+        bail!("MAC verification failed: payload tampered or wrong key");
+    }
+    let mut plaintext = sealed.ciphertext.clone();
+    let mut ctr =
+        <Aes128Ctr as KeyIvInitCompat>::new_compat(&key.enc, &sealed.nonce);
+    StreamCipherCompat::apply_keystream_compat(&mut ctr, &mut plaintext);
+    Ok(plaintext)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut k = TransportKey::derive(b"secret", "w0->leader");
+        let msg = b"gradient bytes here".to_vec();
+        let sealed = seal(&mut k, &msg);
+        assert_ne!(sealed.ciphertext, msg); // actually encrypted
+        assert_eq!(open(&k, &sealed).unwrap(), msg);
+    }
+
+    #[test]
+    fn tamper_detected() {
+        let mut k = TransportKey::derive(b"secret", "ctx");
+        let sealed = seal(&mut k, b"payload");
+        let mut bad = sealed.clone();
+        bad.ciphertext[0] ^= 1;
+        assert!(open(&k, &bad).is_err());
+        let mut bad2 = sealed.clone();
+        bad2.tag[5] ^= 0x80;
+        assert!(open(&k, &bad2).is_err());
+        let mut bad3 = sealed;
+        bad3.nonce[0] ^= 1;
+        assert!(open(&k, &bad3).is_err());
+    }
+
+    #[test]
+    fn wrong_key_rejected() {
+        let mut k1 = TransportKey::derive(b"secret-a", "ctx");
+        let k2 = TransportKey::derive(b"secret-b", "ctx");
+        let sealed = seal(&mut k1, b"payload");
+        assert!(open(&k2, &sealed).is_err());
+    }
+
+    #[test]
+    fn nonces_unique_per_seal() {
+        let mut k = TransportKey::derive(b"secret", "ctx");
+        let a = seal(&mut k, b"x");
+        let b = seal(&mut k, b"x");
+        assert_ne!(a.nonce, b.nonce);
+        assert_ne!(a.ciphertext, b.ciphertext); // same msg, distinct stream
+    }
+
+    #[test]
+    fn context_separates_keys() {
+        let mut k1 = TransportKey::derive(b"s", "a->b");
+        let k2 = TransportKey::derive(b"s", "b->a");
+        let sealed = seal(&mut k1, b"payload");
+        assert!(open(&k2, &sealed).is_err());
+    }
+
+    #[test]
+    fn overhead_is_constant() {
+        let mut k = TransportKey::derive(b"s", "c");
+        for n in [0usize, 1, 1000] {
+            let sealed = seal(&mut k, &vec![0u8; n]);
+            assert_eq!(sealed.byte_len(), n as u64 + SEAL_OVERHEAD_BYTES);
+        }
+    }
+
+    #[test]
+    fn empty_payload() {
+        let mut k = TransportKey::derive(b"s", "c");
+        let sealed = seal(&mut k, b"");
+        assert_eq!(open(&k, &sealed).unwrap(), Vec::<u8>::new());
+    }
+
+    #[test]
+    fn ctr_keystream_known_pattern() {
+        // CTR must be length-preserving and self-inverse
+        let mut k = TransportKey::derive(b"kat", "c");
+        let msg: Vec<u8> = (0..=255).collect();
+        let sealed = seal(&mut k, &msg);
+        assert_eq!(sealed.ciphertext.len(), 256);
+        assert_eq!(open(&k, &sealed).unwrap(), msg);
+    }
+}

@@ -1,0 +1,22 @@
+//! Security substrate (§3.1 "Ensure Data Security" and the paper's
+//! encryption / privacy-protection discussion).
+//!
+//! Two real mechanisms, plus a cost model for the homomorphic-encryption
+//! variant the paper mentions:
+//!
+//! * [`seal`]/[`open`] — AES-128-CTR + HMAC-SHA256 encrypt-then-MAC
+//!   transport sealing for every update payload crossing the WAN. Real
+//!   crypto (vendored RustCrypto crates), real byte overhead.
+//! * [`secure_agg`] — pairwise additive masking (Bonawitz et al. 2017):
+//!   the leader only ever sees the *sum* of worker updates, matching the
+//!   property the paper invokes homomorphic encryption for. Masks are
+//!   derived from pairwise shared secrets and cancel exactly in the sum.
+//! * [`he_cost`] — an additively-homomorphic-encryption cost model
+//!   (Paillier-like) for the ablation that prices real HE against
+//!   masking-based secure aggregation.
+
+mod aead;
+mod secure_agg;
+
+pub use aead::{open, seal, SealedPayload, TransportKey, SEAL_OVERHEAD_BYTES};
+pub use secure_agg::{he_cost, HeCost, MaskedUpdate, SecureAggregator};

@@ -1,0 +1,19 @@
+//! Data substrate: corpus generation, tokenization, sharding, batching.
+//!
+//! Substitution (DESIGN.md): the paper trains on WikiText-103, which the
+//! offline image cannot download. This module generates a deterministic
+//! synthetic corpus with genuine n-gram structure (a Markov chain over
+//! word templates with per-topic vocabularies) so that (a) an LM trained
+//! on it has a decreasing, non-trivial loss, and (b) shards can be made
+//! *non-IID by topic* — the heterogeneity that drives the paper's
+//! aggregation comparisons.
+
+mod batcher;
+mod corpus;
+mod shard;
+mod tokenizer;
+
+pub use batcher::BatchIter;
+pub use corpus::{CorpusConfig, SyntheticCorpus};
+pub use shard::{dirichlet_shards, equal_shards, skew_tv, weighted_shards, Shard};
+pub use tokenizer::CharTokenizer;

@@ -1,0 +1,300 @@
+//! Sharding the corpus across cloud platforms.
+//!
+//! Three strategies, matching the experiment matrix:
+//! * [`equal_shards`] — IID round-robin (the "fixed partitioning" base);
+//! * [`weighted_shards`] — sized by platform capacity weights;
+//! * [`dirichlet_shards`] — topic-skewed non-IID (Dirichlet(α) per topic
+//!   over platforms), the standard federated heterogeneity generator and
+//!   the regime where the paper's dynamic weighting/gradient aggregation
+//!   claims bite.
+
+use crate::data::corpus::SyntheticCorpus;
+use crate::data::tokenizer::CharTokenizer;
+use crate::util::rng::Pcg64;
+
+/// One platform's local dataset: token stream + provenance.
+#[derive(Clone, Debug)]
+pub struct Shard {
+    pub platform: usize,
+    pub tokens: Vec<i32>,
+    /// docs assigned (indices into the corpus)
+    pub doc_ids: Vec<usize>,
+    /// per-topic doc counts (heterogeneity diagnostics)
+    pub topic_counts: Vec<usize>,
+}
+
+impl Shard {
+    pub fn n_tokens(&self) -> usize {
+        self.tokens.len()
+    }
+
+    /// Sample-count weight n_i used by FedAvg (formula 1).
+    pub fn n_samples(&self) -> usize {
+        self.tokens.len()
+    }
+
+    fn from_docs(
+        platform: usize,
+        doc_ids: Vec<usize>,
+        corpus: &SyntheticCorpus,
+    ) -> Shard {
+        let tok = CharTokenizer;
+        let mut tokens = Vec::new();
+        let mut topic_counts = vec![0usize; corpus.n_topics];
+        for &d in &doc_ids {
+            tokens.extend(tok.encode(&corpus.docs[d].text));
+            topic_counts[corpus.docs[d].topic] += 1;
+        }
+        Shard { platform, tokens, doc_ids, topic_counts }
+    }
+}
+
+/// IID: docs dealt in equal contiguous blocks. (Blocks, not round-robin:
+/// topics cycle through the corpus with period `n_topics`, and round-robin
+/// dealing would alias with that cycle whenever `n` divides `n_topics`,
+/// producing accidentally *maximal* topic skew.)
+pub fn equal_shards(corpus: &SyntheticCorpus, n: usize) -> Vec<Shard> {
+    assert!(n >= 1);
+    let n_docs = corpus.docs.len();
+    let base = n_docs / n;
+    let extra = n_docs % n;
+    let mut assignments: Vec<Vec<usize>> = vec![Vec::new(); n];
+    let mut next = 0;
+    for (p, a) in assignments.iter_mut().enumerate() {
+        let take = base + usize::from(p < extra);
+        a.extend(next..next + take);
+        next += take;
+    }
+    assignments
+        .into_iter()
+        .enumerate()
+        .map(|(p, ids)| Shard::from_docs(p, ids, corpus))
+        .collect()
+}
+
+/// Capacity-weighted: platform i receives ~weights[i] fraction of docs.
+pub fn weighted_shards(
+    corpus: &SyntheticCorpus,
+    weights: &[f64],
+) -> Vec<Shard> {
+    assert!(!weights.is_empty());
+    let total: f64 = weights.iter().sum();
+    assert!(total > 0.0);
+    let n = weights.len();
+    let n_docs = corpus.docs.len();
+    // largest-remainder apportionment
+    let mut counts: Vec<usize> = weights
+        .iter()
+        .map(|w| (w / total * n_docs as f64).floor() as usize)
+        .collect();
+    let mut assigned: usize = counts.iter().sum();
+    let mut remainders: Vec<(usize, f64)> = weights
+        .iter()
+        .enumerate()
+        .map(|(i, w)| {
+            let exact = w / total * n_docs as f64;
+            (i, exact - exact.floor())
+        })
+        .collect();
+    remainders.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    let mut ri = 0;
+    while assigned < n_docs {
+        counts[remainders[ri % n].0] += 1;
+        assigned += 1;
+        ri += 1;
+    }
+
+    let mut assignments: Vec<Vec<usize>> = vec![Vec::new(); n];
+    let mut next = 0usize;
+    for (p, &c) in counts.iter().enumerate() {
+        for _ in 0..c {
+            assignments[p].push(next);
+            next += 1;
+        }
+    }
+    assignments
+        .into_iter()
+        .enumerate()
+        .map(|(p, ids)| Shard::from_docs(p, ids, corpus))
+        .collect()
+}
+
+/// Non-IID: for each topic, split its docs across platforms by a
+/// Dirichlet(alpha) draw. Small alpha → strong label skew.
+pub fn dirichlet_shards(
+    corpus: &SyntheticCorpus,
+    n: usize,
+    alpha: f64,
+    seed: u64,
+) -> Vec<Shard> {
+    assert!(n >= 1);
+    let mut rng = Pcg64::new(seed, 0xD112);
+    let mut assignments: Vec<Vec<usize>> = vec![Vec::new(); n];
+
+    for topic in 0..corpus.n_topics {
+        let docs: Vec<usize> = (0..corpus.docs.len())
+            .filter(|&d| corpus.docs[d].topic == topic)
+            .collect();
+        let weights = rng.dirichlet(alpha, n);
+        for &d in &docs {
+            // sample platform from the topic's platform distribution
+            let u = rng.uniform();
+            let mut acc = 0.0;
+            let mut chosen = n - 1;
+            for (p, &w) in weights.iter().enumerate() {
+                acc += w;
+                if u < acc {
+                    chosen = p;
+                    break;
+                }
+            }
+            assignments[chosen].push(d);
+        }
+    }
+
+    // guarantee non-empty shards: steal one doc for any empty platform
+    for p in 0..n {
+        if assignments[p].is_empty() {
+            let donor = (0..n)
+                .max_by_key(|&q| assignments[q].len())
+                .expect("nonempty");
+            let doc = assignments[donor].pop().expect("donor has docs");
+            assignments[p].push(doc);
+        }
+    }
+
+    assignments
+        .into_iter()
+        .enumerate()
+        .map(|(p, ids)| Shard::from_docs(p, ids, corpus))
+        .collect()
+}
+
+/// Label-skew measure: mean total-variation distance between each shard's
+/// topic distribution and the global one (0 = IID).
+pub fn skew_tv(shards: &[Shard]) -> f64 {
+    let n_topics = shards[0].topic_counts.len();
+    let mut global = vec![0.0f64; n_topics];
+    for s in shards {
+        for (g, &c) in global.iter_mut().zip(&s.topic_counts) {
+            *g += c as f64;
+        }
+    }
+    let total: f64 = global.iter().sum();
+    if total == 0.0 {
+        return 0.0;
+    }
+    for g in &mut global {
+        *g /= total;
+    }
+    let mut tv_sum = 0.0;
+    for s in shards {
+        let local_total: f64 = s.topic_counts.iter().map(|&c| c as f64).sum();
+        if local_total == 0.0 {
+            continue;
+        }
+        let tv: f64 = s
+            .topic_counts
+            .iter()
+            .zip(&global)
+            .map(|(&c, &g)| (c as f64 / local_total - g).abs())
+            .sum::<f64>()
+            / 2.0;
+        tv_sum += tv;
+    }
+    tv_sum / shards.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::CorpusConfig;
+
+    fn corpus() -> SyntheticCorpus {
+        SyntheticCorpus::generate(&CorpusConfig {
+            n_docs: 120,
+            doc_sentences: 4,
+            n_topics: 6,
+            seed: 7,
+        })
+    }
+
+    #[test]
+    fn equal_shards_cover_all_docs() {
+        let c = corpus();
+        let shards = equal_shards(&c, 3);
+        assert_eq!(shards.len(), 3);
+        let mut all: Vec<usize> =
+            shards.iter().flat_map(|s| s.doc_ids.clone()).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..120).collect::<Vec<_>>());
+        // balanced
+        for s in &shards {
+            assert_eq!(s.doc_ids.len(), 40);
+        }
+        // near-IID
+        assert!(skew_tv(&shards) < 0.05, "tv={}", skew_tv(&shards));
+    }
+
+    #[test]
+    fn weighted_shards_respect_weights() {
+        let c = corpus();
+        let shards = weighted_shards(&c, &[3.0, 1.0]);
+        assert_eq!(shards[0].doc_ids.len(), 90);
+        assert_eq!(shards[1].doc_ids.len(), 30);
+        let total: usize = shards.iter().map(|s| s.doc_ids.len()).sum();
+        assert_eq!(total, 120);
+    }
+
+    #[test]
+    fn dirichlet_low_alpha_is_skewed_high_alpha_is_not() {
+        let c = corpus();
+        let skewed = dirichlet_shards(&c, 3, 0.1, 42);
+        let iid = dirichlet_shards(&c, 3, 100.0, 42);
+        assert!(
+            skew_tv(&skewed) > skew_tv(&iid) + 0.1,
+            "skewed={} iid={}",
+            skew_tv(&skewed),
+            skew_tv(&iid)
+        );
+        // all docs assigned exactly once
+        let mut all: Vec<usize> =
+            skewed.iter().flat_map(|s| s.doc_ids.clone()).collect();
+        all.sort_unstable();
+        assert_eq!(all.len(), 120);
+        all.dedup();
+        assert_eq!(all.len(), 120);
+    }
+
+    #[test]
+    fn dirichlet_no_empty_shards() {
+        let c = corpus();
+        for seed in 0..10 {
+            let shards = dirichlet_shards(&c, 5, 0.05, seed);
+            for s in &shards {
+                assert!(!s.doc_ids.is_empty(), "seed={seed}");
+                assert!(s.n_tokens() > 0);
+            }
+        }
+    }
+
+    #[test]
+    fn shards_tokenize() {
+        let c = corpus();
+        let shards = equal_shards(&c, 2);
+        for s in &shards {
+            assert!(s.n_tokens() > 100);
+            assert!(s.tokens.iter().all(|&t| (0..96).contains(&t)));
+        }
+    }
+
+    #[test]
+    fn deterministic_dirichlet() {
+        let c = corpus();
+        let a = dirichlet_shards(&c, 3, 0.3, 5);
+        let b = dirichlet_shards(&c, 3, 0.3, 5);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.doc_ids, y.doc_ids);
+        }
+    }
+}

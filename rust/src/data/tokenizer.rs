@@ -1,0 +1,73 @@
+//! Char-level tokenizer over a fixed printable-ASCII alphabet.
+//!
+//! Char-level keeps the vocab at 96 (matching the AOT model presets) and
+//! needs no learned merges, so the rust and python sides can never
+//! disagree about token ids.
+
+/// Vocabulary: byte 32..=126 (95 printable ASCII chars) + '\n' as id 95.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CharTokenizer;
+
+pub const VOCAB_SIZE: usize = 96;
+const NEWLINE_ID: i32 = 95;
+
+impl CharTokenizer {
+    pub fn vocab_size(&self) -> usize {
+        VOCAB_SIZE
+    }
+
+    /// Encode text; unknown bytes map to ' ' (id 0).
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        text.bytes()
+            .map(|b| match b {
+                32..=126 => (b - 32) as i32,
+                b'\n' => NEWLINE_ID,
+                _ => 0,
+            })
+            .collect()
+    }
+
+    /// Decode ids back to text (inverse of encode for valid ids).
+    pub fn decode(&self, ids: &[i32]) -> String {
+        ids.iter()
+            .map(|&id| match id {
+                0..=94 => (id as u8 + 32) as char,
+                95 => '\n',
+                _ => '?',
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_printable() {
+        let t = CharTokenizer;
+        let text = "Hello, cross-cloud federated training! 123\nnew line";
+        assert_eq!(t.decode(&t.encode(text)), text);
+    }
+
+    #[test]
+    fn ids_in_range() {
+        let t = CharTokenizer;
+        for id in t.encode("any text ~ { } | \n") {
+            assert!((0..VOCAB_SIZE as i32).contains(&id));
+        }
+    }
+
+    #[test]
+    fn unknown_bytes_become_space() {
+        let t = CharTokenizer;
+        let ids = t.encode("a\tb");
+        assert_eq!(t.decode(&ids), "a b");
+    }
+
+    #[test]
+    fn vocab_matches_model_presets() {
+        // python/compile/model.py presets use vocab_size=96
+        assert_eq!(CharTokenizer.vocab_size(), 96);
+    }
+}

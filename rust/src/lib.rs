@@ -1,0 +1,32 @@
+//! # crossfed — cross-cloud federated training of large language models
+//!
+//! A rust + JAX + Pallas reproduction of *"Research on Key Technologies for
+//! Cross-Cloud Federated Training of Large Language Models"* (Yang et al.,
+//! 2024). The rust layer is the paper's coordination contribution: data
+//! partitioning and distribution, cross-cloud communication optimization,
+//! the four model-aggregation algorithms (formulas 1–4), and the
+//! security/privacy substrates. The compute (a GPT-style LM with Pallas
+//! attention kernels) is AOT-compiled from JAX to HLO and executed through
+//! PJRT — python never runs on the training path.
+
+pub mod util;
+pub mod model;
+pub mod runtime;
+pub mod cluster;
+pub mod netsim;
+pub mod compress;
+pub mod crypto;
+pub mod privacy;
+pub mod data;
+pub mod partition;
+pub mod optimizer;
+pub mod aggregation;
+pub mod transport;
+pub mod metrics;
+pub mod config;
+pub mod worker;
+pub mod coordinator;
+pub mod report;
+pub mod cli;
+pub mod testkit;
+pub mod checkpoint;

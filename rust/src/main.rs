@@ -1,0 +1,17 @@
+//! crossfed CLI — the leader entrypoint.
+//!
+//! `crossfed train --preset paper-fedavg` runs one federated experiment
+//! against the AOT artifacts (or `--mock` for the runtime-free backend);
+//! `crossfed sweep` regenerates the paper's Tables 1–3. See `crossfed help`.
+
+fn main() {
+    crossfed::util::logging::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match crossfed::cli::run_cli(&args) {
+        Ok(code) => std::process::exit(code),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,152 @@
+//! Run metrics: per-round records, communication ledger, curves, writers.
+
+use std::fmt::Write as _;
+
+/// One aggregation round's record.
+#[derive(Clone, Debug)]
+pub struct RoundRecord {
+    pub round: usize,
+    /// simulated wall-clock at the end of this round (seconds)
+    pub sim_secs: f64,
+    /// cumulative wire bytes (up + down + distribution)
+    pub wire_bytes: u64,
+    /// mean local training loss across platforms this round
+    pub train_loss: f32,
+    /// held-out eval loss (None between eval rounds)
+    pub eval_loss: Option<f32>,
+    /// held-out next-token accuracy in [0,1]
+    pub eval_acc: Option<f64>,
+    /// per-platform compute seconds this round (load diagnostics)
+    pub platform_secs: Vec<f64>,
+    /// cumulative DP epsilon after this round
+    pub epsilon: f64,
+    /// partition generation in effect
+    pub partition_gen: u64,
+}
+
+/// Aggregate outcome of a run.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub name: String,
+    pub history: Vec<RoundRecord>,
+    pub rounds_run: usize,
+    pub sim_secs: f64,
+    pub wire_bytes: u64,
+    pub final_train_loss: f32,
+    pub final_eval_loss: f32,
+    pub final_eval_acc: f64,
+    pub reached_target: bool,
+    /// real (host) seconds spent inside PJRT/aggregation — profiling
+    pub host_compute_secs: f64,
+}
+
+impl RunResult {
+    /// Simulated training time in hours (Table 2 column).
+    pub fn sim_hours(&self) -> f64 {
+        self.sim_secs / 3600.0
+    }
+
+    /// Communication overhead in GB (Table 2 column).
+    pub fn comm_gb(&self) -> f64 {
+        self.wire_bytes as f64 / 1e9
+    }
+
+    /// Convergence accuracy in percent (Table 3 column).
+    pub fn acc_pct(&self) -> f64 {
+        self.final_eval_acc * 100.0
+    }
+
+    /// Loss/accuracy curve as CSV (round, sim_hours, comm_gb, train_loss,
+    /// eval_loss, eval_acc).
+    pub fn curve_csv(&self) -> String {
+        let mut s = String::from(
+            "round,sim_hours,comm_gb,train_loss,eval_loss,eval_acc\n",
+        );
+        for r in &self.history {
+            let _ = writeln!(
+                s,
+                "{},{:.4},{:.4},{:.4},{},{}",
+                r.round,
+                r.sim_secs / 3600.0,
+                r.wire_bytes as f64 / 1e9,
+                r.train_loss,
+                r.eval_loss.map_or(String::new(), |x| format!("{x:.4}")),
+                r.eval_acc.map_or(String::new(), |x| format!("{x:.4}")),
+            );
+        }
+        s
+    }
+
+    /// Latest eval numbers walking back from the end.
+    pub fn last_eval(&self) -> Option<(f32, f64)> {
+        self.history
+            .iter()
+            .rev()
+            .find_map(|r| r.eval_loss.map(|l| (l, r.eval_acc.unwrap_or(0.0))))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record(round: usize, eval: Option<(f32, f64)>) -> RoundRecord {
+        RoundRecord {
+            round,
+            sim_secs: round as f64 * 60.0,
+            wire_bytes: round as u64 * 1_000_000,
+            train_loss: 4.0 - round as f32 * 0.1,
+            eval_loss: eval.map(|e| e.0),
+            eval_acc: eval.map(|e| e.1),
+            platform_secs: vec![1.0, 1.1],
+            epsilon: 0.0,
+            partition_gen: 0,
+        }
+    }
+
+    fn result() -> RunResult {
+        RunResult {
+            name: "t".into(),
+            history: vec![
+                record(1, None),
+                record(2, Some((3.5, 0.3))),
+                record(3, None),
+            ],
+            rounds_run: 3,
+            sim_secs: 7200.0,
+            wire_bytes: 4_500_000_000,
+            final_train_loss: 3.7,
+            final_eval_loss: 3.5,
+            final_eval_acc: 0.3,
+            reached_target: false,
+            host_compute_secs: 1.0,
+        }
+    }
+
+    #[test]
+    fn unit_conversions() {
+        let r = result();
+        assert!((r.sim_hours() - 2.0).abs() < 1e-12);
+        assert!((r.comm_gb() - 4.5).abs() < 1e-12);
+        assert!((r.acc_pct() - 30.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let csv = result().curve_csv();
+        let lines: Vec<&str> = csv.trim().lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("round,"));
+        assert!(lines[2].contains("3.5"));
+        // eval columns empty on non-eval rounds
+        assert!(lines[1].ends_with(",,"));
+    }
+
+    #[test]
+    fn last_eval_walks_back() {
+        let r = result();
+        let (loss, acc) = r.last_eval().unwrap();
+        assert_eq!(loss, 3.5);
+        assert_eq!(acc, 0.3);
+    }
+}

@@ -1,0 +1,173 @@
+//! Parsing of `artifacts/manifest_<preset>.json`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Parameter initialization scheme (mirrors python `ParamSpec.init`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InitKind {
+    Normal,
+    Zeros,
+    Ones,
+}
+
+/// One parameter leaf: name, shape, init.
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init: InitKind,
+    pub std: f64,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Transformer dimensions (informational; the HLO fixes them anyway).
+#[derive(Clone, Debug)]
+pub struct ModelDims {
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub batch_size: usize,
+    pub n_params: usize,
+}
+
+/// Parsed AOT manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub preset: String,
+    pub model: ModelDims,
+    pub params: Vec<ParamSpec>,
+    /// path of the train HLO artifact (absolute, resolved next to manifest)
+    pub train_hlo: PathBuf,
+    /// path of the eval HLO artifact
+    pub eval_hlo: PathBuf,
+}
+
+impl Manifest {
+    /// Load `manifest_<preset>.json` from an artifacts directory.
+    pub fn load(artifacts_dir: &Path, preset: &str) -> Result<Manifest> {
+        let path = artifacts_dir.join(format!("manifest_{preset}.json"));
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`?)"))?;
+        Self::parse(&text, artifacts_dir)
+            .with_context(|| format!("parsing {path:?}"))
+    }
+
+    /// Parse manifest JSON; artifact paths resolve relative to `dir`.
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let v = Json::parse(text)?;
+        let model = v.req("model")?;
+        let dims = ModelDims {
+            vocab_size: model.req_usize("vocab_size")?,
+            d_model: model.req_usize("d_model")?,
+            n_heads: model.req_usize("n_heads")?,
+            n_layers: model.req_usize("n_layers")?,
+            d_ff: model.req_usize("d_ff")?,
+            seq_len: model.req_usize("seq_len")?,
+            batch_size: model.req_usize("batch_size")?,
+            n_params: model.req_usize("n_params")?,
+        };
+
+        let mut params = Vec::new();
+        for p in v.req("params")?.as_arr().context("params not an array")? {
+            let init = match p.req_str("init")? {
+                "normal" => InitKind::Normal,
+                "zeros" => InitKind::Zeros,
+                "ones" => InitKind::Ones,
+                other => bail!("unknown init kind {other:?}"),
+            };
+            let shape = p
+                .req("shape")?
+                .as_arr()
+                .context("shape not an array")?
+                .iter()
+                .map(|d| d.as_usize().context("bad dim"))
+                .collect::<Result<Vec<_>>>()?;
+            params.push(ParamSpec {
+                name: p.req_str("name")?.to_string(),
+                shape,
+                init,
+                std: p.opt_f64("std", 0.0),
+            });
+        }
+        if params.is_empty() {
+            bail!("manifest has no params");
+        }
+        let total: usize = params.iter().map(|p| p.numel()).sum();
+        if total != dims.n_params {
+            bail!(
+                "manifest n_params {} != sum of leaf sizes {}",
+                dims.n_params,
+                total
+            );
+        }
+
+        let artifacts = v.req("artifacts")?;
+        Ok(Manifest {
+            preset: v.req_str("preset")?.to_string(),
+            model: dims,
+            params,
+            train_hlo: dir.join(artifacts.req_str("train")?),
+            eval_hlo: dir.join(artifacts.req_str("eval")?),
+        })
+    }
+
+    /// Total parameter count.
+    pub fn n_params(&self) -> usize {
+        self.params.iter().map(|p| p.numel()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_manifest() -> String {
+        r#"{
+ "preset": "test",
+ "model": {"vocab_size": 8, "d_model": 4, "n_heads": 1, "n_layers": 1,
+           "d_ff": 8, "seq_len": 4, "batch_size": 2, "n_params": 36},
+ "params": [
+   {"name": "tok_emb", "shape": [8, 4], "init": "normal", "std": 0.02},
+   {"name": "ln.scale", "shape": [4], "init": "ones", "std": 0.0}
+ ],
+ "io": {},
+ "artifacts": {"train": "train_test.hlo.txt", "eval": "eval_test.hlo.txt"}
+}"#
+        .to_string()
+    }
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(&sample_manifest(), Path::new("/a")).unwrap();
+        assert_eq!(m.preset, "test");
+        assert_eq!(m.params.len(), 2);
+        assert_eq!(m.params[0].numel(), 32);
+        assert_eq!(m.params[1].init, InitKind::Ones);
+        assert_eq!(m.n_params(), 36);
+        assert_eq!(m.train_hlo, Path::new("/a/train_test.hlo.txt"));
+    }
+
+    #[test]
+    fn rejects_param_count_mismatch() {
+        let bad = sample_manifest().replace("\"n_params\": 36", "\"n_params\": 35");
+        assert!(Manifest::parse(&bad, Path::new("/a")).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_init() {
+        let bad = sample_manifest().replace("\"ones\"", "\"foo\"");
+        assert!(Manifest::parse(&bad, Path::new("/a")).is_err());
+    }
+}

@@ -1,0 +1,12 @@
+//! Model parameter handling on the rust side.
+//!
+//! The AOT manifest (emitted by `python/compile/aot.py`) is the single
+//! source of truth for parameter order, shapes and init; this module
+//! parses it and provides [`ParamSet`] — the flat-leaf representation all
+//! aggregation algorithms operate on.
+
+mod manifest;
+mod params;
+
+pub use manifest::{InitKind, Manifest, ModelDims, ParamSpec};
+pub use params::ParamSet;

@@ -1,0 +1,234 @@
+//! [`ParamSet`] — the flat-leaf parameter representation.
+//!
+//! Every aggregation algorithm (formulas 1–4 of the paper), the server
+//! optimizer, compression and DP all operate on this type. Leaves are kept
+//! as separate `Vec<f32>`s in manifest order so they can be handed to the
+//! PJRT executable without re-slicing.
+
+use crate::model::manifest::{InitKind, Manifest};
+use crate::util::rng::Pcg64;
+
+/// Flat model parameters (or gradients / update deltas — same layout).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamSet {
+    pub leaves: Vec<Vec<f32>>,
+}
+
+impl ParamSet {
+    /// All-zero set with the manifest's shapes.
+    pub fn zeros_like(manifest: &Manifest) -> ParamSet {
+        ParamSet {
+            leaves: manifest.params.iter().map(|p| vec![0.0; p.numel()]).collect(),
+        }
+    }
+
+    /// Initialize per the manifest init schemes (deterministic in `seed`).
+    ///
+    /// This mirrors python's `model.init_params` in distribution (normal
+    /// with the spec's std; zeros; ones) though not bit-for-bit — training
+    /// starts from an equivalent, reproducible init.
+    pub fn init(manifest: &Manifest, seed: u64) -> ParamSet {
+        let mut rng = Pcg64::new(seed, 0x9a7a);
+        let leaves = manifest
+            .params
+            .iter()
+            .map(|p| match p.init {
+                InitKind::Zeros => vec![0.0; p.numel()],
+                InitKind::Ones => vec![1.0; p.numel()],
+                InitKind::Normal => (0..p.numel())
+                    .map(|_| rng.normal_ms(0.0, p.std) as f32)
+                    .collect(),
+            })
+            .collect();
+        ParamSet { leaves }
+    }
+
+    /// Total number of scalar parameters.
+    pub fn numel(&self) -> usize {
+        self.leaves.iter().map(|l| l.len()).sum()
+    }
+
+    /// Number of leaves.
+    pub fn n_leaves(&self) -> usize {
+        self.leaves.len()
+    }
+
+    /// Serialized payload size in bytes (uncompressed f32).
+    pub fn byte_size(&self) -> u64 {
+        (self.numel() * 4) as u64
+    }
+
+    /// self += alpha * other (axpy across all leaves).
+    pub fn axpy(&mut self, alpha: f32, other: &ParamSet) {
+        assert_eq!(self.leaves.len(), other.leaves.len(), "leaf count mismatch");
+        for (a, b) in self.leaves.iter_mut().zip(&other.leaves) {
+            assert_eq!(a.len(), b.len(), "leaf shape mismatch");
+            for (x, y) in a.iter_mut().zip(b) {
+                *x += alpha * y;
+            }
+        }
+    }
+
+    /// self *= alpha.
+    pub fn scale(&mut self, alpha: f32) {
+        for l in &mut self.leaves {
+            for x in l.iter_mut() {
+                *x *= alpha;
+            }
+        }
+    }
+
+    /// self = 0.
+    pub fn zero(&mut self) {
+        for l in &mut self.leaves {
+            l.fill(0.0);
+        }
+    }
+
+    /// Element-wise difference: self - other (the "update delta" a worker
+    /// sends in parameter-aggregation modes).
+    pub fn sub(&self, other: &ParamSet) -> ParamSet {
+        assert_eq!(self.leaves.len(), other.leaves.len());
+        ParamSet {
+            leaves: self
+                .leaves
+                .iter()
+                .zip(&other.leaves)
+                .map(|(a, b)| {
+                    assert_eq!(a.len(), b.len());
+                    a.iter().zip(b).map(|(x, y)| x - y).collect()
+                })
+                .collect(),
+        }
+    }
+
+    /// Global L2 norm over all leaves.
+    pub fn l2_norm(&self) -> f64 {
+        self.leaves
+            .iter()
+            .flat_map(|l| l.iter())
+            .map(|&x| (x as f64) * (x as f64))
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// Flatten to one contiguous vector (transport payload layout).
+    pub fn to_flat(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.numel());
+        for l in &self.leaves {
+            out.extend_from_slice(l);
+        }
+        out
+    }
+
+    /// Rebuild from a flat vector given the leaf sizes of `like`.
+    pub fn from_flat(flat: &[f32], like: &ParamSet) -> Option<ParamSet> {
+        if flat.len() != like.numel() {
+            return None;
+        }
+        let mut leaves = Vec::with_capacity(like.leaves.len());
+        let mut off = 0;
+        for l in &like.leaves {
+            leaves.push(flat[off..off + l.len()].to_vec());
+            off += l.len();
+        }
+        Some(ParamSet { leaves })
+    }
+
+    /// Max absolute element (used in tests / divergence checks).
+    pub fn max_abs(&self) -> f32 {
+        self.leaves
+            .iter()
+            .flat_map(|l| l.iter())
+            .fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    /// True if any element is NaN/inf (training blow-up detector).
+    pub fn has_non_finite(&self) -> bool {
+        self.leaves.iter().any(|l| l.iter().any(|x| !x.is_finite()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::Manifest;
+    use std::path::Path;
+
+    fn manifest() -> Manifest {
+        Manifest::parse(
+            r#"{
+ "preset": "t",
+ "model": {"vocab_size": 4, "d_model": 2, "n_heads": 1, "n_layers": 1,
+           "d_ff": 4, "seq_len": 4, "batch_size": 1, "n_params": 14},
+ "params": [
+   {"name": "w", "shape": [4, 2], "init": "normal", "std": 0.5},
+   {"name": "s", "shape": [4], "init": "ones", "std": 0.0},
+   {"name": "b", "shape": [2], "init": "zeros", "std": 0.0}
+ ],
+ "io": {},
+ "artifacts": {"train": "t.hlo.txt", "eval": "e.hlo.txt"}
+}"#,
+            Path::new("/x"),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn init_respects_schemes() {
+        let m = manifest();
+        let p = ParamSet::init(&m, 1);
+        assert_eq!(p.n_leaves(), 3);
+        assert_eq!(p.numel(), 14);
+        assert!(p.leaves[0].iter().any(|&x| x != 0.0));
+        assert!(p.leaves[1].iter().all(|&x| x == 1.0));
+        assert!(p.leaves[2].iter().all(|&x| x == 0.0));
+        // deterministic
+        assert_eq!(p, ParamSet::init(&m, 1));
+        assert_ne!(p, ParamSet::init(&m, 2));
+    }
+
+    #[test]
+    fn axpy_scale_sub() {
+        let m = manifest();
+        let mut a = ParamSet::init(&m, 1);
+        let b = ParamSet::init(&m, 2);
+        let orig = a.clone();
+        a.axpy(2.0, &b);
+        let d = a.sub(&orig);
+        for (dl, bl) in d.leaves.iter().zip(&b.leaves) {
+            for (x, y) in dl.iter().zip(bl) {
+                assert!((x - 2.0 * y).abs() < 1e-5);
+            }
+        }
+        a.scale(0.0);
+        assert_eq!(a.l2_norm(), 0.0);
+    }
+
+    #[test]
+    fn flat_roundtrip() {
+        let m = manifest();
+        let p = ParamSet::init(&m, 3);
+        let flat = p.to_flat();
+        assert_eq!(flat.len(), 14);
+        let q = ParamSet::from_flat(&flat, &p).unwrap();
+        assert_eq!(p, q);
+        assert!(ParamSet::from_flat(&flat[1..], &p).is_none());
+    }
+
+    #[test]
+    fn norm_and_finite() {
+        let m = manifest();
+        let mut p = ParamSet::zeros_like(&m);
+        assert_eq!(p.l2_norm(), 0.0);
+        assert!(!p.has_non_finite());
+        p.leaves[0][0] = f32::NAN;
+        assert!(p.has_non_finite());
+    }
+
+    #[test]
+    fn byte_size() {
+        let m = manifest();
+        assert_eq!(ParamSet::zeros_like(&m).byte_size(), 14 * 4);
+    }
+}

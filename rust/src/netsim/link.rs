@@ -1,0 +1,190 @@
+//! Point-to-point WAN link model.
+
+use crate::netsim::protocol::Protocol;
+use crate::util::rng::Pcg64;
+
+/// A directed inter-cloud link.
+#[derive(Clone, Debug)]
+pub struct Link {
+    /// bottleneck bandwidth, bits per second
+    pub bandwidth_bps: f64,
+    /// round-trip time, seconds
+    pub rtt_s: f64,
+    /// multiplicative jitter std (0.05 = ±5% per-transfer noise)
+    pub jitter: f64,
+    /// packet loss probability per segment
+    pub loss_rate: f64,
+}
+
+/// TCP maximum segment size used for loss/slow-start arithmetic.
+pub const MSS_BYTES: f64 = 1460.0;
+
+/// Initial congestion window (segments), RFC 6928.
+const INIT_CWND_SEGMENTS: f64 = 10.0;
+
+/// Outcome of one simulated transfer.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TransferStats {
+    /// end-to-end seconds from send start to last byte delivered
+    pub time_s: f64,
+    /// bytes that crossed the wire (payload + framing + retransmits)
+    pub wire_bytes: u64,
+    /// handshake RTTs charged (0 when connection was warm and QUIC)
+    pub handshake_s: f64,
+}
+
+impl Link {
+    pub fn new(bandwidth_bps: f64, rtt_s: f64) -> Link {
+        Link { bandwidth_bps, rtt_s, jitter: 0.0, loss_rate: 0.0 }
+    }
+
+    /// Simulate one transfer of `payload_bytes` over this link.
+    ///
+    /// `warm` — whether a connection to the peer is already established;
+    /// `streams` — number of multiplexed application streams;
+    /// `rng` — jitter/loss noise source (deterministic per experiment).
+    pub fn transfer(
+        &self,
+        payload_bytes: u64,
+        protocol: Protocol,
+        warm: bool,
+        streams: usize,
+        rng: &mut Pcg64,
+    ) -> TransferStats {
+        assert!(self.bandwidth_bps > 0.0);
+        let streams = streams.clamp(1, protocol.max_streams());
+        let payload = payload_bytes as f64;
+
+        // --- wire volume: framing + expected retransmitted segments
+        let framed = payload * (1.0 + protocol.framing_overhead());
+        let n_segments = (framed / MSS_BYTES).ceil();
+        let expected_retx = if self.loss_rate > 0.0 {
+            n_segments * self.loss_rate / (1.0 - self.loss_rate)
+        } else {
+            0.0
+        };
+        let wire = framed + expected_retx * MSS_BYTES;
+
+        // --- handshake
+        let hs_rtts =
+            if warm { protocol.resumed_rtts() } else { protocol.handshake_rtts() };
+        let handshake_s = hs_rtts * self.rtt_s;
+
+        // --- slow start: RTTs to ramp cwnd to the bandwidth-delay product
+        // (only on cold connections; warm ones are assumed at cruise).
+        let slow_start_s = if warm {
+            0.0
+        } else {
+            let bdp_segments =
+                (self.bandwidth_bps * self.rtt_s / 8.0 / MSS_BYTES).max(1.0);
+            let needed = (n_segments).min(bdp_segments);
+            let ramp_rtts =
+                (needed / INIT_CWND_SEGMENTS).max(1.0).log2().max(0.0);
+            ramp_rtts * self.rtt_s
+        };
+
+        // --- serialization + propagation
+        let serialize_s = wire * 8.0 / self.bandwidth_bps;
+        let propagation_s = self.rtt_s / 2.0;
+
+        // --- loss stalls (HoL-blocking model, see Protocol)
+        let loss_events = n_segments * self.loss_rate;
+        let stall_s =
+            loss_events * protocol.loss_stall_rtts(streams) * self.rtt_s;
+
+        let mut time = handshake_s + slow_start_s + serialize_s
+            + propagation_s + stall_s;
+
+        if self.jitter > 0.0 {
+            let noise = 1.0 + self.jitter * rng.normal();
+            time *= noise.max(0.1);
+        }
+
+        TransferStats {
+            time_s: time,
+            wire_bytes: wire.round() as u64,
+            handshake_s,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng() -> Pcg64 {
+        Pcg64::new(99, 0)
+    }
+
+    /// 1 Gbps, 40 ms RTT, clean link.
+    fn clean() -> Link {
+        Link::new(1e9, 0.040)
+    }
+
+    #[test]
+    fn big_transfer_dominated_by_bandwidth() {
+        let l = clean();
+        // 1 GB over 1 Gbps ~= 8.3 s incl framing
+        let st = l.transfer(1_000_000_000, Protocol::Grpc, true, 8, &mut rng());
+        assert!(st.time_s > 8.0 && st.time_s < 9.5, "t={}", st.time_s);
+        assert!(st.wire_bytes > 1_000_000_000);
+    }
+
+    #[test]
+    fn cold_connection_pays_handshake() {
+        let l = clean();
+        let cold = l.transfer(10_000, Protocol::Grpc, false, 1, &mut rng());
+        let warm = l.transfer(10_000, Protocol::Grpc, true, 1, &mut rng());
+        assert!(cold.time_s > warm.time_s);
+        assert!(cold.handshake_s > warm.handshake_s);
+    }
+
+    #[test]
+    fn quic_beats_grpc_on_lossy_high_rtt() {
+        // the paper's motivating scenario: high-latency lossy WAN
+        let l = Link { bandwidth_bps: 100e6, rtt_s: 0.120, jitter: 0.0,
+                       loss_rate: 0.01 };
+        let grpc = l.transfer(50_000_000, Protocol::Grpc, true, 16, &mut rng());
+        let quic = l.transfer(50_000_000, Protocol::Quic, true, 16, &mut rng());
+        assert!(
+            quic.time_s < grpc.time_s * 0.7,
+            "quic={} grpc={}",
+            quic.time_s,
+            grpc.time_s
+        );
+    }
+
+    #[test]
+    fn quic_grpc_comparable_on_clean_link() {
+        let l = clean();
+        let grpc = l.transfer(50_000_000, Protocol::Grpc, true, 16, &mut rng());
+        let quic = l.transfer(50_000_000, Protocol::Quic, true, 16, &mut rng());
+        let ratio = quic.time_s / grpc.time_s;
+        assert!((0.9..1.1).contains(&ratio), "ratio={ratio}");
+    }
+
+    #[test]
+    fn loss_increases_wire_bytes() {
+        let l = Link { loss_rate: 0.02, ..clean() };
+        let clean_st =
+            clean().transfer(10_000_000, Protocol::Tcp, true, 1, &mut rng());
+        let lossy_st = l.transfer(10_000_000, Protocol::Tcp, true, 1, &mut rng());
+        assert!(lossy_st.wire_bytes > clean_st.wire_bytes);
+        assert!(lossy_st.time_s > clean_st.time_s);
+    }
+
+    #[test]
+    fn jitter_is_deterministic_per_seed() {
+        let l = Link { jitter: 0.1, ..clean() };
+        let a = l.transfer(1_000_000, Protocol::Quic, true, 4, &mut Pcg64::new(5, 1));
+        let b = l.transfer(1_000_000, Protocol::Quic, true, 4, &mut Pcg64::new(5, 1));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn zero_payload_costs_only_latency() {
+        let st = clean().transfer(0, Protocol::Tcp, true, 1, &mut rng());
+        assert!(st.time_s >= 0.02); // at least propagation
+        assert_eq!(st.wire_bytes, 0);
+    }
+}

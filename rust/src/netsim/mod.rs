@@ -1,0 +1,16 @@
+//! WAN simulator: the inter-cloud network substrate.
+//!
+//! The coordinator never sleeps on real sockets — all communication costs
+//! are *simulated* (deterministically, given the experiment seed) while
+//! payload bytes are *real* (actual serialized/compressed/encrypted
+//! updates). This matches the reproduction goal: Tables 2–3 depend on
+//! bytes-on-wire and relative transfer times, not on a specific testbed's
+//! absolute throughput.
+
+pub mod link;
+pub mod protocol;
+mod topology;
+
+pub use link::{Link, TransferStats, MSS_BYTES};
+pub use protocol::Protocol;
+pub use topology::Wan;

@@ -1,0 +1,131 @@
+//! Wire-protocol models: TCP, gRPC (HTTP/2 over TCP) and QUIC.
+//!
+//! The paper (§3.2) treats the protocol as a communication-efficiency
+//! knob: "protocols specifically designed for distributed computing, such
+//! as gRPC or QUIC, can better handle high-latency, low-bandwidth network
+//! environments", and "multiplexing techniques can fully utilize network
+//! resources". These analytic models reproduce the first-order effects:
+//!
+//! * **handshake cost** — RTTs before the first payload byte flows
+//!   (TCP 1.5, gRPC 2.5 incl. TLS+SETTINGS, QUIC 1.0 / 0.0 when resumed);
+//! * **framing overhead** — header bytes per segment;
+//! * **head-of-line blocking** — on TCP-based transports a lost segment
+//!   stalls *all* multiplexed streams for ~1 RTT; QUIC retransmits affect
+//!   only the stream that lost the packet;
+//! * **slow start** — fresh connections ramp the congestion window, which
+//!   costs ~log2(bdp_segments) extra RTTs on fat links.
+
+/// Protocol selector (paper Table 1 lists gRPC and QUIC).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Protocol {
+    /// Raw TCP stream (baseline, single stream, no multiplexing).
+    Tcp,
+    /// gRPC over HTTP/2: multiplexed streams over one TCP connection.
+    Grpc,
+    /// QUIC: multiplexed streams over UDP, stream-level loss recovery.
+    Quic,
+}
+
+impl Protocol {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Protocol::Tcp => "tcp",
+            Protocol::Grpc => "grpc",
+            Protocol::Quic => "quic",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Protocol> {
+        match s.to_ascii_lowercase().as_str() {
+            "tcp" => Some(Protocol::Tcp),
+            "grpc" => Some(Protocol::Grpc),
+            "quic" => Some(Protocol::Quic),
+            _ => None,
+        }
+    }
+
+    /// RTTs spent before payload flows on a *fresh* connection.
+    pub fn handshake_rtts(&self) -> f64 {
+        match self {
+            Protocol::Tcp => 1.5,  // SYN/SYN-ACK + half
+            Protocol::Grpc => 2.5, // TCP + TLS1.3 + HTTP/2 SETTINGS
+            Protocol::Quic => 1.0, // combined transport+crypto
+        }
+    }
+
+    /// RTTs on a *resumed* connection (QUIC 0-RTT).
+    pub fn resumed_rtts(&self) -> f64 {
+        match self {
+            Protocol::Tcp => 1.5, // no resumption
+            Protocol::Grpc => 1.0,
+            Protocol::Quic => 0.0,
+        }
+    }
+
+    /// Fractional byte overhead of segment/stream framing.
+    pub fn framing_overhead(&self) -> f64 {
+        match self {
+            Protocol::Tcp => 0.027,  // 40B TCP/IP headers per 1460B MSS
+            Protocol::Grpc => 0.035, // + HTTP/2 frame headers, HPACK
+            Protocol::Quic => 0.040, // UDP + QUIC packet headers + AEAD tag
+        }
+    }
+
+    /// Maximum concurrently useful streams (multiplexing limit).
+    pub fn max_streams(&self) -> usize {
+        match self {
+            Protocol::Tcp => 1,
+            Protocol::Grpc => 32,
+            Protocol::Quic => 64,
+        }
+    }
+
+    /// Expected stall time added per loss event, as a multiple of RTT,
+    /// when `streams` streams are multiplexed.
+    ///
+    /// TCP-based transports stall the whole connection (head-of-line
+    /// blocking): every stream waits for the retransmit. QUIC only stalls
+    /// the affected stream, so with `s` parallel streams the expected
+    /// *aggregate* slowdown is ~1/s of the TCP penalty.
+    pub fn loss_stall_rtts(&self, streams: usize) -> f64 {
+        let s = streams.max(1) as f64;
+        match self {
+            Protocol::Tcp => 1.0,
+            Protocol::Grpc => 1.0, // HTTP/2 over TCP still HoL-blocks
+            Protocol::Quic => 1.0 / s,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for p in [Protocol::Tcp, Protocol::Grpc, Protocol::Quic] {
+            assert_eq!(Protocol::parse(p.name()), Some(p));
+        }
+        assert_eq!(Protocol::parse("GRPC"), Some(Protocol::Grpc));
+        assert_eq!(Protocol::parse("http3"), None);
+    }
+
+    #[test]
+    fn quic_resumes_free() {
+        assert_eq!(Protocol::Quic.resumed_rtts(), 0.0);
+        assert!(Protocol::Grpc.resumed_rtts() > 0.0);
+    }
+
+    #[test]
+    fn quic_avoids_hol_blocking() {
+        let tcp = Protocol::Grpc.loss_stall_rtts(16);
+        let quic = Protocol::Quic.loss_stall_rtts(16);
+        assert!(quic < tcp / 8.0);
+    }
+
+    #[test]
+    fn grpc_multiplexes_tcp_does_not() {
+        assert_eq!(Protocol::Tcp.max_streams(), 1);
+        assert!(Protocol::Grpc.max_streams() > 1);
+    }
+}

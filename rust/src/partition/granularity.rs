@@ -1,0 +1,109 @@
+//! Granularity control ("Adjust Data Granularity").
+//!
+//! The partition-granularity trade-off the paper describes — larger
+//! partitions lower communication frequency but raise per-platform load —
+//! maps in federated training to the *local-steps-per-round* knob E:
+//! coarse granularity = many local steps between syncs. This controller
+//! adapts E to the measured compute/communication ratio: when rounds are
+//! communication-dominated it coarsens (bigger E), when compute-dominated
+//! and the model is drifting it refines.
+
+/// Adaptive local-steps controller.
+#[derive(Clone, Debug)]
+pub struct GranularityController {
+    pub min_steps: usize,
+    pub max_steps: usize,
+    steps: usize,
+    /// target fraction of round time spent communicating
+    pub target_comm_frac: f64,
+    /// hysteresis band around the target
+    pub band: f64,
+}
+
+impl GranularityController {
+    pub fn new(initial: usize, min_steps: usize, max_steps: usize) -> Self {
+        assert!(min_steps >= 1 && min_steps <= initial && initial <= max_steps);
+        GranularityController {
+            min_steps,
+            max_steps,
+            steps: initial,
+            target_comm_frac: 0.3,
+            band: 0.1,
+        }
+    }
+
+    /// Current local steps per round.
+    pub fn local_steps(&self) -> usize {
+        self.steps
+    }
+
+    /// Update from one round's measured compute and communication time.
+    /// Returns the (possibly changed) step count.
+    pub fn observe(&mut self, compute_secs: f64, comm_secs: f64) -> usize {
+        let total = compute_secs + comm_secs;
+        if total <= 0.0 {
+            return self.steps;
+        }
+        let comm_frac = comm_secs / total;
+        if comm_frac > self.target_comm_frac + self.band {
+            // communication-bound: coarsen (more local work per sync)
+            self.steps = (self.steps * 2).min(self.max_steps);
+        } else if comm_frac < self.target_comm_frac - self.band {
+            // compute-bound: refine toward tighter synchronization
+            self.steps = (self.steps / 2).max(self.min_steps);
+        }
+        self.steps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comm_bound_coarsens() {
+        let mut g = GranularityController::new(4, 1, 64);
+        // 80% of the round is communication
+        for _ in 0..10 {
+            g.observe(0.2, 0.8);
+        }
+        assert_eq!(g.local_steps(), 64);
+    }
+
+    #[test]
+    fn compute_bound_refines() {
+        let mut g = GranularityController::new(32, 1, 64);
+        for _ in 0..10 {
+            g.observe(0.95, 0.05);
+        }
+        assert_eq!(g.local_steps(), 1);
+    }
+
+    #[test]
+    fn balanced_holds_steady() {
+        let mut g = GranularityController::new(8, 1, 64);
+        for _ in 0..10 {
+            g.observe(0.7, 0.3);
+        }
+        assert_eq!(g.local_steps(), 8);
+    }
+
+    #[test]
+    fn bounds_respected() {
+        let mut g = GranularityController::new(2, 2, 4);
+        for _ in 0..5 {
+            g.observe(0.0, 1.0);
+        }
+        assert_eq!(g.local_steps(), 4);
+        for _ in 0..5 {
+            g.observe(1.0, 0.0);
+        }
+        assert_eq!(g.local_steps(), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn invalid_bounds_rejected() {
+        GranularityController::new(10, 1, 5);
+    }
+}

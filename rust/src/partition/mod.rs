@@ -1,0 +1,24 @@
+//! Data partitioning & distribution (§3.1 and the Figure-2 cycle).
+//!
+//! The paper's cycle has four phases, all implemented here:
+//!
+//! 1. **Adjust Data Granularity** — [`GranularityController`] trades
+//!    communication frequency against per-platform load by tuning how
+//!    many local steps a platform runs per round (coarse partitions =
+//!    more local work per sync).
+//! 2. **Balance Load Across Platforms** — [`PartitionPlanner`] sizes each
+//!    platform's shard by measured capacity.
+//! 3. **Ensure Data Security** — distribution plans carry an encryption
+//!    requirement flag that the transport layer enforces (see
+//!    [`crate::crypto`]).
+//! 4. **Monitor and Adjust in Real-Time** — [`LoadMonitor`] watches
+//!    per-round step times and triggers re-partitioning when the
+//!    imbalance coefficient drifts.
+
+mod granularity;
+mod monitor;
+mod planner;
+
+pub use granularity::GranularityController;
+pub use monitor::LoadMonitor;
+pub use planner::{PartitionPlan, PartitionPlanner, PartitionStrategy};

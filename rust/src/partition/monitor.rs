@@ -1,0 +1,145 @@
+//! Real-time load monitoring ("Monitor and Adjust in Real-Time").
+//!
+//! Watches per-platform round times with an EWMA and signals when the
+//! imbalance coefficient (CV of smoothed round times) exceeds a
+//! threshold for long enough — the trigger for dynamic re-partitioning.
+
+use crate::util::stats::{imbalance_cv, Ewma};
+
+/// Per-platform EWMA of round times + rebalance trigger logic.
+#[derive(Clone, Debug)]
+pub struct LoadMonitor {
+    ewmas: Vec<Ewma>,
+    /// imbalance CV above which the monitor considers the cluster skewed
+    pub cv_threshold: f64,
+    /// consecutive skewed rounds required to fire
+    pub patience: usize,
+    skewed_streak: usize,
+    /// rounds to stay quiet after firing (let the new plan settle)
+    pub cooldown: usize,
+    cooldown_left: usize,
+    fired_total: u64,
+}
+
+impl LoadMonitor {
+    pub fn new(n_platforms: usize, cv_threshold: f64, patience: usize) -> LoadMonitor {
+        LoadMonitor {
+            ewmas: (0..n_platforms).map(|_| Ewma::new(0.3)).collect(),
+            cv_threshold,
+            patience,
+            skewed_streak: 0,
+            cooldown: 5,
+            cooldown_left: 0,
+            fired_total: 0,
+        }
+    }
+
+    /// Record one round's per-platform durations; returns `true` when a
+    /// re-partition should happen now.
+    pub fn observe(&mut self, round_times: &[f64]) -> bool {
+        assert_eq!(round_times.len(), self.ewmas.len());
+        for (e, &t) in self.ewmas.iter_mut().zip(round_times) {
+            e.push(t);
+        }
+        if self.cooldown_left > 0 {
+            self.cooldown_left -= 1;
+            return false;
+        }
+        let cv = self.current_cv();
+        if cv > self.cv_threshold {
+            self.skewed_streak += 1;
+        } else {
+            self.skewed_streak = 0;
+        }
+        if self.skewed_streak >= self.patience {
+            self.skewed_streak = 0;
+            self.cooldown_left = self.cooldown;
+            self.fired_total += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Current imbalance CV over smoothed times.
+    pub fn current_cv(&self) -> f64 {
+        let loads: Vec<f64> =
+            self.ewmas.iter().filter_map(|e| e.get()).collect();
+        if loads.len() < self.ewmas.len() {
+            return 0.0;
+        }
+        imbalance_cv(&loads)
+    }
+
+    /// Smoothed per-platform times → capacity estimates (1/time,
+    /// normalized to mean 1). Used as the replan weights.
+    pub fn capacity_estimates(&self) -> Vec<f64> {
+        let times: Vec<f64> = self
+            .ewmas
+            .iter()
+            .map(|e| e.get().unwrap_or(1.0).max(1e-9))
+            .collect();
+        let caps: Vec<f64> = times.iter().map(|t| 1.0 / t).collect();
+        let mean: f64 = caps.iter().sum::<f64>() / caps.len() as f64;
+        caps.iter().map(|c| c / mean).collect()
+    }
+
+    pub fn times_fired(&self) -> u64 {
+        self.fired_total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn balanced_cluster_never_fires() {
+        let mut m = LoadMonitor::new(3, 0.25, 3);
+        for _ in 0..50 {
+            assert!(!m.observe(&[1.0, 1.02, 0.98]));
+        }
+        assert_eq!(m.times_fired(), 0);
+    }
+
+    #[test]
+    fn skew_fires_after_patience() {
+        let mut m = LoadMonitor::new(3, 0.25, 3);
+        let mut fired_at = None;
+        for round in 0..20 {
+            if m.observe(&[1.0, 1.0, 3.0]) {
+                fired_at = Some(round);
+                break;
+            }
+        }
+        // EWMA needs a few rounds to converge + 3 patience
+        let at = fired_at.expect("monitor should fire");
+        assert!((2..10).contains(&at), "fired at {at}");
+    }
+
+    #[test]
+    fn cooldown_suppresses_refiring() {
+        let mut m = LoadMonitor::new(2, 0.2, 2);
+        let mut fires = 0;
+        for _ in 0..30 {
+            if m.observe(&[1.0, 4.0]) {
+                fires += 1;
+            }
+        }
+        // without cooldown this would fire ~15 times
+        assert!((2..=6).contains(&fires), "fires={fires}");
+    }
+
+    #[test]
+    fn capacity_estimates_invert_times() {
+        let mut m = LoadMonitor::new(2, 0.9, 100);
+        for _ in 0..20 {
+            m.observe(&[1.0, 2.0]);
+        }
+        let caps = m.capacity_estimates();
+        // platform 0 is 2x faster
+        assert!((caps[0] / caps[1] - 2.0).abs() < 0.05, "caps={caps:?}");
+        // normalized to mean 1
+        assert!(((caps[0] + caps[1]) / 2.0 - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,197 @@
+//! Partition planning: who gets how much data.
+
+use crate::cluster::ClusterSpec;
+use crate::data::{dirichlet_shards, equal_shards, weighted_shards, Shard, SyntheticCorpus};
+
+/// Partitioning strategy (paper Table 1: Fixed vs Dynamic).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum PartitionStrategy {
+    /// equal split once, never revisited
+    Fixed,
+    /// capacity-weighted, re-planned when the monitor fires
+    Dynamic,
+    /// topic-skewed non-IID split (heterogeneity generator for Table 3)
+    DirichletSkew { alpha: f64 },
+}
+
+impl PartitionStrategy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PartitionStrategy::Fixed => "fixed",
+            PartitionStrategy::Dynamic => "dynamic",
+            PartitionStrategy::DirichletSkew { .. } => "dirichlet",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<PartitionStrategy> {
+        let s = s.to_ascii_lowercase();
+        if s == "fixed" {
+            Some(PartitionStrategy::Fixed)
+        } else if s == "dynamic" {
+            Some(PartitionStrategy::Dynamic)
+        } else if let Some(a) = s.strip_prefix("dirichlet:") {
+            a.parse().ok().map(|alpha| PartitionStrategy::DirichletSkew { alpha })
+        } else {
+            None
+        }
+    }
+}
+
+/// The materialized plan: one shard per platform + bookkeeping.
+#[derive(Clone, Debug)]
+pub struct PartitionPlan {
+    pub shards: Vec<Shard>,
+    pub strategy: PartitionStrategy,
+    /// capacity weights used (empty for Fixed)
+    pub weights: Vec<f64>,
+    /// plan generation (bumped on each re-partition)
+    pub generation: u64,
+    /// distribution must be encrypted in flight ("Ensure Data Security")
+    pub require_encryption: bool,
+}
+
+impl PartitionPlan {
+    /// Total tokens across shards.
+    pub fn total_tokens(&self) -> usize {
+        self.shards.iter().map(|s| s.n_tokens()).sum()
+    }
+
+    /// The byte cost of *distributing* this plan (each platform receives
+    /// its shard once per generation) — part of Table 2's ledger.
+    pub fn distribution_bytes(&self) -> u64 {
+        self.shards.iter().map(|s| (s.n_tokens() * 4) as u64).sum()
+    }
+}
+
+/// Produces and re-produces plans.
+#[derive(Clone, Debug)]
+pub struct PartitionPlanner {
+    strategy: PartitionStrategy,
+    seed: u64,
+    generation: u64,
+}
+
+impl PartitionPlanner {
+    pub fn new(strategy: PartitionStrategy, seed: u64) -> PartitionPlanner {
+        PartitionPlanner { strategy, seed, generation: 0 }
+    }
+
+    pub fn strategy(&self) -> PartitionStrategy {
+        self.strategy
+    }
+
+    /// Build the initial plan. `capacities` are the platforms' relative
+    /// speeds (used by Dynamic; ignored by Fixed).
+    pub fn plan(
+        &mut self,
+        corpus: &SyntheticCorpus,
+        cluster: &ClusterSpec,
+        capacities: &[f64],
+    ) -> PartitionPlan {
+        assert_eq!(capacities.len(), cluster.n());
+        let n = cluster.n();
+        let shards = match self.strategy {
+            PartitionStrategy::Fixed => equal_shards(corpus, n),
+            PartitionStrategy::Dynamic => weighted_shards(corpus, capacities),
+            PartitionStrategy::DirichletSkew { alpha } => {
+                dirichlet_shards(corpus, n, alpha, self.seed ^ self.generation)
+            }
+        };
+        let plan = PartitionPlan {
+            shards,
+            strategy: self.strategy,
+            weights: capacities.to_vec(),
+            generation: self.generation,
+            require_encryption: true,
+        };
+        self.generation += 1;
+        plan
+    }
+
+    /// Re-plan with updated capacity estimates (Dynamic only; Fixed
+    /// returns None — that is the point of the ablation).
+    pub fn replan(
+        &mut self,
+        corpus: &SyntheticCorpus,
+        cluster: &ClusterSpec,
+        new_capacities: &[f64],
+    ) -> Option<PartitionPlan> {
+        match self.strategy {
+            PartitionStrategy::Dynamic => {
+                Some(self.plan(corpus, cluster, new_capacities))
+            }
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::CorpusConfig;
+
+    fn fixture() -> (SyntheticCorpus, ClusterSpec) {
+        (
+            SyntheticCorpus::generate(&CorpusConfig {
+                n_docs: 60,
+                doc_sentences: 3,
+                n_topics: 3,
+                seed: 11,
+            }),
+            ClusterSpec::heterogeneous(3, 4.0),
+        )
+    }
+
+    #[test]
+    fn fixed_is_equal() {
+        let (corpus, cluster) = fixture();
+        let mut p = PartitionPlanner::new(PartitionStrategy::Fixed, 1);
+        let plan = p.plan(&corpus, &cluster, &[1.0, 1.0, 1.0]);
+        let sizes: Vec<usize> =
+            plan.shards.iter().map(|s| s.doc_ids.len()).collect();
+        assert_eq!(sizes, vec![20, 20, 20]);
+        assert!(plan.require_encryption);
+    }
+
+    #[test]
+    fn dynamic_follows_capacity() {
+        let (corpus, cluster) = fixture();
+        let mut p = PartitionPlanner::new(PartitionStrategy::Dynamic, 1);
+        let plan = p.plan(&corpus, &cluster, &[4.0, 1.0, 1.0]);
+        assert_eq!(plan.shards[0].doc_ids.len(), 40);
+        assert_eq!(plan.shards[1].doc_ids.len(), 10);
+    }
+
+    #[test]
+    fn replan_only_for_dynamic() {
+        let (corpus, cluster) = fixture();
+        let mut fixed = PartitionPlanner::new(PartitionStrategy::Fixed, 1);
+        fixed.plan(&corpus, &cluster, &[1.0; 3]);
+        assert!(fixed.replan(&corpus, &cluster, &[9.0, 1.0, 1.0]).is_none());
+
+        let mut dynamic = PartitionPlanner::new(PartitionStrategy::Dynamic, 1);
+        let p0 = dynamic.plan(&corpus, &cluster, &[1.0; 3]);
+        let p1 = dynamic.replan(&corpus, &cluster, &[4.0, 1.0, 1.0]).unwrap();
+        assert!(p1.generation > p0.generation);
+        assert!(p1.shards[0].doc_ids.len() > p0.shards[0].doc_ids.len());
+    }
+
+    #[test]
+    fn parse_strategies() {
+        assert_eq!(PartitionStrategy::parse("fixed"), Some(PartitionStrategy::Fixed));
+        assert_eq!(PartitionStrategy::parse("dynamic"), Some(PartitionStrategy::Dynamic));
+        assert_eq!(
+            PartitionStrategy::parse("dirichlet:0.3"),
+            Some(PartitionStrategy::DirichletSkew { alpha: 0.3 })
+        );
+        assert_eq!(PartitionStrategy::parse("nope"), None);
+    }
+
+    #[test]
+    fn distribution_bytes_counts_tokens() {
+        let (corpus, cluster) = fixture();
+        let mut p = PartitionPlanner::new(PartitionStrategy::Fixed, 1);
+        let plan = p.plan(&corpus, &cluster, &[1.0; 3]);
+        assert_eq!(plan.distribution_bytes(), plan.total_tokens() as u64 * 4);
+    }
+}

@@ -1,0 +1,226 @@
+//! Differential privacy substrate (the paper's "differential privacy
+//! techniques" for cross-cloud training).
+//!
+//! Implements DP-FedAvg-style update privatization: per-worker L2
+//! clipping followed by Gaussian noise calibrated to (ε, δ), plus a
+//! simple privacy accountant (basic and advanced composition).
+
+use crate::model::ParamSet;
+use crate::util::rng::Pcg64;
+
+/// DP configuration for worker updates.
+#[derive(Clone, Copy, Debug)]
+pub struct DpConfig {
+    /// L2 clipping bound C on each worker's update
+    pub clip_norm: f64,
+    /// noise multiplier z: sigma = z * C
+    pub noise_multiplier: f64,
+    /// target delta for accounting
+    pub delta: f64,
+}
+
+impl DpConfig {
+    pub fn disabled() -> DpConfig {
+        DpConfig { clip_norm: 0.0, noise_multiplier: 0.0, delta: 1e-5 }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.noise_multiplier > 0.0 && self.clip_norm > 0.0
+    }
+}
+
+/// Clip `update` to L2 norm <= `clip_norm` (in place). Returns the
+/// pre-clip norm.
+pub fn clip_update(update: &mut ParamSet, clip_norm: f64) -> f64 {
+    let norm = update.l2_norm();
+    if norm > clip_norm && norm > 0.0 {
+        update.scale((clip_norm / norm) as f32);
+    }
+    norm
+}
+
+/// Add Gaussian noise N(0, sigma^2) to every coordinate.
+pub fn add_gaussian_noise(update: &mut ParamSet, sigma: f64, rng: &mut Pcg64) {
+    if sigma <= 0.0 {
+        return;
+    }
+    for leaf in &mut update.leaves {
+        for x in leaf.iter_mut() {
+            *x += rng.normal_ms(0.0, sigma) as f32;
+        }
+    }
+}
+
+/// Privatize one worker update: clip then noise. Returns pre-clip norm.
+pub fn privatize(update: &mut ParamSet, cfg: &DpConfig, rng: &mut Pcg64) -> f64 {
+    if !cfg.enabled() {
+        return update.l2_norm();
+    }
+    let pre = clip_update(update, cfg.clip_norm);
+    add_gaussian_noise(update, cfg.noise_multiplier * cfg.clip_norm, rng);
+    pre
+}
+
+/// Tracks cumulative privacy loss across rounds.
+///
+/// Per-round ε for the Gaussian mechanism at noise multiplier z and the
+/// configured δ: ε_round = sqrt(2 ln(1.25/δ)) / z  (classic analytic
+/// bound, Dwork & Roth Thm 3.22). Composition:
+/// * basic: ε_total = T · ε_round
+/// * advanced (Dwork et al.): ε_total = ε·sqrt(2T ln(1/δ')) + T·ε·(e^ε − 1)
+#[derive(Clone, Debug)]
+pub struct PrivacyAccountant {
+    cfg: DpConfig,
+    rounds: u64,
+}
+
+impl PrivacyAccountant {
+    pub fn new(cfg: DpConfig) -> PrivacyAccountant {
+        PrivacyAccountant { cfg, rounds: 0 }
+    }
+
+    pub fn record_round(&mut self) {
+        if self.cfg.enabled() {
+            self.rounds += 1;
+        }
+    }
+
+    pub fn rounds(&self) -> u64 {
+        self.rounds
+    }
+
+    /// Per-round ε at the configured δ.
+    pub fn epsilon_per_round(&self) -> f64 {
+        if !self.cfg.enabled() {
+            return 0.0;
+        }
+        (2.0 * (1.25 / self.cfg.delta).ln()).sqrt() / self.cfg.noise_multiplier
+    }
+
+    /// Total ε under basic composition.
+    pub fn epsilon_basic(&self) -> f64 {
+        self.rounds as f64 * self.epsilon_per_round()
+    }
+
+    /// Total ε under advanced composition at slack δ' = δ.
+    pub fn epsilon_advanced(&self) -> f64 {
+        if self.rounds == 0 || !self.cfg.enabled() {
+            return 0.0;
+        }
+        let e = self.epsilon_per_round();
+        let t = self.rounds as f64;
+        let dp = self.cfg.delta;
+        e * (2.0 * t * (1.0 / dp).ln()).sqrt() + t * e * (e.exp() - 1.0)
+    }
+
+    /// The better (smaller) of the two bounds.
+    pub fn epsilon(&self) -> f64 {
+        if self.rounds == 0 {
+            return 0.0;
+        }
+        self.epsilon_basic().min(self.epsilon_advanced())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params(v: &[f32]) -> ParamSet {
+        ParamSet { leaves: vec![v.to_vec()] }
+    }
+
+    #[test]
+    fn clip_reduces_norm() {
+        let mut p = params(&[3.0, 4.0]); // norm 5
+        let pre = clip_update(&mut p, 1.0);
+        assert!((pre - 5.0).abs() < 1e-6);
+        assert!((p.l2_norm() - 1.0).abs() < 1e-6);
+        // direction preserved
+        assert!((p.leaves[0][0] / p.leaves[0][1] - 0.75).abs() < 1e-6);
+    }
+
+    #[test]
+    fn clip_noop_when_under_bound() {
+        let mut p = params(&[0.3, 0.4]);
+        clip_update(&mut p, 1.0);
+        assert_eq!(p.leaves[0], vec![0.3, 0.4]);
+    }
+
+    #[test]
+    fn noise_statistics() {
+        let mut rng = Pcg64::new(1, 0);
+        let mut p = ParamSet { leaves: vec![vec![0.0; 20_000]] };
+        add_gaussian_noise(&mut p, 0.5, &mut rng);
+        let xs = &p.leaves[0];
+        let mean: f64 = xs.iter().map(|&x| x as f64).sum::<f64>() / 20_000.0;
+        let var: f64 =
+            xs.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / 20_000.0;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 0.25).abs() < 0.02, "var={var}");
+    }
+
+    #[test]
+    fn privatize_disabled_is_identity() {
+        let mut p = params(&[1.0, 2.0, 3.0]);
+        let orig = p.clone();
+        privatize(&mut p, &DpConfig::disabled(), &mut Pcg64::new(2, 0));
+        assert_eq!(p, orig);
+    }
+
+    #[test]
+    fn privatize_bounds_sensitivity() {
+        let cfg = DpConfig { clip_norm: 1.0, noise_multiplier: 1.0, delta: 1e-5 };
+        let mut rng = Pcg64::new(3, 0);
+        // two adjacent "datasets" — wildly different raw updates
+        let mut a = params(&[100.0, 0.0]);
+        let mut b = params(&[0.0, -50.0]);
+        clip_update(&mut a, cfg.clip_norm);
+        clip_update(&mut b, cfg.clip_norm);
+        // post-clip sensitivity is at most 2C
+        let d = a.sub(&b).l2_norm();
+        assert!(d <= 2.0 * cfg.clip_norm + 1e-6);
+        privatize(&mut a, &cfg, &mut rng);
+        assert!(a.l2_norm() > 0.0);
+    }
+
+    #[test]
+    fn accountant_grows_and_advanced_wins_for_many_rounds() {
+        // advanced composition only beats basic when per-round ε is small,
+        // i.e. at high noise multipliers
+        let cfg = DpConfig { clip_norm: 1.0, noise_multiplier: 50.0, delta: 1e-5 };
+        let mut acc = PrivacyAccountant::new(cfg);
+        assert_eq!(acc.epsilon(), 0.0);
+        for _ in 0..100 {
+            acc.record_round();
+        }
+        assert_eq!(acc.rounds(), 100);
+        let basic = acc.epsilon_basic();
+        let adv = acc.epsilon_advanced();
+        assert!(basic > 0.0 && adv > 0.0);
+        // for small per-round eps and many rounds, advanced < basic
+        assert!(adv < basic, "adv={adv} basic={basic}");
+        assert_eq!(acc.epsilon(), adv.min(basic));
+    }
+
+    #[test]
+    fn accountant_ignores_rounds_when_disabled() {
+        let mut acc = PrivacyAccountant::new(DpConfig::disabled());
+        acc.record_round();
+        assert_eq!(acc.rounds(), 0);
+        assert_eq!(acc.epsilon(), 0.0);
+    }
+
+    #[test]
+    fn more_noise_less_epsilon() {
+        let e1 = PrivacyAccountant::new(DpConfig {
+            clip_norm: 1.0, noise_multiplier: 1.0, delta: 1e-5,
+        })
+        .epsilon_per_round();
+        let e4 = PrivacyAccountant::new(DpConfig {
+            clip_norm: 1.0, noise_multiplier: 4.0, delta: 1e-5,
+        })
+        .epsilon_per_round();
+        assert!(e4 < e1 / 3.9);
+    }
+}

@@ -1,0 +1,202 @@
+//! Paper-style table formatting + figure-series CSV emission.
+
+use crate::metrics::RunResult;
+
+/// Render Table 1 (experimental setup) for a set of configs.
+pub fn table1(configs: &[&crate::config::ExperimentConfig]) -> String {
+    let mut out = String::new();
+    out.push_str("Table 1: Experimental Setup\n");
+    out.push_str(&format!("{:<28} | {}\n", "Parameter", "Value"));
+    out.push_str(&format!("{:-<28}-+-{:-<40}\n", "", ""));
+    let aggs: Vec<&str> = configs.iter().map(|c| c.aggregation.name()).collect();
+    let parts: Vec<String> = {
+        let mut v: Vec<String> = configs
+            .iter()
+            .map(|c| c.partition.name().to_string())
+            .collect();
+        v.dedup();
+        v
+    };
+    let protos: Vec<&str> = {
+        let mut v: Vec<&str> =
+            configs.iter().map(|c| c.protocol.name()).collect();
+        v.dedup();
+        v
+    };
+    let c0 = configs[0];
+    out.push_str(&format!("{:<28} | {}\n", "Number of Cloud Platforms", 3));
+    out.push_str(&format!(
+        "{:<28} | {}\n",
+        "Dataset", "Synthetic topic corpus (WikiText-103 stand-in)"
+    ));
+    out.push_str(&format!(
+        "{:<28} | {}\n",
+        "Model Type", "GPT-style LM (JAX+Pallas via PJRT)"
+    ));
+    out.push_str(&format!(
+        "{:<28} | {}\n",
+        "Aggregation Algorithms",
+        aggs.join(", ")
+    ));
+    out.push_str(&format!(
+        "{:<28} | {}\n",
+        "Data Partitioning Strategy",
+        parts.join(", ")
+    ));
+    out.push_str(&format!(
+        "{:<28} | {}\n",
+        "Communication Protocols",
+        protos.join(", ")
+    ));
+    out.push_str(&format!(
+        "{:<28} | {}\n",
+        "Number of Training Rounds", c0.rounds
+    ));
+    out
+}
+
+/// Render Table 2: communication overhead + training time per algorithm.
+pub fn table2(results: &[&RunResult]) -> String {
+    let mut out = String::new();
+    out.push_str(
+        "Table 2: Communication Overhead and Training Time for Different \
+         Aggregation Algorithms\n",
+    );
+    out.push_str(&format!(
+        "{:<22} | {:>26} | {:>21}\n",
+        "Aggregation Algorithm", "Communication Overhead (GB)", "Training Time (Hours)"
+    ));
+    out.push_str(&format!("{:-<22}-+-{:-<27}-+-{:-<21}\n", "", "", ""));
+    for r in results {
+        out.push_str(&format!(
+            "{:<22} | {:>27.2} | {:>21.1}\n",
+            r.name,
+            r.comm_gb(),
+            r.sim_hours()
+        ));
+    }
+    out
+}
+
+/// Render Table 3: convergence accuracy + final loss per algorithm.
+pub fn table3(results: &[&RunResult]) -> String {
+    let mut out = String::new();
+    out.push_str(
+        "Table 3: Model Convergence Accuracy and Loss for Different \
+         Aggregation Algorithms\n",
+    );
+    out.push_str(&format!(
+        "{:<22} | {:>25} | {:>17}\n",
+        "Aggregation Algorithm", "Convergence Accuracy (%)", "Final Loss Value"
+    ));
+    out.push_str(&format!("{:-<22}-+-{:-<25}-+-{:-<17}\n", "", "", ""));
+    for r in results {
+        out.push_str(&format!(
+            "{:<22} | {:>25.1} | {:>17.3}\n",
+            r.name,
+            r.acc_pct(),
+            r.final_eval_loss
+        ));
+    }
+    out
+}
+
+/// Generic comparison table for ablation benches (figures).
+pub fn comparison(
+    title: &str,
+    rows: &[(&str, Vec<(&str, String)>)],
+) -> String {
+    let mut out = String::new();
+    out.push_str(title);
+    out.push('\n');
+    if rows.is_empty() {
+        return out;
+    }
+    let cols: Vec<&str> = rows[0].1.iter().map(|(k, _)| *k).collect();
+    out.push_str(&format!("{:<24}", "variant"));
+    for c in &cols {
+        out.push_str(&format!(" | {c:>18}"));
+    }
+    out.push('\n');
+    out.push_str(&"-".repeat(24 + cols.len() * 21));
+    out.push('\n');
+    for (name, kvs) in rows {
+        out.push_str(&format!("{name:<24}"));
+        for (_, v) in kvs {
+            out.push_str(&format!(" | {v:>18}"));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Write a string to `target/report/<name>` (best-effort, for benches).
+pub fn save(name: &str, content: &str) {
+    let dir = std::path::Path::new("target/report");
+    let _ = std::fs::create_dir_all(dir);
+    let _ = std::fs::write(dir.join(name), content);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::preset;
+    use crate::metrics::RunResult;
+
+    fn result(name: &str, gb: f64, hours: f64, acc: f64, loss: f32) -> RunResult {
+        RunResult {
+            name: name.into(),
+            history: vec![],
+            rounds_run: 100,
+            sim_secs: hours * 3600.0,
+            wire_bytes: (gb * 1e9) as u64,
+            final_train_loss: loss,
+            final_eval_loss: loss,
+            final_eval_acc: acc,
+            reached_target: true,
+            host_compute_secs: 0.0,
+        }
+    }
+
+    #[test]
+    fn table1_mentions_setup() {
+        let a = preset("paper-fedavg").unwrap();
+        let b = preset("paper-gradient").unwrap();
+        let t = table1(&[&a, &b]);
+        assert!(t.contains("Number of Cloud Platforms"));
+        assert!(t.contains("fedavg, gradient"));
+        assert!(t.contains("100"));
+    }
+
+    #[test]
+    fn table2_formats_rows() {
+        let r1 = result("fedavg", 4.5, 12.0, 0.875, 0.34);
+        let r2 = result("gradient", 3.6, 9.8, 0.915, 0.27);
+        let t = table2(&[&r1, &r2]);
+        assert!(t.contains("4.50"));
+        assert!(t.contains("9.8"));
+        assert!(t.lines().count() >= 5);
+    }
+
+    #[test]
+    fn table3_formats_rows() {
+        let r = result("dynamic", 3.8, 10.5, 0.902, 0.29);
+        let t = table3(&[&r]);
+        assert!(t.contains("90.2"));
+        assert!(t.contains("0.290"));
+    }
+
+    #[test]
+    fn comparison_renders_grid() {
+        let t = comparison(
+            "Figure X",
+            &[
+                ("grpc", vec![("time", "1.0".into()), ("gb", "2.0".into())]),
+                ("quic", vec![("time", "0.7".into()), ("gb", "2.1".into())]),
+            ],
+        );
+        assert!(t.contains("grpc"));
+        assert!(t.contains("quic"));
+        assert!(t.contains("time"));
+    }
+}

@@ -1,0 +1,179 @@
+//! Compiled-executable wrapper for the train/eval HLO modules.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::{Manifest, ParamSet};
+use crate::runtime::count_execution;
+
+/// One training batch: token ids and next-token targets, both
+/// `(batch_size, seq_len)` row-major i32.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub tokens: Vec<i32>,
+    pub targets: Vec<i32>,
+}
+
+/// Output of one train step.
+#[derive(Clone, Debug)]
+pub struct TrainOut {
+    pub loss: f32,
+    pub grads: ParamSet,
+    /// host-side wall-clock of the PJRT execution (profiling)
+    pub exec_secs: f64,
+}
+
+/// Output of one eval step.
+#[derive(Clone, Debug)]
+pub struct EvalOut {
+    pub loss: f32,
+    pub n_correct: u32,
+    pub n_total: u32,
+}
+
+/// Compiled train+eval executables for one model preset.
+///
+/// Not `Sync`: the underlying PJRT client is used from one thread at a
+/// time. The simulator runs workers sequentially in simulated time, so a
+/// single `StepRuntime` per process (or per OS thread) is the intended
+/// pattern.
+pub struct StepRuntime {
+    client: xla::PjRtClient,
+    train_exe: xla::PjRtLoadedExecutable,
+    eval_exe: xla::PjRtLoadedExecutable,
+    manifest: Manifest,
+}
+
+impl StepRuntime {
+    /// Load and compile the artifacts referenced by `manifest`.
+    pub fn load(manifest: &Manifest) -> Result<StepRuntime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let train_exe = Self::compile(&client, &manifest.train_hlo)?;
+        let eval_exe = Self::compile(&client, &manifest.eval_hlo)?;
+        Ok(StepRuntime { client, train_exe, eval_exe, manifest: manifest.clone() })
+    }
+
+    /// Convenience: load manifest + compile from an artifacts dir.
+    pub fn load_preset(artifacts_dir: &Path, preset: &str) -> Result<StepRuntime> {
+        let manifest = Manifest::load(artifacts_dir, preset)?;
+        Self::load(&manifest)
+    }
+
+    fn compile(
+        client: &xla::PjRtClient,
+        path: &Path,
+    ) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("loading HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path:?}"))
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Tokens per batch (for accuracy denominators).
+    pub fn tokens_per_batch(&self) -> u32 {
+        (self.manifest.model.batch_size * self.manifest.model.seq_len) as u32
+    }
+
+    fn check_batch(&self, batch: &Batch) -> Result<()> {
+        let want = self.manifest.model.batch_size * self.manifest.model.seq_len;
+        if batch.tokens.len() != want || batch.targets.len() != want {
+            bail!(
+                "batch shape mismatch: got tokens={} targets={}, want {want}",
+                batch.tokens.len(),
+                batch.targets.len()
+            );
+        }
+        Ok(())
+    }
+
+    /// Upload params+batch, run the executable, pull the tuple back.
+    fn run(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        params: &ParamSet,
+        batch: &Batch,
+    ) -> Result<Vec<xla::Literal>> {
+        self.check_batch(batch)?;
+        if params.n_leaves() != self.manifest.params.len() {
+            bail!(
+                "param leaf count {} != manifest {}",
+                params.n_leaves(),
+                self.manifest.params.len()
+            );
+        }
+        let b = self.manifest.model.batch_size;
+        let s = self.manifest.model.seq_len;
+
+        let mut inputs = Vec::with_capacity(params.n_leaves() + 2);
+        for (leaf, spec) in params.leaves.iter().zip(&self.manifest.params) {
+            inputs.push(
+                self.client
+                    .buffer_from_host_buffer::<f32>(leaf, &spec.shape, None)
+                    .with_context(|| format!("uploading {}", spec.name))?,
+            );
+        }
+        inputs.push(
+            self.client
+                .buffer_from_host_buffer::<i32>(&batch.tokens, &[b, s], None)?,
+        );
+        inputs.push(
+            self.client
+                .buffer_from_host_buffer::<i32>(&batch.targets, &[b, s], None)?,
+        );
+
+        count_execution();
+        let outs = exe.execute_b(&inputs).context("executing step")?;
+        let tuple = outs[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        Ok(tuple.to_tuple()?)
+    }
+
+    /// Run the fwd+bwd train step: returns loss and gradients.
+    pub fn train_step(&self, params: &ParamSet, batch: &Batch) -> Result<TrainOut> {
+        let t0 = Instant::now();
+        let parts = self.run(&self.train_exe, params, batch)?;
+        if parts.len() != 1 + self.manifest.params.len() {
+            bail!(
+                "train output arity {} != 1 + {} params",
+                parts.len(),
+                self.manifest.params.len()
+            );
+        }
+        let loss = parts[0].get_first_element::<f32>()?;
+        let mut grads = Vec::with_capacity(self.manifest.params.len());
+        for (lit, spec) in parts[1..].iter().zip(&self.manifest.params) {
+            let v = lit.to_vec::<f32>()?;
+            if v.len() != spec.numel() {
+                bail!("grad leaf {} has {} elems, want {}", spec.name, v.len(), spec.numel());
+            }
+            grads.push(v);
+        }
+        Ok(TrainOut {
+            loss,
+            grads: ParamSet { leaves: grads },
+            exec_secs: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// Run the eval step: mean loss + top-1 next-token correct count.
+    pub fn eval_step(&self, params: &ParamSet, batch: &Batch) -> Result<EvalOut> {
+        let parts = self.run(&self.eval_exe, params, batch)?;
+        if parts.len() != 2 {
+            bail!("eval output arity {} != 2", parts.len());
+        }
+        Ok(EvalOut {
+            loss: parts[0].get_first_element::<f32>()?,
+            n_correct: parts[1].get_first_element::<i32>()? as u32,
+            n_total: self.tokens_per_batch(),
+        })
+    }
+}

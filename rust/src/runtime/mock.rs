@@ -1,0 +1,138 @@
+//! A runtime-free compute backend for tests and fast benches.
+//!
+//! Models each platform's local objective as a quadratic bowl whose optimum
+//! is derived (deterministically) from the batch contents:
+//!
+//!   loss(p; batch) = 0.5 * mean_i (p_i - t_i)^2 + floor
+//!   grad = (p - t) / n
+//!
+//! Different data shards → different targets `t` → genuine non-IID client
+//! drift, which is exactly the failure mode the paper's aggregation
+//! algorithms (formulas 1–4) are designed around. The coordinator,
+//! schedulers and aggregators are tested against this backend without any
+//! PJRT artifacts; the integration tests swap in the real [`StepRuntime`].
+
+use anyhow::Result;
+
+use crate::model::ParamSet;
+use crate::runtime::{Batch, ComputeBackend, EvalOut, TrainOut};
+
+/// Quadratic-bowl backend. `heterogeneity` scales how far shard targets
+/// spread apart (0 = IID, all shards share one optimum).
+#[derive(Clone, Debug)]
+pub struct MockRuntime {
+    pub heterogeneity: f32,
+    pub tokens_per_batch: u32,
+    /// irreducible loss floor, so eval losses look like LM losses
+    pub floor: f32,
+}
+
+impl Default for MockRuntime {
+    fn default() -> Self {
+        MockRuntime { heterogeneity: 1.0, tokens_per_batch: 512, floor: 0.0 }
+    }
+}
+
+impl MockRuntime {
+    pub fn new(heterogeneity: f32) -> Self {
+        MockRuntime { heterogeneity, ..Default::default() }
+    }
+
+    /// Deterministic per-batch target offset in [-h, h].
+    fn target_offset(&self, batch: &Batch) -> f32 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for &t in batch.tokens.iter().take(64) {
+            h ^= t as u64;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        }
+        let unit = (h >> 11) as f32 / (1u64 << 53) as f32; // [0, 1)
+        (unit * 2.0 - 1.0) * self.heterogeneity
+    }
+
+    fn loss_and_grad(&self, params: &ParamSet, batch: &Batch) -> (f32, ParamSet) {
+        let t = self.target_offset(batch);
+        let n = params.numel() as f32;
+        let mut grads = Vec::with_capacity(params.leaves.len());
+        let mut loss = 0.0f64;
+        for leaf in &params.leaves {
+            let mut g = Vec::with_capacity(leaf.len());
+            for &p in leaf {
+                let d = p - t;
+                loss += 0.5 * (d as f64) * (d as f64);
+                g.push(d / n);
+            }
+            grads.push(g);
+        }
+        ((loss / n as f64) as f32 + self.floor, ParamSet { leaves: grads })
+    }
+}
+
+impl ComputeBackend for MockRuntime {
+    fn train(&self, params: &ParamSet, batch: &Batch) -> Result<TrainOut> {
+        let (loss, grads) = self.loss_and_grad(params, batch);
+        Ok(TrainOut { loss, grads, exec_secs: 0.0 })
+    }
+
+    fn eval(&self, params: &ParamSet, batch: &Batch) -> Result<EvalOut> {
+        let (loss, _) = self.loss_and_grad(params, batch);
+        // map loss to a plausible token accuracy: acc = exp(-loss)
+        let acc = (-loss as f64).exp().clamp(0.0, 1.0);
+        Ok(EvalOut {
+            loss,
+            n_correct: (acc * self.tokens_per_batch as f64).round() as u32,
+            n_total: self.tokens_per_batch,
+        })
+    }
+
+    fn tokens_per_batch(&self) -> u32 {
+        self.tokens_per_batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params(n: usize, v: f32) -> ParamSet {
+        ParamSet { leaves: vec![vec![v; n]] }
+    }
+
+    fn batch(seed: i32) -> Batch {
+        Batch { tokens: vec![seed; 8], targets: vec![seed; 8] }
+    }
+
+    #[test]
+    fn gradient_descends() {
+        let rt = MockRuntime::new(0.5);
+        let mut p = params(16, 2.0);
+        let b = batch(7);
+        let l0 = rt.train(&p, &b).unwrap().loss;
+        for _ in 0..200 {
+            let out = rt.train(&p, &b).unwrap();
+            p.axpy(-10.0, &out.grads);
+        }
+        let l1 = rt.train(&p, &b).unwrap().loss;
+        assert!(l1 < l0 * 0.01, "l0={l0} l1={l1}");
+    }
+
+    #[test]
+    fn different_shards_different_optima() {
+        let rt = MockRuntime::new(1.0);
+        let t1 = rt.target_offset(&batch(1));
+        let t2 = rt.target_offset(&batch(2));
+        assert!((t1 - t2).abs() > 1e-4);
+        // IID case collapses
+        let rt0 = MockRuntime::new(0.0);
+        assert_eq!(rt0.target_offset(&batch(1)), 0.0);
+    }
+
+    #[test]
+    fn eval_accuracy_tracks_loss() {
+        let rt = MockRuntime::new(0.5);
+        let b = batch(3);
+        let near = rt.eval(&params(8, rt.target_offset(&b)), &b).unwrap();
+        let far = rt.eval(&params(8, 5.0), &b).unwrap();
+        assert!(near.n_correct > far.n_correct);
+        assert_eq!(near.n_total, 512);
+    }
+}

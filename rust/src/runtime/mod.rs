@@ -1,0 +1,57 @@
+//! PJRT runtime: loads the AOT HLO artifacts and executes train/eval steps.
+//!
+//! This is the only place rust touches XLA. Pattern follows
+//! /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! Python is never involved at runtime; the artifacts are produced once by
+//! `make artifacts`.
+
+mod exec;
+mod mock;
+
+pub use exec::{Batch, EvalOut, StepRuntime, TrainOut};
+pub use mock::MockRuntime;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::Result;
+
+use crate::model::ParamSet;
+
+/// Process-wide counter of PJRT executions (hot-path profiling aid).
+pub static EXECUTIONS: AtomicU64 = AtomicU64::new(0);
+
+pub(crate) fn count_execution() {
+    EXECUTIONS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Total PJRT executions since process start.
+pub fn execution_count() -> u64 {
+    EXECUTIONS.load(Ordering::Relaxed)
+}
+
+/// What a worker needs from a compute backend. Implemented by the real
+/// [`StepRuntime`] (PJRT) and by [`MockRuntime`] (a quadratic model) so the
+/// coordinator/aggregation stack is testable without artifacts.
+pub trait ComputeBackend {
+    /// fwd+bwd on one batch: loss + grads.
+    fn train(&self, params: &ParamSet, batch: &Batch) -> Result<TrainOut>;
+    /// eval on one batch: loss + top-1 correct count.
+    fn eval(&self, params: &ParamSet, batch: &Batch) -> Result<EvalOut>;
+    /// Tokens per batch (accuracy denominator).
+    fn tokens_per_batch(&self) -> u32;
+}
+
+impl ComputeBackend for StepRuntime {
+    fn train(&self, params: &ParamSet, batch: &Batch) -> Result<TrainOut> {
+        self.train_step(params, batch)
+    }
+
+    fn eval(&self, params: &ParamSet, batch: &Batch) -> Result<EvalOut> {
+        self.eval_step(params, batch)
+    }
+
+    fn tokens_per_batch(&self) -> u32 {
+        StepRuntime::tokens_per_batch(self)
+    }
+}

@@ -1,0 +1,160 @@
+//! Bench harness for `cargo bench` (criterion is not vendored offline).
+//!
+//! Usage in a `[[bench]] harness = false` target:
+//!
+//! ```ignore
+//! let mut b = BenchSet::new("table2");
+//! b.bench("fedavg", || run_fedavg());
+//! b.report();
+//! ```
+//!
+//! Measures wall-clock with warmup, reports mean/p50/p95 and throughput.
+
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+
+/// One measured benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub summary: Summary,
+    /// optional items-per-iteration for throughput reporting
+    pub items: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn throughput(&self) -> Option<f64> {
+        self.items.map(|n| n / self.summary.mean)
+    }
+}
+
+/// A named set of benchmarks with uniform reporting.
+pub struct BenchSet {
+    pub title: String,
+    pub warmup_iters: usize,
+    pub measure_iters: usize,
+    pub results: Vec<BenchResult>,
+}
+
+impl BenchSet {
+    pub fn new(title: &str) -> BenchSet {
+        BenchSet {
+            title: title.to_string(),
+            warmup_iters: 3,
+            measure_iters: 10,
+            results: Vec::new(),
+        }
+    }
+
+    /// Preset for slow end-to-end benches (single iteration, no warmup).
+    pub fn slow(title: &str) -> BenchSet {
+        BenchSet { warmup_iters: 0, measure_iters: 1, ..BenchSet::new(title) }
+    }
+
+    /// Measure `f`, discarding its output.
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        self.bench_items(name, None, &mut f)
+    }
+
+    /// Measure `f` that processes `items` items per call (throughput).
+    pub fn bench_throughput<T, F: FnMut() -> T>(
+        &mut self,
+        name: &str,
+        items: f64,
+        mut f: F,
+    ) -> &BenchResult {
+        self.bench_items(name, Some(items), &mut f)
+    }
+
+    fn bench_items<T>(
+        &mut self,
+        name: &str,
+        items: Option<f64>,
+        f: &mut dyn FnMut() -> T,
+    ) -> &BenchResult {
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut times = Vec::with_capacity(self.measure_iters);
+        for _ in 0..self.measure_iters.max(1) {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        let r = BenchResult {
+            name: name.to_string(),
+            summary: Summary::of(&times),
+            items,
+        };
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    /// Print the set in a stable, greppable format.
+    pub fn report(&self) {
+        println!("\n== bench: {} ==", self.title);
+        for r in &self.results {
+            let tput = match r.throughput() {
+                Some(t) if t >= 1e9 => format!("  {:8.2} Gitem/s", t / 1e9),
+                Some(t) if t >= 1e6 => format!("  {:8.2} Mitem/s", t / 1e6),
+                Some(t) if t >= 1e3 => format!("  {:8.2} Kitem/s", t / 1e3),
+                Some(t) => format!("  {t:8.2} item/s"),
+                None => String::new(),
+            };
+            println!(
+                "{:<32} mean {:>10} p50 {:>10} p95 {:>10}{}",
+                r.name,
+                fmt_secs(r.summary.mean),
+                fmt_secs(r.summary.p50),
+                fmt_secs(r.summary.p95),
+                tput
+            );
+        }
+    }
+
+    /// Find a result by name (for cross-variant assertions in benches).
+    pub fn get(&self, name: &str) -> Option<&BenchResult> {
+        self.results.iter().find(|r| r.name == name)
+    }
+}
+
+fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_and_reports() {
+        let mut b = BenchSet::new("t");
+        b.measure_iters = 5;
+        b.warmup_iters = 1;
+        let r = b.bench_throughput("sum", 1000.0, || {
+            (0..1000u64).sum::<u64>()
+        });
+        assert_eq!(r.summary.n, 5);
+        assert!(r.summary.mean > 0.0);
+        assert!(r.throughput().unwrap() > 0.0);
+        assert!(b.get("sum").is_some());
+        b.report(); // smoke: must not panic
+    }
+
+    #[test]
+    fn fmt_is_human() {
+        assert!(fmt_secs(2.0).ends_with(" s"));
+        assert!(fmt_secs(2e-3).ends_with(" ms"));
+        assert!(fmt_secs(2e-6).ends_with(" µs"));
+        assert!(fmt_secs(2e-9).ends_with(" ns"));
+    }
+}

@@ -1,0 +1,6 @@
+//! Test & bench support: a mini property-testing framework and a
+//! bench harness (the offline image has neither `proptest` nor
+//! `criterion`; see DESIGN.md substitutions).
+
+pub mod bench_kit;
+pub mod proptest_kit;

@@ -1,0 +1,186 @@
+//! Mini property-testing framework (proptest is not vendored offline).
+//!
+//! Provides seeded random generators, a `forall` runner that reports the
+//! failing case number + seed, and greedy input shrinking for slices.
+
+use crate::util::rng::Pcg64;
+use std::ops::Range;
+
+/// Random input generator handed to each property case.
+pub struct Gen {
+    rng: Pcg64,
+    /// case index (for diagnostics)
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, r: Range<usize>) -> usize {
+        assert!(r.start < r.end);
+        r.start + self.rng.below((r.end - r.start) as u64) as usize
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn f32_in(&mut self, r: Range<f32>) -> f32 {
+        r.start + (r.end - r.start) * self.rng.uniform_f32()
+    }
+
+    pub fn f64_in(&mut self, r: Range<f64>) -> f64 {
+        self.rng.range_f64(r.start, r.end)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// Vector of f32 with random length in `len` and values in `vals`.
+    pub fn vec_f32(&mut self, len: Range<usize>, vals: Range<f32>) -> Vec<f32> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.f32_in(vals.clone())).collect()
+    }
+
+    /// Vector with occasional special values (0, range endpoints) mixed
+    /// in — the proptest-style "edge case bias".
+    pub fn vec_f32_edgy(&mut self, len: Range<usize>, vals: Range<f32>) -> Vec<f32> {
+        let mut v = self.vec_f32(len, vals.clone());
+        for x in v.iter_mut() {
+            match self.rng.below(12) {
+                0 => *x = 0.0,
+                1 => *x = vals.end,
+                2 => *x = vals.start,
+                _ => {}
+            }
+        }
+        v
+    }
+
+    /// Pick one element from a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize_in(0..xs.len())]
+    }
+}
+
+/// Run `cases` random cases of `prop`. On panic, re-raises with the case
+/// index and seed in the message so the failure is reproducible with
+/// [`rerun`].
+pub fn forall<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(
+    name: &str,
+    cases: usize,
+    prop: F,
+) {
+    for case in 0..cases {
+        let seed = 0x9E37_79B9_7F4A_7C15u64
+            .wrapping_mul(case as u64 + 1)
+            .wrapping_add(name.len() as u64);
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen { rng: Pcg64::new(seed, 0xF0A11), case };
+            prop(&mut g);
+        });
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| payload.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property {name:?} failed at case {case}/{cases} \
+                 (seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case by seed (debugging aid).
+pub fn rerun<F: FnOnce(&mut Gen)>(seed: u64, prop: F) {
+    let mut g = Gen { rng: Pcg64::new(seed, 0xF0A11), case: 0 };
+    prop(&mut g);
+}
+
+/// Greedy shrink: find a minimal subsequence of `input` that still
+/// fails `fails`. Complements `forall` for slice-shaped inputs.
+pub fn shrink_slice<T: Clone>(
+    input: &[T],
+    fails: impl Fn(&[T]) -> bool,
+) -> Vec<T> {
+    assert!(fails(input), "shrink_slice needs a failing input");
+    let mut cur = input.to_vec();
+    loop {
+        let mut improved = false;
+        let mut chunk = (cur.len() / 2).max(1);
+        loop {
+            let mut i = 0;
+            while i + chunk <= cur.len() {
+                let mut candidate = Vec::with_capacity(cur.len() - chunk);
+                candidate.extend_from_slice(&cur[..i]);
+                candidate.extend_from_slice(&cur[i + chunk..]);
+                if !candidate.is_empty() && fails(&candidate) {
+                    cur = candidate;
+                    improved = true;
+                } else {
+                    i += chunk;
+                }
+            }
+            if chunk == 1 {
+                break;
+            }
+            chunk /= 2;
+        }
+        if !improved {
+            return cur;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_good_property() {
+        forall("abs is non-negative", 100, |g| {
+            let x = g.f32_in(-100.0..100.0);
+            assert!(x.abs() >= 0.0);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn forall_reports_failures() {
+        forall("fails on big input", 100, |g| {
+            let n = g.usize_in(0..100);
+            assert!(n < 90, "n={n}");
+        });
+    }
+
+    #[test]
+    fn generators_cover_ranges() {
+        let mut g = Gen { rng: Pcg64::new(7, 0xF0A11), case: 0 };
+        for _ in 0..1000 {
+            let u = g.usize_in(3..10);
+            assert!((3..10).contains(&u));
+            let f = g.f32_in(-1.0..1.0);
+            assert!((-1.0..1.0).contains(&f));
+        }
+        let v = g.vec_f32_edgy(1..50, -5.0..5.0);
+        assert!(!v.is_empty() && v.len() < 50);
+    }
+
+    #[test]
+    fn shrink_finds_minimal_failure() {
+        // property fails iff slice contains a 7
+        let input = vec![1, 3, 7, 9, 11, 7, 2];
+        let min = shrink_slice(&input, |s| s.contains(&7));
+        assert_eq!(min, vec![7]);
+    }
+
+    #[test]
+    fn rerun_reproduces() {
+        let mut out1 = 0.0;
+        rerun(42, |g| out1 = g.f32_in(0.0..1.0));
+        let mut out2 = 0.0;
+        rerun(42, |g| out2 = g.f32_in(0.0..1.0));
+        assert_eq!(out1, out2);
+    }
+}

@@ -1,0 +1,105 @@
+//! Byte-level codecs and formatting shared by transport/compress/crypto.
+
+/// f32 slice -> little-endian bytes.
+pub fn f32s_to_le(xs: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+/// little-endian bytes -> f32 vec (len must be a multiple of 4).
+pub fn le_to_f32s(bytes: &[u8]) -> Option<Vec<f32>> {
+    if bytes.len() % 4 != 0 {
+        return None;
+    }
+    Some(
+        bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect(),
+    )
+}
+
+/// u32 slice -> little-endian bytes.
+pub fn u32s_to_le(xs: &[u32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+/// little-endian bytes -> u32 vec.
+pub fn le_to_u32s(bytes: &[u8]) -> Option<Vec<u32>> {
+    if bytes.len() % 4 != 0 {
+        return None;
+    }
+    Some(
+        bytes
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect(),
+    )
+}
+
+/// Human-readable byte size ("3.62 GB").
+pub fn human_bytes(n: u64) -> String {
+    const UNITS: [&str; 6] = ["B", "KB", "MB", "GB", "TB", "PB"];
+    let mut v = n as f64;
+    let mut unit = 0;
+    while v >= 1000.0 && unit < UNITS.len() - 1 {
+        v /= 1000.0;
+        unit += 1;
+    }
+    if unit == 0 {
+        format!("{n} B")
+    } else {
+        format!("{:.2} {}", v, UNITS[unit])
+    }
+}
+
+/// Human-readable duration from seconds ("2.1 h", "35 s").
+pub fn human_duration(secs: f64) -> String {
+    if secs >= 3600.0 {
+        format!("{:.2} h", secs / 3600.0)
+    } else if secs >= 60.0 {
+        format!("{:.1} min", secs / 60.0)
+    } else if secs >= 1.0 {
+        format!("{secs:.1} s")
+    } else {
+        format!("{:.1} ms", secs * 1e3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let xs = vec![0.0f32, -1.5, 3.25e7, f32::MIN_POSITIVE, -0.0];
+        assert_eq!(le_to_f32s(&f32s_to_le(&xs)).unwrap(), xs);
+    }
+
+    #[test]
+    fn u32_roundtrip() {
+        let xs = vec![0u32, 1, u32::MAX, 0xdeadbeef];
+        assert_eq!(le_to_u32s(&u32s_to_le(&xs)).unwrap(), xs);
+    }
+
+    #[test]
+    fn rejects_ragged() {
+        assert!(le_to_f32s(&[1, 2, 3]).is_none());
+        assert!(le_to_u32s(&[1, 2, 3, 4, 5]).is_none());
+    }
+
+    #[test]
+    fn human_formats() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(4_500_000_000), "4.50 GB");
+        assert_eq!(human_duration(4.0), "4.0 s");
+        assert_eq!(human_duration(7200.0), "2.00 h");
+    }
+}

@@ -1,0 +1,70 @@
+//! `log`-crate backend: leveled, timestamped stderr logger.
+//!
+//! Level comes from `CROSSFED_LOG` (error|warn|info|debug|trace),
+//! defaulting to `info`.
+
+use std::sync::Once;
+use std::time::Instant;
+
+use log::{Level, LevelFilter, Metadata, Record};
+
+static INIT: Once = Once::new();
+
+struct StderrLogger {
+    start: Instant,
+    max_level: Level,
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= self.max_level
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = self.start.elapsed().as_secs_f64();
+        eprintln!(
+            "[{t:9.3}s {:5} {}] {}",
+            record.level(),
+            record.target().split("::").last().unwrap_or(""),
+            record.args()
+        );
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the global logger (idempotent).
+pub fn init() {
+    INIT.call_once(|| {
+        let level = match std::env::var("CROSSFED_LOG").as_deref() {
+            Ok("error") => Level::Error,
+            Ok("warn") => Level::Warn,
+            Ok("debug") => Level::Debug,
+            Ok("trace") => Level::Trace,
+            _ => Level::Info,
+        };
+        let logger = Box::new(StderrLogger { start: Instant::now(), max_level: level });
+        if log::set_boxed_logger(logger).is_ok() {
+            log::set_max_level(match level {
+                Level::Error => LevelFilter::Error,
+                Level::Warn => LevelFilter::Warn,
+                Level::Info => LevelFilter::Info,
+                Level::Debug => LevelFilter::Debug,
+                Level::Trace => LevelFilter::Trace,
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logging smoke test");
+    }
+}

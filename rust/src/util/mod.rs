@@ -1,0 +1,8 @@
+//! Foundation substrates built in-repo (the offline image vendors only the
+//! `xla` crate's dependency closure — no serde/rand/clap/criterion).
+
+pub mod bytes;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod stats;

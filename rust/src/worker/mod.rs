@@ -1,0 +1,231 @@
+//! Cloud-platform worker: local training + the update pipeline.
+//!
+//! One `CloudWorker` stands for one cloud platform's training process.
+//! It holds the platform's data shard, runs E local SGD steps per round
+//! against the shared PJRT backend, and turns the result into the payload
+//! the aggregation algorithm expects (parameter delta or accumulated
+//! gradient), privatized and shipped through [`crate::transport`].
+
+use anyhow::Result;
+
+use crate::aggregation::UpdateKind;
+use crate::cluster::CloudPlatform;
+use crate::data::BatchIter;
+use crate::model::ParamSet;
+use crate::privacy::{privatize, DpConfig};
+use crate::runtime::ComputeBackend;
+use crate::util::rng::Pcg64;
+
+/// Result of one local-training round on a platform.
+#[derive(Clone, Debug)]
+pub struct LocalRound {
+    /// the outgoing update (delta or gradient-sum per `UpdateKind`)
+    pub update: ParamSet,
+    /// mean training loss across the local steps (L_i in formula 2)
+    pub mean_loss: f32,
+    /// simulated compute seconds (platform speed + stragglers applied)
+    pub compute_secs: f64,
+    /// real host seconds spent in the backend (profiling)
+    pub host_secs: f64,
+    /// pre-clip update norm (DP diagnostics)
+    pub preclip_norm: f64,
+}
+
+/// One simulated cloud platform's training state.
+pub struct CloudWorker {
+    pub id: usize,
+    pub platform: CloudPlatform,
+    pub n_samples: usize,
+    batches: BatchIter,
+    straggle_rng: Pcg64,
+    dp_rng: Pcg64,
+    /// async bookkeeping: global version this worker's params are based on
+    pub base_version: u64,
+}
+
+impl CloudWorker {
+    pub fn new(
+        id: usize,
+        platform: CloudPlatform,
+        shard_tokens: &[i32],
+        batch_size: usize,
+        seq_len: usize,
+        seed: u64,
+    ) -> CloudWorker {
+        CloudWorker {
+            id,
+            platform,
+            n_samples: shard_tokens.len(),
+            batches: BatchIter::new(shard_tokens, batch_size, seq_len, seed ^ (id as u64) << 17),
+            straggle_rng: Pcg64::new(seed, 0x57_0000 + id as u64),
+            dp_rng: Pcg64::new(seed, 0xD9_0000 + id as u64),
+            base_version: 0,
+        }
+    }
+
+    /// Replace this worker's shard (dynamic re-partitioning).
+    pub fn set_shard(&mut self, shard_tokens: &[i32], batch_size: usize, seq_len: usize, seed: u64) {
+        self.n_samples = shard_tokens.len();
+        self.batches = BatchIter::new(
+            shard_tokens,
+            batch_size,
+            seq_len,
+            seed ^ (self.id as u64) << 21,
+        );
+    }
+
+    /// Run `steps` local SGD steps from `global`, produce the update.
+    pub fn local_round<B: ComputeBackend + ?Sized>(
+        &mut self,
+        backend: &B,
+        global: &ParamSet,
+        kind: UpdateKind,
+        steps: usize,
+        lr: f32,
+        base_step_secs: f64,
+        dp: &DpConfig,
+    ) -> Result<LocalRound> {
+        assert!(steps >= 1);
+        let mut params = global.clone();
+        let mut grad_acc: Option<ParamSet> = None;
+        let mut loss_sum = 0.0f64;
+        let mut compute_secs = 0.0f64;
+        let mut host_secs = 0.0f64;
+
+        for _ in 0..steps {
+            let batch = self.batches.next_batch();
+            let out = backend.train(&params, &batch)?;
+            loss_sum += out.loss as f64;
+            host_secs += out.exec_secs;
+            compute_secs +=
+                self.platform.step_time(base_step_secs, &mut self.straggle_rng);
+            params.axpy(-lr, &out.grads);
+            if kind == UpdateKind::Gradient {
+                match &mut grad_acc {
+                    None => grad_acc = Some(out.grads),
+                    Some(acc) => acc.axpy(1.0, &out.grads),
+                }
+            }
+        }
+
+        let mut update = match kind {
+            UpdateKind::ParamDelta => params.sub(global),
+            // gradient *sum* over local steps: same step magnitude as the
+            // delta path under server lr == local lr, so the algorithms
+            // are comparable at equal round counts (formula 3 with the
+            // sum absorbed into η)
+            UpdateKind::Gradient => grad_acc.expect("steps >= 1"),
+        };
+        let preclip_norm = privatize(&mut update, dp, &mut self.dp_rng);
+
+        Ok(LocalRound {
+            update,
+            mean_loss: (loss_sum / steps as f64) as f32,
+            compute_secs,
+            host_secs,
+            preclip_norm,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::MockRuntime;
+
+    fn worker(id: usize) -> CloudWorker {
+        let tokens: Vec<i32> = (0..400).map(|i| i % 96).collect();
+        CloudWorker::new(id, CloudPlatform::new("t", 1.0), &tokens, 4, 16, 9)
+    }
+
+    fn global() -> ParamSet {
+        ParamSet { leaves: vec![vec![1.0; 32]] }
+    }
+
+    #[test]
+    fn param_delta_moves_toward_local_optimum() {
+        let backend = MockRuntime::new(0.5);
+        let mut w = worker(0);
+        let g = global();
+        let r = w
+            .local_round(&backend, &g, UpdateKind::ParamDelta, 5, 5.0, 1.0,
+                         &DpConfig::disabled())
+            .unwrap();
+        assert!(r.update.l2_norm() > 0.0);
+        assert!(r.mean_loss > 0.0);
+        assert!((r.compute_secs - 5.0).abs() < 1e-9);
+        // applying the delta must reduce local loss
+        let mut moved = g.clone();
+        moved.axpy(1.0, &r.update);
+        let b = w.batches.next_batch();
+        let before = backend.train(&g, &b).unwrap().loss;
+        let after = backend.train(&moved, &b).unwrap().loss;
+        assert!(after < before);
+    }
+
+    #[test]
+    fn gradient_sum_matches_delta_for_sgd() {
+        // with plain local SGD: delta == -lr * grad_sum exactly
+        let backend = MockRuntime::new(0.3);
+        let g = global();
+        let lr = 2.0;
+
+        let mut w1 = worker(1);
+        let d = w1
+            .local_round(&backend, &g, UpdateKind::ParamDelta, 3, lr, 1.0,
+                         &DpConfig::disabled())
+            .unwrap();
+        let mut w2 = worker(1); // identical stream
+        let gr = w2
+            .local_round(&backend, &g, UpdateKind::Gradient, 3, lr, 1.0,
+                         &DpConfig::disabled())
+            .unwrap();
+        let mut reconstructed = gr.update.clone();
+        reconstructed.scale(-lr);
+        let diff = reconstructed.sub(&d.update).l2_norm();
+        assert!(diff < 1e-4, "diff={diff}");
+    }
+
+    #[test]
+    fn slow_platform_takes_longer() {
+        let backend = MockRuntime::new(0.1);
+        let tokens: Vec<i32> = (0..200).collect();
+        let mut slow = CloudWorker::new(
+            0,
+            CloudPlatform::new("slow", 0.5),
+            &tokens,
+            2,
+            8,
+            1,
+        );
+        let r = slow
+            .local_round(&backend, &global(), UpdateKind::ParamDelta, 2, 0.1,
+                         1.0, &DpConfig::disabled())
+            .unwrap();
+        assert!((r.compute_secs - 4.0).abs() < 1e-9); // 2 steps / 0.5 speed
+    }
+
+    #[test]
+    fn dp_clips_update() {
+        let backend = MockRuntime::new(0.5);
+        let mut w = worker(2);
+        let dp = DpConfig { clip_norm: 0.01, noise_multiplier: 0.0, delta: 1e-5 };
+        // noise_multiplier 0 -> dp disabled per DpConfig::enabled; use tiny noise
+        let dp = DpConfig { noise_multiplier: 1e-6, ..dp };
+        let r = w
+            .local_round(&backend, &global(), UpdateKind::ParamDelta, 4, 5.0,
+                         1.0, &dp)
+            .unwrap();
+        assert!(r.preclip_norm > 0.01);
+        assert!(r.update.l2_norm() < 0.02);
+    }
+
+    #[test]
+    fn set_shard_changes_data() {
+        let mut w = worker(3);
+        let before = w.n_samples;
+        w.set_shard(&(0..1000).map(|i| i % 96).collect::<Vec<_>>(), 4, 16, 5);
+        assert_ne!(w.n_samples, before);
+        assert_eq!(w.n_samples, 1000);
+    }
+}

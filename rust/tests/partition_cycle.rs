@@ -1,0 +1,122 @@
+//! Integration: the Figure-2 partitioning cycle end-to-end over the mock
+//! backend — monitor detects skew, planner re-partitions, load balances.
+
+use crossfed::cluster::ClusterSpec;
+use crossfed::config::preset;
+use crossfed::coordinator::Coordinator;
+use crossfed::model::ParamSet;
+use crossfed::partition::PartitionStrategy;
+use crossfed::runtime::MockRuntime;
+use crossfed::util::stats::imbalance_cv;
+
+fn run(strategy: PartitionStrategy) -> crossfed::metrics::RunResult {
+    let mut cfg = preset("quick").unwrap();
+    cfg.name = format!("cycle-{}", strategy.name());
+    cfg.partition = strategy;
+    cfg.proportional_local_work = true;
+    cfg.rounds = 30;
+    cfg.local_steps = 4;
+    cfg.local_lr = 3.0;
+    let backend = MockRuntime::new(0.3);
+    // 4x compute spread: the monitor must notice
+    let cluster = ClusterSpec::heterogeneous(3, 4.0);
+    let init = ParamSet { leaves: vec![vec![1.5; 48]] };
+    let mut coord = Coordinator::new(cfg, cluster, &backend, init, 4, 16).unwrap();
+    coord.run().unwrap()
+}
+
+#[test]
+fn dynamic_partitioning_rebalances_load() {
+    let fixed = run(PartitionStrategy::Fixed);
+    let dynamic = run(PartitionStrategy::Dynamic);
+
+    // fixed never re-plans; dynamic must have re-planned at least once
+    assert_eq!(fixed.history.last().unwrap().partition_gen, 0);
+    assert!(dynamic.history.last().unwrap().partition_gen >= 1);
+
+    // post-adaptation imbalance must be lower under dynamic
+    let tail_cv = |r: &crossfed::metrics::RunResult| {
+        let tail = &r.history[r.history.len() / 2..];
+        let cvs: Vec<f64> = tail
+            .iter()
+            .filter(|h| !h.platform_secs.is_empty())
+            .map(|h| imbalance_cv(&h.platform_secs))
+            .collect();
+        cvs.iter().sum::<f64>() / cvs.len() as f64
+    };
+    let (cv_f, cv_d) = (tail_cv(&fixed), tail_cv(&dynamic));
+    assert!(
+        cv_d < cv_f * 0.8,
+        "dynamic cv {cv_d:.3} not clearly below fixed cv {cv_f:.3}"
+    );
+
+    // and the wall clock improves
+    assert!(
+        dynamic.sim_secs < fixed.sim_secs,
+        "dynamic {:.0}s !< fixed {:.0}s",
+        dynamic.sim_secs,
+        fixed.sim_secs
+    );
+}
+
+#[test]
+fn replans_pay_distribution_bytes() {
+    let fixed = run(PartitionStrategy::Fixed);
+    let dynamic = run(PartitionStrategy::Dynamic);
+    // re-distribution is not free: the dynamic run's ledger includes the
+    // extra shard transfers (visible as a byte jump at the replan round)
+    let jump = dynamic
+        .history
+        .windows(2)
+        .map(|w| w[1].wire_bytes - w[0].wire_bytes)
+        .max()
+        .unwrap();
+    let typical = fixed
+        .history
+        .windows(2)
+        .map(|w| w[1].wire_bytes - w[0].wire_bytes)
+        .max()
+        .unwrap();
+    assert!(jump > typical, "no distribution cost visible: {jump} vs {typical}");
+}
+
+#[test]
+fn adaptive_granularity_coarsens_when_comm_bound() {
+    // make communication brutally expensive so the controller must react
+    let mut cfg = preset("quick").unwrap();
+    cfg.adaptive_granularity = true;
+    cfg.rounds = 25;
+    cfg.local_steps = 2;
+    cfg.local_lr = 3.0;
+    cfg.base_step_secs = 0.001; // compute ~free -> comm dominates
+    let backend = MockRuntime::new(0.3);
+    let cluster = ClusterSpec::paper_default();
+    let init = ParamSet { leaves: vec![vec![1.0; 32]] };
+    let mut coord =
+        Coordinator::new(cfg, cluster, &backend, init, 4, 16).unwrap();
+    let before = coord.run().unwrap();
+    // comm-bound + adaptive granularity -> later rounds run longer local
+    // phases; observable as fewer bytes per unit of simulated time than a
+    // fixed-granularity run of the same length
+    let mut cfg2 = preset("quick").unwrap();
+    cfg2.adaptive_granularity = false;
+    cfg2.rounds = 25;
+    cfg2.local_steps = 2;
+    cfg2.local_lr = 3.0;
+    cfg2.base_step_secs = 0.001;
+    let mut coord2 = Coordinator::new(
+        cfg2,
+        ClusterSpec::paper_default(),
+        &backend,
+        ParamSet { leaves: vec![vec![1.0; 32]] },
+        4,
+        16,
+    )
+    .unwrap();
+    let fixed = coord2.run().unwrap();
+    // same number of rounds, same per-round comm -> equal bytes; but the
+    // adaptive run amortizes them over more local work (more steps), so
+    // its *training* progressed further per byte
+    assert_eq!(before.rounds_run, fixed.rounds_run);
+    assert!(before.final_eval_loss <= fixed.final_eval_loss + 0.05);
+}

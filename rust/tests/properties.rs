@@ -1,0 +1,334 @@
+//! Property-based tests over the coordinator's invariants (routing,
+//! batching, state) using the in-repo mini-proptest (`testkit`).
+
+use crossfed::aggregation::{
+    Aggregator, AsyncAgg, ClientUpdate, DynamicWeighted, FedAvg,
+};
+use crossfed::compress::{Compression, Compressor, ErrorFeedback};
+use crossfed::crypto::{open, seal, SecureAggregator, TransportKey};
+use crossfed::data::{dirichlet_shards, CorpusConfig, SyntheticCorpus};
+use crossfed::model::ParamSet;
+use crossfed::netsim::{Link, Protocol, Wan};
+use crossfed::privacy::clip_update;
+use crossfed::testkit::proptest_kit::{forall, Gen};
+use crossfed::util::json::Json;
+
+fn gen_updates(g: &mut Gen, n_workers: usize, dim: usize) -> Vec<ClientUpdate> {
+    (0..n_workers)
+        .map(|w| ClientUpdate {
+            worker: w,
+            n_samples: g.usize_in(1..10_000),
+            local_loss: g.f32_in(0.01..10.0),
+            delta: ParamSet { leaves: vec![g.vec_f32_edgy(dim..dim + 1, -5.0..5.0)] },
+            staleness: g.usize_in(0..5) as u64,
+        })
+        .collect()
+}
+
+#[test]
+fn prop_fedavg_convexity() {
+    // FedAvg output lies inside the convex hull of per-coordinate deltas
+    forall("fedavg convexity", 200, |g| {
+        let n = g.usize_in(1..6);
+        let dim = g.usize_in(1..32);
+        let updates = gen_updates(g, n, dim);
+        let mut global = ParamSet { leaves: vec![vec![0.0; dim]] };
+        FedAvg.aggregate(&mut global, &updates);
+        for j in 0..dim {
+            let lo = updates
+                .iter()
+                .map(|u| u.delta.leaves[0][j])
+                .fold(f32::INFINITY, f32::min);
+            let hi = updates
+                .iter()
+                .map(|u| u.delta.leaves[0][j])
+                .fold(f32::NEG_INFINITY, f32::max);
+            let x = global.leaves[0][j];
+            assert!(
+                x >= lo - 1e-4 && x <= hi + 1e-4,
+                "coord {j}: {x} outside [{lo}, {hi}]"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_dynamic_weights_simplex() {
+    forall("dynamic weights on the simplex", 300, |g| {
+        let n = g.usize_in(1..8);
+        let losses: Vec<f32> =
+            (0..n).map(|_| g.f32_in(0.0..50.0)).collect();
+        let dw = DynamicWeighted { temperature: g.f32_in(0.05..5.0) };
+        let w = dw.weights(&losses);
+        assert_eq!(w.len(), n);
+        assert!((w.iter().sum::<f32>() - 1.0).abs() < 1e-4);
+        assert!(w.iter().all(|&x| (0.0..=1.0).contains(&x) && x.is_finite()));
+        // monotone: lower loss never gets lower weight
+        for i in 0..n {
+            for j in 0..n {
+                if losses[i] < losses[j] {
+                    assert!(w[i] >= w[j] - 1e-5);
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_async_is_contraction_toward_update() {
+    // after apply_one, each coordinate moves toward (global + delta) by
+    // exactly alpha/(1+staleness)
+    forall("async mixing", 200, |g| {
+        let dim = g.usize_in(1..16);
+        let mut global =
+            ParamSet { leaves: vec![g.vec_f32(dim..dim + 1, -3.0..3.0)] };
+        let before = global.clone();
+        let delta = g.vec_f32(dim..dim + 1, -3.0..3.0);
+        let staleness = g.usize_in(0..10) as u64;
+        let alpha0 = g.f32_in(0.05..1.0);
+        let mut agg = AsyncAgg { alpha0 };
+        let u = ClientUpdate {
+            worker: 0,
+            n_samples: 1,
+            local_loss: 1.0,
+            delta: ParamSet { leaves: vec![delta.clone()] },
+            staleness,
+        };
+        agg.apply_one(&mut global, &u);
+        let rate = alpha0 / (1.0 + staleness as f32);
+        for j in 0..dim {
+            let expect = before.leaves[0][j] + rate * delta[j];
+            assert!((global.leaves[0][j] - expect).abs() < 1e-5);
+        }
+    });
+}
+
+#[test]
+fn prop_compression_roundtrip_shape_and_bounds() {
+    forall("compression roundtrip", 150, |g| {
+        let xs = g.vec_f32_edgy(1..4000, -10.0..10.0);
+        let scheme = *g.choose(&[
+            Compression::None,
+            Compression::Fp16,
+            Compression::Int8,
+            Compression::TopK { ratio: 0.1 },
+            Compression::RandK { ratio: 0.1 },
+        ]);
+        let mut c = Compressor::new(scheme, g.u64());
+        let payload = c.compress(&xs);
+        let ys = Compressor::decompress(&payload).unwrap();
+        assert_eq!(ys.len(), xs.len());
+        assert!(ys.iter().all(|y| y.is_finite()));
+        match scheme {
+            Compression::None => assert_eq!(xs, ys),
+            Compression::Int8 => {
+                // bounded per-chunk error
+                let lo = xs.iter().cloned().fold(f32::INFINITY, f32::min);
+                let hi = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let step = (hi - lo).max(1e-12) / 255.0;
+                for (x, y) in xs.iter().zip(&ys) {
+                    assert!((x - y).abs() <= step * 1.01 + 1e-6);
+                }
+            }
+            Compression::TopK { .. } | Compression::RandK { .. } => {
+                // sparse outputs: supported coords only
+                let nz = ys.iter().filter(|&&y| y != 0.0).count();
+                assert!(nz <= xs.len());
+            }
+            Compression::Fp16 => {
+                for (x, y) in xs.iter().zip(&ys) {
+                    assert!((x - y).abs() <= x.abs() * 2e-3 + 1e-3);
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_error_feedback_conserves_mass() {
+    // sent_t + residual_t == update_t + residual_{t-1}, every round
+    forall("error feedback conservation", 80, |g| {
+        let n = g.usize_in(8..512);
+        let mut ef = ErrorFeedback::new(n, true);
+        let mut c =
+            Compressor::new(Compression::TopK { ratio: 0.1 }, g.u64());
+        let mut carried = vec![0.0f32; n];
+        for _ in 0..4 {
+            let update = g.vec_f32(n..n + 1, -1.0..1.0);
+            let payload = ef.compress(&update, &mut c).unwrap();
+            let sent = Compressor::decompress(&payload).unwrap();
+            // reconstruct the residual implied by conservation
+            for j in 0..n {
+                carried[j] = carried[j] + update[j] - sent[j];
+            }
+        }
+        // the implied residual's norm matches the EF's internal one
+        let implied: f64 = carried
+            .iter()
+            .map(|&x| (x as f64) * (x as f64))
+            .sum::<f64>()
+            .sqrt();
+        assert!(
+            (implied - ef.residual_norm()).abs() < 1e-3 * (1.0 + implied),
+            "implied {implied} vs internal {}",
+            ef.residual_norm()
+        );
+    });
+}
+
+#[test]
+fn prop_secure_agg_sum_exact_any_n() {
+    forall("secure agg sum", 60, |g| {
+        let n = g.usize_in(1..7);
+        let dim = g.usize_in(1..128);
+        let agg = SecureAggregator::new(n, b"prop");
+        let raw: Vec<Vec<f32>> =
+            (0..n).map(|_| g.vec_f32(dim..dim + 1, -2.0..2.0)).collect();
+        let round = g.u64() % 1000;
+        let masked: Vec<_> =
+            (0..n).map(|w| agg.mask(w, round, &raw[w])).collect();
+        let sum = agg.unmask_sum(&masked);
+        for j in 0..dim {
+            let want: f32 = raw.iter().map(|u| u[j]).sum();
+            assert!((sum[j] - want).abs() < 1e-4 * (1.0 + want.abs()));
+        }
+    });
+}
+
+#[test]
+fn prop_seal_open_roundtrip_any_payload() {
+    forall("seal/open", 100, |g| {
+        let len = g.usize_in(0..5000);
+        let payload: Vec<u8> =
+            (0..len).map(|_| (g.u64() & 0xff) as u8).collect();
+        let mut k = TransportKey::derive(b"prop-secret", "a->b");
+        let sealed = seal(&mut k, &payload);
+        assert_eq!(open(&k, &sealed).unwrap(), payload);
+        // tamper one random byte (if any) -> must fail
+        if !sealed.ciphertext.is_empty() {
+            let mut bad = sealed.clone();
+            let i = g.usize_in(0..bad.ciphertext.len());
+            bad.ciphertext[i] ^= 0x40;
+            assert!(open(&k, &bad).is_err());
+        }
+    });
+}
+
+#[test]
+fn prop_clip_never_increases_norm() {
+    forall("clip contraction", 200, |g| {
+        let mut p = ParamSet {
+            leaves: vec![g.vec_f32_edgy(1..256, -100.0..100.0)],
+        };
+        let bound = g.f64_in(0.001..50.0);
+        let pre = p.l2_norm();
+        clip_update(&mut p, bound);
+        assert!(p.l2_norm() <= bound.max(pre) + 1e-4);
+        assert!(p.l2_norm() <= bound * (1.0 + 1e-5) || pre <= bound);
+    });
+}
+
+#[test]
+fn prop_wan_transfer_monotone_in_payload() {
+    forall("wan monotonicity", 100, |g| {
+        let link = Link {
+            bandwidth_bps: g.f64_in(1e6..1e10),
+            rtt_s: g.f64_in(0.001..0.3),
+            jitter: 0.0,
+            loss_rate: g.f64_in(0.0..0.05),
+        };
+        let proto =
+            *g.choose(&[Protocol::Tcp, Protocol::Grpc, Protocol::Quic]);
+        let mut wan = Wan::uniform(2, link, g.u64());
+        let small = g.usize_in(1..1_000_000) as u64;
+        let big = small * 2 + g.usize_in(1..1_000_000) as u64;
+        wan.transfer(0, 1, 1, proto, 4); // warm
+        let t_small = wan.transfer(0, 1, small, proto, 4);
+        let t_big = wan.transfer(0, 1, big, proto, 4);
+        assert!(t_big.time_s >= t_small.time_s * 0.999);
+        assert!(t_big.wire_bytes > t_small.wire_bytes);
+    });
+}
+
+#[test]
+fn prop_dirichlet_partition_is_exact_cover() {
+    forall("partition exact cover", 40, |g| {
+        let n_docs = g.usize_in(10..200);
+        let corpus = SyntheticCorpus::generate(&CorpusConfig {
+            n_docs,
+            doc_sentences: 2,
+            n_topics: 1 + n_docs % 6,
+            seed: g.u64(),
+        });
+        let n = g.usize_in(1..8);
+        let shards = dirichlet_shards(&corpus, n, g.f64_in(0.05..10.0), g.u64());
+        assert_eq!(shards.len(), n);
+        let mut all: Vec<usize> =
+            shards.iter().flat_map(|s| s.doc_ids.clone()).collect();
+        all.sort_unstable();
+        let expect: Vec<usize> = (0..n_docs).collect();
+        assert_eq!(all, expect, "docs must be covered exactly once");
+        assert!(shards.iter().all(|s| !s.doc_ids.is_empty()));
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_arbitrary_values() {
+    fn gen_json(g: &mut Gen, depth: usize) -> Json {
+        match if depth == 0 { g.usize_in(0..4) } else { g.usize_in(0..6) } {
+            0 => Json::Null,
+            1 => Json::Bool(g.bool()),
+            2 => Json::Num((g.f64_in(-1e9..1e9) * 100.0).round() / 100.0),
+            3 => {
+                let len = g.usize_in(0..12);
+                Json::Str(
+                    (0..len)
+                        .map(|_| {
+                            *g.choose(&[
+                                'a', 'b', '"', '\\', '\n', 'é', '中', '😀',
+                                ' ', '\t',
+                            ])
+                        })
+                        .collect(),
+                )
+            }
+            4 => Json::Arr(
+                (0..g.usize_in(0..5))
+                    .map(|_| gen_json(g, depth - 1))
+                    .collect(),
+            ),
+            _ => Json::Obj(
+                (0..g.usize_in(0..5))
+                    .map(|i| (format!("k{i}"), gen_json(g, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    forall("json roundtrip", 300, |g| {
+        let v = gen_json(g, 3);
+        let text = v.to_string();
+        let back = Json::parse(&text).unwrap_or_else(|e| {
+            panic!("reparse failed for {text:?}: {e}")
+        });
+        assert_eq!(v, back, "roundtrip mismatch for {text}");
+        // pretty form too
+        let back2 = Json::parse(&v.to_string_pretty()).unwrap();
+        assert_eq!(v, back2);
+    });
+}
+
+#[test]
+fn prop_paramset_flat_roundtrip() {
+    forall("paramset flatten", 150, |g| {
+        let n_leaves = g.usize_in(1..8);
+        let p = ParamSet {
+            leaves: (0..n_leaves)
+                .map(|_| g.vec_f32(1..64, -1e3..1e3))
+                .collect(),
+        };
+        let flat = p.to_flat();
+        assert_eq!(flat.len(), p.numel());
+        let q = ParamSet::from_flat(&flat, &p).unwrap();
+        assert_eq!(p, q);
+    });
+}

@@ -1,0 +1,142 @@
+//! Integration: rust PJRT runtime executes the AOT JAX+Pallas artifacts.
+//! Requires `make artifacts` (tiny preset). Skips if artifacts are absent.
+
+use std::path::Path;
+
+use crossfed::model::{Manifest, ParamSet};
+use crossfed::runtime::{Batch, StepRuntime};
+
+fn artifacts_dir() -> Option<&'static Path> {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if p.join("manifest_tiny.json").exists() {
+        Some(Box::leak(p.into_boxed_path()))
+    } else {
+        eprintln!("skipping: artifacts/ missing (run `make artifacts`)");
+        None
+    }
+}
+
+fn rand_batch(m: &Manifest, seed: u64) -> Batch {
+    let mut rng = crossfed::util::rng::Pcg64::new(seed, 7);
+    let n = m.model.batch_size * m.model.seq_len;
+    Batch {
+        tokens: (0..n).map(|_| rng.below(m.model.vocab_size as u64) as i32).collect(),
+        targets: (0..n).map(|_| rng.below(m.model.vocab_size as u64) as i32).collect(),
+    }
+}
+
+#[test]
+fn train_step_runs_and_loss_decreases() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = StepRuntime::load_preset(dir, "tiny").unwrap();
+    let m = rt.manifest().clone();
+    let mut params = ParamSet::init(&m, 42);
+    let batch = rand_batch(&m, 1);
+
+    // initial loss ~ ln(vocab)
+    let out0 = rt.train_step(&params, &batch).unwrap();
+    let ln_v = (m.model.vocab_size as f32).ln();
+    assert!((out0.loss - ln_v).abs() < 0.5, "loss0={} lnV={}", out0.loss, ln_v);
+    assert_eq!(out0.grads.n_leaves(), m.params.len());
+    assert!(!out0.grads.has_non_finite());
+    assert!(out0.grads.l2_norm() > 0.0);
+
+    // 30 SGD steps on one batch must overfit it
+    let mut loss = out0.loss;
+    for _ in 0..30 {
+        let out = rt.train_step(&params, &batch).unwrap();
+        params.axpy(-0.5, &out.grads);
+        loss = out.loss;
+    }
+    assert!(loss < out0.loss - 0.5, "no progress: {} -> {}", out0.loss, loss);
+
+    // eval agrees with train loss on the same batch
+    let ev = rt.eval_step(&params, &batch).unwrap();
+    assert!((ev.loss - loss).abs() < 0.5);
+    assert!(ev.n_total == rt.tokens_per_batch());
+}
+
+#[test]
+fn eval_counts_are_bounded() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = StepRuntime::load_preset(dir, "tiny").unwrap();
+    let m = rt.manifest().clone();
+    let params = ParamSet::init(&m, 7);
+    let ev = rt.eval_step(&params, &rand_batch(&m, 2)).unwrap();
+    assert!(ev.n_correct <= ev.n_total);
+    assert!(ev.loss.is_finite());
+}
+
+#[test]
+fn full_stack_federated_round_real_runtime() {
+    // Coordinator over the real PJRT backend: 6 rounds, gradient
+    // aggregation with compression + encryption + DP, loss must drop.
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = StepRuntime::load_preset(dir, "tiny").unwrap();
+    let m = rt.manifest().clone();
+
+    let mut cfg = crossfed::config::preset("quick").unwrap();
+    cfg.rounds = 6;
+    cfg.eval_every = 2;
+    cfg.aggregation = crossfed::aggregation::AggregationKind::GradientAgg;
+    cfg.compression = crossfed::compress::Compression::TopK { ratio: 0.5 };
+    cfg.error_feedback = true;
+    cfg.encrypt = true;
+
+    let cluster = crossfed::cluster::ClusterSpec::paper_default();
+    let init = ParamSet::init(&m, cfg.seed);
+    let mut coord = crossfed::coordinator::Coordinator::new(
+        cfg,
+        cluster,
+        &rt,
+        init,
+        m.model.batch_size,
+        m.model.seq_len,
+    )
+    .unwrap();
+    let r = coord.run().unwrap();
+    assert_eq!(r.rounds_run, 6);
+    let first = r.history[0].train_loss;
+    assert!(
+        r.final_eval_loss < first,
+        "no progress: {} -> {}",
+        first,
+        r.final_eval_loss
+    );
+    assert!(r.wire_bytes > 100_000); // compressed but nonzero traffic
+    assert!(!coord.global().has_non_finite());
+}
+
+#[test]
+fn secure_agg_over_real_runtime_matches_plain() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = StepRuntime::load_preset(dir, "tiny").unwrap();
+    let m = rt.manifest().clone();
+    let cluster = crossfed::cluster::ClusterSpec::paper_default();
+
+    let run = |secure: bool| {
+        let mut cfg = crossfed::config::preset("quick").unwrap();
+        cfg.rounds = 4;
+        cfg.secure_agg = secure;
+        let init = ParamSet::init(&m, cfg.seed);
+        let mut coord = crossfed::coordinator::Coordinator::new(
+            cfg,
+            cluster.clone(),
+            &rt,
+            init,
+            m.model.batch_size,
+            m.model.seq_len,
+        )
+        .unwrap();
+        coord.run().unwrap()
+    };
+    let plain = run(false);
+    let masked = run(true);
+    // pairwise masks cancel: training trajectories should agree closely
+    assert!(
+        (plain.final_eval_loss - masked.final_eval_loss).abs() < 0.15,
+        "{} vs {}",
+        plain.final_eval_loss,
+        masked.final_eval_loss
+    );
+}
