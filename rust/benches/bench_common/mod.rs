@@ -1,9 +1,13 @@
 //! Shared bench plumbing: backend selection + run helpers.
 //!
+//! (Included as a module by every bench target; each uses a subset, so
+//! dead-code lints are silenced below.)
+//!
 //! Every bench accepts `CROSSFED_BENCH_BACKEND=mock` to run against the
 //! quadratic mock (fast, artifact-free, CI-friendly); the default is the
 //! real PJRT runtime over `artifacts/` (tiny preset), which is what the
 //! EXPERIMENTS.md numbers use.
+#![allow(dead_code)]
 
 use std::path::Path;
 

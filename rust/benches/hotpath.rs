@@ -7,6 +7,12 @@
 //! Targets (memory-bound roofline class): ≥1 GB/s per core for the
 //! f32-vector kernels (axpy / aggregate / compress-none), crypto at
 //! AES-CTR software speed, PJRT step time reported for reference.
+//!
+//! Every kernel set runs twice — pinned to 1 thread (the serial
+//! baseline) and at full `available_parallelism()` — and the
+//! serial/parallel comparison is written to `BENCH_hotpath.json` at the
+//! repo root (deterministic kernels make the two passes bit-comparable;
+//! see `crossfed::util::par`).
 
 mod bench_common;
 
@@ -15,7 +21,9 @@ use crossfed::compress::{Compression, Compressor};
 use crossfed::crypto::{open, seal, TransportKey};
 use crossfed::model::ParamSet;
 use crossfed::netsim::{Link, Protocol, Wan};
-use crossfed::testkit::bench_kit::BenchSet;
+use crossfed::testkit::bench_kit::{BenchResult, BenchSet};
+use crossfed::util::json::Json;
+use crossfed::util::par;
 use crossfed::util::rng::Pcg64;
 
 const N: usize = 1_000_000; // 4 MB of f32 — a mid-size model update
@@ -29,71 +37,136 @@ fn params(n: usize, seed: u64) -> ParamSet {
     ParamSet { leaves: vec![vecs(n, seed)] }
 }
 
-fn main() {
-    let bytes = (N * 4) as f64;
+/// One full pass over the parallelized kernel sets at a pinned thread
+/// count. Returns the sets in a fixed order so two passes can be zipped.
+fn kernel_pass(threads: usize) -> Vec<BenchSet> {
+    par::with_threads(threads, || {
+        let bytes = (N * 4) as f64;
+        let mut sets = Vec::new();
 
-    // --- ParamSet linear algebra (inner loop of every aggregator)
-    let mut b = BenchSet::new("paramset ops (1M f32)");
-    b.measure_iters = 20;
-    let mut p = params(N, 1);
-    let q = params(N, 2);
-    b.bench_throughput("axpy", bytes, || p.axpy(0.5, &q));
-    b.bench_throughput("l2_norm", bytes, || p.l2_norm());
-    b.bench_throughput("sub", bytes, || p.sub(&q));
-    b.bench_throughput("to_flat", bytes, || p.to_flat());
-    b.report();
+        // --- ParamSet linear algebra (inner loop of every aggregator)
+        let mut b = BenchSet::new(&format!("paramset ops (1M f32, {threads}T)"));
+        b.measure_iters = 20;
+        let mut p = params(N, 1);
+        let q = params(N, 2);
+        b.bench_throughput("axpy", bytes, || p.axpy(0.5, &q));
+        b.bench_throughput("l2_norm", bytes, || p.l2_norm());
+        b.bench_throughput("sub", bytes, || p.sub(&q));
+        b.bench_throughput("to_flat", bytes, || p.to_flat());
+        b.report();
+        sets.push(b);
 
-    // --- aggregation algorithms over 3 workers
-    let mut b = BenchSet::new("aggregation (3 workers x 1M params)");
-    b.measure_iters = 10;
-    let updates: Vec<ClientUpdate> = (0..3)
-        .map(|w| ClientUpdate {
-            worker: w,
-            n_samples: 1000 + w * 100,
-            local_loss: 2.0 + w as f32 * 0.1,
-            delta: params(N, w as u64 + 10),
-            staleness: 0,
-        })
-        .collect();
-    let mut global = params(N, 99);
-    b.bench_throughput("fedavg", 3.0 * bytes, || {
-        FedAvg.aggregate(&mut global, &updates)
-    });
-    b.bench_throughput("dynamic", 3.0 * bytes, || {
-        DynamicWeighted::default().aggregate(&mut global, &updates)
-    });
-    b.report();
+        // --- aggregation algorithms over 3 workers
+        let mut b =
+            BenchSet::new(&format!("aggregation (3 workers x 1M, {threads}T)"));
+        b.measure_iters = 10;
+        let updates: Vec<ClientUpdate> = (0..3)
+            .map(|w| ClientUpdate {
+                worker: w,
+                n_samples: 1000 + w * 100,
+                local_loss: 2.0 + w as f32 * 0.1,
+                delta: params(N, w as u64 + 10),
+                staleness: 0,
+            })
+            .collect();
+        let mut global = params(N, 99);
+        // aggregators hoisted out of the measured closures: the bench
+        // measures aggregation, not constructor noise
+        let mut fedavg = FedAvg;
+        let mut dynamic = DynamicWeighted::default();
+        b.bench_throughput("fedavg", 3.0 * bytes, || {
+            fedavg.aggregate(&mut global, &updates)
+        });
+        b.bench_throughput("dynamic", 3.0 * bytes, || {
+            dynamic.aggregate(&mut global, &updates)
+        });
+        b.report();
+        sets.push(b);
 
-    // --- compression codecs
-    let mut b = BenchSet::new("compression (1M f32)");
-    b.measure_iters = 10;
-    let xs = vecs(N, 3);
-    for (name, scheme) in [
-        ("none", Compression::None),
-        ("fp16", Compression::Fp16),
-        ("int8", Compression::Int8),
-        ("topk-1%", Compression::TopK { ratio: 0.01 }),
-        ("randk-1%", Compression::RandK { ratio: 0.01 }),
-    ] {
-        let mut c = Compressor::new(scheme, 7);
-        b.bench_throughput(name, bytes, || c.compress(&xs));
+        // --- compression codecs
+        let mut b = BenchSet::new(&format!("compression (1M f32, {threads}T)"));
+        b.measure_iters = 10;
+        let xs = vecs(N, 3);
+        for (name, scheme) in [
+            ("none", Compression::None),
+            ("fp16", Compression::Fp16),
+            ("int8", Compression::Int8),
+            ("topk-1%", Compression::TopK { ratio: 0.01 }),
+            ("randk-1%", Compression::RandK { ratio: 0.01 }),
+        ] {
+            let mut c = Compressor::new(scheme, 7);
+            let mut out = Vec::new();
+            b.bench_throughput(name, bytes, || {
+                out.clear();
+                c.compress_append(&xs, &mut out)
+            });
+        }
+        let mut c = Compressor::new(Compression::TopK { ratio: 0.01 }, 7);
+        let payload = c.compress(&xs);
+        b.bench_throughput("decompress topk-1%", bytes, || {
+            Compressor::decompress(&payload).unwrap()
+        });
+        b.report();
+        sets.push(b);
+
+        // --- crypto
+        let mut b = BenchSet::new(&format!("crypto (4 MB payload, {threads}T)"));
+        b.measure_iters = 10;
+        let plaintext = vec![0xA5u8; N * 4];
+        let mut key = TransportKey::derive(b"bench", "ctx");
+        b.bench_throughput("seal (aes-ctr+hmac)", bytes, || {
+            seal(&mut key, &plaintext)
+        });
+        let sealed = seal(&mut key, &plaintext);
+        b.bench_throughput("open", bytes, || open(&key, &sealed).unwrap());
+        b.report();
+        sets.push(b);
+
+        sets
+    })
+}
+
+fn gbps(r: &BenchResult) -> f64 {
+    r.throughput().unwrap_or(0.0) / 1e9
+}
+
+fn write_json(hw: usize, serial: &[BenchSet], parallel: &[BenchSet]) {
+    let mut entries = Vec::new();
+    for (sb, pb) in serial.iter().zip(parallel) {
+        for (sr, pr) in sb.results.iter().zip(&pb.results) {
+            entries.push(Json::obj(vec![
+                ("name", Json::str(sr.name.clone())),
+                ("serial_gbps", Json::num((gbps(sr) * 1e3).round() / 1e3)),
+                ("parallel_gbps", Json::num((gbps(pr) * 1e3).round() / 1e3)),
+                (
+                    "speedup",
+                    Json::num(
+                        ((sr.summary.mean / pr.summary.mean) * 100.0).round() / 100.0,
+                    ),
+                ),
+            ]));
+        }
     }
-    let mut c = Compressor::new(Compression::TopK { ratio: 0.01 }, 7);
-    let payload = c.compress(&xs);
-    b.bench_throughput("decompress topk-1%", bytes, || {
-        Compressor::decompress(&payload).unwrap()
-    });
-    b.report();
+    let doc = Json::obj(vec![
+        ("bench", Json::str("hotpath")),
+        ("elements", Json::num(N as f64)),
+        ("threads", Json::num(hw as f64)),
+        ("results", Json::arr(entries)),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.json");
+    match std::fs::write(path, doc.to_string_pretty() + "\n") {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\ncould not write {path}: {e}"),
+    }
+}
 
-    // --- crypto
-    let mut b = BenchSet::new("crypto (4 MB payload)");
-    b.measure_iters = 10;
-    let plaintext = vec![0xA5u8; N * 4];
-    let mut key = TransportKey::derive(b"bench", "ctx");
-    b.bench_throughput("seal (aes-ctr+hmac)", bytes, || seal(&mut key, &plaintext));
-    let sealed = seal(&mut key, &plaintext);
-    b.bench_throughput("open", bytes, || open(&key, &sealed).unwrap());
-    b.report();
+fn main() {
+    let hw = par::current_threads();
+    println!("== hotpath: serial baseline (1 thread) ==");
+    let serial = kernel_pass(1);
+    println!("\n== hotpath: parallel ({hw} threads) ==");
+    let parallel = kernel_pass(hw);
+    write_json(hw, &serial, &parallel);
 
     // --- netsim transfer computation (pure model, no payload copies)
     let mut b = BenchSet::new("netsim transfer ops");

@@ -95,9 +95,13 @@ impl Aggregator for FedAvg {
         assert!(!updates.is_empty());
         let n: f64 = updates.iter().map(|u| u.n_samples as f64).sum();
         assert!(n > 0.0, "fedavg needs positive sample counts");
-        for u in updates {
-            global.axpy((u.n_samples as f64 / n) as f32, &u.delta);
-        }
+        // one fused parallel pass over the global model (bit-identical to
+        // sequential per-update axpy)
+        let terms: Vec<(f32, &ParamSet)> = updates
+            .iter()
+            .map(|u| ((u.n_samples as f64 / n) as f32, &u.delta))
+            .collect();
+        global.axpy_many(&terms);
     }
 }
 
@@ -143,9 +147,12 @@ impl Aggregator for DynamicWeighted {
         assert!(!updates.is_empty());
         let losses: Vec<f32> = updates.iter().map(|u| u.local_loss).collect();
         let weights = self.weights(&losses);
-        for (u, &w) in updates.iter().zip(&weights) {
-            global.axpy(w, &u.delta);
-        }
+        let terms: Vec<(f32, &ParamSet)> = updates
+            .iter()
+            .zip(&weights)
+            .map(|(u, &w)| (w, &u.delta))
+            .collect();
+        global.axpy_many(&terms);
     }
 }
 
@@ -175,13 +182,15 @@ impl Aggregator for GradientAgg {
         assert!(!updates.is_empty());
         let n: f64 = updates.iter().map(|u| u.n_samples as f64).sum();
         assert!(n > 0.0);
-        // weighted mean gradient
+        // weighted mean gradient, accumulated in one fused parallel pass
         let mut agg = ParamSet {
             leaves: global.leaves.iter().map(|l| vec![0.0; l.len()]).collect(),
         };
-        for u in updates {
-            agg.axpy((u.n_samples as f64 / n) as f32, &u.delta);
-        }
+        let terms: Vec<(f32, &ParamSet)> = updates
+            .iter()
+            .map(|u| ((u.n_samples as f64 / n) as f32, &u.delta))
+            .collect();
+        agg.axpy_many(&terms);
         self.server_opt.step(global, &agg);
     }
 }

@@ -1,8 +1,18 @@
 //! Compression codecs over flat f32 update vectors.
+//!
+//! All per-chunk-independent codecs (fp16, int8, sparse gather) are
+//! block-parallel via [`par`], and the encode path writes straight into a
+//! caller-owned buffer ([`Compressor::compress_append`]) with
+//! [`Compressor`]-owned scratch — the steady-state round allocates
+//! nothing. Serial and parallel encodes are bit-identical
+//! (EXPERIMENTS.md §Perf): block boundaries are fixed and the int8
+//! stochastic-rounding stream is seeded per chunk from the compressor RNG
+//! *before* fan-out.
 
 use anyhow::{bail, Result};
 
-use crate::util::bytes::{f32s_to_le, le_to_f32s, le_to_u32s, u32s_to_le};
+use crate::util::bytes::{f32s_to_le_into, le_to_f32s_into};
+use crate::util::par;
 use crate::util::rng::Pcg64;
 
 /// Compression scheme selector (paper §3.2).
@@ -47,6 +57,17 @@ impl Compression {
             None
         }
     }
+
+    /// Bytes of wire header needed to reconstruct this scheme alongside
+    /// the payload: scheme tag (1) + element count (8), plus the ratio
+    /// (f64, 8) for the parametrized sparse schemes — the ratio is part of
+    /// the scheme and must be counted (it was previously omitted).
+    pub fn header_bytes(&self) -> u64 {
+        match self {
+            Compression::TopK { .. } | Compression::RandK { .. } => 17,
+            _ => 9,
+        }
+    }
 }
 
 /// A compressed update: opaque bytes + the codec needed to reopen them.
@@ -59,82 +80,146 @@ pub struct CompressedPayload {
 
 impl CompressedPayload {
     pub fn byte_len(&self) -> u64 {
-        // + small header: scheme tag (1) + element count (8)
-        self.data.len() as u64 + 9
+        self.data.len() as u64 + self.scheme.header_bytes()
     }
 }
 
-/// Stateful compressor (owns the RNG for stochastic schemes).
+/// Round-persistent encode workspace owned by [`Compressor`] — replaces
+/// the per-call index/value `Vec` churn in the sparse schemes.
+#[derive(Clone, Debug, Default)]
+struct CodecScratch {
+    /// index workspace for top-k selection / rand-k sampling (u32 halves
+    /// the footprint vs `usize` and matches the wire format)
+    idx: Vec<u32>,
+}
+
+/// Stateful compressor (owns the RNG for stochastic schemes and the
+/// encode scratch).
 #[derive(Clone, Debug)]
 pub struct Compressor {
     pub scheme: Compression,
     rng: Pcg64,
+    scratch: CodecScratch,
 }
 
 const INT8_CHUNK: usize = 4096;
 
 impl Compressor {
     pub fn new(scheme: Compression, seed: u64) -> Compressor {
-        Compressor { scheme, rng: Pcg64::new(seed, 0xC0DEC) }
+        Compressor {
+            scheme,
+            rng: Pcg64::new(seed, 0xC0DEC),
+            scratch: CodecScratch::default(),
+        }
     }
 
     /// Compress a flat vector. Exactly reversible layout via `decompress`.
     pub fn compress(&mut self, xs: &[f32]) -> CompressedPayload {
-        let data = match self.scheme {
-            Compression::None => f32s_to_le(xs),
-            Compression::Fp16 => {
-                // perf: preallocated tight loop (see EXPERIMENTS.md §Perf);
-                // the flat_map form costs ~40% more on this path
-                let mut out = Vec::with_capacity(xs.len() * 2);
-                for &x in xs {
-                    out.extend_from_slice(&f32_to_f16_bits(x).to_le_bytes());
-                }
-                out
+        let mut data = Vec::with_capacity(self.encoded_size_hint(xs.len()));
+        self.compress_append(xs, &mut data);
+        CompressedPayload { scheme: self.scheme, n: xs.len(), data }
+    }
+
+    fn encoded_size_hint(&self, n: usize) -> usize {
+        match self.scheme {
+            Compression::None => n * 4,
+            Compression::Fp16 => n * 2,
+            Compression::Int8 => n + n.div_ceil(INT8_CHUNK) * 8,
+            Compression::TopK { ratio } | Compression::RandK { ratio } => {
+                4 + k_of(n, ratio) * 8
             }
-            Compression::Int8 => int8_encode(xs, &mut self.rng),
+        }
+    }
+
+    /// Append the compressed image of `xs` to `out` — the zero-copy entry
+    /// point the transport pipeline uses to build its frame in place.
+    /// Writes directly into the output buffer (no intermediate index or
+    /// value vectors) and parallelizes per block. Returns the number of
+    /// bytes appended.
+    pub fn compress_append(&mut self, xs: &[f32], out: &mut Vec<u8>) -> usize {
+        let start = out.len();
+        match self.scheme {
+            Compression::None => {
+                out.resize(start + xs.len() * 4, 0);
+                f32s_to_le_into(xs, &mut out[start..]);
+            }
+            Compression::Fp16 => {
+                out.resize(start + xs.len() * 2, 0);
+                let dst = &mut out[start..];
+                let items: Vec<(&mut [u8], &[f32])> = dst
+                    .chunks_mut(par::BLOCK * 2)
+                    .zip(xs.chunks(par::BLOCK))
+                    .collect();
+                par::run_items_auto(xs.len(), items, |(d, s)| {
+                    for (db, &x) in d.chunks_exact_mut(2).zip(s) {
+                        db.copy_from_slice(&f32_to_f16_bits(x).to_le_bytes());
+                    }
+                });
+            }
+            Compression::Int8 => int8_append(xs, &mut self.rng, out),
             Compression::TopK { ratio } => {
                 let k = k_of(xs.len(), ratio);
-                let idx = top_k_indices(xs, k);
-                sparse_encode(xs, &idx, 1.0)
+                top_k_into(xs, k, &mut self.scratch.idx);
+                sparse_append(xs, &self.scratch.idx, 1.0, out);
             }
             Compression::RandK { ratio } => {
                 let k = k_of(xs.len(), ratio);
-                let idx = self.rng.sample_indices(xs.len(), k);
+                sample_indices_into(&mut self.rng, xs.len(), k, &mut self.scratch.idx);
                 // unbiased: scale kept coords by n/k
                 let scale = xs.len() as f32 / k.max(1) as f32;
-                sparse_encode(xs, &idx, scale)
+                sparse_append(xs, &self.scratch.idx, scale, out);
             }
-        };
-        CompressedPayload { scheme: self.scheme, n: xs.len(), data }
+        }
+        out.len() - start
     }
 
     /// Decompress back to a dense vector of length `payload.n`.
     pub fn decompress(payload: &CompressedPayload) -> Result<Vec<f32>> {
-        let n = payload.n;
-        match payload.scheme {
+        let mut out = vec![0.0f32; payload.n];
+        Self::decompress_into(payload.scheme, &payload.data, &mut out)?;
+        Ok(out)
+    }
+
+    /// Decompress raw payload bytes into a caller-sized buffer
+    /// (`out.len()` is the element count) — the transport pipeline's
+    /// allocation-free entry point. Parallel for the dense codecs.
+    pub fn decompress_into(
+        scheme: Compression,
+        data: &[u8],
+        out: &mut [f32],
+    ) -> Result<()> {
+        let n = out.len();
+        match scheme {
             Compression::None => {
-                let xs = le_to_f32s(&payload.data)
-                    .ok_or_else(|| anyhow::anyhow!("ragged f32 payload"))?;
-                if xs.len() != n {
-                    bail!("dense payload length {} != {}", xs.len(), n);
+                if data.len() != n * 4 {
+                    bail!(
+                        "dense payload length {} bytes != {} elems",
+                        data.len(),
+                        n
+                    );
                 }
-                Ok(xs)
+                le_to_f32s_into(data, out).expect("length checked");
             }
             Compression::Fp16 => {
-                if payload.data.len() != n * 2 {
+                if data.len() != n * 2 {
                     bail!("fp16 payload length mismatch");
                 }
-                Ok(payload
-                    .data
-                    .chunks_exact(2)
-                    .map(|c| f16_bits_to_f32(u16::from_le_bytes([c[0], c[1]])))
-                    .collect())
+                let items: Vec<(&mut [f32], &[u8])> = out
+                    .chunks_mut(par::BLOCK)
+                    .zip(data.chunks(par::BLOCK * 2))
+                    .collect();
+                par::run_items_auto(n, items, |(d, s)| {
+                    for (x, c) in d.iter_mut().zip(s.chunks_exact(2)) {
+                        *x = f16_bits_to_f32(u16::from_le_bytes([c[0], c[1]]));
+                    }
+                });
             }
-            Compression::Int8 => int8_decode(&payload.data, n),
+            Compression::Int8 => int8_decode_into(data, out)?,
             Compression::TopK { .. } | Compression::RandK { .. } => {
-                sparse_decode(&payload.data, n)
+                sparse_decode_into(data, out)?;
             }
         }
+        Ok(())
     }
 
     /// Compression ratio estimate (payload bytes / dense bytes).
@@ -155,35 +240,67 @@ impl Compressor {
 }
 
 fn k_of(n: usize, ratio: f64) -> usize {
+    if n == 0 {
+        return 0; // empty leaf: nothing to keep (clamp(1, 0) would panic)
+    }
     ((n as f64 * ratio).round() as usize).clamp(1, n)
 }
 
-/// Indices of the k largest |x| (O(n) select via partial sort of a copy).
-fn top_k_indices(xs: &[f32], k: usize) -> Vec<usize> {
-    let mut idx: Vec<usize> = (0..xs.len()).collect();
+/// Fill `idx` with the k largest-|x| indices (O(n) select, scratch-reused
+/// across rounds — no per-call allocation once warm).
+fn top_k_into(xs: &[f32], k: usize, idx: &mut Vec<u32>) {
+    idx.clear();
+    idx.extend(0..xs.len() as u32);
     if k < xs.len() {
         idx.select_nth_unstable_by(k - 1, |&a, &b| {
-            xs[b].abs().partial_cmp(&xs[a].abs()).unwrap()
+            xs[b as usize].abs().partial_cmp(&xs[a as usize].abs()).unwrap()
         });
         idx.truncate(k);
     }
-    idx
 }
 
-/// layout: [k u32 count][k u32 indices][k f32 values]
-fn sparse_encode(xs: &[f32], idx: &[usize], scale: f32) -> Vec<u8> {
-    let mut out = Vec::with_capacity(4 + idx.len() * 8);
-    out.extend_from_slice(&(idx.len() as u32).to_le_bytes());
-    out.extend_from_slice(&u32s_to_le(
-        &idx.iter().map(|&i| i as u32).collect::<Vec<_>>(),
-    ));
-    out.extend_from_slice(&f32s_to_le(
-        &idx.iter().map(|&i| xs[i] * scale).collect::<Vec<_>>(),
-    ));
-    out
+/// Partial Fisher–Yates into scratch: same draw sequence as
+/// `Pcg64::sample_indices` (k draws of `below(n-i)`), no allocation once
+/// the permutation buffer is warm.
+fn sample_indices_into(rng: &mut Pcg64, n: usize, k: usize, idx: &mut Vec<u32>) {
+    assert!(k <= n);
+    idx.clear();
+    idx.extend(0..n as u32);
+    for i in 0..k {
+        let j = i + rng.below((n - i) as u64) as usize;
+        idx.swap(i, j);
+    }
+    idx.truncate(k);
 }
 
-fn sparse_decode(data: &[u8], n: usize) -> Result<Vec<f32>> {
+/// layout: [k u32 count][k u32 indices][k f32 values] — written straight
+/// into `out`; the index/value gather is block-parallel.
+fn sparse_append(xs: &[f32], idx: &[u32], scale: f32, out: &mut Vec<u8>) {
+    let k = idx.len();
+    let start = out.len();
+    out.resize(start + 4 + k * 8, 0);
+    let (cnt, rest) = out[start..].split_at_mut(4);
+    cnt.copy_from_slice(&(k as u32).to_le_bytes());
+    let (ib, vb) = rest.split_at_mut(k * 4);
+    let items: Vec<((&[u32], &mut [u8]), &mut [u8])> = idx
+        .chunks(par::BLOCK)
+        .zip(ib.chunks_mut(par::BLOCK * 4))
+        .zip(vb.chunks_mut(par::BLOCK * 4))
+        .collect();
+    par::run_items_auto(k, items, |((is, ibc), vbc)| {
+        for ((&i, i4), v4) in is
+            .iter()
+            .zip(ibc.chunks_exact_mut(4))
+            .zip(vbc.chunks_exact_mut(4))
+        {
+            i4.copy_from_slice(&i.to_le_bytes());
+            v4.copy_from_slice(&(xs[i as usize] * scale).to_le_bytes());
+        }
+    });
+}
+
+fn sparse_decode_into(data: &[u8], out: &mut [f32]) -> Result<()> {
+    let n = out.len();
     if data.len() < 4 {
         bail!("sparse payload too short");
     }
@@ -192,83 +309,97 @@ fn sparse_decode(data: &[u8], n: usize) -> Result<Vec<f32>> {
     if data.len() != want {
         bail!("sparse payload length {} != {}", data.len(), want);
     }
-    let idx = le_to_u32s(&data[4..4 + 4 * k]).unwrap();
-    let vals = le_to_f32s(&data[4 + 4 * k..]).unwrap();
-    let mut out = vec![0.0f32; n];
-    for (&i, &v) in idx.iter().zip(&vals) {
-        let i = i as usize;
+    out.fill(0.0);
+    let ib = &data[4..4 + 4 * k];
+    let vb = &data[4 + 4 * k..];
+    for (i4, v4) in ib.chunks_exact(4).zip(vb.chunks_exact(4)) {
+        let i = u32::from_le_bytes([i4[0], i4[1], i4[2], i4[3]]) as usize;
         if i >= n {
             bail!("sparse index {i} out of range {n}");
         }
-        out[i] = v;
+        out[i] = f32::from_le_bytes([v4[0], v4[1], v4[2], v4[3]]);
     }
-    Ok(out)
+    Ok(())
 }
 
 /// int8: per-chunk [min f32][scale f32][n_chunk u8 codes] with stochastic
 /// rounding so quantization is unbiased in expectation.
-fn int8_encode(xs: &[f32], rng: &mut Pcg64) -> Vec<u8> {
-    let mut out = Vec::with_capacity(xs.len() + xs.len().div_ceil(INT8_CHUNK) * 8);
-    for chunk in xs.chunks(INT8_CHUNK) {
-        let lo = chunk.iter().cloned().fold(f32::INFINITY, f32::min);
-        let hi = chunk.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-        let scale = if hi > lo { (hi - lo) / 255.0 } else { 0.0 };
-        out.extend_from_slice(&lo.to_le_bytes());
-        out.extend_from_slice(&scale.to_le_bytes());
-        if scale == 0.0 {
-            out.resize(out.len() + chunk.len(), 0);
-            continue;
-        }
-        // perf (EXPERIMENTS.md §Perf): hoist 1/scale, draw two random
-        // lanes per PRNG step, keep the loop branch-light
-        let inv_scale = 1.0 / scale;
-        let mut i = 0;
-        while i < chunk.len() {
-            let r = rng.next_u64();
-            let r0 = ((r >> 40) as u32) as f32 * (1.0 / (1u32 << 24) as f32);
-            let r1 = (((r >> 8) & 0xff_ffff) as u32) as f32
-                * (1.0 / (1u32 << 24) as f32);
-            for (x, rnd) in chunk[i..chunk.len().min(i + 2)]
-                .iter()
-                .zip([r0, r1])
-            {
-                let exact = (x - lo) * inv_scale;
-                let base = exact.floor();
-                let code = base + f32::from(rnd < exact - base);
-                out.push(code.clamp(0.0, 255.0) as u8);
-            }
-            i += 2;
-        }
-    }
-    out
+///
+/// Chunks are encoded in parallel; each chunk's rounding stream is a
+/// `Pcg64` seeded from one serial draw of the compressor RNG, so the
+/// output is a pure function of the RNG state — identical for any thread
+/// count.
+fn int8_append(xs: &[f32], rng: &mut Pcg64, out: &mut Vec<u8>) {
+    let nchunks = xs.len().div_ceil(INT8_CHUNK);
+    let seeds: Vec<u64> = (0..nchunks).map(|_| rng.next_u64()).collect();
+    let start = out.len();
+    out.resize(start + xs.len() + nchunks * 8, 0);
+    let dst = &mut out[start..];
+    let items: Vec<((&[f32], &mut [u8]), &u64)> = xs
+        .chunks(INT8_CHUNK)
+        .zip(dst.chunks_mut(INT8_CHUNK + 8))
+        .zip(seeds.iter())
+        .collect();
+    par::run_items_auto(xs.len(), items, |((chunk, d), &seed)| {
+        int8_encode_chunk(chunk, seed, d);
+    });
 }
 
-fn int8_decode(data: &[u8], n: usize) -> Result<Vec<f32>> {
-    let mut out = Vec::with_capacity(n);
-    let mut pos = 0;
-    let mut left = n;
-    while left > 0 {
-        if data.len() < pos + 8 {
-            bail!("int8 payload truncated");
-        }
-        let lo = f32::from_le_bytes(data[pos..pos + 4].try_into().unwrap());
-        let scale =
-            f32::from_le_bytes(data[pos + 4..pos + 8].try_into().unwrap());
-        pos += 8;
-        let m = left.min(INT8_CHUNK);
-        if data.len() < pos + m {
-            bail!("int8 payload truncated");
-        }
-        for &b in &data[pos..pos + m] {
-            out.push(lo + scale * b as f32);
-        }
-        pos += m;
-        left -= m;
+fn int8_encode_chunk(chunk: &[f32], seed: u64, d: &mut [u8]) {
+    debug_assert_eq!(d.len(), chunk.len() + 8);
+    let lo = chunk.iter().cloned().fold(f32::INFINITY, f32::min);
+    let hi = chunk.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let scale = if hi > lo { (hi - lo) / 255.0 } else { 0.0 };
+    d[0..4].copy_from_slice(&lo.to_le_bytes());
+    d[4..8].copy_from_slice(&scale.to_le_bytes());
+    let codes = &mut d[8..];
+    if scale == 0.0 {
+        codes.fill(0);
+        return;
     }
-    if pos != data.len() {
-        bail!("int8 payload has {} trailing bytes", data.len() - pos);
+    let mut rng = Pcg64::new(seed, 0x1A7E8);
+    // perf (EXPERIMENTS.md §Perf): hoist 1/scale, draw two random
+    // lanes per PRNG step, keep the loop branch-light
+    let inv_scale = 1.0 / scale;
+    let mut i = 0;
+    while i < chunk.len() {
+        let r = rng.next_u64();
+        let r0 = ((r >> 40) as u32) as f32 * (1.0 / (1u32 << 24) as f32);
+        let r1 =
+            (((r >> 8) & 0xff_ffff) as u32) as f32 * (1.0 / (1u32 << 24) as f32);
+        for ((x, rnd), c) in chunk[i..chunk.len().min(i + 2)]
+            .iter()
+            .zip([r0, r1])
+            .zip(codes[i..].iter_mut())
+        {
+            let exact = (x - lo) * inv_scale;
+            let base = exact.floor();
+            let code = base + f32::from(rnd < exact - base);
+            *c = code.clamp(0.0, 255.0) as u8;
+        }
+        i += 2;
     }
-    Ok(out)
+}
+
+fn int8_decode_into(data: &[u8], out: &mut [f32]) -> Result<()> {
+    let n = out.len();
+    let nchunks = n.div_ceil(INT8_CHUNK);
+    let want = n + nchunks * 8;
+    if data.len() != want {
+        bail!("int8 payload length {} != {}", data.len(), want);
+    }
+    let items: Vec<(&[u8], &mut [f32])> = data
+        .chunks(INT8_CHUNK + 8)
+        .zip(out.chunks_mut(INT8_CHUNK))
+        .collect();
+    par::run_items_auto(n, items, |(d, o)| {
+        let lo = f32::from_le_bytes([d[0], d[1], d[2], d[3]]);
+        let scale = f32::from_le_bytes([d[4], d[5], d[6], d[7]]);
+        for (x, &b) in o.iter_mut().zip(&d[8..]) {
+            *x = lo + scale * b as f32;
+        }
+    });
+    Ok(())
 }
 
 // ---- f16 conversion (no `half` crate offline) -----------------------------
@@ -477,6 +608,97 @@ mod tests {
         let mut p2 = c2.compress(&xs);
         p2.data.push(0);
         assert!(Compressor::decompress(&p2).is_err());
+    }
+
+    #[test]
+    fn header_bytes_pinned_per_scheme() {
+        // the wire header is scheme tag (1) + element count (8), plus the
+        // ratio (8) for the parametrized sparse schemes
+        assert_eq!(Compression::None.header_bytes(), 9);
+        assert_eq!(Compression::Fp16.header_bytes(), 9);
+        assert_eq!(Compression::Int8.header_bytes(), 9);
+        assert_eq!(Compression::TopK { ratio: 0.1 }.header_bytes(), 17);
+        assert_eq!(Compression::RandK { ratio: 0.1 }.header_bytes(), 17);
+
+        let xs = sample(100, 11);
+        for scheme in [
+            Compression::None,
+            Compression::Fp16,
+            Compression::Int8,
+            Compression::TopK { ratio: 0.1 },
+            Compression::RandK { ratio: 0.1 },
+        ] {
+            let p = Compressor::new(scheme, 0).compress(&xs);
+            assert_eq!(
+                p.byte_len(),
+                p.data.len() as u64 + scheme.header_bytes(),
+                "{scheme:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn compress_append_writes_in_place_and_matches_compress() {
+        let xs1 = sample(5000, 21);
+        let xs2 = sample(301, 22);
+        for scheme in [
+            Compression::None,
+            Compression::Fp16,
+            Compression::Int8,
+            Compression::TopK { ratio: 0.02 },
+            Compression::RandK { ratio: 0.02 },
+        ] {
+            // twin compressors, same seed: one appends into a dirty shared
+            // buffer, one allocates per call — bytes must agree, and the
+            // scratch reuse across two different-length inputs must not
+            // change anything
+            let mut append = Compressor::new(scheme, 9);
+            let mut fresh = Compressor::new(scheme, 9);
+            let mut buf = vec![0xAAu8; 13];
+            let n1 = append.compress_append(&xs1, &mut buf);
+            let p1 = fresh.compress(&xs1);
+            assert_eq!(&buf[13..13 + n1], &p1.data[..], "{scheme:?}");
+            let n2 = append.compress_append(&xs2, &mut buf);
+            let p2 = fresh.compress(&xs2);
+            assert_eq!(&buf[13 + n1..13 + n1 + n2], &p2.data[..], "{scheme:?}");
+            assert!(buf[..13].iter().all(|&b| b == 0xAA), "prefix clobbered");
+
+            // decompress_into agrees with decompress
+            let mut out = vec![7.0f32; xs1.len()];
+            Compressor::decompress_into(scheme, &p1.data, &mut out).unwrap();
+            assert_eq!(out, Compressor::decompress(&p1).unwrap());
+        }
+    }
+
+    #[test]
+    fn sample_indices_into_matches_pcg64_sample_indices() {
+        // the scratch-based sampler must keep the exact draw sequence of
+        // Pcg64::sample_indices (RandK streams are pinned by experiments);
+        // this test ties the two implementations together
+        let mut r1 = Pcg64::new(5, 9);
+        let mut r2 = Pcg64::new(5, 9);
+        let reference = r1.sample_indices(100, 17);
+        let mut idx = Vec::new();
+        sample_indices_into(&mut r2, 100, 17, &mut idx);
+        let got: Vec<usize> = idx.iter().map(|&i| i as usize).collect();
+        assert_eq!(got, reference);
+        assert_eq!(r1.next_u64(), r2.next_u64()); // same post-state
+    }
+
+    #[test]
+    fn empty_input_roundtrips_all_schemes() {
+        for scheme in [
+            Compression::None,
+            Compression::Fp16,
+            Compression::Int8,
+            Compression::TopK { ratio: 0.1 },
+            Compression::RandK { ratio: 0.1 },
+        ] {
+            let mut c = Compressor::new(scheme, 0);
+            let p = c.compress(&[]);
+            assert_eq!(p.n, 0);
+            assert_eq!(Compressor::decompress(&p).unwrap(), Vec::<f32>::new());
+        }
     }
 
     #[test]

@@ -12,17 +12,26 @@
 use anyhow::Result;
 
 use crate::compress::codec::{CompressedPayload, Compressor};
+use crate::util::par;
 
-/// Per-worker compression state: the residual memory.
+/// Per-worker compression state: the residual memory plus round-persistent
+/// scratch (corrected/sent), so the steady-state round allocates nothing.
 #[derive(Clone, Debug)]
 pub struct ErrorFeedback {
     residual: Vec<f32>,
     enabled: bool,
+    corrected: Vec<f32>,
+    sent: Vec<f32>,
 }
 
 impl ErrorFeedback {
     pub fn new(n: usize, enabled: bool) -> ErrorFeedback {
-        ErrorFeedback { residual: vec![0.0; n], enabled }
+        ErrorFeedback {
+            residual: vec![0.0; n],
+            enabled,
+            corrected: Vec::new(),
+            sent: Vec::new(),
+        }
     }
 
     /// Compress `update` with memory; returns the payload to transmit.
@@ -33,21 +42,62 @@ impl ErrorFeedback {
         update: &[f32],
         compressor: &mut Compressor,
     ) -> Result<CompressedPayload> {
-        assert_eq!(update.len(), self.residual.len(), "EF size mismatch");
+        let mut data = Vec::new();
+        self.compress_append(update, compressor, &mut data)?;
+        Ok(CompressedPayload {
+            scheme: compressor.scheme,
+            n: update.len(),
+            data,
+        })
+    }
+
+    /// [`ErrorFeedback::compress`] writing straight into the transport's
+    /// frame buffer (no intermediate payload vector). Returns the bytes
+    /// appended.
+    pub fn compress_append(
+        &mut self,
+        update: &[f32],
+        compressor: &mut Compressor,
+        out: &mut Vec<u8>,
+    ) -> Result<usize> {
         if !self.enabled {
-            return Ok(compressor.compress(update));
+            return Ok(compressor.compress_append(update, out));
         }
-        let corrected: Vec<f32> = update
-            .iter()
-            .zip(&self.residual)
-            .map(|(u, e)| u + e)
+        assert_eq!(update.len(), self.residual.len(), "EF size mismatch");
+        // corrected = update + residual (block-parallel into scratch)
+        self.corrected.resize(update.len(), 0.0);
+        let items: Vec<((&mut [f32], &[f32]), &[f32])> = self
+            .corrected
+            .chunks_mut(par::BLOCK)
+            .zip(update.chunks(par::BLOCK))
+            .zip(self.residual.chunks(par::BLOCK))
             .collect();
-        let payload = compressor.compress(&corrected);
-        let sent = Compressor::decompress(&payload)?;
-        for ((e, c), s) in self.residual.iter_mut().zip(&corrected).zip(&sent) {
-            *e = c - s;
-        }
-        Ok(payload)
+        par::run_items_auto(update.len(), items, |((c, u), e)| {
+            for ((c, &u), &e) in c.iter_mut().zip(u).zip(e) {
+                *c = u + e;
+            }
+        });
+
+        let start = out.len();
+        let nbytes = compressor.compress_append(&self.corrected, out);
+
+        // what the server will see, decoded from the appended bytes
+        self.sent.resize(update.len(), 0.0);
+        Compressor::decompress_into(compressor.scheme, &out[start..], &mut self.sent)?;
+
+        // e' = corrected - sent (block-parallel)
+        let items: Vec<((&mut [f32], &[f32]), &[f32])> = self
+            .residual
+            .chunks_mut(par::BLOCK)
+            .zip(self.corrected.chunks(par::BLOCK))
+            .zip(self.sent.chunks(par::BLOCK))
+            .collect();
+        par::run_items_auto(update.len(), items, |((e, c), s)| {
+            for ((e, &c), &s) in e.iter_mut().zip(c).zip(s) {
+                *e = c - s;
+            }
+        });
+        Ok(nbytes)
     }
 
     /// Current residual L2 norm (diagnostics).

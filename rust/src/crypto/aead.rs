@@ -4,74 +4,58 @@
 //! AEAD crate, so we compose the classic EtM construction: unique nonce per
 //! seal, MAC over nonce || ciphertext, constant-time tag comparison via the
 //! `subtle`-backed `hmac::verify_slice`.)
+//!
+//! The CTR keystream is generated in parallel: byte i of the stream
+//! depends only on (key, iv, i), so the buffer is cut into lanes whose
+//! counters start at the lane's absolute block offset — byte-identical to
+//! the serial stream for any thread count. `seal_in_place`/`open_in_place`
+//! operate on the transport's round-persistent buffer with no
+//! plaintext/ciphertext copies.
 
 use anyhow::{bail, Result};
 use hmac::{Hmac, Mac};
 use sha2::{Digest, Sha256};
 
-type Aes128Ctr = ctr_impl::Ctr128BE<aes::Aes128>;
+use aes::cipher::KeyInit;
+
 type HmacSha256 = Hmac<Sha256>;
 
 mod ctr_impl {
-    //! Minimal CTR mode over the block cipher (the `ctr` crate is not
-    //! vendored). Big-endian 128-bit counter, as in NIST SP 800-38A.
-    use aes::cipher::{
-        generic_array::GenericArray, BlockEncrypt, KeyInit, KeySizeUser,
-    };
+    //! Minimal CTR mode over AES-128 (the `ctr` crate is not vendored).
+    //! Big-endian 128-bit counter, as in NIST SP 800-38A, split across
+    //! threads by counter offset.
+    use aes::cipher::{generic_array::GenericArray, BlockEncrypt};
 
-    pub struct Ctr128BE<C: BlockEncrypt + KeyInit> {
-        cipher: C,
-        counter: u128,
-        keystream: [u8; 16],
-        used: usize,
-    }
+    use crate::util::par;
 
-    impl<C: BlockEncrypt + KeyInit> Ctr128BE<C> {
-        fn refill(&mut self) {
-            let mut block = GenericArray::clone_from_slice(
-                &self.counter.to_be_bytes(),
-            );
-            self.cipher.encrypt_block(&mut block);
-            self.keystream.copy_from_slice(&block);
-            self.counter = self.counter.wrapping_add(1);
-            self.used = 0;
+    /// Bytes per parallel work lane — a multiple of the 16-byte block, so
+    /// every lane starts on a block boundary.
+    const LANE_BYTES: usize = 1 << 14;
+
+    pub(super) fn apply_ctr(cipher: &aes::Aes128, iv: &[u8; 16], data: &mut [u8]) {
+        let base = u128::from_be_bytes(*iv);
+        if data.len() <= LANE_BYTES || par::current_threads() == 1 {
+            xor_stream(cipher, base, data);
+            return;
         }
+        let items: Vec<(usize, &mut [u8])> =
+            data.chunks_mut(LANE_BYTES).enumerate().collect();
+        par::run_items(items, |(lane, chunk)| {
+            let blocks_before = (lane * (LANE_BYTES / 16)) as u128;
+            xor_stream(cipher, base.wrapping_add(blocks_before), chunk);
+        });
     }
 
-    impl<C: BlockEncrypt + KeyInit + KeySizeUser> super::KeyIvInitCompat for Ctr128BE<C> {
-        fn new_compat(key: &[u8], iv: &[u8; 16]) -> Self {
-            let cipher = C::new_from_slice(key).expect("key size");
-            let mut s = Ctr128BE {
-                cipher,
-                counter: u128::from_be_bytes(*iv),
-                keystream: [0u8; 16],
-                used: 16,
-            };
-            s.refill();
-            s.used = 0;
-            s
-        }
-    }
-
-    impl<C: BlockEncrypt + KeyInit> super::StreamCipherCompat for Ctr128BE<C> {
-        fn apply_keystream_compat(&mut self, data: &mut [u8]) {
-            for b in data {
-                if self.used == 16 {
-                    self.refill();
-                }
-                *b ^= self.keystream[self.used];
-                self.used += 1;
+    fn xor_stream(cipher: &aes::Aes128, mut counter: u128, data: &mut [u8]) {
+        for chunk in data.chunks_mut(16) {
+            let mut block = GenericArray::clone_from_slice(&counter.to_be_bytes());
+            cipher.encrypt_block(&mut block);
+            for (b, k) in chunk.iter_mut().zip(block.iter()) {
+                *b ^= k;
             }
+            counter = counter.wrapping_add(1);
         }
     }
-}
-
-/// Compat traits so the impl reads like the `ctr` crate's API.
-trait KeyIvInitCompat {
-    fn new_compat(key: &[u8], iv: &[u8; 16]) -> Self;
-}
-trait StreamCipherCompat {
-    fn apply_keystream_compat(&mut self, data: &mut [u8]);
 }
 
 /// Per-pair transport key material (enc key + mac key).
@@ -126,37 +110,59 @@ impl SealedPayload {
 
 /// Encrypt-then-MAC. The nonce is seq-derived — never reused per key.
 pub fn seal(key: &mut TransportKey, plaintext: &[u8]) -> SealedPayload {
+    let mut ciphertext = plaintext.to_vec();
+    let (nonce, tag) = seal_in_place(key, &mut ciphertext);
+    SealedPayload { nonce, ciphertext, tag }
+}
+
+/// Encrypt-then-MAC in place over a caller-owned buffer (the transport's
+/// round-persistent send buffer) — no plaintext/ciphertext copies.
+/// Returns (nonce, tag); the buffer holds the ciphertext afterwards.
+pub fn seal_in_place(key: &mut TransportKey, buf: &mut [u8]) -> ([u8; 16], [u8; 32]) {
     let mut nonce = [0u8; 16];
     nonce[..8].copy_from_slice(&key.seq.to_be_bytes());
     key.seq += 1;
 
-    let mut ciphertext = plaintext.to_vec();
-    let mut ctr = <Aes128Ctr as KeyIvInitCompat>::new_compat(&key.enc, &nonce);
-    StreamCipherCompat::apply_keystream_compat(&mut ctr, &mut ciphertext);
-
-    let mut mac = <HmacSha256 as Mac>::new_from_slice(&key.mac).unwrap();
-    mac.update(&nonce);
-    mac.update(&ciphertext);
-    let tag_bytes = mac.finalize().into_bytes();
-    let mut tag = [0u8; 32];
-    tag.copy_from_slice(&tag_bytes);
-
-    SealedPayload { nonce, ciphertext, tag }
+    let cipher = aes::Aes128::new_from_slice(&key.enc).expect("key size");
+    ctr_impl::apply_ctr(&cipher, &nonce, buf);
+    let tag = mac_tag(&key.mac, &nonce, buf);
+    (nonce, tag)
 }
 
 /// Verify + decrypt. Fails on any tampering.
 pub fn open(key: &TransportKey, sealed: &SealedPayload) -> Result<Vec<u8>> {
+    let mut plaintext = sealed.ciphertext.clone();
+    open_in_place(key, &sealed.nonce, &sealed.tag, &mut plaintext)?;
+    Ok(plaintext)
+}
+
+/// Verify + decrypt in place (CTR is self-inverse). On MAC failure the
+/// buffer is left untouched (still ciphertext).
+pub fn open_in_place(
+    key: &TransportKey,
+    nonce: &[u8; 16],
+    tag: &[u8; 32],
+    buf: &mut [u8],
+) -> Result<()> {
     let mut mac = <HmacSha256 as Mac>::new_from_slice(&key.mac).unwrap();
-    mac.update(&sealed.nonce);
-    mac.update(&sealed.ciphertext);
-    if mac.verify_slice(&sealed.tag).is_err() {
+    mac.update(nonce);
+    mac.update(buf);
+    if mac.verify_slice(tag).is_err() {
         bail!("MAC verification failed: payload tampered or wrong key");
     }
-    let mut plaintext = sealed.ciphertext.clone();
-    let mut ctr =
-        <Aes128Ctr as KeyIvInitCompat>::new_compat(&key.enc, &sealed.nonce);
-    StreamCipherCompat::apply_keystream_compat(&mut ctr, &mut plaintext);
-    Ok(plaintext)
+    let cipher = aes::Aes128::new_from_slice(&key.enc).expect("key size");
+    ctr_impl::apply_ctr(&cipher, nonce, buf);
+    Ok(())
+}
+
+fn mac_tag(mac_key: &[u8; 32], nonce: &[u8; 16], ciphertext: &[u8]) -> [u8; 32] {
+    let mut mac = <HmacSha256 as Mac>::new_from_slice(mac_key).unwrap();
+    mac.update(nonce);
+    mac.update(ciphertext);
+    let tag_bytes = mac.finalize().into_bytes();
+    let mut tag = [0u8; 32];
+    tag.copy_from_slice(&tag_bytes);
+    tag
 }
 
 #[cfg(test)]
@@ -226,6 +232,46 @@ mod tests {
         let mut k = TransportKey::derive(b"s", "c");
         let sealed = seal(&mut k, b"");
         assert_eq!(open(&k, &sealed).unwrap(), Vec::<u8>::new());
+    }
+
+    #[test]
+    fn parallel_keystream_matches_serial() {
+        use crate::util::par;
+        // > LANE_BYTES so the parallel path engages; odd tail too
+        let msg: Vec<u8> = (0..200_003).map(|i| (i * 31 % 251) as u8).collect();
+        let s = par::with_threads(1, || {
+            let mut k = TransportKey::derive(b"x", "c");
+            seal(&mut k, &msg)
+        });
+        let p = par::with_threads(8, || {
+            let mut k = TransportKey::derive(b"x", "c");
+            seal(&mut k, &msg)
+        });
+        assert_eq!(s.nonce, p.nonce);
+        assert_eq!(s.ciphertext, p.ciphertext);
+        assert_eq!(s.tag, p.tag);
+        assert_eq!(open(&TransportKey::derive(b"x", "c"), &p).unwrap(), msg);
+    }
+
+    #[test]
+    fn in_place_roundtrip_matches_owned_api() {
+        let mut k1 = TransportKey::derive(b"secret", "ctx");
+        let mut k2 = TransportKey::derive(b"secret", "ctx");
+        let msg = b"zero-copy pipeline payload".to_vec();
+        let sealed = seal(&mut k1, &msg);
+        let mut buf = msg.clone();
+        let (nonce, tag) = seal_in_place(&mut k2, &mut buf);
+        assert_eq!(nonce, sealed.nonce);
+        assert_eq!(buf, sealed.ciphertext);
+        assert_eq!(tag, sealed.tag);
+        open_in_place(&k2, &nonce, &tag, &mut buf).unwrap();
+        assert_eq!(buf, msg);
+        // tamper: buffer untouched on failure
+        let mut bad = sealed.ciphertext.clone();
+        bad[3] ^= 1;
+        let before = bad.clone();
+        assert!(open_in_place(&k2, &nonce, &tag, &mut bad).is_err());
+        assert_eq!(bad, before);
     }
 
     #[test]

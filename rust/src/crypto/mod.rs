@@ -18,5 +18,8 @@
 mod aead;
 mod secure_agg;
 
-pub use aead::{open, seal, SealedPayload, TransportKey, SEAL_OVERHEAD_BYTES};
+pub use aead::{
+    open, open_in_place, seal, seal_in_place, SealedPayload, TransportKey,
+    SEAL_OVERHEAD_BYTES,
+};
 pub use secure_agg::{he_cost, HeCost, MaskedUpdate, SecureAggregator};

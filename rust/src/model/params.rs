@@ -4,12 +4,18 @@
 //! optimizer, compression and DP all operate on this type. Leaves are kept
 //! as separate `Vec<f32>`s in manifest order so they can be handed to the
 //! PJRT executable without re-slicing.
+//!
+//! The linear-algebra kernels (`axpy`/`axpy_many`/`scale`/`sub`/`l2_norm`/
+//! `to_flat`) are block-parallel over [`par::BLOCK`]-element chunks; block
+//! boundaries are fixed, so results are bit-identical for any thread count
+//! (EXPERIMENTS.md §Perf).
 
 use crate::model::manifest::{InitKind, Manifest};
+use crate::util::par;
 use crate::util::rng::Pcg64;
 
 /// Flat model parameters (or gradients / update deltas — same layout).
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Debug, PartialEq, Default)]
 pub struct ParamSet {
     pub leaves: Vec<Vec<f32>>,
 }
@@ -58,67 +64,182 @@ impl ParamSet {
         (self.numel() * 4) as u64
     }
 
-    /// self += alpha * other (axpy across all leaves).
+    /// self += alpha * other (axpy across all leaves, block-parallel).
     pub fn axpy(&mut self, alpha: f32, other: &ParamSet) {
-        assert_eq!(self.leaves.len(), other.leaves.len(), "leaf count mismatch");
-        for (a, b) in self.leaves.iter_mut().zip(&other.leaves) {
-            assert_eq!(a.len(), b.len(), "leaf shape mismatch");
-            for (x, y) in a.iter_mut().zip(b) {
-                *x += alpha * y;
-            }
-        }
+        self.axpy_many(&[(alpha, other)]);
     }
 
-    /// self *= alpha.
-    pub fn scale(&mut self, alpha: f32) {
-        for l in &mut self.leaves {
-            for x in l.iter_mut() {
-                *x *= alpha;
+    /// self += Σ_k alpha_k · other_k in one pass: each destination block is
+    /// read and written once however many updates are applied (the
+    /// aggregation inner loop). Per element the terms are added in order,
+    /// so the result is bit-identical to the equivalent sequence of
+    /// [`ParamSet::axpy`] calls.
+    pub fn axpy_many(&mut self, terms: &[(f32, &ParamSet)]) {
+        for (_, o) in terms {
+            assert_eq!(self.leaves.len(), o.leaves.len(), "leaf count mismatch");
+        }
+        let total = self.numel() * terms.len().max(1);
+        if total <= par::PAR_THRESHOLD || par::current_threads() == 1 {
+            // allocation-free serial path (the per-training-step case);
+            // per element the terms apply in the same order as the block
+            // path, so both are bit-identical
+            for (li, a) in self.leaves.iter_mut().enumerate() {
+                for &(alpha, o) in terms {
+                    let src = &o.leaves[li];
+                    assert_eq!(a.len(), src.len(), "leaf shape mismatch");
+                    for (x, y) in a.iter_mut().zip(src) {
+                        *x += alpha * y;
+                    }
+                }
+            }
+            return;
+        }
+        let mut items: Vec<(usize, usize, &mut [f32])> = Vec::new();
+        for (li, a) in self.leaves.iter_mut().enumerate() {
+            for (_, o) in terms {
+                assert_eq!(a.len(), o.leaves[li].len(), "leaf shape mismatch");
+            }
+            for (bi, c) in a.chunks_mut(par::BLOCK).enumerate() {
+                items.push((li, bi * par::BLOCK, c));
             }
         }
+        par::run_items_auto(total, items, |(li, off, chunk)| {
+            for &(alpha, o) in terms {
+                let src = &o.leaves[li][off..off + chunk.len()];
+                for (x, y) in chunk.iter_mut().zip(src) {
+                    *x += alpha * y;
+                }
+            }
+        });
+    }
+
+    /// self *= alpha (block-parallel).
+    pub fn scale(&mut self, alpha: f32) {
+        let total = self.numel();
+        let mut items: Vec<&mut [f32]> = Vec::new();
+        for l in &mut self.leaves {
+            for c in l.chunks_mut(par::BLOCK) {
+                items.push(c);
+            }
+        }
+        par::run_items_auto(total, items, |chunk| {
+            for x in chunk.iter_mut() {
+                *x *= alpha;
+            }
+        });
     }
 
     /// self = 0.
     pub fn zero(&mut self) {
+        let total = self.numel();
+        let mut items: Vec<&mut [f32]> = Vec::new();
         for l in &mut self.leaves {
-            l.fill(0.0);
+            for c in l.chunks_mut(par::BLOCK) {
+                items.push(c);
+            }
         }
+        par::run_items_auto(total, items, |chunk| chunk.fill(0.0));
     }
 
     /// Element-wise difference: self - other (the "update delta" a worker
-    /// sends in parameter-aggregation modes).
+    /// sends in parameter-aggregation modes). Block-parallel.
     pub fn sub(&self, other: &ParamSet) -> ParamSet {
         assert_eq!(self.leaves.len(), other.leaves.len());
-        ParamSet {
-            leaves: self
-                .leaves
-                .iter()
-                .zip(&other.leaves)
-                .map(|(a, b)| {
-                    assert_eq!(a.len(), b.len());
-                    a.iter().zip(b).map(|(x, y)| x - y).collect()
-                })
-                .collect(),
+        let mut out = ParamSet {
+            leaves: self.leaves.iter().map(|l| vec![0.0; l.len()]).collect(),
+        };
+        let total = self.numel();
+        let mut items: Vec<(&mut [f32], &[f32], &[f32])> = Vec::new();
+        for ((o, a), b) in
+            out.leaves.iter_mut().zip(&self.leaves).zip(&other.leaves)
+        {
+            assert_eq!(a.len(), b.len());
+            for ((co, ca), cb) in o
+                .chunks_mut(par::BLOCK)
+                .zip(a.chunks(par::BLOCK))
+                .zip(b.chunks(par::BLOCK))
+            {
+                items.push((co, ca, cb));
+            }
         }
+        par::run_items_auto(total, items, |(co, ca, cb)| {
+            for ((o, x), y) in co.iter_mut().zip(ca).zip(cb) {
+                *o = x - y;
+            }
+        });
+        out
     }
 
     /// Global L2 norm over all leaves.
+    ///
+    /// Summation is blocked: per-[`par::BLOCK`] partial sums in f64,
+    /// combined in (leaf, block) order — deterministic for any thread
+    /// count.
     pub fn l2_norm(&self) -> f64 {
-        self.leaves
+        let total = self.numel();
+        let nblocks: usize = self
+            .leaves
             .iter()
-            .flat_map(|l| l.iter())
-            .map(|&x| (x as f64) * (x as f64))
-            .sum::<f64>()
-            .sqrt()
+            .map(|l| l.len().div_ceil(par::BLOCK))
+            .sum();
+        let mut partials = vec![0.0f64; nblocks];
+        let items: Vec<(&[f32], &mut f64)> = self
+            .leaves
+            .iter()
+            .flat_map(|l| l.chunks(par::BLOCK))
+            .zip(partials.iter_mut())
+            .collect();
+        par::run_items_auto(total, items, |(c, p)| {
+            *p = c.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>();
+        });
+        partials.iter().sum::<f64>().sqrt()
     }
 
     /// Flatten to one contiguous vector (transport payload layout).
     pub fn to_flat(&self) -> Vec<f32> {
-        let mut out = Vec::with_capacity(self.numel());
-        for l in &self.leaves {
-            out.extend_from_slice(l);
-        }
+        let mut out = vec![0.0f32; self.numel()];
+        self.write_flat(&mut out);
         out
+    }
+
+    /// Flatten into a caller-owned buffer (the transport's round-persistent
+    /// buffer): parallel copy, zero allocation.
+    pub fn write_flat(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.numel(), "flat buffer size mismatch");
+        let total = out.len();
+        let mut items: Vec<(&mut [f32], &[f32])> = Vec::new();
+        let mut rest = out;
+        for l in &self.leaves {
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(l.len());
+            for (d, s) in head.chunks_mut(par::BLOCK).zip(l.chunks(par::BLOCK)) {
+                items.push((d, s));
+            }
+            rest = tail;
+        }
+        par::run_items_auto(total, items, |(d, s)| d.copy_from_slice(s));
+    }
+
+    /// Structure-preserving copy that reuses this set's allocations when
+    /// the shapes already match (the worker's per-round scratch path).
+    pub fn copy_from(&mut self, other: &ParamSet) {
+        let same_shape = self.leaves.len() == other.leaves.len()
+            && self
+                .leaves
+                .iter()
+                .zip(&other.leaves)
+                .all(|(a, b)| a.len() == b.len());
+        if !same_shape {
+            self.leaves = other.leaves.clone();
+            return;
+        }
+        let total = self.numel();
+        let mut items: Vec<(&mut [f32], &[f32])> = Vec::new();
+        for (a, b) in self.leaves.iter_mut().zip(&other.leaves) {
+            for (d, s) in a.chunks_mut(par::BLOCK).zip(b.chunks(par::BLOCK)) {
+                items.push((d, s));
+            }
+        }
+        par::run_items_auto(total, items, |(d, s)| d.copy_from_slice(s));
     }
 
     /// Rebuild from a flat vector given the leaf sizes of `like`.
@@ -230,5 +351,49 @@ mod tests {
     fn byte_size() {
         let m = manifest();
         assert_eq!(ParamSet::zeros_like(&m).byte_size(), 14 * 4);
+    }
+
+    #[test]
+    fn axpy_many_matches_sequential_axpy() {
+        let m = manifest();
+        let u1 = ParamSet::init(&m, 4);
+        let u2 = ParamSet::init(&m, 5);
+        let mut seq = ParamSet::init(&m, 6);
+        let mut fused = seq.clone();
+        seq.axpy(0.25, &u1);
+        seq.axpy(-1.5, &u2);
+        fused.axpy_many(&[(0.25, &u1), (-1.5, &u2)]);
+        assert_eq!(seq, fused); // bit-identical, not just close
+    }
+
+    #[test]
+    fn write_flat_and_copy_from() {
+        let m = manifest();
+        let p = ParamSet::init(&m, 7);
+        let mut buf = vec![9.0f32; p.numel()];
+        p.write_flat(&mut buf);
+        assert_eq!(buf, p.to_flat());
+
+        // matching shapes: reuses allocations; mismatched: reshapes
+        let mut q = ParamSet::zeros_like(&m);
+        q.copy_from(&p);
+        assert_eq!(q, p);
+        let mut r = ParamSet::default();
+        r.copy_from(&p);
+        assert_eq!(r, p);
+    }
+
+    #[test]
+    fn empty_and_degenerate_shapes() {
+        let empty = ParamSet::default();
+        assert_eq!(empty.numel(), 0);
+        assert_eq!(empty.l2_norm(), 0.0);
+        assert_eq!(empty.to_flat(), Vec::<f32>::new());
+
+        let mut odd = ParamSet { leaves: vec![vec![], vec![2.0], vec![]] };
+        let one = odd.clone();
+        odd.axpy(2.0, &one);
+        assert_eq!(odd.leaves[1][0], 6.0);
+        assert_eq!(one.sub(&one).l2_norm(), 0.0);
     }
 }

@@ -1,0 +1,75 @@
+//! API-compatible stand-in for the PJRT runtime when the `pjrt` feature
+//! (and with it the vendored `xla` crate) is disabled.
+//!
+//! Constructors fail with a clear message; everything that would execute
+//! artifacts is unreachable. The quadratic [`crate::runtime::MockRuntime`]
+//! covers tests and benches, and the artifact-gated integration tests
+//! skip themselves when `artifacts/` is absent — which it always is
+//! without the real runtime. Types mirror `exec.rs` exactly so the rest
+//! of the crate compiles identically under both configurations.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::model::{Manifest, ParamSet};
+
+/// One training batch: token ids and next-token targets, both
+/// `(batch_size, seq_len)` row-major i32.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub tokens: Vec<i32>,
+    pub targets: Vec<i32>,
+}
+
+/// Output of one train step.
+#[derive(Clone, Debug)]
+pub struct TrainOut {
+    pub loss: f32,
+    pub grads: ParamSet,
+    /// host-side wall-clock of the PJRT execution (profiling)
+    pub exec_secs: f64,
+}
+
+/// Output of one eval step.
+#[derive(Clone, Debug)]
+pub struct EvalOut {
+    pub loss: f32,
+    pub n_correct: u32,
+    pub n_total: u32,
+}
+
+const NO_PJRT: &str = "crossfed was built without the `pjrt` feature; \
+rebuild with `--features pjrt` (vendored xla crate) to execute artifacts";
+
+/// Stub runtime: never constructible, so the execution methods are
+/// unreachable by design.
+pub struct StepRuntime {
+    manifest: Manifest,
+}
+
+impl StepRuntime {
+    pub fn load(_manifest: &Manifest) -> Result<StepRuntime> {
+        bail!(NO_PJRT)
+    }
+
+    pub fn load_preset(_artifacts_dir: &Path, _preset: &str) -> Result<StepRuntime> {
+        bail!(NO_PJRT)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn tokens_per_batch(&self) -> u32 {
+        (self.manifest.model.batch_size * self.manifest.model.seq_len) as u32
+    }
+
+    pub fn train_step(&self, _params: &ParamSet, _batch: &Batch) -> Result<TrainOut> {
+        bail!(NO_PJRT)
+    }
+
+    pub fn eval_step(&self, _params: &ParamSet, _batch: &Batch) -> Result<EvalOut> {
+        bail!(NO_PJRT)
+    }
+}

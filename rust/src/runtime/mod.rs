@@ -6,6 +6,10 @@
 //! Python is never involved at runtime; the artifacts are produced once by
 //! `make artifacts`.
 
+#[cfg(feature = "pjrt")]
+mod exec;
+#[cfg(not(feature = "pjrt"))]
+#[path = "exec_stub.rs"]
 mod exec;
 mod mock;
 
@@ -21,6 +25,7 @@ use crate::model::ParamSet;
 /// Process-wide counter of PJRT executions (hot-path profiling aid).
 pub static EXECUTIONS: AtomicU64 = AtomicU64::new(0);
 
+#[cfg_attr(not(feature = "pjrt"), allow(dead_code))] // called from exec.rs
 pub(crate) fn count_execution() {
     EXECUTIONS.fetch_add(1, Ordering::Relaxed);
 }

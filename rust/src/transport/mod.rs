@@ -4,14 +4,20 @@
 //! here, so every byte in Table 2's "Communication Overhead" column is a
 //! byte this module actually produced (compression output + seal overhead
 //! + protocol framing from the netsim).
+//!
+//! The uplink is one fused compress→encrypt pipeline: the frame (metadata
+//! header + compressed payload) is built directly in a round-persistent
+//! send buffer, sealed in place, and decoded in place on the receive side
+//! — no dense intermediate copy anywhere on the path, and the steady
+//! state allocates nothing per round.
 
 use anyhow::{Context, Result};
 
-use crate::compress::{CompressedPayload, Compressor, ErrorFeedback};
-use crate::crypto::{open, seal, TransportKey};
+use crate::compress::{Compressor, ErrorFeedback};
+use crate::crypto::{open_in_place, seal_in_place, TransportKey, SEAL_OVERHEAD_BYTES};
 use crate::model::ParamSet;
 use crate::netsim::{Protocol, Wan};
-use crate::util::bytes::{f32s_to_le, le_to_f32s};
+use crate::util::bytes::f32s_to_le_into;
 
 /// Per-direction transport channel with its compression + crypto state.
 pub struct Channel {
@@ -26,6 +32,10 @@ pub struct Channel {
     recv_key: Option<TransportKey>,
     /// cumulative payload bytes (pre-framing, post-compression+seal)
     pub payload_bytes: u64,
+    /// round-persistent pipeline buffers (no per-round allocation)
+    flat_buf: Vec<f32>,
+    frame_buf: Vec<u8>,
+    recv_flat: Vec<f32>,
 }
 
 /// What arrives at the far end, plus the cost of getting it there.
@@ -66,6 +76,9 @@ impl Channel {
             send_key: secret.map(|s| TransportKey::derive(s, &ctx)),
             recv_key: secret.map(|s| TransportKey::derive(s, &ctx)),
             payload_bytes: 0,
+            flat_buf: Vec::new(),
+            frame_buf: Vec::new(),
+            recv_flat: Vec::new(),
         }
     }
 
@@ -82,48 +95,61 @@ impl Channel {
         n_samples: usize,
         wan: &mut Wan,
     ) -> Result<Delivery> {
-        let flat = update.to_flat();
-        let payload = match &mut self.error_feedback {
-            Some(ef) => ef.compress(&flat, &mut self.compressor)?,
-            None => self.compressor.compress(&flat),
-        };
+        // flatten into the persistent buffer (parallel copy, no fresh
+        // allocation once warm)
+        self.flat_buf.resize(update.numel(), 0.0);
+        update.write_flat(&mut self.flat_buf);
 
-        // metadata header: loss (4) + n_samples (8) + leaf count (4)
-        let mut plaintext =
-            Vec::with_capacity(payload.data.len() + 16);
-        plaintext.extend_from_slice(&local_loss.to_le_bytes());
-        plaintext.extend_from_slice(&(n_samples as u64).to_le_bytes());
-        plaintext.extend_from_slice(&(payload.n as u32).to_le_bytes());
-        plaintext.extend_from_slice(&payload.data);
-
-        let (wire_payload, n_bytes) = match &mut self.send_key {
-            Some(key) => {
-                let sealed = seal(key, &plaintext);
-                let n = sealed.byte_len();
-                (WirePayload::Sealed(sealed), n)
+        // frame = metadata header (loss 4 + n_samples 8 + elem count 4) +
+        // compressed payload, built straight in the send buffer
+        self.frame_buf.clear();
+        self.frame_buf.extend_from_slice(&local_loss.to_le_bytes());
+        self.frame_buf.extend_from_slice(&(n_samples as u64).to_le_bytes());
+        self.frame_buf
+            .extend_from_slice(&(self.flat_buf.len() as u32).to_le_bytes());
+        match &mut self.error_feedback {
+            Some(ef) => {
+                ef.compress_append(&self.flat_buf, &mut self.compressor, &mut self.frame_buf)?;
             }
             None => {
-                let n = plaintext.len() as u64;
-                (WirePayload::Plain(plaintext.clone()), n)
+                self.compressor.compress_append(&self.flat_buf, &mut self.frame_buf);
             }
-        };
+        }
+
+        // encrypt in place: the compress→encrypt pipeline touches one
+        // buffer end to end, no dense intermediate copy
+        let sealed = self
+            .send_key
+            .as_mut()
+            .map(|key| seal_in_place(key, &mut self.frame_buf));
+        let n_bytes = self.frame_buf.len() as u64
+            + if sealed.is_some() { SEAL_OVERHEAD_BYTES } else { 0 };
         self.payload_bytes += n_bytes;
 
         let stats =
             wan.transfer(self.src, self.dst, n_bytes, self.protocol, self.streams);
 
-        // receiver side: decrypt, parse, decompress
-        let recv_plain = match (&wire_payload, &self.recv_key) {
-            (WirePayload::Sealed(s), Some(key)) => {
-                open(key, s).context("transport decrypt")?
-            }
-            (WirePayload::Plain(p), _) => p.clone(),
-            (WirePayload::Sealed(_), None) => unreachable!(),
-        };
-        let (meta_loss, meta_n, decoded) =
-            Self::parse_frame(&recv_plain, payload.scheme)?;
+        // receiver side: verify + decrypt in place (CTR is self-inverse),
+        // parse the frame, decompress into the persistent receive buffer
+        if let Some((nonce, tag)) = &sealed {
+            let key = self.recv_key.as_ref().expect("sealed implies key");
+            open_in_place(key, nonce, tag, &mut self.frame_buf)
+                .context("transport decrypt")?;
+        }
+        anyhow::ensure!(self.frame_buf.len() >= 16, "frame too short");
+        let meta_loss = f32::from_le_bytes(self.frame_buf[0..4].try_into().unwrap());
+        let meta_n =
+            u64::from_le_bytes(self.frame_buf[4..12].try_into().unwrap()) as usize;
+        let n_elems =
+            u32::from_le_bytes(self.frame_buf[12..16].try_into().unwrap()) as usize;
+        self.recv_flat.resize(n_elems, 0.0);
+        Compressor::decompress_into(
+            self.compressor.scheme,
+            &self.frame_buf[16..],
+            &mut self.recv_flat,
+        )?;
 
-        let update = ParamSet::from_flat(&decoded, update)
+        let update = ParamSet::from_flat(&self.recv_flat, update)
             .context("decoded update has wrong size")?;
         Ok(Delivery {
             update,
@@ -134,25 +160,6 @@ impl Channel {
         })
     }
 
-    fn parse_frame(
-        plain: &[u8],
-        scheme: crate::compress::Compression,
-    ) -> Result<(f32, usize, Vec<f32>)> {
-        anyhow::ensure!(plain.len() >= 16, "frame too short");
-        let loss = f32::from_le_bytes(plain[0..4].try_into().unwrap());
-        let n_samples =
-            u64::from_le_bytes(plain[4..12].try_into().unwrap()) as usize;
-        let n_elems =
-            u32::from_le_bytes(plain[12..16].try_into().unwrap()) as usize;
-        let payload = CompressedPayload {
-            scheme,
-            n: n_elems,
-            data: plain[16..].to_vec(),
-        };
-        let decoded = Compressor::decompress(&payload)?;
-        Ok((loss, n_samples, decoded))
-    }
-
     /// Broadcast raw params (dense f32, optionally sealed) to a worker.
     /// Returns (secs, wire_bytes).
     pub fn send_params(
@@ -160,30 +167,32 @@ impl Channel {
         params: &ParamSet,
         wan: &mut Wan,
     ) -> Result<(f64, u64)> {
-        let plaintext = f32s_to_le(&params.to_flat());
+        self.flat_buf.resize(params.numel(), 0.0);
+        params.write_flat(&mut self.flat_buf);
+        self.frame_buf.clear();
+        self.frame_buf.resize(self.flat_buf.len() * 4, 0);
+        f32s_to_le_into(&self.flat_buf, &mut self.frame_buf);
         let n_bytes = match &mut self.send_key {
             Some(key) => {
-                let sealed = seal(key, &plaintext);
-                // receiver-side verification (keeps crypto honest)
-                let back = open(self.recv_key.as_ref().unwrap(), &sealed)?;
-                anyhow::ensure!(
-                    le_to_f32s(&back).is_some(),
-                    "broadcast decode failed"
-                );
-                sealed.byte_len()
+                let (nonce, tag) = seal_in_place(key, &mut self.frame_buf);
+                // receiver-side verification (keeps crypto honest); the
+                // buffer is plaintext again afterwards
+                open_in_place(
+                    self.recv_key.as_ref().unwrap(),
+                    &nonce,
+                    &tag,
+                    &mut self.frame_buf,
+                )
+                .context("broadcast decrypt")?;
+                self.frame_buf.len() as u64 + SEAL_OVERHEAD_BYTES
             }
-            None => plaintext.len() as u64,
+            None => self.frame_buf.len() as u64,
         };
         self.payload_bytes += n_bytes;
         let stats =
             wan.transfer(self.src, self.dst, n_bytes, self.protocol, self.streams);
         Ok((stats.time_s, stats.wire_bytes))
     }
-}
-
-enum WirePayload {
-    Plain(Vec<u8>),
-    Sealed(crate::crypto::SealedPayload),
 }
 
 #[cfg(test)]

@@ -1,12 +1,31 @@
 //! Byte-level codecs and formatting shared by transport/compress/crypto.
+//!
+//! The f32<->LE conversions are block-parallel (they sit on the per-round
+//! transport hot path for multi-MB payloads); the `_into` variants write
+//! into caller-owned buffers so steady state allocates nothing.
+
+use crate::util::par;
 
 /// f32 slice -> little-endian bytes.
 pub fn f32s_to_le(xs: &[f32]) -> Vec<u8> {
-    let mut out = Vec::with_capacity(xs.len() * 4);
-    for x in xs {
-        out.extend_from_slice(&x.to_le_bytes());
-    }
+    let mut out = vec![0u8; xs.len() * 4];
+    f32s_to_le_into(xs, &mut out);
     out
+}
+
+/// f32 slice -> little-endian bytes, into a caller-sized buffer
+/// (`out.len() == 4 * xs.len()`). Block-parallel above the threshold.
+pub fn f32s_to_le_into(xs: &[f32], out: &mut [u8]) {
+    assert_eq!(out.len(), xs.len() * 4, "LE buffer size mismatch");
+    let items: Vec<(&mut [u8], &[f32])> = out
+        .chunks_mut(par::BLOCK * 4)
+        .zip(xs.chunks(par::BLOCK))
+        .collect();
+    par::run_items_auto(xs.len(), items, |(d, s)| {
+        for (db, x) in d.chunks_exact_mut(4).zip(s) {
+            db.copy_from_slice(&x.to_le_bytes());
+        }
+    });
 }
 
 /// little-endian bytes -> f32 vec (len must be a multiple of 4).
@@ -14,12 +33,27 @@ pub fn le_to_f32s(bytes: &[u8]) -> Option<Vec<f32>> {
     if bytes.len() % 4 != 0 {
         return None;
     }
-    Some(
-        bytes
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect(),
-    )
+    let mut out = vec![0.0f32; bytes.len() / 4];
+    le_to_f32s_into(bytes, &mut out)?;
+    Some(out)
+}
+
+/// little-endian bytes -> caller-sized f32 buffer
+/// (`bytes.len() == 4 * out.len()`). Block-parallel above the threshold.
+pub fn le_to_f32s_into(bytes: &[u8], out: &mut [f32]) -> Option<()> {
+    if bytes.len() != out.len() * 4 {
+        return None;
+    }
+    let items: Vec<(&mut [f32], &[u8])> = out
+        .chunks_mut(par::BLOCK)
+        .zip(bytes.chunks(par::BLOCK * 4))
+        .collect();
+    par::run_items_auto(out.len(), items, |(d, s)| {
+        for (x, c) in d.iter_mut().zip(s.chunks_exact(4)) {
+            *x = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+        }
+    });
+    Some(())
 }
 
 /// u32 slice -> little-endian bytes.
@@ -93,6 +127,23 @@ mod tests {
     fn rejects_ragged() {
         assert!(le_to_f32s(&[1, 2, 3]).is_none());
         assert!(le_to_u32s(&[1, 2, 3, 4, 5]).is_none());
+        let mut out = vec![0.0f32; 2];
+        assert!(le_to_f32s_into(&[0u8; 9], &mut out).is_none());
+    }
+
+    #[test]
+    fn into_variants_match_allocating_ones_any_thread_count() {
+        // big enough to engage the parallel path
+        let xs: Vec<f32> = (0..par::PAR_THRESHOLD + 777)
+            .map(|i| (i as f32 * 0.7).sin())
+            .collect();
+        let serial = par::with_threads(1, || f32s_to_le(&xs));
+        let parallel = par::with_threads(8, || f32s_to_le(&xs));
+        assert_eq!(serial, parallel);
+        let back_s = par::with_threads(1, || le_to_f32s(&serial).unwrap());
+        let back_p = par::with_threads(8, || le_to_f32s(&serial).unwrap());
+        assert_eq!(back_s, back_p);
+        assert_eq!(back_s, xs);
     }
 
     #[test]

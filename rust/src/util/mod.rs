@@ -4,5 +4,6 @@
 pub mod bytes;
 pub mod json;
 pub mod logging;
+pub mod par;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,174 @@
+//! Dependency-free data-parallel driver for the per-round hot path.
+//!
+//! Every kernel that touches multi-MB update vectors (ParamSet linear
+//! algebra, the codecs, the CTR keystream) routes through here. Design
+//! constraints (EXPERIMENTS.md §Perf):
+//!
+//! * **Deterministic for any thread count.** Work is cut into *fixed-size*
+//!   blocks ([`BLOCK`] elements) whose boundaries do not depend on how
+//!   many worker threads run, and anything order-sensitive (reductions,
+//!   RNG-consuming codecs) is combined by the caller in block order. The
+//!   serial fallback walks the same blocks, so serial and parallel
+//!   results are bit-identical.
+//! * **No dependencies.** `std::thread::scope` over
+//!   `available_parallelism()` — the offline image has no rayon.
+//! * **Cheap below threshold.** Inputs under [`PAR_THRESHOLD`] total
+//!   elements never pay thread-spawn cost; the closure runs inline.
+//!
+//! Thread-count resolution order: [`with_threads`] override (thread-local,
+//! used by tests/benches for serial-vs-parallel comparisons) →
+//! `CROSSFED_THREADS` env var → `available_parallelism()`.
+
+use std::cell::Cell;
+use std::sync::OnceLock;
+use std::thread;
+
+/// Elements per work block. Fixed (not derived from the thread count) so
+/// block boundaries — and therefore results — are reproducible across
+/// machines.
+pub const BLOCK: usize = 1 << 14;
+
+/// Total-element threshold below which kernels stay serial.
+pub const PAR_THRESHOLD: usize = 1 << 15;
+
+fn hardware_threads() -> usize {
+    static HW: OnceLock<usize> = OnceLock::new();
+    *HW.get_or_init(|| {
+        std::env::var("CROSSFED_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or_else(|| {
+                thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            })
+    })
+}
+
+thread_local! {
+    static OVERRIDE: Cell<Option<usize>> = Cell::new(None);
+}
+
+/// Worker threads the current call may use.
+pub fn current_threads() -> usize {
+    OVERRIDE.with(|o| o.get()).unwrap_or_else(hardware_threads)
+}
+
+/// Run `f` with the calling thread's parallelism pinned to `n`, restored
+/// on exit (panic-safe). The override is thread-local, so concurrently
+/// running tests do not interfere with each other.
+pub fn with_threads<R>(n: usize, f: impl FnOnce() -> R) -> R {
+    assert!(n > 0, "thread count must be positive");
+    struct Restore(Option<usize>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            let prev = self.0;
+            OVERRIDE.with(|o| o.set(prev));
+        }
+    }
+    let _guard = Restore(OVERRIDE.with(|o| o.replace(Some(n))));
+    f()
+}
+
+/// Execute independent work items across `current_threads()` workers
+/// (round-robin). Items must be disjoint (e.g. `chunks_mut` blocks); the
+/// caller is responsible for making per-item work order-insensitive.
+pub fn run_items<I: Send>(items: Vec<I>, f: impl Fn(I) + Sync) {
+    let nt = current_threads().min(items.len());
+    if nt <= 1 {
+        for it in items {
+            f(it);
+        }
+        return;
+    }
+    let mut lanes: Vec<Vec<I>> = Vec::with_capacity(nt);
+    lanes.resize_with(nt, Vec::new);
+    for (i, it) in items.into_iter().enumerate() {
+        lanes[i % nt].push(it);
+    }
+    let f = &f;
+    thread::scope(|s| {
+        let mut lanes = lanes.into_iter();
+        let own = lanes.next().unwrap();
+        for lane in lanes {
+            s.spawn(move || {
+                for it in lane {
+                    f(it);
+                }
+            });
+        }
+        // the calling thread works too instead of idling at the join
+        for it in own {
+            f(it);
+        }
+    });
+}
+
+/// [`run_items`] gated on problem size: at or below [`PAR_THRESHOLD`]
+/// total elements the items run inline on the calling thread.
+pub fn run_items_auto<I: Send>(
+    total_elems: usize,
+    items: Vec<I>,
+    f: impl Fn(I) + Sync,
+) {
+    if total_elems <= PAR_THRESHOLD || current_threads() == 1 {
+        for it in items {
+            f(it);
+        }
+    } else {
+        run_items(items, f);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn with_threads_overrides_and_restores() {
+        let before = current_threads();
+        with_threads(3, || assert_eq!(current_threads(), 3));
+        assert_eq!(current_threads(), before);
+        // nested overrides unwind correctly
+        with_threads(2, || {
+            with_threads(5, || assert_eq!(current_threads(), 5));
+            assert_eq!(current_threads(), 2);
+        });
+    }
+
+    #[test]
+    fn run_items_visits_every_item_once() {
+        for nt in [1, 2, 7] {
+            let hits = AtomicUsize::new(0);
+            let mut data = vec![0u8; 1000];
+            let items: Vec<&mut [u8]> = data.chunks_mut(13).collect();
+            with_threads(nt, || {
+                run_items(items, |c| {
+                    hits.fetch_add(c.len(), Ordering::Relaxed);
+                    c.fill(1);
+                });
+            });
+            assert_eq!(hits.load(Ordering::Relaxed), 1000);
+            assert!(data.iter().all(|&b| b == 1));
+        }
+    }
+
+    #[test]
+    fn empty_and_single_item_ok() {
+        run_items(Vec::<usize>::new(), |_| panic!("no items"));
+        let got = AtomicUsize::new(0);
+        run_items(vec![41usize], |x| {
+            got.store(x + 1, Ordering::Relaxed);
+        });
+        assert_eq!(got.load(Ordering::Relaxed), 42);
+    }
+
+    #[test]
+    fn auto_threshold_stays_serial() {
+        // below threshold the closure must run on the calling thread
+        let caller = thread::current().id();
+        run_items_auto(10, vec![0usize; 4], |_| {
+            assert_eq!(thread::current().id(), caller);
+        });
+    }
+}

@@ -41,6 +41,9 @@ pub struct CloudWorker {
     dp_rng: Pcg64,
     /// async bookkeeping: global version this worker's params are based on
     pub base_version: u64,
+    /// round-persistent scratch for the local parameter copy — avoids
+    /// cloning (allocating) the full global model every round
+    params_buf: ParamSet,
 }
 
 impl CloudWorker {
@@ -60,6 +63,7 @@ impl CloudWorker {
             straggle_rng: Pcg64::new(seed, 0x57_0000 + id as u64),
             dp_rng: Pcg64::new(seed, 0xD9_0000 + id as u64),
             base_version: 0,
+            params_buf: ParamSet::default(),
         }
     }
 
@@ -86,7 +90,11 @@ impl CloudWorker {
         dp: &DpConfig,
     ) -> Result<LocalRound> {
         assert!(steps >= 1);
-        let mut params = global.clone();
+        // reuse the round-persistent scratch instead of cloning the global
+        // model (parallel copy into the existing allocations); borrowed in
+        // place so the warm buffer survives early error returns
+        self.params_buf.copy_from(global);
+        let params = &mut self.params_buf;
         let mut grad_acc: Option<ParamSet> = None;
         let mut loss_sum = 0.0f64;
         let mut compute_secs = 0.0f64;
@@ -94,7 +102,7 @@ impl CloudWorker {
 
         for _ in 0..steps {
             let batch = self.batches.next_batch();
-            let out = backend.train(&params, &batch)?;
+            let out = backend.train(params, &batch)?;
             loss_sum += out.loss as f64;
             host_secs += out.exec_secs;
             compute_secs +=

@@ -1,0 +1,176 @@
+//! Serial ↔ parallel equivalence for the hot-path kernels.
+//!
+//! The contract (see `crossfed::util::par`): work is decomposed into
+//! fixed-size blocks, so results are *bit-identical* for any thread
+//! count — for the ParamSet linear algebra, every codec (including the
+//! RNG-consuming int8/rand-k), and the CTR keystream. Also covers the
+//! scratch-reuse guarantee (`compress_append` into a shared dirty buffer
+//! equals `compress`) and the full compress→encrypt→decrypt→decompress
+//! pipeline.
+
+use crossfed::compress::{Compression, Compressor, ErrorFeedback};
+use crossfed::crypto::{open_in_place, seal_in_place, TransportKey};
+use crossfed::model::ParamSet;
+use crossfed::testkit::proptest_kit::{forall, Gen};
+use crossfed::util::par;
+
+/// Enough workers that round-robin lanes interleave blocks non-trivially.
+const PAR_T: usize = 8;
+
+const ALL_SCHEMES: [Compression; 5] = [
+    Compression::None,
+    Compression::Fp16,
+    Compression::Int8,
+    Compression::TopK { ratio: 0.02 },
+    Compression::RandK { ratio: 0.013 },
+];
+
+/// Leaf structure crossing every edge: empty leaves, 1-element leaves,
+/// odd tails, plus one leaf big enough to engage the thread pool.
+fn gen_leaves(g: &mut Gen) -> ParamSet {
+    let mut leaves = Vec::new();
+    let n_leaves = g.usize_in(1..5);
+    for _ in 0..n_leaves {
+        let n = *g.choose(&[0usize, 1, 7, 1000, par::BLOCK - 1, par::BLOCK + 3]);
+        leaves.push((0..n).map(|i| (i as f32 * 0.37).sin()).collect());
+    }
+    leaves.push(
+        (0..par::PAR_THRESHOLD + 1234)
+            .map(|_| g.f32_in(-1.0..1.0))
+            .collect(),
+    );
+    ParamSet { leaves }
+}
+
+/// Same shapes as `ps`, different values.
+fn like(ps: &ParamSet, g: &mut Gen) -> ParamSet {
+    ParamSet {
+        leaves: ps
+            .leaves
+            .iter()
+            .map(|l| (0..l.len()).map(|_| g.f32_in(-2.0..2.0)).collect())
+            .collect(),
+    }
+}
+
+#[test]
+fn paramset_kernels_bit_identical_serial_vs_parallel() {
+    forall("paramset serial==parallel", 6, |g| {
+        let a = gen_leaves(g);
+        let b = like(&a, g);
+        let alpha = g.f32_in(-2.0..2.0);
+
+        let run = |threads: usize| {
+            par::with_threads(threads, || {
+                let mut ax = a.clone();
+                ax.axpy(alpha, &b);
+                let mut sc = a.clone();
+                sc.scale(alpha);
+                (ax, sc, a.sub(&b), a.l2_norm(), a.to_flat())
+            })
+        };
+        let s = run(1);
+        let p = run(PAR_T);
+        assert_eq!(s.0, p.0, "axpy");
+        assert_eq!(s.1, p.1, "scale");
+        assert_eq!(s.2, p.2, "sub");
+        assert!(s.3 == p.3, "l2_norm: {} vs {}", s.3, p.3);
+        assert_eq!(s.4, p.4, "to_flat");
+    });
+}
+
+#[test]
+fn axpy_many_bitwise_matches_sequential_axpy() {
+    forall("axpy_many == axpy sequence", 6, |g| {
+        let base = gen_leaves(g);
+        let us: Vec<ParamSet> = (0..3).map(|_| like(&base, g)).collect();
+        let alphas: Vec<f32> = (0..3).map(|_| g.f32_in(-1.0..1.0)).collect();
+        let mut seq = base.clone();
+        for (a, u) in alphas.iter().zip(&us) {
+            seq.axpy(*a, u);
+        }
+        let terms: Vec<(f32, &ParamSet)> =
+            alphas.iter().zip(&us).map(|(&a, u)| (a, u)).collect();
+        let mut fused = base.clone();
+        par::with_threads(PAR_T, || fused.axpy_many(&terms));
+        assert_eq!(seq, fused);
+    });
+}
+
+#[test]
+fn codecs_bit_identical_serial_vs_parallel() {
+    // sizes cross int8 chunk boundaries and the parallel threshold
+    for &n in &[0usize, 1, 5, 4095, 4096, 4097, 100_003] {
+        let xs: Vec<f32> = (0..n).map(|i| ((i as f32) * 0.013).sin() * 3.0).collect();
+        for &scheme in &ALL_SCHEMES {
+            let enc = |threads: usize| {
+                par::with_threads(threads, || {
+                    Compressor::new(scheme, 42).compress(&xs)
+                })
+            };
+            let ps = enc(1);
+            let pp = enc(PAR_T);
+            assert_eq!(ps.data, pp.data, "{scheme:?} n={n} encode");
+            let dec = |threads: usize| {
+                par::with_threads(threads, || Compressor::decompress(&ps).unwrap())
+            };
+            let ds = dec(1);
+            let dp = dec(PAR_T);
+            assert_eq!(ds, dp, "{scheme:?} n={n} decode");
+            assert_eq!(ds.len(), n);
+        }
+    }
+}
+
+#[test]
+fn error_feedback_residual_identical_across_thread_counts() {
+    let n = 50_000;
+    let xs: Vec<f32> = (0..n).map(|i| ((i as f32) * 0.11).cos()).collect();
+    let run = |threads: usize| {
+        par::with_threads(threads, || {
+            let mut ef = ErrorFeedback::new(n, true);
+            let mut c = Compressor::new(Compression::TopK { ratio: 0.05 }, 3);
+            let mut out = Vec::new();
+            for _ in 0..3 {
+                ef.compress_append(&xs, &mut c, &mut out).unwrap();
+            }
+            (out, ef.residual_norm())
+        })
+    };
+    let (bytes_s, res_s) = run(1);
+    let (bytes_p, res_p) = run(PAR_T);
+    assert_eq!(bytes_s, bytes_p);
+    assert!(res_s == res_p, "{res_s} vs {res_p}");
+}
+
+#[test]
+fn compress_encrypt_decrypt_decompress_roundtrip() {
+    forall("pipeline roundtrip", 6, |g| {
+        let n = g.usize_in(1..50_000);
+        let xs: Vec<f32> = (0..n).map(|_| g.f32_in(-1.0..1.0)).collect();
+        for &scheme in &ALL_SCHEMES {
+            // reference: plain codec roundtrip
+            let mut c_ref = Compressor::new(scheme, 77);
+            let reference = Compressor::decompress(&c_ref.compress(&xs)).unwrap();
+
+            // pipeline: append into a frame, seal in place, open in place,
+            // decompress from the borrowed frame slice
+            let mut c = Compressor::new(scheme, 77);
+            let mut frame = vec![0xEEu8; 16]; // fake metadata header
+            c.compress_append(&xs, &mut frame);
+            let mut tx = TransportKey::derive(b"pipeline", "w->l");
+            let rx = TransportKey::derive(b"pipeline", "w->l");
+            let (nonce, tag) = seal_in_place(&mut tx, &mut frame);
+            assert_ne!(&frame[..16], &[0xEEu8; 16][..], "not encrypted");
+            open_in_place(&rx, &nonce, &tag, &mut frame).unwrap();
+            assert_eq!(&frame[..16], &[0xEEu8; 16][..], "header corrupted");
+            let mut out = vec![0.0f32; n];
+            Compressor::decompress_into(scheme, &frame[16..], &mut out).unwrap();
+
+            assert_eq!(out, reference, "{scheme:?} n={n}");
+            if scheme == Compression::None {
+                assert_eq!(out, xs); // dense path is lossless end-to-end
+            }
+        }
+    });
+}
