@@ -1,0 +1,98 @@
+//! Hierarchical vs flat-star aggregation across scaled clouds.
+//!
+//! The paper treats the inter-cloud WAN as the bottleneck; the standard
+//! scaling move is to reduce inside each cloud over fat intra-region
+//! links and exchange only one partial aggregate per cloud across
+//! regions. This example sweeps `nodes_per_cloud ∈ {1, 4, 16}` on the
+//! paper's 3 clouds and prints, for each scale, the per-round
+//! inter-region WAN bytes and simulated round time of both modes —
+//! star traffic grows linearly with the node count while hierarchical
+//! traffic stays flat at one partial per cloud.
+//!
+//! Runs on the mock backend (no artifacts needed — CI executes this):
+//!
+//!     cargo run --release --example hierarchical_clouds
+
+use crossfed::cluster::ClusterSpec;
+use crossfed::config::preset;
+use crossfed::coordinator::Coordinator;
+use crossfed::data::CorpusConfig;
+use crossfed::model::ParamSet;
+use crossfed::netsim::LinkClass;
+use crossfed::runtime::MockRuntime;
+use crossfed::util::bytes::human_bytes;
+
+const ROUNDS: usize = 2;
+
+/// Returns (inter-region bytes/round, intra-AZ bytes/round, sim secs/round,
+/// final eval loss).
+fn run(nodes_per_cloud: usize, hierarchical: bool) -> anyhow::Result<(u64, u64, f64, f32)> {
+    let mut cfg = preset("quick").expect("builtin preset");
+    cfg.name = format!(
+        "{}-x{nodes_per_cloud}",
+        if hierarchical { "hier" } else { "star" }
+    );
+    cfg.hierarchical = hierarchical;
+    cfg.rounds = ROUNDS;
+    cfg.eval_every = 1;
+    cfg.eval_batches = 1;
+    cfg.local_lr = 3.0;
+    cfg.server_lr = 3.0;
+    cfg.target_loss = None;
+    // enough docs that every dirichlet shard is populated at 48 nodes
+    cfg.corpus = CorpusConfig { n_docs: 240, doc_sentences: 2, n_topics: 6, seed: 5 };
+
+    let cluster = ClusterSpec::paper_default_scaled(nodes_per_cloud);
+    let backend = MockRuntime::new(0.4);
+    let init = ParamSet { leaves: vec![vec![2.0f32; 64], vec![-1.0f32; 32]] };
+    let mut coord = Coordinator::new(cfg, cluster, &backend, init, 4, 16)?;
+    // measure round traffic only (shard distribution is mode-independent)
+    let inter0 = coord.inter_region_wire_bytes();
+    let intra0 = coord.wire_bytes_class(LinkClass::IntraAz);
+    let sim0 = coord.sim_secs();
+    let r = coord.run()?;
+    Ok((
+        (coord.inter_region_wire_bytes() - inter0) / ROUNDS as u64,
+        (coord.wire_bytes_class(LinkClass::IntraAz) - intra0) / ROUNDS as u64,
+        (r.sim_secs - sim0) / ROUNDS as f64,
+        r.final_eval_loss,
+    ))
+}
+
+fn main() -> anyhow::Result<()> {
+    crossfed::util::logging::init();
+    println!(
+        "{:>5} {:>6} {:>14} {:>14} {:>12} {:>10}",
+        "nodes", "mode", "inter-region/r", "intra-az/r", "sim secs/r", "eval loss"
+    );
+    for nodes_per_cloud in [1usize, 4, 16] {
+        let mut inter = [0u64; 2];
+        for (i, hier) in [false, true].into_iter().enumerate() {
+            let (ir, ia, secs, loss) = run(nodes_per_cloud, hier)?;
+            inter[i] = ir;
+            println!(
+                "{:>5} {:>6} {:>14} {:>14} {:>12.1} {:>10.3}",
+                nodes_per_cloud * 3,
+                if hier { "hier" } else { "star" },
+                human_bytes(ir),
+                human_bytes(ia),
+                secs,
+                loss
+            );
+        }
+        let reduction = inter[0] as f64 / inter[1].max(1) as f64;
+        println!("      -> hierarchical sends {reduction:.1}x fewer inter-region bytes\n");
+        // topology regression guard: CI fails if the hierarchy stops
+        // paying off at scale
+        if nodes_per_cloud >= 4 {
+            anyhow::ensure!(
+                inter[1] * 4 <= inter[0],
+                "hierarchical mode lost its inter-region advantage at \
+                 {nodes_per_cloud} nodes/cloud: star {} vs hier {}",
+                inter[0],
+                inter[1]
+            );
+        }
+    }
+    Ok(())
+}

@@ -17,10 +17,15 @@
 mod bench_common;
 
 use crossfed::aggregation::{Aggregator, ClientUpdate, DynamicWeighted, FedAvg};
+use crossfed::cluster::ClusterSpec;
 use crossfed::compress::{Compression, Compressor};
+use crossfed::config::preset;
+use crossfed::coordinator::Coordinator;
 use crossfed::crypto::{open, seal, TransportKey};
+use crossfed::data::CorpusConfig;
 use crossfed::model::ParamSet;
 use crossfed::netsim::{Link, Protocol, Wan};
+use crossfed::runtime::MockRuntime;
 use crossfed::testkit::bench_kit::{BenchResult, BenchSet};
 use crossfed::util::json::Json;
 use crossfed::util::par;
@@ -130,7 +135,68 @@ fn gbps(r: &BenchResult) -> f64 {
     r.throughput().unwrap_or(0.0) / 1e9
 }
 
-fn write_json(hw: usize, serial: &[BenchSet], parallel: &[BenchSet]) {
+/// Star vs hierarchical on the paper's clouds scaled to 8 nodes each:
+/// per-round inter-region WAN bytes and simulated round time (mock
+/// backend — the comparison is about the communication schedule, not the
+/// compute).
+fn hier_vs_star_entry() -> Json {
+    let nodes_per_cloud = 8;
+    let cluster = ClusterSpec::paper_default_scaled(nodes_per_cloud);
+    let run = |hier: bool| {
+        let mut cfg = preset("quick").expect("builtin");
+        cfg.name = if hier { "bench-hier".into() } else { "bench-star".into() };
+        cfg.hierarchical = hier;
+        cfg.rounds = 2;
+        cfg.eval_every = 1;
+        cfg.eval_batches = 1;
+        cfg.local_lr = 3.0;
+        cfg.server_lr = 3.0;
+        cfg.target_loss = None;
+        cfg.corpus =
+            CorpusConfig { n_docs: 120, doc_sentences: 2, n_topics: 6, seed: 3 };
+        let backend = MockRuntime::new(0.4);
+        let init = ParamSet { leaves: vec![vec![2.0f32; 64], vec![-1.0f32; 32]] };
+        let mut coord =
+            Coordinator::new(cfg, cluster.clone(), &backend, init, 4, 16)
+                .expect("coordinator");
+        let inter0 = coord.inter_region_wire_bytes();
+        let sim0 = coord.sim_secs();
+        let r = coord.run().expect("run");
+        (
+            (coord.inter_region_wire_bytes() - inter0) / 2, // per round
+            (r.sim_secs - sim0) / 2.0,
+        )
+    };
+    let (star_bytes, star_secs) = run(false);
+    let (hier_bytes, hier_secs) = run(true);
+    println!(
+        "\n== bench: hier vs star (3 clouds x {nodes_per_cloud}) ==\n\
+         inter-region bytes/round: star {star_bytes}  hier {hier_bytes}  \
+         ({:.1}x less)\nsim secs/round: star {star_secs:.1}  hier {hier_secs:.1}",
+        star_bytes as f64 / hier_bytes.max(1) as f64
+    );
+    Json::obj(vec![
+        ("nodes_per_cloud", Json::num(nodes_per_cloud as f64)),
+        ("star_inter_region_bytes_per_round", Json::num(star_bytes as f64)),
+        ("hier_inter_region_bytes_per_round", Json::num(hier_bytes as f64)),
+        (
+            "inter_region_reduction",
+            Json::num(
+                ((star_bytes as f64 / hier_bytes.max(1) as f64) * 100.0).round()
+                    / 100.0,
+            ),
+        ),
+        ("star_sim_secs_per_round", Json::num((star_secs * 10.0).round() / 10.0)),
+        ("hier_sim_secs_per_round", Json::num((hier_secs * 10.0).round() / 10.0)),
+    ])
+}
+
+fn write_json(
+    hw: usize,
+    serial: &[BenchSet],
+    parallel: &[BenchSet],
+    hier_vs_star: Json,
+) {
     let mut entries = Vec::new();
     for (sb, pb) in serial.iter().zip(parallel) {
         for (sr, pr) in sb.results.iter().zip(&pb.results) {
@@ -152,6 +218,7 @@ fn write_json(hw: usize, serial: &[BenchSet], parallel: &[BenchSet]) {
         ("elements", Json::num(N as f64)),
         ("threads", Json::num(hw as f64)),
         ("results", Json::arr(entries)),
+        ("hier_vs_star", hier_vs_star),
     ]);
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.json");
     match std::fs::write(path, doc.to_string_pretty() + "\n") {
@@ -166,7 +233,8 @@ fn main() {
     let serial = kernel_pass(1);
     println!("\n== hotpath: parallel ({hw} threads) ==");
     let parallel = kernel_pass(hw);
-    write_json(hw, &serial, &parallel);
+    let hier = hier_vs_star_entry();
+    write_json(hw, &serial, &parallel, hier);
 
     // --- netsim transfer computation (pure model, no payload copies)
     let mut b = BenchSet::new("netsim transfer ops");

@@ -1,0 +1,313 @@
+//! Two-level (hierarchical) aggregation: reduce inside each cloud at its
+//! WAN gateway, then reduce the per-cloud partials at the leader.
+//!
+//! The per-worker weights of the synchronous algorithms all factor as
+//! `α_i = w_i / Σ_j w_j` for a *raw weight* `w_i` that depends only on
+//! worker-local quantities:
+//!
+//! * FedAvg (formula 1) and gradient aggregation (formula 3):
+//!   `w_i = n_i` (sample count);
+//! * dynamic weighting (formula 2): `w_i = exp(−L_i/τ)`.
+//!
+//! So a gateway can compute the *weighted mean* of its members'
+//! updates, `P_c = Σ_{i∈c} w_i Δ_i / z_c` with `z_c = Σ_{i∈c} w_i`, and
+//! ship only `(P_c, z_c)` over the WAN; the leader recombines
+//! `Σ_c (z_c / Z) P_c` with `Z = Σ_c z_c`, which equals the flat
+//! single-level aggregate exactly (in real arithmetic — floating-point
+//! summation order differs, so tests compare with tolerance). Shipping
+//! the *normalized* partial keeps magnitudes in the same range as a
+//! single worker's update, so the lossy codecs stay in their calibrated
+//! regime.
+//!
+//! Async aggregation (formula 4) applies updates on arrival and has no
+//! barrier to factor across; [`HierarchicalAggregator::new`] rejects it.
+//!
+//! Numerical stability of dynamic weights: member weights inside a cloud
+//! are computed with the cloud's min-loss shift (exact — the shift
+//! cancels in the within-cloud normalization), and the recombination
+//! weight `z_c = exp(−lo_c/τ) · Σ exp(−(L_i−lo_c)/τ)` carries the
+//! absolute scale with its exponent clamped to ±700, so extreme `|L|/τ`
+//! degrades gracefully instead of under/overflowing to a panic. Within
+//! the clamp range the two-level reduce equals the flat softmax exactly
+//! (in real arithmetic).
+
+use anyhow::{bail, Result};
+
+use crate::aggregation::{AggregationKind, ClientUpdate};
+use crate::model::ParamSet;
+use crate::optimizer::Optimizer;
+
+/// One cloud's reduced contribution: the weighted mean of its members'
+/// updates plus the metadata the leader needs to recombine exactly.
+#[derive(Clone, Debug)]
+pub struct PartialAggregate {
+    pub cloud: usize,
+    /// number of member updates reduced into this partial
+    pub n_members: usize,
+    /// Σ n_i over members (FedAvg bookkeeping / diagnostics)
+    pub n_samples: usize,
+    /// z_c = Σ w_i over members — the partial's recombination weight
+    pub weight: f64,
+    /// weight-weighted mean member loss (diagnostics)
+    pub mean_loss: f32,
+    /// P_c = Σ w_i Δ_i / z_c — normalized weighted mean update
+    pub delta: ParamSet,
+}
+
+/// Two-level reducer for the synchronous aggregation algorithms.
+pub struct HierarchicalAggregator {
+    kind: AggregationKind,
+    /// server optimizer (gradient mode only; owns momentum state)
+    server_opt: Optimizer,
+}
+
+impl HierarchicalAggregator {
+    /// Rejects [`AggregationKind::Async`]: apply-on-arrival has no
+    /// barrier to factor into a two-level reduce.
+    pub fn new(kind: AggregationKind, server_opt: Optimizer) -> Result<HierarchicalAggregator> {
+        if matches!(kind, AggregationKind::Async { .. }) {
+            bail!("hierarchical aggregation requires a synchronous algorithm");
+        }
+        Ok(HierarchicalAggregator { kind, server_opt })
+    }
+
+    pub fn kind(&self) -> AggregationKind {
+        self.kind
+    }
+
+    /// Per-member weights for the within-cloud mean, plus the partial's
+    /// recombination weight on the absolute scale. Dynamic weights are
+    /// min-loss-shifted (exact inside the cloud); the absolute scale's
+    /// exponent is clamped so pathological `|L|/τ` never panics.
+    fn member_weights(&self, updates: &[ClientUpdate]) -> (Vec<f64>, f64) {
+        match self.kind {
+            AggregationKind::FedAvg | AggregationKind::GradientAgg => {
+                let ws: Vec<f64> =
+                    updates.iter().map(|u| u.n_samples as f64).collect();
+                let z = ws.iter().sum();
+                (ws, z)
+            }
+            AggregationKind::DynamicWeighted { temperature } => {
+                let t = (temperature as f64).max(1e-6);
+                let lo = updates
+                    .iter()
+                    .map(|u| u.local_loss as f64)
+                    .fold(f64::INFINITY, f64::min);
+                let ws: Vec<f64> = updates
+                    .iter()
+                    .map(|u| (-(u.local_loss as f64 - lo) / t).exp())
+                    .collect();
+                // the min-loss member contributes exp(0) = 1, so this
+                // sum is always in [1, n] — never degenerate
+                let z_shifted: f64 = ws.iter().sum();
+                let scale = (-lo / t).clamp(-700.0, 700.0).exp();
+                (ws, z_shifted * scale)
+            }
+            AggregationKind::Async { .. } => unreachable!("rejected in new()"),
+        }
+    }
+
+    /// Gateway-side reduce: weighted mean of one cloud's member updates
+    /// (one fused `axpy_many` pass over the model).
+    pub fn reduce_cloud(&self, cloud: usize, updates: &[ClientUpdate]) -> PartialAggregate {
+        assert!(!updates.is_empty(), "cloud {cloud} reduced without updates");
+        let (weights, partial_weight) = self.member_weights(updates);
+        let z: f64 = weights.iter().sum();
+        assert!(z > 0.0 && z.is_finite(), "degenerate cloud weight z={z}");
+        assert!(
+            partial_weight > 0.0 && partial_weight.is_finite(),
+            "degenerate partial weight {partial_weight}"
+        );
+        let terms: Vec<(f32, &ParamSet)> = updates
+            .iter()
+            .zip(&weights)
+            .map(|(u, &w)| ((w / z) as f32, &u.delta))
+            .collect();
+        let mut delta = ParamSet {
+            leaves: updates[0]
+                .delta
+                .leaves
+                .iter()
+                .map(|l| vec![0.0; l.len()])
+                .collect(),
+        };
+        delta.axpy_many(&terms);
+        let mean_loss = updates
+            .iter()
+            .zip(&weights)
+            .map(|(u, &w)| u.local_loss as f64 * w / z)
+            .sum::<f64>() as f32;
+        PartialAggregate {
+            cloud,
+            n_members: updates.len(),
+            n_samples: updates.iter().map(|u| u.n_samples).sum(),
+            weight: partial_weight,
+            mean_loss,
+            delta,
+        }
+    }
+
+    /// Leader-side reduce: recombine the per-cloud partials into the
+    /// global model. `partials` may carry codec-lossy deltas — whatever
+    /// actually crossed the WAN.
+    pub fn reduce_global(&mut self, global: &mut ParamSet, partials: &[PartialAggregate]) {
+        assert!(!partials.is_empty());
+        let z_total: f64 = partials.iter().map(|p| p.weight).sum();
+        assert!(
+            z_total > 0.0 && z_total.is_finite(),
+            "degenerate global weight Z={z_total}"
+        );
+        let terms: Vec<(f32, &ParamSet)> = partials
+            .iter()
+            .map(|p| ((p.weight / z_total) as f32, &p.delta))
+            .collect();
+        match self.kind {
+            AggregationKind::FedAvg | AggregationKind::DynamicWeighted { .. } => {
+                global.axpy_many(&terms);
+            }
+            AggregationKind::GradientAgg => {
+                let mut agg = ParamSet {
+                    leaves: global.leaves.iter().map(|l| vec![0.0; l.len()]).collect(),
+                };
+                agg.axpy_many(&terms);
+                self.server_opt.step(global, &agg);
+            }
+            AggregationKind::Async { .. } => unreachable!("rejected in new()"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aggregation::{build, Aggregator};
+    use crate::optimizer::OptimizerKind;
+    use crate::util::rng::Pcg64;
+
+    fn opt() -> Optimizer {
+        Optimizer::new(OptimizerKind::Sgd, 0.5)
+    }
+
+    fn updates(n: usize, dim: usize, seed: u64) -> Vec<ClientUpdate> {
+        let mut rng = Pcg64::new(seed, 0);
+        (0..n)
+            .map(|w| ClientUpdate {
+                worker: w,
+                n_samples: 500 + 137 * w,
+                local_loss: 1.0 + 0.3 * w as f32,
+                delta: ParamSet {
+                    leaves: vec![(0..dim)
+                        .map(|_| rng.normal_ms(0.0, 0.1) as f32)
+                        .collect()],
+                },
+                staleness: 0,
+            })
+            .collect()
+    }
+
+    /// Two-level reduce over arbitrary groupings must match the flat
+    /// aggregate (same math, different summation order).
+    fn assert_matches_flat(kind: AggregationKind, groups: &[&[usize]]) {
+        let us = updates(6, 64, 9);
+        // flat reference
+        let mut flat = ParamSet { leaves: vec![vec![0.5; 64]] };
+        let mut reference = build(kind, opt());
+        reference.aggregate(&mut flat, &us);
+        // hierarchical
+        let mut hier_global = ParamSet { leaves: vec![vec![0.5; 64]] };
+        let mut hier = HierarchicalAggregator::new(kind, opt()).unwrap();
+        let partials: Vec<PartialAggregate> = groups
+            .iter()
+            .enumerate()
+            .map(|(c, g)| {
+                let members: Vec<ClientUpdate> =
+                    g.iter().map(|&i| us[i].clone()).collect();
+                hier.reduce_cloud(c, &members)
+            })
+            .collect();
+        hier.reduce_global(&mut hier_global, &partials);
+        let diff = flat.sub(&hier_global).l2_norm();
+        assert!(diff < 1e-5, "{kind:?} {groups:?}: diff={diff}");
+    }
+
+    #[test]
+    fn fedavg_two_level_matches_flat() {
+        assert_matches_flat(AggregationKind::FedAvg, &[&[0, 1], &[2, 3], &[4, 5]]);
+        assert_matches_flat(AggregationKind::FedAvg, &[&[0], &[1, 2, 3, 4, 5]]);
+    }
+
+    #[test]
+    fn dynamic_two_level_matches_flat() {
+        let kind = AggregationKind::DynamicWeighted { temperature: 1.0 };
+        assert_matches_flat(kind, &[&[0, 1, 2], &[3, 4, 5]]);
+        let sharp = AggregationKind::DynamicWeighted { temperature: 0.5 };
+        assert_matches_flat(sharp, &[&[0, 4], &[1, 3], &[2, 5]]);
+    }
+
+    #[test]
+    fn gradient_two_level_matches_flat() {
+        assert_matches_flat(AggregationKind::GradientAgg, &[&[0, 1], &[2, 3, 4, 5]]);
+    }
+
+    #[test]
+    fn sharp_temperature_does_not_underflow() {
+        // exp(-L/tau) underflows f64 to 0.0 at |L|/tau > ~745; the
+        // shifted member weights + clamped scale must keep reducing
+        // instead of panicking, and still favor the best cloud
+        let kind = AggregationKind::DynamicWeighted { temperature: 0.005 };
+        let mut us = updates(4, 8, 2);
+        for (i, u) in us.iter_mut().enumerate() {
+            u.local_loss = 4.0 + 0.5 * i as f32; // -L/tau down to -1100
+        }
+        let hier = HierarchicalAggregator::new(kind, opt()).unwrap();
+        let a = hier.reduce_cloud(0, &us[..2]);
+        let b = hier.reduce_cloud(1, &us[2..]);
+        assert!(a.weight > 0.0 && a.weight.is_finite());
+        assert!(b.weight > 0.0 && b.weight.is_finite());
+        // cloud 0 holds the min-loss member: it must dominate or at
+        // least not lose to cloud 1 after clamping
+        assert!(a.weight >= b.weight);
+        let mut g = ParamSet { leaves: vec![vec![0.0; 8]] };
+        let mut hier = HierarchicalAggregator::new(kind, opt()).unwrap();
+        hier.reduce_global(&mut g, &[a, b]);
+        assert!(g.leaves[0].iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn async_rejected() {
+        assert!(
+            HierarchicalAggregator::new(AggregationKind::Async { alpha: 0.6 }, opt())
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn partial_metadata_is_consistent() {
+        let us = updates(3, 16, 4);
+        let hier = HierarchicalAggregator::new(AggregationKind::FedAvg, opt()).unwrap();
+        let p = hier.reduce_cloud(7, &us);
+        assert_eq!(p.cloud, 7);
+        assert_eq!(p.n_members, 3);
+        assert_eq!(p.n_samples, us.iter().map(|u| u.n_samples).sum::<usize>());
+        assert!((p.weight - p.n_samples as f64).abs() < 1e-9);
+        // normalized partial has single-update magnitude
+        let max_member = us.iter().map(|u| u.delta.l2_norm()).fold(0.0, f64::max);
+        assert!(p.delta.l2_norm() <= max_member * 1.5);
+        // mean loss lies inside the members' range
+        assert!(p.mean_loss >= 1.0 && p.mean_loss <= 1.6);
+    }
+
+    #[test]
+    fn single_cloud_degenerates_to_flat() {
+        let us = updates(4, 32, 11);
+        let mut a = ParamSet { leaves: vec![vec![0.0; 32]] };
+        let mut b = a.clone();
+        let mut hier =
+            HierarchicalAggregator::new(AggregationKind::FedAvg, opt()).unwrap();
+        let p = hier.reduce_cloud(0, &us);
+        hier.reduce_global(&mut a, &[p]);
+        let mut flat = build(AggregationKind::FedAvg, opt());
+        flat.aggregate(&mut b, &us);
+        assert!(a.sub(&b).l2_norm() < 1e-6);
+    }
+}

@@ -13,10 +13,17 @@
 //! gradient, depending on [`UpdateKind`]. Operating on deltas makes the
 //! three synchronous algorithms directly comparable and keeps secure
 //! aggregation (sums of masked deltas) compatible with all of them.
+//!
+//! [`HierarchicalAggregator`] factors the synchronous algorithms into a
+//! per-cloud gateway reduce plus a cross-cloud leader reduce (see
+//! [`hierarchy`]), so only one partial aggregate per cloud crosses the
+//! inter-region WAN.
 
 mod algorithms;
+pub mod hierarchy;
 
 pub use algorithms::{
     build, AggregationKind, Aggregator, AsyncAgg, ClientUpdate,
     DynamicWeighted, FedAvg, GradientAgg, UpdateKind,
 };
+pub use hierarchy::{HierarchicalAggregator, PartialAggregate};

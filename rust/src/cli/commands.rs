@@ -15,7 +15,7 @@ use crate::report;
 use crate::runtime::{MockRuntime, StepRuntime};
 use crate::util::bytes::{human_bytes, human_duration};
 
-const FLAGS: [&str; 3] = ["mock", "no-encrypt", "curve"];
+const FLAGS: [&str; 4] = ["mock", "no-encrypt", "curve", "hierarchical"];
 
 const USAGE: &str = "\
 crossfed — cross-cloud federated LLM training (Yang et al. 2024 reproduction)
@@ -25,6 +25,7 @@ USAGE:
                  [--protocol P] [--compression C] [--partition S]
                  [--artifacts DIR] [--model-preset M] [--seed N]
                  [--save-checkpoint PATH] [--resume PATH]
+                 [--nodes-per-cloud N] [--hierarchical]
                  [--mock] [--curve]
   crossfed sweep --presets a,b,c [--artifacts DIR] [--mock]
   crossfed inspect [--preset NAME]
@@ -32,7 +33,10 @@ USAGE:
   crossfed list-presets
 
 Artifacts default to ./artifacts (built by `make artifacts`). --mock swaps
-the PJRT backend for the quadratic mock (no artifacts needed).";
+the PJRT backend for the quadratic mock (no artifacts needed).
+--nodes-per-cloud puts N AZ-level worker nodes inside each of the 3 paper
+clouds; --hierarchical reduces each cloud at its gateway so only one
+partial aggregate per cloud crosses the inter-region WAN.";
 
 /// Entry point used by main.rs. Returns process exit code.
 pub fn run_cli(raw: &[String]) -> Result<i32> {
@@ -97,8 +101,21 @@ fn build_config(args: &Args) -> Result<ExperimentConfig> {
     if args.flag("no-encrypt") {
         cfg.encrypt = false;
     }
+    if args.flag("hierarchical") {
+        cfg.hierarchical = true;
+    }
     cfg.validate()?;
     Ok(cfg)
+}
+
+/// Cluster for a run: the paper's 3 clouds, each scaled to
+/// `nodes_per_cloud` AZ-level worker nodes.
+fn build_cluster(args: &Args) -> Result<ClusterSpec> {
+    let npc = args.get_usize("nodes-per-cloud")?.unwrap_or(1);
+    if npc == 0 {
+        bail!("--nodes-per-cloud must be >= 1");
+    }
+    Ok(ClusterSpec::paper_default_scaled(npc))
 }
 
 fn artifacts_dir(args: &Args) -> PathBuf {
@@ -108,16 +125,18 @@ fn artifacts_dir(args: &Args) -> PathBuf {
 /// Run one experiment, backend chosen by --mock.
 pub fn run_experiment(
     cfg: &ExperimentConfig,
+    cluster: ClusterSpec,
     mock: bool,
     artifacts: &std::path::Path,
     model_preset: &str,
 ) -> Result<RunResult> {
-    run_experiment_ckpt(cfg, mock, artifacts, model_preset, None, None)
+    run_experiment_ckpt(cfg, cluster, mock, artifacts, model_preset, None, None)
 }
 
 /// `run_experiment` with optional checkpoint restore/save paths.
 pub fn run_experiment_ckpt(
     cfg: &ExperimentConfig,
+    cluster: ClusterSpec,
     mock: bool,
     artifacts: &std::path::Path,
     model_preset: &str,
@@ -125,7 +144,6 @@ pub fn run_experiment_ckpt(
     save: Option<&std::path::Path>,
 ) -> Result<RunResult> {
     use crate::checkpoint::Checkpoint;
-    let cluster = ClusterSpec::paper_default();
     if mock {
         let backend = MockRuntime::new(0.4);
         let init = ParamSet { leaves: vec![vec![2.0; 64], vec![-1.0; 32]] };
@@ -179,11 +197,13 @@ fn print_result(r: &RunResult, curve: bool) {
 
 fn cmd_train(args: &Args) -> Result<i32> {
     let cfg = build_config(args)?;
+    let cluster = build_cluster(args)?;
     let model_preset = args.get("model-preset").unwrap_or("tiny");
     let resume = args.get("resume").map(std::path::PathBuf::from);
     let save = args.get("save-checkpoint").map(std::path::PathBuf::from);
     let r = run_experiment_ckpt(
         &cfg,
+        cluster,
         args.flag("mock"),
         &artifacts_dir(args),
         model_preset,
@@ -208,6 +228,7 @@ fn cmd_sweep(args: &Args) -> Result<i32> {
         log::info!("sweep: running {name}");
         let r = run_experiment(
             &cfg,
+            build_cluster(args)?,
             args.flag("mock"),
             &artifacts_dir(args),
             model_preset,
@@ -305,6 +326,26 @@ mod tests {
                 .unwrap(),
             0
         );
+    }
+
+    #[test]
+    fn train_hierarchical_scaled() {
+        assert_eq!(
+            run_cli(&s(&[
+                "train", "--preset", "quick", "--rounds", "2", "--mock",
+                "--hierarchical", "--nodes-per-cloud", "4",
+            ]))
+            .unwrap(),
+            0
+        );
+        // async + hierarchical must be rejected at validation
+        let args = Args::parse(
+            &s(&["train", "--preset", "quick", "--agg", "async",
+                 "--hierarchical"]),
+            &FLAGS,
+        )
+        .unwrap();
+        assert!(build_config(&args).is_err());
     }
 
     #[test]

@@ -4,10 +4,17 @@
 //! Google Cloud, and Azure)". This module models each platform's compute
 //! capability and cost so the coordinator can reason about heterogeneity;
 //! the WAN between platforms lives in [`crate::netsim`].
+//!
+//! A [`ClusterSpec`] is a flat list of *worker nodes*. Each node belongs
+//! to a cloud (the `cloud` id): single-node clouds reproduce the paper's
+//! 3-platform star, while [`ClusterSpec::paper_default_scaled`] puts
+//! several AZ-level nodes inside each cloud so the hierarchical
+//! aggregation path has an intra-cloud tier to reduce over. The first
+//! node of each cloud acts as that cloud's WAN gateway.
 
 use crate::util::rng::Pcg64;
 
-/// One cloud platform participating in federated training.
+/// One cloud worker node participating in federated training.
 #[derive(Clone, Debug)]
 pub struct CloudPlatform {
     pub name: String,
@@ -22,6 +29,9 @@ pub struct CloudPlatform {
     pub straggler_prob: f64,
     /// multiplicative slowdown when straggling
     pub straggler_factor: f64,
+    /// owning cloud id (nodes sharing a cloud are AZ-level peers behind
+    /// one WAN gateway; see [`ClusterSpec::gateway`])
+    pub cloud: usize,
 }
 
 impl CloudPlatform {
@@ -33,6 +43,7 @@ impl CloudPlatform {
             region: "us".to_string(),
             straggler_prob: 0.0,
             straggler_factor: 3.0,
+            cloud: 0,
         }
     }
 
@@ -62,41 +73,67 @@ impl ClusterSpec {
     /// The paper's 3-platform setup: heterogeneous compute speeds and
     /// costs shaped like AWS / GCP / Azure GPU instances.
     pub fn paper_default() -> ClusterSpec {
-        ClusterSpec {
-            platforms: vec![
-                CloudPlatform {
-                    name: "aws".into(),
-                    compute_speed: 1.00,
-                    cost_per_hour: 3.06, // p3.2xlarge-like
-                    region: "us-east".into(),
-                    straggler_prob: 0.05,
-                    straggler_factor: 2.5,
-                },
-                CloudPlatform {
-                    name: "gcp".into(),
-                    compute_speed: 0.85,
-                    cost_per_hour: 2.48,
-                    region: "us-central".into(),
-                    straggler_prob: 0.05,
-                    straggler_factor: 2.5,
-                },
-                CloudPlatform {
-                    name: "azure".into(),
-                    compute_speed: 0.70,
-                    cost_per_hour: 3.40,
-                    region: "eu-west".into(),
-                    straggler_prob: 0.08,
-                    straggler_factor: 3.0,
-                },
-            ],
+        ClusterSpec::paper_default_scaled(1)
+    }
+
+    /// The paper's 3 clouds, each hosting `nodes_per_cloud` AZ-level
+    /// worker nodes (same region/cost/straggler profile per cloud).
+    /// `paper_default_scaled(1)` is exactly [`ClusterSpec::paper_default`];
+    /// larger counts give the hierarchical aggregation path an
+    /// intra-cloud tier to reduce over.
+    pub fn paper_default_scaled(nodes_per_cloud: usize) -> ClusterSpec {
+        assert!(nodes_per_cloud >= 1);
+        let bases = [
+            CloudPlatform {
+                name: "aws".into(),
+                compute_speed: 1.00,
+                cost_per_hour: 3.06, // p3.2xlarge-like
+                region: "us-east".into(),
+                straggler_prob: 0.05,
+                straggler_factor: 2.5,
+                cloud: 0,
+            },
+            CloudPlatform {
+                name: "gcp".into(),
+                compute_speed: 0.85,
+                cost_per_hour: 2.48,
+                region: "us-central".into(),
+                straggler_prob: 0.05,
+                straggler_factor: 2.5,
+                cloud: 1,
+            },
+            CloudPlatform {
+                name: "azure".into(),
+                compute_speed: 0.70,
+                cost_per_hour: 3.40,
+                region: "eu-west".into(),
+                straggler_prob: 0.08,
+                straggler_factor: 3.0,
+                cloud: 2,
+            },
+        ];
+        let mut platforms = Vec::with_capacity(3 * nodes_per_cloud);
+        for base in bases {
+            for az in 0..nodes_per_cloud {
+                let mut p = base.clone();
+                if nodes_per_cloud > 1 {
+                    p.name = format!("{}-az{az}", base.name);
+                }
+                platforms.push(p);
+            }
         }
+        ClusterSpec { platforms }
     }
 
     /// Homogeneous cluster of `n` identical platforms (ablation baseline).
     pub fn homogeneous(n: usize) -> ClusterSpec {
         ClusterSpec {
             platforms: (0..n)
-                .map(|i| CloudPlatform::new(&format!("cloud{i}"), 1.0))
+                .map(|i| {
+                    let mut p = CloudPlatform::new(&format!("cloud{i}"), 1.0);
+                    p.cloud = i;
+                    p
+                })
                 .collect(),
         }
     }
@@ -116,10 +153,46 @@ impl ClusterSpec {
                 };
                 let mut p = CloudPlatform::new(&format!("cloud{i}"), f);
                 p.straggler_prob = 0.05;
+                p.cloud = i;
                 p
             })
             .collect();
         ClusterSpec { platforms }
+    }
+
+    /// Number of distinct clouds (cloud ids are expected to be dense,
+    /// `0..n_clouds`).
+    pub fn n_clouds(&self) -> usize {
+        self.platforms.iter().map(|p| p.cloud + 1).max().unwrap_or(0)
+    }
+
+    /// Cloud id of node `i`.
+    pub fn cloud_of(&self, node: usize) -> usize {
+        self.platforms[node].cloud
+    }
+
+    /// Node indices belonging to cloud `c`, in node order.
+    pub fn cloud_members(&self, c: usize) -> Vec<usize> {
+        (0..self.platforms.len())
+            .filter(|&i| self.platforms[i].cloud == c)
+            .collect()
+    }
+
+    /// The WAN gateway node of cloud `c` — its first member. Intra-cloud
+    /// traffic terminates here; only the gateway talks across regions.
+    pub fn gateway(&self, c: usize) -> usize {
+        (0..self.platforms.len())
+            .find(|&i| self.platforms[i].cloud == c)
+            .unwrap_or_else(|| panic!("cloud {c} has no members"))
+    }
+
+    /// Members of every cloud, indexed by cloud id.
+    pub fn clouds(&self) -> Vec<Vec<usize>> {
+        let mut out = vec![Vec::new(); self.n_clouds()];
+        for (i, p) in self.platforms.iter().enumerate() {
+            out[p.cloud].push(i);
+        }
+        out
     }
 
     /// Total cost of `hours` wall-clock on all platforms.
@@ -173,5 +246,37 @@ mod tests {
     fn cost_accumulates() {
         let c = ClusterSpec::homogeneous(2);
         assert!((c.cost(2.0) - 12.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_node_clouds_are_their_own_gateways() {
+        let c = ClusterSpec::paper_default();
+        assert_eq!(c.n_clouds(), 3);
+        for i in 0..3 {
+            assert_eq!(c.cloud_of(i), i);
+            assert_eq!(c.gateway(i), i);
+            assert_eq!(c.cloud_members(i), vec![i]);
+        }
+    }
+
+    #[test]
+    fn scaled_preset_groups_nodes_by_cloud() {
+        let c = ClusterSpec::paper_default_scaled(4);
+        assert_eq!(c.n(), 12);
+        assert_eq!(c.n_clouds(), 3);
+        assert_eq!(c.cloud_members(1), vec![4, 5, 6, 7]);
+        assert_eq!(c.gateway(2), 8);
+        // nodes of a cloud share the cloud's profile
+        for i in c.cloud_members(0) {
+            assert_eq!(c.platforms[i].region, "us-east");
+            assert!((c.platforms[i].compute_speed - 1.0).abs() < 1e-12);
+        }
+        // scaled(1) is exactly the paper default
+        let p1 = ClusterSpec::paper_default_scaled(1);
+        assert_eq!(p1.n(), 3);
+        assert_eq!(p1.platforms[0].name, "aws");
+        let groups = c.clouds();
+        assert_eq!(groups.len(), 3);
+        assert_eq!(groups[2], vec![8, 9, 10, 11]);
     }
 }

@@ -31,6 +31,10 @@ pub struct ExperimentConfig {
     pub eval_batches: usize,
 
     pub aggregation: AggregationKind,
+    /// two-level aggregation: reduce inside each cloud at its gateway,
+    /// exchange one partial aggregate per cloud over the WAN (requires a
+    /// synchronous aggregation algorithm)
+    pub hierarchical: bool,
     pub partition: PartitionStrategy,
     pub protocol: Protocol,
     pub streams: usize,
@@ -68,6 +72,7 @@ impl Default for ExperimentConfig {
             eval_every: 5,
             eval_batches: 4,
             aggregation: AggregationKind::FedAvg,
+            hierarchical: false,
             partition: PartitionStrategy::DirichletSkew { alpha: 0.3 },
             protocol: Protocol::Grpc,
             streams: 16,
@@ -102,6 +107,15 @@ impl ExperimentConfig {
         }
         if self.streams == 0 {
             bail!("streams must be >= 1");
+        }
+        if self.hierarchical
+            && matches!(self.aggregation, AggregationKind::Async { .. })
+        {
+            bail!(
+                "hierarchical aggregation factors a synchronous barrier \
+                 into per-cloud reduces; async applies updates on arrival \
+                 — use fedavg, dynamic or gradient"
+            );
         }
         if self.secure_agg {
             // masked sums are only compatible with fixed pre-scaling:
@@ -153,6 +167,7 @@ impl ExperimentConfig {
             c.aggregation = AggregationKind::parse(s)
                 .with_context(|| format!("unknown aggregation {s:?}"))?;
         }
+        c.hierarchical = v.opt_bool("hierarchical", c.hierarchical);
         if let Some(s) = v.get("partition").and_then(Json::as_str) {
             c.partition = PartitionStrategy::parse(s)
                 .with_context(|| format!("unknown partition {s:?}"))?;
@@ -229,6 +244,7 @@ impl ExperimentConfig {
             ("eval_every", Json::num(self.eval_every as f64)),
             ("eval_batches", Json::num(self.eval_batches as f64)),
             ("aggregation", Json::str(self.aggregation.name())),
+            ("hierarchical", Json::Bool(self.hierarchical)),
             ("partition", Json::str(partition)),
             ("protocol", Json::str(self.protocol.name())),
             ("streams", Json::num(self.streams as f64)),
@@ -290,6 +306,20 @@ mod tests {
         assert!(ExperimentConfig::from_json(r#"{"aggregation": "x"}"#).is_err());
         assert!(ExperimentConfig::from_json(r#"{"protocol": "smtp"}"#).is_err());
         assert!(ExperimentConfig::from_json("{").is_err());
+    }
+
+    #[test]
+    fn hierarchical_constraints() {
+        let c = ExperimentConfig::from_json(
+            r#"{"hierarchical": true, "aggregation": "async"}"#,
+        );
+        assert!(c.is_err());
+        let c = ExperimentConfig::from_json(
+            r#"{"hierarchical": true, "aggregation": "dynamic"}"#,
+        )
+        .unwrap();
+        assert!(c.hierarchical);
+        assert!(c.to_json().to_string().contains("\"hierarchical\":true"));
     }
 
     #[test]

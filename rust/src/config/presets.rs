@@ -18,6 +18,8 @@ pub fn preset_names() -> Vec<&'static str> {
         "paper-dynamic",
         "paper-gradient",
         "paper-async",
+        "paper-hier",
+        "hier-gradient",
         "fig-partition-fixed",
         "fig-partition-dynamic",
         "fig-protocol-grpc",
@@ -82,6 +84,24 @@ pub fn preset(name: &str) -> Option<ExperimentConfig> {
         },
         "paper-async" => ExperimentConfig {
             aggregation: AggregationKind::Async { alpha: 0.6 },
+            ..paper_base
+        },
+
+        // ------------- hierarchical two-level aggregation (run with a
+        // scaled cluster, e.g. ClusterSpec::paper_default_scaled(16) or
+        // the CLI's --nodes-per-cloud; with single-node clouds it
+        // degenerates to the star)
+        "paper-hier" => ExperimentConfig {
+            aggregation: AggregationKind::FedAvg,
+            hierarchical: true,
+            compression: Compression::None,
+            ..paper_base
+        },
+        "hier-gradient" => ExperimentConfig {
+            aggregation: AggregationKind::GradientAgg,
+            hierarchical: true,
+            compression: Compression::TopK { ratio: 0.6 },
+            error_feedback: true,
             ..paper_base
         },
 

@@ -2,7 +2,7 @@
 
 use anyhow::{Context, Result};
 
-use crate::aggregation::{self, Aggregator, ClientUpdate};
+use crate::aggregation::{self, Aggregator, ClientUpdate, HierarchicalAggregator};
 use crate::cluster::ClusterSpec;
 use crate::compress::Compressor;
 use crate::config::ExperimentConfig;
@@ -10,13 +10,13 @@ use crate::crypto::SecureAggregator;
 use crate::data::{BatchIter, SyntheticCorpus};
 use crate::metrics::{RoundRecord, RunResult};
 use crate::model::ParamSet;
-use crate::netsim::Wan;
+use crate::netsim::{LinkClass, Wan};
 use crate::optimizer::Optimizer;
 use crate::partition::{GranularityController, LoadMonitor, PartitionPlan, PartitionPlanner};
 use crate::privacy::PrivacyAccountant;
 use crate::runtime::ComputeBackend;
 use crate::transport::Channel;
-use crate::worker::CloudWorker;
+use crate::worker::{CloudWorker, LocalRound};
 
 /// Fraction of documents held out for evaluation.
 const EVAL_FRACTION: f64 = 0.1;
@@ -28,10 +28,17 @@ pub struct Coordinator<'a, B: ComputeBackend + ?Sized> {
     pub(crate) backend: &'a B,
     pub(crate) wan: Wan,
     pub(crate) workers: Vec<CloudWorker>,
-    /// per-worker uplink / downlink channels (leader is node 0's colo;
-    /// worker w uses WAN node w, leader node 0 — worker 0 is local)
+    /// per-worker uplink / downlink channels. Star mode: worker w ↔
+    /// leader (node 0; worker 0 is local). Hierarchical mode: worker w ↔
+    /// its cloud's gateway node (gateway members are local to it).
     pub(crate) up: Vec<Channel>,
     pub(crate) down: Vec<Channel>,
+    /// hierarchical mode only: per-cloud gateway ↔ leader channels
+    /// carrying the partial aggregates / the broadcast's WAN leg
+    pub(crate) gw_up: Vec<Channel>,
+    pub(crate) gw_down: Vec<Channel>,
+    /// two-level reducer (hierarchical mode only)
+    pub(crate) hier: Option<HierarchicalAggregator>,
     pub(crate) global: ParamSet,
     pub(crate) aggregator: Box<dyn Aggregator>,
     pub(crate) monitor: LoadMonitor,
@@ -109,9 +116,15 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
                 seq_len,
                 cfg.seed,
             ));
+            // star: worker ↔ leader; hierarchical: worker ↔ its gateway
+            let hub = if cfg.hierarchical {
+                cluster.gateway(cluster.cloud_of(i))
+            } else {
+                0
+            };
             up.push(Channel::new(
                 i,
-                0,
+                hub,
                 cfg.protocol,
                 cfg.streams,
                 Compressor::new(cfg.compression, cfg.seed ^ i as u64),
@@ -120,7 +133,7 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
                 secret,
             ));
             down.push(Channel::new(
-                0,
+                hub,
                 i,
                 cfg.protocol,
                 cfg.streams,
@@ -130,6 +143,44 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
                 secret,
             ));
         }
+
+        // hierarchical mode: one gateway↔leader channel pair per cloud.
+        // The uplink carries the cloud's partial aggregate through the
+        // same codec settings as the worker uplinks (equal-codec
+        // comparison with the star), the downlink the dense broadcast.
+        let mut gw_up = Vec::new();
+        let mut gw_down = Vec::new();
+        let hier = if cfg.hierarchical {
+            for c in 0..cluster.n_clouds() {
+                let gw = cluster.gateway(c);
+                gw_up.push(Channel::new(
+                    gw,
+                    0,
+                    cfg.protocol,
+                    cfg.streams,
+                    Compressor::new(cfg.compression, cfg.seed ^ ((0x6A7Eu64 << 16) | c as u64)),
+                    cfg.error_feedback,
+                    n_params,
+                    secret,
+                ));
+                gw_down.push(Channel::new(
+                    0,
+                    gw,
+                    cfg.protocol,
+                    cfg.streams,
+                    Compressor::new(crate::compress::Compression::None, 0),
+                    false,
+                    n_params,
+                    secret,
+                ));
+            }
+            Some(HierarchicalAggregator::new(
+                cfg.aggregation,
+                Optimizer::new(cfg.server_opt, cfg.server_lr),
+            )?)
+        } else {
+            None
+        };
 
         let secure = cfg
             .secure_agg
@@ -160,6 +211,9 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
             workers,
             up,
             down,
+            gw_up,
+            gw_down,
+            hier,
             global: init,
             planner,
             plan,
@@ -227,27 +281,230 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
         ))
     }
 
-    /// Secure-aggregation path: mask pre-scaled updates, sum, unmask.
-    /// Returns the aggregate delta the leader applies.
+    /// Mask one update for secure aggregation, pre-scaled by its *global*
+    /// FedAvg weight n_i/n (so masked *sums* are the FedAvg / mean-
+    /// gradient aggregate). Shared by the star and hierarchical paths.
+    fn mask_scaled(
+        &self,
+        u: &ClientUpdate,
+        n_total: f64,
+        round: u64,
+    ) -> crate::crypto::MaskedUpdate {
+        let sa = self.secure.as_ref().expect("secure agg enabled");
+        let mut scaled = u.delta.clone();
+        scaled.scale((u.n_samples as f64 / n_total) as f32);
+        sa.mask(u.worker, round, &scaled.to_flat())
+    }
+
+    /// Secure-aggregation path (star): mask pre-scaled updates, sum,
+    /// unmask — `unmask_sum` enforces the every-worker-exactly-once
+    /// invariant the masks need to cancel.
     pub(crate) fn secure_aggregate(
         &mut self,
         updates: &[ClientUpdate],
     ) -> ParamSet {
-        let sa = self.secure.as_ref().expect("secure agg enabled");
         let n_total: f64 = updates.iter().map(|u| u.n_samples as f64).sum();
         let round = self.global_version;
         let masked: Vec<crate::crypto::MaskedUpdate> = updates
             .iter()
-            .map(|u| {
-                // pre-scale by n_i/n so the masked *sum* is the FedAvg /
-                // mean-gradient aggregate
-                let mut scaled = u.delta.clone();
-                scaled.scale((u.n_samples as f64 / n_total) as f32);
-                sa.mask(u.worker, round, &scaled.to_flat())
-            })
+            .map(|u| self.mask_scaled(u, n_total, round))
             .collect();
-        let sum = sa.unmask_sum(&masked);
+        let sum = self
+            .secure
+            .as_ref()
+            .expect("secure agg enabled")
+            .unmask_sum(&masked);
         ParamSet::from_flat(&sum, &updates[0].delta).expect("shape preserved")
+    }
+
+    /// Secure-aggregation, gateway side: mask each member update and sum.
+    /// The pairwise masks span all workers, so a single cloud's partial
+    /// stays masked — they only cancel once the leader sums every cloud's
+    /// partial (`run_hier` asserts full worker coverage before applying).
+    pub(crate) fn secure_partial(
+        &self,
+        updates: &[ClientUpdate],
+        n_total: f64,
+        round: u64,
+    ) -> ParamSet {
+        assert!(!updates.is_empty());
+        let mut sum = vec![0.0f32; updates[0].delta.numel()];
+        for u in updates {
+            let masked = self.mask_scaled(u, n_total, round);
+            for (s, x) in sum.iter_mut().zip(&masked.data) {
+                *s += x;
+            }
+        }
+        ParamSet::from_flat(&sum, &updates[0].delta).expect("shape preserved")
+    }
+
+    /// Apply a secure-aggregation sum (FedAvg delta or mean gradient) to
+    /// the global model.
+    pub(crate) fn apply_masked_aggregate(&mut self, agg: &ParamSet) {
+        match self.cfg.aggregation.update_kind() {
+            crate::aggregation::UpdateKind::ParamDelta => {
+                self.global.axpy(1.0, agg);
+            }
+            crate::aggregation::UpdateKind::Gradient => {
+                // the masked sum is the weighted mean gradient
+                self.global.axpy(-self.cfg.server_lr, agg);
+            }
+        }
+    }
+
+    /// Per-worker local step counts for one synchronous round ("local
+    /// epoch over the partition" semantics — shard share controls
+    /// per-round load when `proportional_local_work` is on).
+    pub(crate) fn local_step_counts(&self) -> Vec<usize> {
+        let base_steps = if self.cfg.adaptive_granularity {
+            self.granularity.local_steps()
+        } else {
+            self.cfg.local_steps
+        };
+        let total_samples: f64 =
+            self.workers.iter().map(|w| w.n_samples as f64).sum();
+        let budget = (base_steps * self.workers.len()) as f64;
+        self.workers
+            .iter()
+            .map(|w| {
+                if self.cfg.proportional_local_work {
+                    ((budget * w.n_samples as f64 / total_samples).round()
+                        as usize)
+                        .max(1)
+                } else {
+                    base_steps
+                }
+            })
+            .collect()
+    }
+
+    /// Phase 1 of every synchronous round: run local training on all
+    /// workers against the current global model (sequential on the host;
+    /// the caller turns each `compute_secs` into a completion event).
+    pub(crate) fn train_all_workers(
+        &mut self,
+        step_counts: &[usize],
+    ) -> Result<Vec<LocalRound>> {
+        let kind = self.cfg.aggregation.update_kind();
+        let mut locals = Vec::with_capacity(self.workers.len());
+        for w in 0..self.workers.len() {
+            let r = self.workers[w].local_round(
+                self.backend,
+                &self.global,
+                kind,
+                step_counts[w],
+                self.cfg.local_lr,
+                self.cfg.base_step_secs,
+                &self.cfg.dp,
+            )?;
+            self.host_secs += r.host_secs;
+            locals.push(r);
+        }
+        Ok(locals)
+    }
+
+    /// Shared tail of every synchronous round: commit time/byte totals,
+    /// run the Figure-2 monitor cycle, eval on schedule and assemble the
+    /// `RoundRecord`. `barrier_at`/`round_end` come from the round's
+    /// event engine.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn finalize_round(
+        &mut self,
+        round: usize,
+        locals: &[LocalRound],
+        round_start: f64,
+        barrier_at: f64,
+        round_end: f64,
+        round_wire: u64,
+    ) -> Result<RoundRecord> {
+        self.wire_bytes += round_wire;
+        self.sim_secs = round_end;
+
+        let compute_times: Vec<f64> =
+            locals.iter().map(|l| l.compute_secs).collect();
+        let compute_max =
+            compute_times.iter().cloned().fold(0.0f64, f64::max);
+        let comm_secs = (barrier_at - round_start - compute_max)
+            + (round_end - barrier_at);
+        self.monitor_and_adjust(round, &compute_times, comm_secs)?;
+
+        let (eval_loss, eval_acc) = self.round_eval(round)?;
+        let train_loss = locals.iter().map(|l| l.mean_loss).sum::<f32>()
+            / locals.len() as f32;
+        log::debug!(
+            "round {round}: train={train_loss:.3} eval={eval_loss:?} \
+             sim={:.0}s wire={} inter-region={}",
+            self.sim_secs,
+            self.wire_bytes,
+            self.wan.inter_region_bytes()
+        );
+
+        Ok(RoundRecord {
+            round,
+            sim_secs: self.sim_secs,
+            wire_bytes: self.wire_bytes,
+            train_loss,
+            eval_loss,
+            eval_acc,
+            platform_secs: compute_times,
+            epsilon: self.accountant.epsilon(),
+            partition_gen: self.plan.generation,
+        })
+    }
+
+    /// End-of-round Figure-2 cycle, shared by the sync schedulers:
+    /// granularity observation + load monitoring + re-partitioning.
+    /// `comm_secs` is the round's communication share of wall-clock.
+    pub(crate) fn monitor_and_adjust(
+        &mut self,
+        round: usize,
+        compute_times: &[f64],
+        comm_secs: f64,
+    ) -> Result<()> {
+        if self.cfg.adaptive_granularity {
+            let compute_max =
+                compute_times.iter().cloned().fold(0.0, f64::max);
+            self.granularity.observe(compute_max, comm_secs.max(0.0));
+        }
+        if self.monitor.observe(compute_times) {
+            let caps = self.monitor.capacity_estimates();
+            if let Some(plan) =
+                self.planner.replan(&self.corpus, &self.cluster, &caps)
+            {
+                log::info!(
+                    "round {round}: re-partitioning (gen {} -> {}), caps {:?}",
+                    self.plan.generation,
+                    plan.generation,
+                    caps
+                );
+                self.plan = plan;
+                for (w, shard) in self.plan.shards.iter().enumerate() {
+                    self.workers[w].set_shard(
+                        &shard.tokens,
+                        self.batch_size,
+                        self.seq_len,
+                        self.cfg.seed ^ self.plan.generation,
+                    );
+                }
+                self.account_distribution()?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Eval on schedule: every `eval_every` rounds and on the last round.
+    pub(crate) fn round_eval(
+        &mut self,
+        round: usize,
+    ) -> Result<(Option<f32>, Option<f64>)> {
+        if round % self.cfg.eval_every.max(1) == 0
+            || round + 1 == self.cfg.rounds
+        {
+            let (l, a) = self.evaluate()?;
+            Ok((Some(l), Some(a)))
+        } else {
+            Ok((None, None))
+        }
     }
 
     /// Current partition generation (diagnostics / tests).
@@ -268,6 +525,17 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
     /// Total wire bytes so far.
     pub fn wire_bytes(&self) -> u64 {
         self.wire_bytes
+    }
+
+    /// Bytes that crossed WAN links of `class` so far (per-link ledger).
+    pub fn wire_bytes_class(&self, class: LinkClass) -> u64 {
+        self.wan.wire_bytes_class(class)
+    }
+
+    /// Bytes that paid the inter-region WAN — the hierarchical-vs-star
+    /// headline number.
+    pub fn inter_region_wire_bytes(&self) -> u64 {
+        self.wan.inter_region_bytes()
     }
 
     /// Snapshot the current run state (see [`crate::checkpoint`]).

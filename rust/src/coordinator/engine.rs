@@ -1,0 +1,137 @@
+//! Discrete-event engine shared by every scheduler.
+//!
+//! One min-heap of `(time, seq, event)` drives simulated time for the
+//! synchronous barrier, the asynchronous apply-on-arrival loop and the
+//! hierarchical two-level reduce alike: local-training completions,
+//! intra-cloud hops, WAN uplinks and broadcasts are all timed events, so
+//! per-hop times overlap exactly as they would on real hardware instead
+//! of being summed ad hoc per phase.
+//!
+//! Determinism: ties on `at` are broken by insertion order (`seq`), and
+//! every consumer schedules in a deterministic order, so the pop sequence
+//! — and with it the order in which the WAN's noise RNG is consumed — is
+//! a pure function of the experiment seed.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+struct Scheduled<E> {
+    at: f64,
+    seq: u64,
+    event: E,
+}
+
+impl<E> PartialEq for Scheduled<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl<E> Eq for Scheduled<E> {}
+impl<E> PartialOrd for Scheduled<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Scheduled<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // min-heap by (time, insertion seq); BinaryHeap is a max-heap,
+        // so compare reversed
+        other
+            .at
+            .partial_cmp(&self.at)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Simulated-time event queue. `now` only moves forward, to the
+/// timestamp of the last popped event.
+pub(crate) struct EventEngine<E> {
+    heap: BinaryHeap<Scheduled<E>>,
+    now: f64,
+    seq: u64,
+}
+
+impl<E> EventEngine<E> {
+    pub fn new(start: f64) -> EventEngine<E> {
+        EventEngine { heap: BinaryHeap::new(), now: start, seq: 0 }
+    }
+
+    /// Current simulated time.
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Schedule `event` at absolute time `at` (clamped to now: events
+    /// cannot fire in the past).
+    pub fn at(&mut self, at: f64, event: E) {
+        let at = at.max(self.now);
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Scheduled { at, seq, event });
+    }
+
+    /// Schedule `event` `delay` seconds from now.
+    pub fn after(&mut self, delay: f64, event: E) {
+        debug_assert!(delay >= 0.0, "negative delay {delay}");
+        self.at(self.now + delay.max(0.0), event);
+    }
+
+    /// Pop the earliest event, advancing `now` to its timestamp.
+    pub fn pop(&mut self) -> Option<E> {
+        let s = self.heap.pop()?;
+        debug_assert!(s.at >= self.now, "time went backwards");
+        self.now = self.now.max(s.at);
+        Some(s.event)
+    }
+
+    #[allow(dead_code)] // diagnostics + tests
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    #[allow(dead_code)] // diagnostics + tests
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order_and_advances_now() {
+        let mut e = EventEngine::new(10.0);
+        e.at(13.0, "c");
+        e.at(11.0, "a");
+        e.after(2.0, "b"); // 12.0
+        assert_eq!(e.len(), 3);
+        assert_eq!(e.pop(), Some("a"));
+        assert_eq!(e.now(), 11.0);
+        assert_eq!(e.pop(), Some("b"));
+        assert_eq!(e.pop(), Some("c"));
+        assert_eq!(e.now(), 13.0);
+        assert!(e.is_empty());
+        assert_eq!(e.pop(), None);
+    }
+
+    #[test]
+    fn ties_break_by_insertion_order() {
+        let mut e = EventEngine::new(0.0);
+        e.at(5.0, 1);
+        e.at(5.0, 2);
+        e.at(5.0, 3);
+        assert_eq!(e.pop(), Some(1));
+        assert_eq!(e.pop(), Some(2));
+        assert_eq!(e.pop(), Some(3));
+    }
+
+    #[test]
+    fn past_events_clamp_to_now() {
+        let mut e = EventEngine::new(100.0);
+        e.at(1.0, "late");
+        assert_eq!(e.pop(), Some("late"));
+        assert_eq!(e.now(), 100.0);
+    }
+}

@@ -2,12 +2,17 @@
 //!
 //! Owns the global model, the WAN, the partition plan and the aggregation
 //! algorithm; drives synchronous rounds (FedAvg / dynamic weighted /
-//! gradient aggregation) or the asynchronous event loop (formula 4), with
-//! the full §3.1 partitioning cycle (granularity control, load balancing,
-//! encrypted distribution, real-time monitoring) in the loop.
+//! gradient aggregation), the hierarchical two-level reduce, or the
+//! asynchronous event loop (formula 4), with the full §3.1 partitioning
+//! cycle (granularity control, load balancing, encrypted distribution,
+//! real-time monitoring) in the loop. All schedulers are policies over
+//! one discrete-event engine ([`engine`]), so per-hop communication
+//! times overlap instead of being summed ad hoc.
 
 mod build;
+mod engine;
 mod run_async;
+mod run_hier;
 mod run_sync;
 
 pub use build::Coordinator;

@@ -3,49 +3,22 @@
 //! No barrier: each platform trains against its latest model copy and
 //! ships its delta when done; the leader applies it immediately with the
 //! staleness-discounted mixing rate and unicasts the fresh model back.
-//! Simulated time advances through an event queue ordered by completion
-//! time, so fast platforms lap slow ones — exactly the behaviour that
-//! makes async aggregation shine under stragglers.
+//! Simulated time advances through the shared [`EventEngine`], so fast
+//! platforms lap slow ones — exactly the behaviour that makes async
+//! aggregation shine under stragglers. Uplinks are priced over the
+//! routed topology, so a worker deep inside a cloud pays its gateway hop
+//! plus the WAN leg.
 
-use std::cmp::Ordering;
-use std::collections::BinaryHeap;
 use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::aggregation::ClientUpdate;
 use crate::coordinator::build::Coordinator;
+use crate::coordinator::engine::EventEngine;
 use crate::metrics::{RoundRecord, RunResult};
 use crate::model::ParamSet;
 use crate::runtime::ComputeBackend;
-
-/// A worker finishing local training at `at` sim-seconds.
-struct Completion {
-    at: f64,
-    worker: usize,
-}
-
-impl PartialEq for Completion {
-    fn eq(&self, other: &Self) -> bool {
-        self.at == other.at && self.worker == other.worker
-    }
-}
-impl Eq for Completion {}
-impl PartialOrd for Completion {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for Completion {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // min-heap by time (BinaryHeap is a max-heap)
-        other
-            .at
-            .partial_cmp(&self.at)
-            .unwrap_or(Ordering::Equal)
-            .then_with(|| other.worker.cmp(&self.worker))
-    }
-}
 
 impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
     /// Run the async loop for `cfg.rounds * n_workers` aggregations
@@ -56,7 +29,8 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
         let total_aggs = self.cfg.rounds * n;
         let kind = self.cfg.aggregation.update_kind();
 
-        let mut queue = BinaryHeap::new();
+        // event payload: the worker whose local training completed
+        let mut engine: EventEngine<usize> = EventEngine::new(self.sim_secs);
         // in-flight updates awaiting pickup, per worker
         let mut pending: Vec<Option<(ParamSet, f32)>> =
             (0..n).map(|_| None).collect();
@@ -76,7 +50,7 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
                 &self.cfg.dp,
             )?;
             self.host_secs += r.host_secs;
-            queue.push(Completion { at: t_base + r.compute_secs, worker: w });
+            engine.at(t_base + r.compute_secs, w);
             pending[w] = Some((r.update, r.mean_loss));
         }
 
@@ -84,18 +58,22 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
         let mut train_loss_acc = 0.0f32;
         let mut reached = false;
         while aggs < total_aggs {
-            let Completion { at, worker } = queue.pop().expect("queue nonempty");
+            let worker = engine.pop().expect("queue nonempty");
+            let at = engine.now();
 
-            // --- uplink
+            // --- uplink (worker 0 is leader-colocated: codec loopback,
+            // no WAN/encrypt hop — its delta is compressed like everyone
+            // else's)
             let (update, mean_loss) =
                 pending[worker].take().expect("pending update");
             let (delivered, up_secs) = if worker == 0 {
-                (update, 0.0)
+                (self.up[0].codec_loopback(&update)?, 0.0)
             } else {
                 let d = self.up[worker].send_update(
                     &update,
                     mean_loss,
                     self.workers[worker].n_samples,
+                    1.0,
                     &mut self.wan,
                 )?;
                 self.wire_bytes += d.wire_bytes;
@@ -144,7 +122,7 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
                 &self.cfg.dp,
             )?;
             self.host_secs += r.host_secs;
-            queue.push(Completion { at: restart_at + r.compute_secs, worker });
+            engine.at(restart_at + r.compute_secs, worker);
             pending[worker] = Some((r.update, r.mean_loss));
 
             // --- pseudo-round bookkeeping: every n aggregations

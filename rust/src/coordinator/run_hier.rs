@@ -1,0 +1,242 @@
+//! Hierarchical synchronous round: reduce inside each cloud at its
+//! gateway, exchange one partial aggregate per cloud over the WAN.
+//!
+//! Event flow per round (all on the shared [`EventEngine`], so
+//! intra-cloud hops, WAN legs and other clouds' compute overlap):
+//!
+//! ```text
+//! worker w:   ComputeDone ──codec──▶ AtGateway(cloud)
+//! cloud c:    last AtGateway ──reduce──▶ gw_up WAN leg ──▶ PartialArrived
+//! leader:     all PartialArrived ──▶ cross-cloud reduce ──▶ broadcast
+//! broadcast:  leader ──▶ GwBcast(c) ──▶ gateway fans out ──▶ BcastDone(w)
+//! ```
+//!
+//! With secure aggregation the gateway forwards the *masked* partial sum
+//! (in deployment each worker masks before its uplink; the simulation
+//! masks at the gateway, which carries identical bytes and timing since
+//! secure aggregation requires dense uncompressed updates). Pairwise
+//! masks span all workers, so a single cloud's partial stays masked and
+//! only the leader's full cross-cloud sum cancels them. DP privatization
+//! happens at the worker in `local_round`, before anything ships.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::aggregation::{ClientUpdate, PartialAggregate};
+use crate::coordinator::build::Coordinator;
+use crate::coordinator::engine::EventEngine;
+use crate::metrics::RoundRecord;
+use crate::runtime::ComputeBackend;
+
+/// Hierarchical round events.
+enum Ev {
+    /// worker finished local training
+    ComputeDone(usize),
+    /// one member update reached its cloud's gateway
+    AtGateway { cloud: usize },
+    /// the cloud's partial aggregate reached the leader
+    PartialArrived { cloud: usize },
+    /// the broadcast reached a cloud's gateway
+    GwBcast { cloud: usize },
+    /// the broadcast reached a member worker
+    BcastDone(usize),
+}
+
+impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
+    /// One hierarchical round (see module docs).
+    pub(crate) fn hier_round(&mut self, round: usize) -> Result<RoundRecord> {
+        let n = self.workers.len();
+        let clouds = self.cluster.clouds();
+        let n_clouds = clouds.len();
+        let step_counts = self.local_step_counts();
+        let round_start = self.sim_secs;
+        let mut engine: EventEngine<Ev> = EventEngine::new(round_start);
+
+        // --- phase 1: local training on every worker node
+        let locals = self.train_all_workers(&step_counts)?;
+        for (w, r) in locals.iter().enumerate() {
+            engine.at(round_start + r.compute_secs, Ev::ComputeDone(w));
+        }
+
+        let n_total: f64 =
+            self.workers.iter().map(|w| w.n_samples as f64).sum();
+        let sa_round = self.global_version;
+
+        // --- phase 2: intra-cloud uplinks, gateway reduces, WAN legs
+        let mut member_updates: Vec<Option<ClientUpdate>> =
+            (0..n).map(|_| None).collect();
+        let mut cloud_pending: Vec<usize> =
+            clouds.iter().map(|m| m.len()).collect();
+        let mut partials: Vec<Option<PartialAggregate>> =
+            (0..n_clouds).map(|_| None).collect();
+        let mut arrived_clouds = 0usize;
+        let mut round_wire = 0u64;
+        let mut agg_host = 0.0f64;
+
+        while arrived_clouds < n_clouds {
+            match engine.pop().expect("partial arrivals pending") {
+                Ev::ComputeDone(w) => {
+                    let c = self.cluster.cloud_of(w);
+                    let gw = clouds[c][0];
+                    // gateway members loop back through the codec; others
+                    // pay the intra-cloud hop
+                    let (delivered, secs, wire) = if w == gw {
+                        (self.up[w].codec_loopback(&locals[w].update)?, 0.0, 0)
+                    } else {
+                        let d = self.up[w].send_update(
+                            &locals[w].update,
+                            locals[w].mean_loss,
+                            self.workers[w].n_samples,
+                            1.0,
+                            &mut self.wan,
+                        )?;
+                        (d.update, d.secs, d.wire_bytes)
+                    };
+                    round_wire += wire;
+                    member_updates[w] = Some(ClientUpdate {
+                        worker: w,
+                        n_samples: self.workers[w].n_samples,
+                        local_loss: locals[w].mean_loss,
+                        delta: delivered,
+                        staleness: 0,
+                    });
+                    engine.after(secs, Ev::AtGateway { cloud: c });
+                }
+                Ev::AtGateway { cloud } => {
+                    cloud_pending[cloud] -= 1;
+                    if cloud_pending[cloud] > 0 {
+                        continue;
+                    }
+                    // every member is in: reduce at the gateway (members
+                    // taken in worker-id order so the summation does not
+                    // depend on arrival order), then ship the partial
+                    let members: Vec<ClientUpdate> = clouds[cloud]
+                        .iter()
+                        .map(|&w| member_updates[w].take().expect("member in"))
+                        .collect();
+                    let gw = clouds[cloud][0];
+                    let t0 = Instant::now();
+                    let partial = if self.secure.is_some() {
+                        let psum =
+                            self.secure_partial(&members, n_total, sa_round);
+                        PartialAggregate {
+                            cloud,
+                            n_members: members.len(),
+                            n_samples: members
+                                .iter()
+                                .map(|u| u.n_samples)
+                                .sum(),
+                            // masked partials recombine by plain summation
+                            weight: 0.0,
+                            mean_loss: 0.0,
+                            delta: psum,
+                        }
+                    } else {
+                        let hier = self.hier.as_ref().expect("hier mode");
+                        hier.reduce_cloud(cloud, &members)
+                    };
+                    agg_host += t0.elapsed().as_secs_f64();
+                    let (arrived, secs, wire) = if gw == 0 {
+                        // leader-colocated gateway: codec loopback only
+                        let delta =
+                            self.gw_up[cloud].codec_loopback(&partial.delta)?;
+                        (PartialAggregate { delta, ..partial }, 0.0, 0)
+                    } else {
+                        let d = self.gw_up[cloud].send_update(
+                            &partial.delta,
+                            partial.mean_loss,
+                            partial.n_samples,
+                            partial.weight,
+                            &mut self.wan,
+                        )?;
+                        (
+                            PartialAggregate {
+                                cloud,
+                                n_members: partial.n_members,
+                                n_samples: d.n_samples,
+                                weight: d.weight,
+                                mean_loss: d.local_loss,
+                                delta: d.update,
+                            },
+                            d.secs,
+                            d.wire_bytes,
+                        )
+                    };
+                    round_wire += wire;
+                    partials[cloud] = Some(arrived);
+                    engine.after(secs, Ev::PartialArrived { cloud });
+                }
+                Ev::PartialArrived { .. } => arrived_clouds += 1,
+                _ => unreachable!("no broadcast yet"),
+            }
+        }
+        let barrier_at = engine.now();
+        let partials: Vec<PartialAggregate> =
+            partials.into_iter().map(|p| p.expect("arrived")).collect();
+
+        // --- phase 3: cross-cloud reduce at the leader
+        let t0 = Instant::now();
+        if self.secure.is_some() {
+            // sum of masked partials over *all* clouds: masks only cancel
+            // with every worker present exactly once — the per-cloud
+            // bookkeeping guarantees it, this assert keeps it honest
+            // (applying a still-masked sum would silently train garbage)
+            let covered: usize = partials.iter().map(|p| p.n_members).sum();
+            assert_eq!(covered, n, "secure hier reduce must cover all workers");
+            let mut agg = partials[0].delta.clone();
+            let terms: Vec<(f32, &crate::model::ParamSet)> = partials[1..]
+                .iter()
+                .map(|p| (1.0f32, &p.delta))
+                .collect();
+            agg.axpy_many(&terms);
+            self.apply_masked_aggregate(&agg);
+        } else {
+            let hier = self.hier.as_mut().expect("hier mode");
+            hier.reduce_global(&mut self.global, &partials);
+        }
+        self.host_secs += agg_host + t0.elapsed().as_secs_f64();
+        self.accountant.record_round();
+        self.global_version += 1;
+
+        // --- phase 4: two-stage broadcast (leader → gateways → members)
+        for (c, members) in clouds.iter().enumerate() {
+            let gw = members[0];
+            if gw == 0 {
+                engine.after(0.0, Ev::GwBcast { cloud: c });
+            } else {
+                let (secs, wire) =
+                    self.gw_down[c].send_params(&self.global, &mut self.wan)?;
+                round_wire += wire;
+                engine.after(secs, Ev::GwBcast { cloud: c });
+            }
+        }
+        let mut have_model = 0usize;
+        while have_model < n {
+            match engine.pop().expect("broadcast events pending") {
+                Ev::GwBcast { cloud } => {
+                    have_model += 1; // the gateway itself
+                    for &m in &clouds[cloud][1..] {
+                        let (secs, wire) = self.down[m]
+                            .send_params(&self.global, &mut self.wan)?;
+                        round_wire += wire;
+                        engine.after(secs, Ev::BcastDone(m));
+                    }
+                }
+                Ev::BcastDone(_) => have_model += 1,
+                _ => unreachable!("uplinks all drained"),
+            }
+        }
+        let round_end = engine.now();
+
+        // --- phase 5: totals, monitor & adjust (Figure-2 cycle), eval
+        self.finalize_round(
+            round,
+            &locals,
+            round_start,
+            barrier_at,
+            round_end,
+            round_wire,
+        )
+    }
+}

@@ -1,5 +1,7 @@
 //! Synchronous round loop: FedAvg / dynamic weighted / gradient
-//! aggregation with the full Figure-2 partitioning cycle.
+//! aggregation with the full Figure-2 partitioning cycle, driven by the
+//! shared event engine (the barrier is simply "wait for every update's
+//! arrival event").
 
 use std::time::Instant;
 
@@ -7,15 +9,31 @@ use anyhow::Result;
 
 use crate::aggregation::ClientUpdate;
 use crate::coordinator::build::Coordinator;
+use crate::coordinator::engine::EventEngine;
 use crate::metrics::{RoundRecord, RunResult};
 use crate::runtime::ComputeBackend;
 
+/// Star-topology sync events.
+enum Ev {
+    /// worker finished local training
+    ComputeDone(usize),
+    /// worker's update reached the leader
+    Arrived(usize),
+    /// broadcast reached the worker
+    BcastDone(usize),
+}
+
 impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
-    /// Run synchronous rounds until `cfg.rounds` or the loss target.
+    /// Run synchronous rounds until `cfg.rounds` or the loss target
+    /// (star or hierarchical per the config).
     pub(crate) fn run_sync(&mut self) -> Result<RunResult> {
         let mut reached = false;
         for round in 0..self.cfg.rounds {
-            let record = self.sync_round(round)?;
+            let record = if self.hier.is_some() {
+                self.hier_round(round)?
+            } else {
+                self.sync_round(round)?
+            };
             let hit_target = match (record.eval_loss, self.cfg.target_loss) {
                 (Some(l), Some(t)) => (l as f64) <= t,
                 _ => false,
@@ -33,183 +51,98 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
         self.finish(reached)
     }
 
-    /// One synchronous round: local training on every platform →
+    /// One synchronous star round: local training on every platform →
     /// (DP → compress → encrypt → WAN) → barrier → aggregate → broadcast
-    /// → monitor/re-partition.
+    /// → monitor/re-partition. Uplinks overlap with slower workers'
+    /// compute; the barrier fires at the last arrival event.
     fn sync_round(&mut self, round: usize) -> Result<RoundRecord> {
-        let base_steps = if self.cfg.adaptive_granularity {
-            self.granularity.local_steps()
-        } else {
-            self.cfg.local_steps
-        };
-        let kind = self.cfg.aggregation.update_kind();
-
-        // "local epoch over the partition" semantics: each platform's
-        // step count tracks its shard share, so partition sizing controls
-        // per-round load (the Figure-2 balancing lever)
-        let total_samples: f64 = self
-            .workers
-            .iter()
-            .map(|w| w.n_samples as f64)
-            .sum();
-        let proportional = self.cfg.proportional_local_work;
-        let budget = (base_steps * self.workers.len()) as f64;
-        let step_counts: Vec<usize> = self
-            .workers
-            .iter()
-            .map(|w| {
-                if proportional {
-                    ((budget * w.n_samples as f64 / total_samples).round()
-                        as usize)
-                        .max(1)
-                } else {
-                    base_steps
-                }
-            })
-            .collect();
+        let n = self.workers.len();
+        let step_counts = self.local_step_counts();
+        let round_start = self.sim_secs;
+        let mut engine: EventEngine<Ev> = EventEngine::new(round_start);
 
         // --- phase 1: local training (platforms run in parallel in sim
         // time; sequentially on the host against the shared backend)
-        let mut locals = Vec::with_capacity(self.workers.len());
-        for w in 0..self.workers.len() {
-            let steps = step_counts[w];
-            let r = self.workers[w].local_round(
-                self.backend,
-                &self.global,
-                kind,
-                steps,
-                self.cfg.local_lr,
-                self.cfg.base_step_secs,
-                &self.cfg.dp,
-            )?;
-            self.host_secs += r.host_secs;
-            locals.push(r);
+        let locals = self.train_all_workers(&step_counts)?;
+        for (w, r) in locals.iter().enumerate() {
+            engine.at(round_start + r.compute_secs, Ev::ComputeDone(w));
         }
 
-        // --- phase 2: uplink through the real pipeline
-        let mut updates = Vec::with_capacity(self.workers.len());
-        let mut platform_secs = Vec::with_capacity(self.workers.len());
+        // --- phase 2: uplinks through the real pipeline, as events.
+        // Worker 0 is leader-colocated: its update still passes the codec
+        // (loopback), skipping only the WAN/encrypt hop, so aggregation
+        // sees uniformly-compressed updates.
+        let mut updates: Vec<Option<ClientUpdate>> =
+            (0..n).map(|_| None).collect();
         let mut round_wire = 0u64;
-        for (w, local) in locals.iter().enumerate() {
-            let (delivered, up_secs, wire) = if w == 0 {
-                // leader-colocated platform: loopback, no WAN
-                (local.update.clone(), 0.0, 0u64)
-            } else {
-                let d = self.up[w].send_update(
-                    &local.update,
-                    local.mean_loss,
-                    self.workers[w].n_samples,
-                    &mut self.wan,
-                )?;
-                (d.update, d.secs, d.wire_bytes)
-            };
-            round_wire += wire;
-            platform_secs.push(local.compute_secs + up_secs);
-            updates.push(ClientUpdate {
-                worker: w,
-                n_samples: self.workers[w].n_samples,
-                local_loss: local.mean_loss,
-                delta: delivered,
-                staleness: 0,
-            });
+        let mut n_arrived = 0usize;
+        while n_arrived < n {
+            match engine.pop().expect("arrival events pending") {
+                Ev::ComputeDone(w) => {
+                    let (delivered, up_secs, wire) = if w == 0 {
+                        (self.up[0].codec_loopback(&locals[w].update)?, 0.0, 0)
+                    } else {
+                        let d = self.up[w].send_update(
+                            &locals[w].update,
+                            locals[w].mean_loss,
+                            self.workers[w].n_samples,
+                            1.0,
+                            &mut self.wan,
+                        )?;
+                        (d.update, d.secs, d.wire_bytes)
+                    };
+                    round_wire += wire;
+                    updates[w] = Some(ClientUpdate {
+                        worker: w,
+                        n_samples: self.workers[w].n_samples,
+                        local_loss: locals[w].mean_loss,
+                        delta: delivered,
+                        staleness: 0,
+                    });
+                    engine.after(up_secs, Ev::Arrived(w));
+                }
+                Ev::Arrived(_) => n_arrived += 1,
+                Ev::BcastDone(_) => unreachable!("no broadcast yet"),
+            }
         }
+        let barrier_at = engine.now();
+        let updates: Vec<ClientUpdate> =
+            updates.into_iter().map(|u| u.expect("arrived")).collect();
 
-        // --- phase 3: barrier + aggregation (leader host CPU measured)
-        let barrier_secs =
-            platform_secs.iter().cloned().fold(0.0f64, f64::max);
+        // --- phase 3: aggregation at the barrier (leader host CPU is
+        // profiled, not added to simulated time)
         let t0 = Instant::now();
         if self.secure.is_some() {
             let agg = self.secure_aggregate(&updates);
-            // masked path: FedAvg-style application of the summed delta
-            match self.cfg.aggregation.update_kind() {
-                crate::aggregation::UpdateKind::ParamDelta => {
-                    self.global.axpy(1.0, &agg);
-                }
-                crate::aggregation::UpdateKind::Gradient => {
-                    // the masked sum is the weighted mean gradient
-                    self.global.axpy(-self.cfg.server_lr, &agg);
-                }
-            }
+            self.apply_masked_aggregate(&agg);
         } else {
             self.aggregator.aggregate(&mut self.global, &updates);
         }
-        let agg_host = t0.elapsed().as_secs_f64();
-        self.host_secs += agg_host;
+        self.host_secs += t0.elapsed().as_secs_f64();
         self.accountant.record_round();
         self.global_version += 1;
 
-        // --- phase 4: broadcast the new global model
-        let mut bcast_secs = 0.0f64;
-        for w in 1..self.workers.len() {
-            let (secs, wire) = self.down[w].send_params(&self.global, &mut self.wan)?;
-            bcast_secs = bcast_secs.max(secs);
+        // --- phase 4: broadcast the new global model (transfers overlap;
+        // the round ends at the last delivery event)
+        for w in 1..n {
+            let (secs, wire) =
+                self.down[w].send_params(&self.global, &mut self.wan)?;
             round_wire += wire;
+            engine.after(secs, Ev::BcastDone(w));
         }
-
-        self.wire_bytes += round_wire;
-        self.sim_secs += barrier_secs + agg_host + bcast_secs;
-
-        // --- phase 5: monitor & adjust (Figure-2 cycle)
-        let compute_times: Vec<f64> =
-            locals.iter().map(|l| l.compute_secs).collect();
-        if self.cfg.adaptive_granularity {
-            let comm = barrier_secs - compute_times.iter().cloned().fold(0.0, f64::max)
-                + bcast_secs;
-            self.granularity
-                .observe(compute_times.iter().cloned().fold(0.0, f64::max), comm.max(0.0));
+        while let Some(_ev) = engine.pop() {
+            debug_assert!(matches!(_ev, Ev::BcastDone(_)));
         }
-        if self.monitor.observe(&compute_times) {
-            let caps = self.monitor.capacity_estimates();
-            if let Some(plan) =
-                self.planner.replan(&self.corpus, &self.cluster, &caps)
-            {
-                log::info!(
-                    "round {round}: re-partitioning (gen {} -> {}), caps {:?}",
-                    self.plan.generation,
-                    plan.generation,
-                    caps
-                );
-                self.plan = plan;
-                for (w, shard) in self.plan.shards.iter().enumerate() {
-                    self.workers[w].set_shard(
-                        &shard.tokens,
-                        self.batch_size,
-                        self.seq_len,
-                        self.cfg.seed ^ self.plan.generation,
-                    );
-                }
-                self.account_distribution()?;
-            }
-        }
+        let round_end = engine.now();
 
-        // --- eval
-        let (eval_loss, eval_acc) = if round % self.cfg.eval_every.max(1) == 0
-            || round + 1 == self.cfg.rounds
-        {
-            let (l, a) = self.evaluate()?;
-            (Some(l), Some(a))
-        } else {
-            (None, None)
-        };
-
-        let train_loss = locals.iter().map(|l| l.mean_loss).sum::<f32>()
-            / locals.len() as f32;
-        log::debug!(
-            "round {round}: train={train_loss:.3} eval={eval_loss:?} sim={:.0}s wire={}",
-            self.sim_secs,
-            self.wire_bytes
-        );
-
-        Ok(RoundRecord {
+        // --- phase 5: totals, monitor & adjust (Figure-2 cycle), eval
+        self.finalize_round(
             round,
-            sim_secs: self.sim_secs,
-            wire_bytes: self.wire_bytes,
-            train_loss,
-            eval_loss,
-            eval_acc,
-            platform_secs: compute_times,
-            epsilon: self.accountant.epsilon(),
-            partition_gen: self.plan.generation,
-        })
+            &locals,
+            round_start,
+            barrier_at,
+            round_end,
+            round_wire,
+        )
     }
 }

@@ -13,4 +13,4 @@ mod topology;
 
 pub use link::{Link, TransferStats, MSS_BYTES};
 pub use protocol::Protocol;
-pub use topology::Wan;
+pub use topology::{LinkClass, Wan};

@@ -1,9 +1,23 @@
-//! Full-mesh WAN topology between cloud platforms + the leader.
+//! Routed WAN topology between cloud worker nodes + the leader.
 //!
-//! Node 0..n-1 are the platforms; the aggregation leader is co-located
-//! with node 0 (the paper's setup has the global model hosted on one of
-//! the clouds). Links are asymmetric-capable (directed), built from
-//! region distance presets.
+//! Nodes 0..n-1 are the cluster's worker nodes; the aggregation leader is
+//! co-located with node 0 (the paper's setup has the global model hosted
+//! on one of the clouds). Links are asymmetric-capable (directed) and
+//! carry a [`LinkClass`]:
+//!
+//! * [`LinkClass::IntraAz`] — nodes inside the same cloud (AZ-level
+//!   peers): fat, sub-millisecond.
+//! * [`LinkClass::IntraRegion`] — gateways of different clouds in the
+//!   same region: quick cross-AZ class links.
+//! * [`LinkClass::InterRegion`] — gateways across regions: the paper's
+//!   WAN bottleneck.
+//!
+//! Only the *gateway* node of each cloud (its first member) has links to
+//! other clouds; a transfer between two arbitrary workers is routed
+//! `src → gw(src) → gw(dst) → dst` (degenerate hops skipped) and priced
+//! per hop, store-and-forward. The per-link byte ledger therefore tells
+//! exactly how many bytes crossed each class of link — the measurement
+//! behind the hierarchical-vs-star comparison.
 
 use std::collections::HashMap;
 
@@ -15,13 +29,30 @@ use crate::util::rng::Pcg64;
 /// RNG stream id for network noise (distinct from data/DP streams).
 const WAN_STREAM: u64 = 0x57414e;
 
-/// Directed full-mesh WAN with connection-warmth tracking and per-link
+/// What kind of path segment a link is (for per-class byte accounting).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum LinkClass {
+    /// same cloud, different AZ-level node
+    IntraAz,
+    /// different clouds, same region (gateway-to-gateway)
+    IntraRegion,
+    /// different regions (gateway-to-gateway) — the WAN bottleneck
+    InterRegion,
+}
+
+/// Directed routed WAN with connection-warmth tracking and per-link
 /// byte accounting.
 #[derive(Clone, Debug)]
 pub struct Wan {
     n: usize,
     /// links[(src, dst)]
     links: HashMap<(usize, usize), Link>,
+    /// link class per (src, dst) — parallel to `links`
+    classes: HashMap<(usize, usize), LinkClass>,
+    /// owning cloud per node (identity for flat meshes)
+    cloud_of: Vec<usize>,
+    /// gateway node per cloud
+    gateways: Vec<usize>,
     /// protocol connections already established (src, dst, proto)
     warm: HashMap<(usize, usize, Protocol), bool>,
     /// cumulative wire bytes per (src, dst)
@@ -30,52 +61,109 @@ pub struct Wan {
 }
 
 impl Wan {
-    /// Uniform mesh: every pair gets the same link spec.
+    /// Uniform mesh: every pair gets the same link spec (class
+    /// [`LinkClass::InterRegion`]); every node is its own cloud, so all
+    /// routes are single-hop.
     pub fn uniform(n: usize, link: Link, seed: u64) -> Wan {
         let mut links = HashMap::new();
+        let mut classes = HashMap::new();
         for s in 0..n {
             for d in 0..n {
                 if s != d {
                     links.insert((s, d), link.clone());
+                    classes.insert((s, d), LinkClass::InterRegion);
                 }
             }
         }
         Wan {
             n,
             links,
+            classes,
+            cloud_of: (0..n).collect(),
+            gateways: (0..n).collect(),
             warm: HashMap::new(),
             ledger: HashMap::new(),
             rng: Pcg64::new(seed, WAN_STREAM),
         }
     }
 
-    /// WAN shaped by the cluster's regions: same-region pairs get LAN-ish
-    /// links, cross-region pairs get transatlantic-ish ones.
+    /// Link presets per class (bandwidth bps, rtt s, jitter, loss).
+    fn class_link(class: LinkClass) -> Link {
+        match class {
+            // same cloud, AZ-to-AZ: very fat and near-instant
+            LinkClass::IntraAz => Link {
+                bandwidth_bps: 25e9,
+                rtt_s: 0.0005,
+                jitter: 0.01,
+                loss_rate: 0.00001,
+            },
+            // same region, cross-cloud: fat and quick
+            LinkClass::IntraRegion => Link {
+                bandwidth_bps: 5e9,
+                rtt_s: 0.002,
+                jitter: 0.03,
+                loss_rate: 0.0001,
+            },
+            // inter-region WAN: the paper's bottleneck
+            LinkClass::InterRegion => Link {
+                bandwidth_bps: 1e9,
+                rtt_s: 0.080,
+                jitter: 0.08,
+                loss_rate: 0.002,
+            },
+        }
+    }
+
+    /// Routed topology shaped by the cluster's clouds and regions:
+    /// full intra-cloud mesh per cloud, plus a gateway-to-gateway mesh
+    /// between clouds (intra- or inter-region per the cloud regions).
+    /// With single-node clouds this degenerates to the flat star/mesh of
+    /// the paper's 3-platform setup.
     pub fn from_cluster(cluster: &ClusterSpec, seed: u64) -> Wan {
         let n = cluster.n();
+        let cloud_of: Vec<usize> = (0..n).map(|i| cluster.cloud_of(i)).collect();
+        let n_clouds = cluster.n_clouds();
+        let gateways: Vec<usize> = (0..n_clouds).map(|c| cluster.gateway(c)).collect();
+
         let mut links = HashMap::new();
+        let mut classes = HashMap::new();
+        let mut add = |s: usize, d: usize, class: LinkClass| {
+            links.insert((s, d), Wan::class_link(class));
+            classes.insert((s, d), class);
+        };
+
+        // intra-cloud mesh
         for s in 0..n {
             for d in 0..n {
-                if s == d {
-                    continue;
+                if s != d && cloud_of[s] == cloud_of[d] {
+                    add(s, d, LinkClass::IntraAz);
                 }
-                let same_region =
-                    cluster.platforms[s].region == cluster.platforms[d].region;
-                let link = if same_region {
-                    // same region, cross-AZ: fat and quick
-                    Link { bandwidth_bps: 5e9, rtt_s: 0.002, jitter: 0.03,
-                           loss_rate: 0.0001 }
-                } else {
-                    // inter-region WAN: the paper's bottleneck
-                    Link { bandwidth_bps: 1e9, rtt_s: 0.080, jitter: 0.08,
-                           loss_rate: 0.002 }
-                };
-                links.insert((s, d), link);
             }
         }
+        // gateway-to-gateway mesh between clouds
+        for a in 0..n_clouds {
+            for b in 0..n_clouds {
+                if a == b {
+                    continue;
+                }
+                let (ga, gb) = (gateways[a], gateways[b]);
+                let same_region = cluster.platforms[ga].region
+                    == cluster.platforms[gb].region;
+                let class = if same_region {
+                    LinkClass::IntraRegion
+                } else {
+                    LinkClass::InterRegion
+                };
+                add(ga, gb, class);
+            }
+        }
+
         Wan {
             n,
             links,
+            classes,
+            cloud_of,
+            gateways,
             warm: HashMap::new(),
             ledger: HashMap::new(),
             rng: Pcg64::new(seed, WAN_STREAM),
@@ -95,7 +183,37 @@ impl Wan {
         self.links.get(&(src, dst))
     }
 
-    /// Simulate a transfer; updates warmth and the byte ledger.
+    /// Class of the direct link (src, dst), if one exists.
+    pub fn link_class(&self, src: usize, dst: usize) -> Option<LinkClass> {
+        self.classes.get(&(src, dst)).copied()
+    }
+
+    /// The hop sequence a transfer src→dst takes: the direct link when
+    /// one exists, otherwise via the clouds' gateways (degenerate hops
+    /// skipped). Every returned hop has a link.
+    pub fn route(&self, src: usize, dst: usize) -> Vec<(usize, usize)> {
+        assert!(src != dst, "loopback transfers are free; don't route them");
+        if self.links.contains_key(&(src, dst)) {
+            return vec![(src, dst)];
+        }
+        let gs = self.gateways[self.cloud_of[src]];
+        let gd = self.gateways[self.cloud_of[dst]];
+        let mut hops = Vec::with_capacity(3);
+        if src != gs {
+            hops.push((src, gs));
+        }
+        if gs != gd {
+            hops.push((gs, gd));
+        }
+        if gd != dst {
+            hops.push((gd, dst));
+        }
+        hops
+    }
+
+    /// Simulate a transfer along the route src→dst (store-and-forward per
+    /// hop); updates warmth and the byte ledger per traversed link.
+    /// Returns combined stats: times and bytes summed over hops.
     pub fn transfer(
         &mut self,
         src: usize,
@@ -105,6 +223,26 @@ impl Wan {
         streams: usize,
     ) -> TransferStats {
         assert!(src != dst, "loopback transfers are free; don't simulate them");
+        let hops = self.route(src, dst);
+        let mut total = TransferStats { time_s: 0.0, wire_bytes: 0, handshake_s: 0.0 };
+        for (s, d) in hops {
+            let st = self.transfer_hop(s, d, payload_bytes, protocol, streams);
+            total.time_s += st.time_s;
+            total.wire_bytes += st.wire_bytes;
+            total.handshake_s += st.handshake_s;
+        }
+        total
+    }
+
+    /// One direct-link hop (the pre-routing `transfer` semantics).
+    fn transfer_hop(
+        &mut self,
+        src: usize,
+        dst: usize,
+        payload_bytes: u64,
+        protocol: Protocol,
+        streams: usize,
+    ) -> TransferStats {
         let link = self.links.get(&(src, dst)).expect("missing link").clone();
         let warm = *self.warm.get(&(src, dst, protocol)).unwrap_or(&false);
         let stats =
@@ -124,9 +262,24 @@ impl Wan {
         self.ledger.values().sum()
     }
 
-    /// Bytes sent from `src` to `dst` so far.
+    /// Bytes sent from `src` to `dst` so far (direct link only).
     pub fn wire_bytes(&self, src: usize, dst: usize) -> u64 {
         *self.ledger.get(&(src, dst)).unwrap_or(&0)
+    }
+
+    /// Total bytes that crossed links of `class` — e.g. how much update
+    /// traffic actually paid the inter-region WAN.
+    pub fn wire_bytes_class(&self, class: LinkClass) -> u64 {
+        self.ledger
+            .iter()
+            .filter(|(k, _)| self.classes.get(k) == Some(&class))
+            .map(|(_, v)| v)
+            .sum()
+    }
+
+    /// Convenience: bytes over [`LinkClass::InterRegion`] links.
+    pub fn inter_region_bytes(&self) -> u64 {
+        self.wire_bytes_class(LinkClass::InterRegion)
     }
 
     /// Zero the ledger (per-round accounting).
@@ -134,8 +287,6 @@ impl Wan {
         self.ledger.clear();
     }
 }
-
-
 
 #[cfg(test)]
 mod tests {
@@ -185,6 +336,51 @@ mod tests {
         // azure is eu-west: same class of link, so just check both are sane
         let t_eu = w.transfer(0, 2, 10_000_000, Protocol::Grpc, 8);
         assert!(t_us.time_s > 0.0 && t_eu.time_s > 0.0);
+        // all paper-default pairs are gateway-to-gateway across regions
+        assert_eq!(w.link_class(0, 1), Some(LinkClass::InterRegion));
+        assert_eq!(w.inter_region_bytes(), w.total_wire_bytes());
+    }
+
+    #[test]
+    fn scaled_cluster_routes_via_gateways() {
+        let c = crate::cluster::ClusterSpec::paper_default_scaled(4);
+        let w = Wan::from_cluster(&c, 7);
+        // same cloud: direct intra-AZ link
+        assert_eq!(w.route(1, 3), vec![(1, 3)]);
+        assert_eq!(w.link_class(1, 3), Some(LinkClass::IntraAz));
+        // worker 5 (cloud 1, gw 4) -> leader node 0 (cloud 0, gw 0)
+        assert_eq!(w.route(5, 0), vec![(5, 4), (4, 0)]);
+        assert_eq!(w.link_class(4, 0), Some(LinkClass::InterRegion));
+        // worker to worker across clouds: three hops
+        assert_eq!(w.route(5, 9), vec![(5, 4), (4, 8), (8, 9)]);
+        // gateways talk directly
+        assert_eq!(w.route(4, 8), vec![(4, 8)]);
+    }
+
+    #[test]
+    fn multi_hop_transfer_ledgers_every_link() {
+        let c = crate::cluster::ClusterSpec::paper_default_scaled(2);
+        let mut w = Wan::from_cluster(&c, 9);
+        // node 3 (cloud 1, gw 2) -> node 0: hops (3,2) intra + (2,0) inter
+        let st = w.transfer(3, 0, 1_000_000, Protocol::Grpc, 8);
+        assert!(w.wire_bytes(3, 2) >= 1_000_000);
+        assert!(w.wire_bytes(2, 0) >= 1_000_000);
+        assert_eq!(
+            st.wire_bytes,
+            w.wire_bytes(3, 2) + w.wire_bytes(2, 0)
+        );
+        // per-class split: exactly one inter-region crossing
+        assert_eq!(w.inter_region_bytes(), w.wire_bytes(2, 0));
+        assert_eq!(
+            w.wire_bytes_class(LinkClass::IntraAz),
+            w.wire_bytes(3, 2)
+        );
+        // the inter-region hop dominates the time
+        let intra_only = {
+            let mut w2 = Wan::from_cluster(&c, 9);
+            w2.transfer(3, 2, 1_000_000, Protocol::Grpc, 8)
+        };
+        assert!(st.time_s > intra_only.time_s);
     }
 
     #[test]

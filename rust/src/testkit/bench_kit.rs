@@ -9,10 +9,25 @@
 //! ```
 //!
 //! Measures wall-clock with warmup, reports mean/p50/p95 and throughput.
+//!
+//! `CROSSFED_BENCH_QUICK=1` clamps every set to zero warmup + one
+//! measured iteration — the CI bench-smoke mode (compile + exercise the
+//! bench targets without burning minutes on statistics).
 
+use std::sync::OnceLock;
 use std::time::Instant;
 
 use crate::util::stats::Summary;
+
+/// True when `CROSSFED_BENCH_QUICK` is set (to anything but `0`).
+pub fn quick_mode() -> bool {
+    static QUICK: OnceLock<bool> = OnceLock::new();
+    *QUICK.get_or_init(|| {
+        std::env::var("CROSSFED_BENCH_QUICK")
+            .map(|v| v != "0" && !v.is_empty())
+            .unwrap_or(false)
+    })
+}
 
 /// One measured benchmark.
 #[derive(Clone, Debug)]
@@ -39,10 +54,11 @@ pub struct BenchSet {
 
 impl BenchSet {
     pub fn new(title: &str) -> BenchSet {
+        let (warmup, measure) = if quick_mode() { (0, 1) } else { (3, 10) };
         BenchSet {
             title: title.to_string(),
-            warmup_iters: 3,
-            measure_iters: 10,
+            warmup_iters: warmup,
+            measure_iters: measure,
             results: Vec::new(),
         }
     }
@@ -73,11 +89,18 @@ impl BenchSet {
         items: Option<f64>,
         f: &mut dyn FnMut() -> T,
     ) -> &BenchResult {
-        for _ in 0..self.warmup_iters {
+        // quick mode wins even over per-set overrides: CI smoke runs
+        // every target at one iteration
+        let (warmup, measure) = if quick_mode() {
+            (0, 1)
+        } else {
+            (self.warmup_iters, self.measure_iters)
+        };
+        for _ in 0..warmup {
             std::hint::black_box(f());
         }
-        let mut times = Vec::with_capacity(self.measure_iters);
-        for _ in 0..self.measure_iters.max(1) {
+        let mut times = Vec::with_capacity(measure);
+        for _ in 0..measure.max(1) {
             let t0 = Instant::now();
             std::hint::black_box(f());
             times.push(t0.elapsed().as_secs_f64());

@@ -46,6 +46,10 @@ pub struct Delivery {
     /// metadata forwarded alongside
     pub local_loss: f32,
     pub n_samples: usize,
+    /// aggregation weight carried with the update (a gateway's partial
+    /// aggregate ships its total raw weight z_c; plain worker updates
+    /// ship 1.0)
+    pub weight: f64,
     /// simulated transfer seconds (incl. handshake/stalls)
     pub secs: f64,
     /// bytes on the wire (payload + framing + retransmits)
@@ -93,6 +97,7 @@ impl Channel {
         update: &ParamSet,
         local_loss: f32,
         n_samples: usize,
+        weight: f64,
         wan: &mut Wan,
     ) -> Result<Delivery> {
         // flatten into the persistent buffer (parallel copy, no fresh
@@ -100,11 +105,13 @@ impl Channel {
         self.flat_buf.resize(update.numel(), 0.0);
         update.write_flat(&mut self.flat_buf);
 
-        // frame = metadata header (loss 4 + n_samples 8 + elem count 4) +
-        // compressed payload, built straight in the send buffer
+        // frame = metadata header (loss 4 + n_samples 8 + weight 8 +
+        // elem count 4) + compressed payload, built straight in the send
+        // buffer
         self.frame_buf.clear();
         self.frame_buf.extend_from_slice(&local_loss.to_le_bytes());
         self.frame_buf.extend_from_slice(&(n_samples as u64).to_le_bytes());
+        self.frame_buf.extend_from_slice(&weight.to_le_bytes());
         self.frame_buf
             .extend_from_slice(&(self.flat_buf.len() as u32).to_le_bytes());
         match &mut self.error_feedback {
@@ -136,16 +143,18 @@ impl Channel {
             open_in_place(key, nonce, tag, &mut self.frame_buf)
                 .context("transport decrypt")?;
         }
-        anyhow::ensure!(self.frame_buf.len() >= 16, "frame too short");
+        anyhow::ensure!(self.frame_buf.len() >= 24, "frame too short");
         let meta_loss = f32::from_le_bytes(self.frame_buf[0..4].try_into().unwrap());
         let meta_n =
             u64::from_le_bytes(self.frame_buf[4..12].try_into().unwrap()) as usize;
+        let meta_weight =
+            f64::from_le_bytes(self.frame_buf[12..20].try_into().unwrap());
         let n_elems =
-            u32::from_le_bytes(self.frame_buf[12..16].try_into().unwrap()) as usize;
+            u32::from_le_bytes(self.frame_buf[20..24].try_into().unwrap()) as usize;
         self.recv_flat.resize(n_elems, 0.0);
         Compressor::decompress_into(
             self.compressor.scheme,
-            &self.frame_buf[16..],
+            &self.frame_buf[24..],
             &mut self.recv_flat,
         )?;
 
@@ -155,9 +164,37 @@ impl Channel {
             update,
             local_loss: meta_loss,
             n_samples: meta_n,
+            weight: meta_weight,
             secs: stats.time_s,
             wire_bytes: stats.wire_bytes,
         })
+    }
+
+    /// Run an update through this channel's codec (+ error feedback)
+    /// *without* a WAN or encrypt hop — the leader-colocated loopback
+    /// path. The result is exactly what a remote peer would decode, so
+    /// aggregation sees uniformly-compressed updates regardless of where
+    /// a worker sits. No bytes are charged.
+    pub fn codec_loopback(&mut self, update: &ParamSet) -> Result<ParamSet> {
+        self.flat_buf.resize(update.numel(), 0.0);
+        update.write_flat(&mut self.flat_buf);
+        self.frame_buf.clear();
+        match &mut self.error_feedback {
+            Some(ef) => {
+                ef.compress_append(&self.flat_buf, &mut self.compressor, &mut self.frame_buf)?;
+            }
+            None => {
+                self.compressor.compress_append(&self.flat_buf, &mut self.frame_buf);
+            }
+        }
+        self.recv_flat.resize(self.flat_buf.len(), 0.0);
+        Compressor::decompress_into(
+            self.compressor.scheme,
+            &self.frame_buf,
+            &mut self.recv_flat,
+        )?;
+        ParamSet::from_flat(&self.recv_flat, update)
+            .context("loopback decode has wrong size")
     }
 
     /// Broadcast raw params (dense f32, optionally sealed) to a worker.
@@ -229,13 +266,14 @@ mod tests {
         let mut ch = channel(Compression::None, true);
         let mut w = wan();
         let u = update(256);
-        let d = ch.send_update(&u, 1.25, 999, &mut w).unwrap();
+        let d = ch.send_update(&u, 1.25, 999, 7.5, &mut w).unwrap();
         assert_eq!(d.update, u); // lossless end-to-end
         assert_eq!(d.local_loss, 1.25);
         assert_eq!(d.n_samples, 999);
+        assert_eq!(d.weight, 7.5);
         assert!(d.secs > 0.0);
-        // sealed: 256*4 + 16 header + 48 seal
-        assert_eq!(ch.payload_bytes, 256 * 4 + 16 + 48);
+        // sealed: 256*4 + 24 header + 48 seal
+        assert_eq!(ch.payload_bytes, 256 * 4 + 24 + 48);
     }
 
     #[test]
@@ -244,8 +282,8 @@ mod tests {
         let mut plain = channel(Compression::None, false);
         let mut w = wan();
         let u = update(256);
-        enc.send_update(&u, 0.0, 1, &mut w).unwrap();
-        plain.send_update(&u, 0.0, 1, &mut w).unwrap();
+        enc.send_update(&u, 0.0, 1, 1.0, &mut w).unwrap();
+        plain.send_update(&u, 0.0, 1, 1.0, &mut w).unwrap();
         assert_eq!(enc.payload_bytes - plain.payload_bytes, 48);
     }
 
@@ -255,8 +293,8 @@ mod tests {
         let mut sparse = channel(Compression::TopK { ratio: 0.05 }, true);
         let mut w = wan();
         let u = update(256);
-        let dd = dense.send_update(&u, 0.0, 1, &mut w).unwrap();
-        let ds = sparse.send_update(&u, 0.0, 1, &mut w).unwrap();
+        let dd = dense.send_update(&u, 0.0, 1, 1.0, &mut w).unwrap();
+        let ds = sparse.send_update(&u, 0.0, 1, 1.0, &mut w).unwrap();
         assert!(sparse.payload_bytes < dense.payload_bytes / 5);
         assert!(ds.wire_bytes < dd.wire_bytes / 5);
         // lossy: only some coords survive
@@ -279,7 +317,26 @@ mod tests {
         // framing overhead must show up in the ledger
         let mut ch = channel(Compression::None, false);
         let mut w = wan();
-        let d = ch.send_update(&update(1024), 0.0, 1, &mut w).unwrap();
+        let d = ch.send_update(&update(1024), 0.0, 1, 1.0, &mut w).unwrap();
         assert!(d.wire_bytes > ch.payload_bytes);
+    }
+
+    #[test]
+    fn codec_loopback_matches_remote_decode() {
+        // the leader-colocated worker's update must go through the same
+        // codec as everyone else's — compare against a WAN delivery from
+        // an identically-configured channel
+        let u = update(256);
+        let mut w = wan();
+        let mut remote = channel(Compression::TopK { ratio: 0.05 }, true);
+        let d = remote.send_update(&u, 0.0, 1, 1.0, &mut w).unwrap();
+        let mut local = channel(Compression::TopK { ratio: 0.05 }, true);
+        let lb = local.codec_loopback(&u).unwrap();
+        assert_eq!(lb, d.update); // identical lossy decode
+        assert_eq!(local.payload_bytes, 0); // loopback charges nothing
+
+        // lossless codec: loopback is the identity
+        let mut dense = channel(Compression::None, false);
+        assert_eq!(dense.codec_loopback(&u).unwrap(), u);
     }
 }

@@ -1,0 +1,146 @@
+//! End-to-end determinism: same seed + config ⇒ bit-identical
+//! `RunResult` history across runs AND across thread counts, for the
+//! sync (star), async and hierarchical schedulers. This lifts the
+//! kernel-level guarantee of `parallel_kernels.rs` (fixed-block
+//! parallelism is bit-identical for any thread count) to the
+//! coordinator level: simulated times, wire bytes, losses and epsilons
+//! are pure functions of the experiment seed.
+
+use crossfed::aggregation::AggregationKind;
+use crossfed::cluster::ClusterSpec;
+use crossfed::config::{preset, ExperimentConfig};
+use crossfed::coordinator::Coordinator;
+use crossfed::data::CorpusConfig;
+use crossfed::metrics::RunResult;
+use crossfed::model::ParamSet;
+use crossfed::runtime::MockRuntime;
+use crossfed::util::par;
+
+/// Params large enough (> par::PAR_THRESHOLD elements) that the
+/// block-parallel kernel paths actually engage.
+fn init_params() -> ParamSet {
+    let a: Vec<f32> = (0..40_000).map(|i| ((i % 97) as f32) * 0.01 - 0.5).collect();
+    let b: Vec<f32> = (0..40_000).map(|i| ((i % 89) as f32) * -0.01 + 0.4).collect();
+    ParamSet { leaves: vec![a, b] }
+}
+
+fn cfg(mode: &str) -> ExperimentConfig {
+    let mut c = preset("quick").unwrap();
+    c.name = mode.into();
+    c.rounds = 2;
+    c.eval_every = 1;
+    c.eval_batches = 2;
+    c.local_steps = 2;
+    c.local_lr = 2.0;
+    c.server_lr = 2.0;
+    c.target_loss = None;
+    c.corpus = CorpusConfig { n_docs: 90, doc_sentences: 3, n_topics: 6, seed: 7 };
+    match mode {
+        "sync" => {}
+        "async" => c.aggregation = AggregationKind::Async { alpha: 0.6 },
+        "hier" => c.hierarchical = true,
+        other => panic!("unknown mode {other}"),
+    }
+    c
+}
+
+fn run(mode: &str) -> RunResult {
+    let backend = MockRuntime::new(0.4);
+    let cluster = ClusterSpec::paper_default_scaled(2);
+    let mut coord =
+        Coordinator::new(cfg(mode), cluster, &backend, init_params(), 4, 16)
+            .unwrap();
+    coord.run().unwrap()
+}
+
+/// Bit-level equality of everything simulated (host profiling excluded).
+fn assert_identical(a: &RunResult, b: &RunResult, ctx: &str) {
+    assert_eq!(a.rounds_run, b.rounds_run, "{ctx}: rounds");
+    assert_eq!(a.wire_bytes, b.wire_bytes, "{ctx}: wire bytes");
+    assert_eq!(
+        a.sim_secs.to_bits(),
+        b.sim_secs.to_bits(),
+        "{ctx}: sim secs {} vs {}",
+        a.sim_secs,
+        b.sim_secs
+    );
+    assert_eq!(
+        a.final_eval_loss.to_bits(),
+        b.final_eval_loss.to_bits(),
+        "{ctx}: final eval loss"
+    );
+    assert_eq!(a.final_eval_acc.to_bits(), b.final_eval_acc.to_bits(), "{ctx}");
+    assert_eq!(a.history.len(), b.history.len(), "{ctx}: history len");
+    for (ra, rb) in a.history.iter().zip(&b.history) {
+        let r = ra.round;
+        assert_eq!(ra.round, rb.round, "{ctx}");
+        assert_eq!(ra.wire_bytes, rb.wire_bytes, "{ctx} round {r}: wire");
+        assert_eq!(
+            ra.sim_secs.to_bits(),
+            rb.sim_secs.to_bits(),
+            "{ctx} round {r}: sim"
+        );
+        assert_eq!(
+            ra.train_loss.to_bits(),
+            rb.train_loss.to_bits(),
+            "{ctx} round {r}: train loss"
+        );
+        assert_eq!(
+            ra.eval_loss.map(f32::to_bits),
+            rb.eval_loss.map(f32::to_bits),
+            "{ctx} round {r}: eval loss"
+        );
+        assert_eq!(
+            ra.eval_acc.map(f64::to_bits),
+            rb.eval_acc.map(f64::to_bits),
+            "{ctx} round {r}: eval acc"
+        );
+        assert_eq!(
+            ra.epsilon.to_bits(),
+            rb.epsilon.to_bits(),
+            "{ctx} round {r}: epsilon"
+        );
+        assert_eq!(ra.partition_gen, rb.partition_gen, "{ctx} round {r}");
+        let pa: Vec<u64> = ra.platform_secs.iter().map(|x| x.to_bits()).collect();
+        let pb: Vec<u64> = rb.platform_secs.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(pa, pb, "{ctx} round {r}: platform secs");
+    }
+}
+
+#[test]
+fn repeat_runs_are_bit_identical() {
+    for mode in ["sync", "async", "hier"] {
+        let a = run(mode);
+        let b = run(mode);
+        assert_identical(&a, &b, mode);
+    }
+}
+
+#[test]
+fn thread_count_does_not_change_results() {
+    for mode in ["sync", "async", "hier"] {
+        let serial = par::with_threads(1, || run(mode));
+        let par4 = par::with_threads(4, || run(mode));
+        assert_identical(&serial, &par4, &format!("{mode} 1T vs 4T"));
+    }
+}
+
+#[test]
+fn different_seeds_differ() {
+    // guard against the comparisons above passing vacuously
+    let a = run("sync");
+    let backend = MockRuntime::new(0.4);
+    let mut c = cfg("sync");
+    c.seed = 777;
+    let mut coord = Coordinator::new(
+        c,
+        ClusterSpec::paper_default_scaled(2),
+        &backend,
+        init_params(),
+        4,
+        16,
+    )
+    .unwrap();
+    let b = coord.run().unwrap();
+    assert_ne!(a.final_eval_loss.to_bits(), b.final_eval_loss.to_bits());
+}
