@@ -35,14 +35,10 @@ fn transfer_series() -> String {
                 };
                 let mut wan = Wan::uniform(2, link, 1);
                 // warm the connection first
-                wan.transfer(0, 1, 1000, proto, 16);
-                let st = wan.transfer(
-                    0,
-                    1,
-                    (payload_mb * 1e6) as u64,
-                    proto,
-                    16,
-                );
+                wan.transfer(0, 1, 1000, proto, 16).unwrap();
+                let st = wan
+                    .transfer(0, 1, (payload_mb * 1e6) as u64, proto, 16)
+                    .unwrap();
                 csv.push_str(&format!(
                     "{payload_mb},{rtt_ms},{},{},{:.4}\n",
                     loss * 100.0,

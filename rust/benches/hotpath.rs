@@ -242,7 +242,7 @@ fn main() {
     let mut wan = Wan::uniform(3, Link::new(1e9, 0.04), 5);
     b.bench_throughput("transfer calc x1000", 1000.0, || {
         for i in 0..1000u64 {
-            wan.transfer(0, 1, 1_000_000 + i, Protocol::Quic, 16);
+            wan.transfer(0, 1, 1_000_000 + i, Protocol::Quic, 16).unwrap();
         }
     });
     b.report();

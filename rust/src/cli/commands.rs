@@ -26,7 +26,7 @@ USAGE:
                  [--artifacts DIR] [--model-preset M] [--seed N]
                  [--save-checkpoint PATH] [--resume PATH]
                  [--nodes-per-cloud N] [--hierarchical]
-                 [--mock] [--curve]
+                 [--fault SPEC[;SPEC...]] [--mock] [--curve]
   crossfed sweep --presets a,b,c [--artifacts DIR] [--mock]
   crossfed inspect [--preset NAME]
   crossfed partition-plan [--strategy S] [--platforms N]
@@ -36,7 +36,14 @@ Artifacts default to ./artifacts (built by `make artifacts`). --mock swaps
 the PJRT backend for the quadratic mock (no artifacts needed).
 --nodes-per-cloud puts N AZ-level worker nodes inside each of the 3 paper
 clouds; --hierarchical reduces each cloud at its gateway so only one
-partial aggregate per cloud crosses the inter-region WAN.";
+partial aggregate per cloud crosses the inter-region WAN.
+--fault injects deterministic failures at round boundaries (replaces the
+preset's fault plan); `;`-separated specs, e.g.
+  --fault \"gateway-down:cloud=1,at=round3;node-slowdown:node=2,at=5,factor=2\"
+Kinds: gateway-down (cloud, at), link-degrade (src, dst, at, factor),
+node-slowdown (node, at, factor). gateway-down needs a standby member:
+run with --nodes-per-cloud >= 2. Preset paper-hier-faulty bundles a
+mid-run gateway kill with the hierarchical setup.";
 
 /// Entry point used by main.rs. Returns process exit code.
 pub fn run_cli(raw: &[String]) -> Result<i32> {
@@ -103,6 +110,10 @@ fn build_config(args: &Args) -> Result<ExperimentConfig> {
     }
     if args.flag("hierarchical") {
         cfg.hierarchical = true;
+    }
+    if let Some(f) = args.get("fault") {
+        cfg.faults = crate::netsim::FaultPlan::parse(f)
+            .with_context(|| format!("--fault {f:?}"))?;
     }
     cfg.validate()?;
     Ok(cfg)
@@ -346,6 +357,34 @@ mod tests {
         )
         .unwrap();
         assert!(build_config(&args).is_err());
+    }
+
+    #[test]
+    fn train_with_fault_injection() {
+        // a mid-run gateway kill + slowdown must still complete training
+        assert_eq!(
+            run_cli(&s(&[
+                "train", "--preset", "quick", "--rounds", "4", "--mock",
+                "--hierarchical", "--nodes-per-cloud", "2",
+                "--fault",
+                "gateway-down:cloud=1,at=1;node-slowdown:node=1,at=2,factor=2",
+            ]))
+            .unwrap(),
+            0
+        );
+        // bad spec is a clean error
+        let args = Args::parse(
+            &s(&["train", "--preset", "quick", "--fault", "meteor:at=1"]),
+            &FLAGS,
+        )
+        .unwrap();
+        assert!(build_config(&args).is_err());
+        // gateway-down without a standby member errors at build, not mid-run
+        assert!(run_cli(&s(&[
+            "train", "--preset", "quick", "--rounds", "4", "--mock",
+            "--hierarchical", "--fault", "gateway-down:cloud=1,at=1",
+        ]))
+        .is_err());
     }
 
     #[test]

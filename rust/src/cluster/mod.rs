@@ -63,9 +63,30 @@ impl CloudPlatform {
 #[derive(Clone, Debug)]
 pub struct ClusterSpec {
     pub platforms: Vec<CloudPlatform>,
+    /// current WAN gateway per cloud — each cloud's first member until a
+    /// failure forces re-election ([`ClusterSpec::reelect_gateway`])
+    gateways: Vec<usize>,
+    /// nodes whose WAN egress failed: ineligible for (re-)election
+    egress_failed: Vec<bool>,
 }
 
 impl ClusterSpec {
+    /// Build a cluster from its node list; each cloud's first member
+    /// starts as its WAN gateway.
+    pub fn new(platforms: Vec<CloudPlatform>) -> ClusterSpec {
+        let n_clouds =
+            platforms.iter().map(|p| p.cloud + 1).max().unwrap_or(0);
+        let gateways = (0..n_clouds)
+            .map(|c| {
+                (0..platforms.len())
+                    .find(|&i| platforms[i].cloud == c)
+                    .unwrap_or_else(|| panic!("cloud {c} has no members"))
+            })
+            .collect();
+        let egress_failed = vec![false; platforms.len()];
+        ClusterSpec { platforms, gateways, egress_failed }
+    }
+
     pub fn n(&self) -> usize {
         self.platforms.len()
     }
@@ -122,20 +143,20 @@ impl ClusterSpec {
                 platforms.push(p);
             }
         }
-        ClusterSpec { platforms }
+        ClusterSpec::new(platforms)
     }
 
     /// Homogeneous cluster of `n` identical platforms (ablation baseline).
     pub fn homogeneous(n: usize) -> ClusterSpec {
-        ClusterSpec {
-            platforms: (0..n)
+        ClusterSpec::new(
+            (0..n)
                 .map(|i| {
                     let mut p = CloudPlatform::new(&format!("cloud{i}"), 1.0);
                     p.cloud = i;
                     p
                 })
                 .collect(),
-        }
+        )
     }
 
     /// Strongly heterogeneous cluster (speeds spread geometrically) used
@@ -157,7 +178,7 @@ impl ClusterSpec {
                 p
             })
             .collect();
-        ClusterSpec { platforms }
+        ClusterSpec::new(platforms)
     }
 
     /// Number of distinct clouds (cloud ids are expected to be dense,
@@ -178,12 +199,43 @@ impl ClusterSpec {
             .collect()
     }
 
-    /// The WAN gateway node of cloud `c` — its first member. Intra-cloud
-    /// traffic terminates here; only the gateway talks across regions.
+    /// The current WAN gateway node of cloud `c` — its first member
+    /// until a failure forces re-election. Intra-cloud traffic
+    /// terminates here; only the gateway talks across regions.
     pub fn gateway(&self, c: usize) -> usize {
-        (0..self.platforms.len())
-            .find(|&i| self.platforms[i].cloud == c)
-            .unwrap_or_else(|| panic!("cloud {c} has no members"))
+        self.gateways[c]
+    }
+
+    /// Record that `node`'s WAN egress failed: it keeps training but can
+    /// no longer serve (or be re-elected) as a gateway.
+    pub fn mark_egress_failed(&mut self, node: usize) {
+        self.egress_failed[node] = true;
+    }
+
+    /// Whether `node` is eligible to serve as a WAN gateway.
+    pub fn egress_ok(&self, node: usize) -> bool {
+        !self.egress_failed[node]
+    }
+
+    /// Re-elect cloud `c`'s gateway after its egress failed: the next
+    /// member by node id with a working egress takes over. The rule is a
+    /// pure function of the cluster state, so every replica of the run
+    /// elects the same standby (determinism across runs and thread
+    /// counts). Errors when no standby is left.
+    pub fn reelect_gateway(&mut self, c: usize) -> anyhow::Result<usize> {
+        let new_gw = self
+            .cloud_members(c)
+            .into_iter()
+            .find(|&m| !self.egress_failed[m])
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "cloud {c} has no standby gateway left (all {} members' \
+                     egress failed); run with --nodes-per-cloud >= 2",
+                    self.cloud_members(c).len()
+                )
+            })?;
+        self.gateways[c] = new_gw;
+        Ok(new_gw)
     }
 
     /// Members of every cloud, indexed by cloud id.
@@ -257,6 +309,26 @@ mod tests {
             assert_eq!(c.gateway(i), i);
             assert_eq!(c.cloud_members(i), vec![i]);
         }
+    }
+
+    #[test]
+    fn reelection_walks_members_by_id() {
+        let mut c = ClusterSpec::paper_default_scaled(3);
+        // cloud 1 = {3, 4, 5}, gateway 3
+        assert_eq!(c.gateway(1), 3);
+        c.mark_egress_failed(3);
+        assert_eq!(c.reelect_gateway(1).unwrap(), 4);
+        assert_eq!(c.gateway(1), 4);
+        // a second failure moves to the last standby
+        c.mark_egress_failed(4);
+        assert_eq!(c.reelect_gateway(1).unwrap(), 5);
+        // no standby left: hard error, not a panic
+        c.mark_egress_failed(5);
+        assert!(c.reelect_gateway(1).is_err());
+        // other clouds are untouched
+        assert_eq!(c.gateway(0), 0);
+        assert_eq!(c.gateway(2), 6);
+        assert!(c.egress_ok(0) && !c.egress_ok(3));
     }
 
     #[test]

@@ -9,7 +9,7 @@ use anyhow::{bail, Context, Result};
 use crate::aggregation::AggregationKind;
 use crate::compress::Compression;
 use crate::data::CorpusConfig;
-use crate::netsim::Protocol;
+use crate::netsim::{FaultPlan, Protocol};
 use crate::optimizer::OptimizerKind;
 use crate::partition::PartitionStrategy;
 use crate::privacy::DpConfig;
@@ -60,6 +60,10 @@ pub struct ExperimentConfig {
     /// simulated seconds per local step on a speed-1.0 platform (scales
     /// the compute half of Table 2's training-time column)
     pub base_step_secs: f64,
+    /// deterministic fault schedule replayed at round boundaries (JSON:
+    /// `"faults": ["gateway-down:cloud=1,at=round3", ...]`; CLI:
+    /// `--fault`; see [`crate::netsim::faults`])
+    pub faults: FaultPlan,
 }
 
 impl Default for ExperimentConfig {
@@ -89,6 +93,7 @@ impl Default for ExperimentConfig {
             server_lr: 0.3,
             corpus: CorpusConfig::default(),
             base_step_secs: 18.0,
+            faults: FaultPlan::default(),
         }
     }
 }
@@ -144,6 +149,17 @@ impl ExperimentConfig {
         if let Some(t) = self.target_loss {
             if !(t > 0.0) {
                 bail!("target_loss must be positive");
+            }
+        }
+        for ev in self.faults.events() {
+            ev.validate()?;
+            if ev.at() >= self.rounds {
+                bail!(
+                    "fault {ev} fires at round {} but the run has only {} \
+                     rounds",
+                    ev.at(),
+                    self.rounds
+                );
             }
         }
         Ok(())
@@ -211,6 +227,19 @@ impl ExperimentConfig {
             };
         }
         c.base_step_secs = v.opt_f64("base_step_secs", c.base_step_secs);
+        if let Some(f) = v.get("faults") {
+            let fs = f
+                .as_arr()
+                .context("\"faults\" must be an array of spec strings")?;
+            let mut events = Vec::with_capacity(fs.len());
+            for f in fs {
+                let spec = f
+                    .as_str()
+                    .context("faults entries must be spec strings")?;
+                events.extend(FaultPlan::parse(spec)?.events().to_vec());
+            }
+            c.faults = FaultPlan::new(events);
+        }
         c.validate()?;
         Ok(c)
     }
@@ -263,6 +292,15 @@ impl ExperimentConfig {
             ("server_opt", Json::str(self.server_opt.name())),
             ("server_lr", Json::num(self.server_lr as f64)),
             ("base_step_secs", Json::num(self.base_step_secs)),
+            (
+                "faults",
+                Json::arr(
+                    self.faults
+                        .events()
+                        .iter()
+                        .map(|e| Json::str(e.to_string())),
+                ),
+            ),
         ])
     }
 }
@@ -320,6 +358,41 @@ mod tests {
         .unwrap();
         assert!(c.hierarchical);
         assert!(c.to_json().to_string().contains("\"hierarchical\":true"));
+    }
+
+    #[test]
+    fn faults_json_round_trip() {
+        let c = ExperimentConfig::from_json(
+            r#"{"rounds": 10, "faults": [
+                "gateway-down:cloud=1,at=round3",
+                "link-degrade:src=0,dst=2,at=1,factor=0.5; node-slowdown:node=2,at=4,factor=2"
+            ]}"#,
+        )
+        .unwrap();
+        assert_eq!(c.faults.len(), 3);
+        assert_eq!(
+            c.faults.events()[2],
+            crate::netsim::FaultEvent::NodeSlowdown { node: 2, at: 4, factor: 2.0 }
+        );
+        let j = c.to_json().to_string();
+        assert!(j.contains("gateway-down:cloud=1,at=3"), "{j}");
+        let back = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(back.faults, c.faults);
+        // a fault beyond the horizon is rejected
+        assert!(ExperimentConfig::from_json(
+            r#"{"rounds": 2, "faults": ["gateway-down:cloud=0,at=5"]}"#
+        )
+        .is_err());
+        // malformed specs are rejected
+        assert!(ExperimentConfig::from_json(
+            r#"{"rounds": 9, "faults": ["meteor:at=1"]}"#
+        )
+        .is_err());
+        // a non-array value is a hard error, not a silently-empty plan
+        assert!(ExperimentConfig::from_json(
+            r#"{"rounds": 9, "faults": "gateway-down:cloud=1,at=3"}"#
+        )
+        .is_err());
     }
 
     #[test]

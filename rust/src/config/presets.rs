@@ -6,7 +6,7 @@ use crate::aggregation::AggregationKind;
 use crate::compress::Compression;
 use crate::config::ExperimentConfig;
 use crate::data::CorpusConfig;
-use crate::netsim::Protocol;
+use crate::netsim::{FaultEvent, FaultPlan, Protocol};
 use crate::optimizer::OptimizerKind;
 use crate::partition::PartitionStrategy;
 use crate::privacy::DpConfig;
@@ -19,6 +19,7 @@ pub fn preset_names() -> Vec<&'static str> {
         "paper-gradient",
         "paper-async",
         "paper-hier",
+        "paper-hier-faulty",
         "hier-gradient",
         "fig-partition-fixed",
         "fig-partition-dynamic",
@@ -95,6 +96,20 @@ pub fn preset(name: &str) -> Option<ExperimentConfig> {
             aggregation: AggregationKind::FedAvg,
             hierarchical: true,
             compression: Compression::None,
+            ..paper_base
+        },
+        // the robustness scenario: cloud 1's WAN gateway dies mid-run
+        // (round 3) and one AZ node turns into a persistent straggler;
+        // training must fail over to the standby gateway and finish.
+        // Needs a standby, i.e. --nodes-per-cloud >= 2.
+        "paper-hier-faulty" => ExperimentConfig {
+            aggregation: AggregationKind::FedAvg,
+            hierarchical: true,
+            compression: Compression::None,
+            faults: FaultPlan::new(vec![
+                FaultEvent::GatewayDown { cloud: 1, at: 3 },
+                FaultEvent::NodeSlowdown { node: 1, at: 5, factor: 2.0 },
+            ]),
             ..paper_base
         },
         "hier-gradient" => ExperimentConfig {

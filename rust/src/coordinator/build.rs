@@ -75,6 +75,44 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
     ) -> Result<Coordinator<'a, B>> {
         cfg.validate()?;
         anyhow::ensure!(cluster.n() >= 1, "need at least one platform");
+        // fault plans must be survivable on *this* cluster: ids in range
+        // and a standby member behind every gateway kill — counted per
+        // cloud, since each kill permanently consumes one standby
+        let mut kills = vec![0usize; cluster.n_clouds()];
+        for ev in cfg.faults.events() {
+            match *ev {
+                crate::netsim::FaultEvent::GatewayDown { cloud, .. } => {
+                    anyhow::ensure!(
+                        cloud < cluster.n_clouds(),
+                        "fault {ev}: cluster has {} clouds",
+                        cluster.n_clouds()
+                    );
+                    kills[cloud] += 1;
+                    anyhow::ensure!(
+                        cluster.cloud_members(cloud).len() > kills[cloud],
+                        "fault {ev}: cloud {cloud} has {} members but the \
+                         plan kills {} of its gateways — no standby would be \
+                         left; run with more --nodes-per-cloud",
+                        cluster.cloud_members(cloud).len(),
+                        kills[cloud]
+                    );
+                }
+                crate::netsim::FaultEvent::LinkDegrade { src, dst, .. } => {
+                    anyhow::ensure!(
+                        src < cluster.n() && dst < cluster.n(),
+                        "fault {ev}: cluster has {} nodes",
+                        cluster.n()
+                    );
+                }
+                crate::netsim::FaultEvent::NodeSlowdown { node, .. } => {
+                    anyhow::ensure!(
+                        node < cluster.n(),
+                        "fault {ev}: cluster has {} nodes",
+                        cluster.n()
+                    );
+                }
+            }
+        }
 
         let corpus = SyntheticCorpus::generate(&cfg.corpus);
         let n_eval = ((corpus.docs.len() as f64 * EVAL_FRACTION) as usize).max(1);
@@ -100,6 +138,20 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
         let plan = planner.plan(&train_corpus, &cluster, &capacities);
 
         let wan = Wan::from_cluster(&cluster, cfg.seed);
+        // degrade targets must name a link this topology actually has —
+        // catching a bad pair here beats aborting mid-training when the
+        // fault fires
+        for ev in cfg.faults.events() {
+            if let crate::netsim::FaultEvent::LinkDegrade { src, dst, .. } = *ev
+            {
+                anyhow::ensure!(
+                    wan.link(src, dst).is_some(),
+                    "fault {ev}: no direct link {src}->{dst} in this \
+                     topology (links exist between members of one cloud \
+                     and between cloud gateways)"
+                );
+            }
+        }
         let n_params = init.numel();
         let secret: Option<&[u8]> =
             cfg.encrypt.then_some(b"crossfed-session-secret".as_slice());
@@ -252,12 +304,113 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
                 bytes,
                 self.cfg.protocol,
                 self.cfg.streams,
-            );
+            )?;
             self.wire_bytes += stats.wire_bytes;
             max_secs = max_secs.max(stats.time_s);
         }
         self.sim_secs += max_secs;
         Ok(())
+    }
+
+    /// Replay the fault plan's events due at the start of `round`
+    /// (async: pseudo-round boundary). Gateway failures in the flat
+    /// schedulers — and a failure of the leader's own egress in any mode
+    /// — are repaired immediately: routing has no later detection point
+    /// there, and the leader observes its own egress locally. A *remote*
+    /// gateway death under the hierarchical scheduler is only observable
+    /// at that cloud's reduce, where `hier_round` detects it and fails
+    /// over mid-round.
+    pub(crate) fn apply_faults(&mut self, round: usize) -> Result<()> {
+        if self.cfg.faults.is_empty() {
+            return Ok(());
+        }
+        let due: Vec<crate::netsim::FaultEvent> =
+            self.cfg.faults.due(round).copied().collect();
+        for ev in due {
+            log::warn!("round {round}: injecting fault {ev}");
+            match ev {
+                crate::netsim::FaultEvent::GatewayDown { cloud, .. } => {
+                    let gw = self.cluster.gateway(cloud);
+                    self.wan.fail_node(gw);
+                    self.cluster.mark_egress_failed(gw);
+                    if !self.cfg.hierarchical || gw == 0 {
+                        self.fail_over_gateway(round, cloud)?;
+                    }
+                }
+                crate::netsim::FaultEvent::LinkDegrade {
+                    src, dst, factor, ..
+                } => {
+                    // the link existed when the plan was validated at
+                    // build; if an earlier re-election tore it down the
+                    // fault is moot (the link is gone, which is strictly
+                    // worse than degraded) — warn, don't abort the run
+                    if let Err(e) = self.wan.degrade_link(src, dst, factor) {
+                        log::warn!(
+                            "round {round}: {ev} targets a torn-down \
+                             link ({e}); skipping"
+                        );
+                    }
+                }
+                crate::netsim::FaultEvent::NodeSlowdown {
+                    node, factor, ..
+                } => {
+                    self.workers[node].platform.compute_speed /= factor;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The re-election sequence shared by every failover path (eager
+    /// repair in `apply_faults`, reduce-time detection in `run_hier`):
+    /// elect the standby, rebuild the WAN mesh around it, retarget the
+    /// cloud's channels. Returns the new gateway.
+    pub(crate) fn fail_over_gateway(
+        &mut self,
+        round: usize,
+        cloud: usize,
+    ) -> Result<usize> {
+        let old = self.cluster.gateway(cloud);
+        let new_gw = self
+            .cluster
+            .reelect_gateway(cloud)
+            .with_context(|| format!("round {round}: cloud {cloud} failover"))?;
+        self.wan.reelect_gateway(cloud, new_gw);
+        self.retarget_cloud_channels(cloud);
+        log::warn!(
+            "round {round}: cloud {cloud} re-elected node {new_gw} as \
+             gateway (was {old})"
+        );
+        Ok(new_gw)
+    }
+
+    /// Point a cloud's member channels at its current gateway (after a
+    /// re-election). The channels keep their codec and error-feedback
+    /// state: the worker's compressor survives the failover, only the
+    /// far end of its pipe moves.
+    pub(crate) fn retarget_cloud_channels(&mut self, cloud: usize) {
+        if !self.cfg.hierarchical {
+            return; // flat channels terminate at the leader, not a gateway
+        }
+        let gw = self.cluster.gateway(cloud);
+        for m in self.cluster.cloud_members(cloud) {
+            self.up[m].dst = gw;
+            self.down[m].src = gw;
+        }
+        self.gw_up[cloud].src = gw;
+        self.gw_down[cloud].dst = gw;
+    }
+
+    /// Wire size of one decoded update re-shipped as a dense frame
+    /// (failover forwarding): payload + frame header + seal overhead.
+    pub(crate) fn dense_frame_bytes(&self, numel: usize) -> u64 {
+        numel as u64 * 4
+            + crate::transport::FRAME_HEADER_BYTES as u64
+            + if self.cfg.encrypt {
+                crate::crypto::SEAL_OVERHEAD_BYTES
+            } else {
+                0
+            }
     }
 
     /// Held-out evaluation of the global model.

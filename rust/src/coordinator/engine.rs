@@ -35,11 +35,13 @@ impl<E> PartialOrd for Scheduled<E> {
 impl<E> Ord for Scheduled<E> {
     fn cmp(&self, other: &Self) -> Ordering {
         // min-heap by (time, insertion seq); BinaryHeap is a max-heap,
-        // so compare reversed
+        // so compare reversed. `at()` rejects non-finite times, so the
+        // comparison is total — mapping an incomparable (NaN) pair to
+        // Equal here would silently corrupt the heap order.
         other
             .at
             .partial_cmp(&self.at)
-            .unwrap_or(Ordering::Equal)
+            .expect("event times are finite (enforced in at())")
             .then_with(|| other.seq.cmp(&self.seq))
     }
 }
@@ -63,8 +65,11 @@ impl<E> EventEngine<E> {
     }
 
     /// Schedule `event` at absolute time `at` (clamped to now: events
-    /// cannot fire in the past).
+    /// cannot fire in the past). Non-finite times are a hard error: a
+    /// NaN would make heap comparisons incomparable and silently corrupt
+    /// the pop order (and with it determinism), so it must never enter.
     pub fn at(&mut self, at: f64, event: E) {
+        assert!(at.is_finite(), "non-finite event time {at}");
         let at = at.max(self.now);
         let seq = self.seq;
         self.seq += 1;
@@ -73,6 +78,10 @@ impl<E> EventEngine<E> {
 
     /// Schedule `event` `delay` seconds from now.
     pub fn after(&mut self, delay: f64, event: E) {
+        // hard assert (not debug): a NaN delay in a release build would
+        // otherwise reach `at` as now + NaN and a +inf delay would park
+        // an event at the end of time
+        assert!(delay.is_finite(), "non-finite event time delay {delay}");
         debug_assert!(delay >= 0.0, "negative delay {delay}");
         self.at(self.now + delay.max(0.0), event);
     }
@@ -133,5 +142,28 @@ mod tests {
         e.at(1.0, "late");
         assert_eq!(e.pop(), Some("late"));
         assert_eq!(e.now(), 100.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite event time")]
+    fn nan_time_rejected() {
+        let mut e = EventEngine::new(0.0);
+        e.at(f64::NAN, "bad");
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite event time")]
+    fn infinite_time_rejected() {
+        let mut e = EventEngine::new(0.0);
+        e.at(f64::INFINITY, "bad");
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite event time")]
+    fn nan_delay_rejected_via_after() {
+        let mut e = EventEngine::new(5.0);
+        // now + NaN = NaN: must trip the same hard assert, not silently
+        // clamp to now (the pre-fix behaviour of f64::max)
+        e.after(f64::NAN, "bad");
     }
 }

@@ -31,9 +31,18 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
 
         // event payload: the worker whose local training completed
         let mut engine: EventEngine<usize> = EventEngine::new(self.sim_secs);
-        // in-flight updates awaiting pickup, per worker
-        let mut pending: Vec<Option<(ParamSet, f32)>> =
+        // in-flight updates awaiting pickup, per worker:
+        // (delta, mean loss, compute seconds spent producing it)
+        let mut pending: Vec<Option<(ParamSet, f32, f64)>> =
             (0..n).map(|_| None).collect();
+        // per-worker compute seconds applied within the current
+        // pseudo-round (the async analogue of the sync schedulers'
+        // platform_secs — feeds the heterogeneity diagnostics)
+        let mut round_compute = vec![0.0f64; n];
+
+        // faults due at the very first pseudo-round strike before any
+        // platform starts
+        self.apply_faults(0)?;
 
         // kick off every platform at t = now, all from the same global
         let t_base = self.sim_secs;
@@ -51,7 +60,7 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
             )?;
             self.host_secs += r.host_secs;
             engine.at(t_base + r.compute_secs, w);
-            pending[w] = Some((r.update, r.mean_loss));
+            pending[w] = Some((r.update, r.mean_loss, r.compute_secs));
         }
 
         let mut aggs = 0usize;
@@ -64,8 +73,9 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
             // --- uplink (worker 0 is leader-colocated: codec loopback,
             // no WAN/encrypt hop — its delta is compressed like everyone
             // else's)
-            let (update, mean_loss) =
+            let (update, mean_loss, compute_secs) =
                 pending[worker].take().expect("pending update");
+            round_compute[worker] += compute_secs;
             let (delivered, up_secs) = if worker == 0 {
                 (self.up[0].codec_loopback(&update)?, 0.0)
             } else {
@@ -110,6 +120,9 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
                 secs
             };
             let restart_at = arrive + down_secs;
+            // the model downlink is real simulated time: the run is not
+            // over until the refreshed model reached the worker
+            self.sim_secs = self.sim_secs.max(restart_at);
             self.workers[worker].base_version = self.global_version;
             let global = self.global.clone();
             let r = self.workers[worker].local_round(
@@ -123,7 +136,7 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
             )?;
             self.host_secs += r.host_secs;
             engine.at(restart_at + r.compute_secs, worker);
-            pending[worker] = Some((r.update, r.mean_loss));
+            pending[worker] = Some((r.update, r.mean_loss, r.compute_secs));
 
             // --- pseudo-round bookkeeping: every n aggregations
             if aggs % n == 0 {
@@ -143,7 +156,12 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
                     train_loss: train_loss_acc / n as f32,
                     eval_loss,
                     eval_acc,
-                    platform_secs: vec![],
+                    // compute seconds behind the updates applied this
+                    // pseudo-round, per worker
+                    platform_secs: std::mem::replace(
+                        &mut round_compute,
+                        vec![0.0; n],
+                    ),
                     epsilon: self.accountant.epsilon(),
                     partition_gen: self.plan.generation,
                 });
@@ -153,6 +171,10 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
                         reached = true;
                         break;
                     }
+                }
+                if aggs < total_aggs {
+                    // faults scheduled for the next pseudo-round
+                    self.apply_faults(aggs / n)?;
                 }
             }
         }

@@ -18,10 +18,25 @@
 //! masks span all workers, so a single cloud's partial stays masked and
 //! only the leader's full cross-cloud sum cancels them. DP privatization
 //! happens at the worker in `local_round`, before anything ships.
+//!
+//! ## Gateway failover
+//!
+//! A remote gateway's WAN egress can die mid-run (fault injection:
+//! [`crate::netsim::FaultPlan`]). The leader only *observes* the death
+//! at that cloud's reduce — the member uplinks ride the still-healthy
+//! AZ fabric — so that is where the failover runs: re-elect the next
+//! member by id ([`crate::cluster::ClusterSpec::reelect_gateway`]),
+//! rebuild the WAN mesh around the standby (`Wan::reelect_gateway`,
+//! dropping every warm connection), re-route the already-delivered
+//! member updates to the new gateway over intra-AZ links, then reduce
+//! and ship the partial as usual. The round completes; nothing is lost.
+//! Because every member update still reaches the reduce exactly once,
+//! secure-aggregation mask coverage is unaffected, and every forward is
+//! priced through the WAN so the per-class byte ledger stays honest.
 
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::aggregation::{ClientUpdate, PartialAggregate};
 use crate::coordinator::build::Coordinator;
@@ -35,6 +50,8 @@ enum Ev {
     ComputeDone(usize),
     /// one member update reached its cloud's gateway
     AtGateway { cloud: usize },
+    /// failover: one member update re-routed to the re-elected gateway
+    Forwarded { cloud: usize },
     /// the cloud's partial aggregate reached the leader
     PartialArrived { cloud: usize },
     /// the broadcast reached a cloud's gateway
@@ -78,7 +95,7 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
             match engine.pop().expect("partial arrivals pending") {
                 Ev::ComputeDone(w) => {
                     let c = self.cluster.cloud_of(w);
-                    let gw = clouds[c][0];
+                    let gw = self.cluster.gateway(c);
                     // gateway members loop back through the codec; others
                     // pay the intra-cloud hop
                     let (delivered, secs, wire) = if w == gw {
@@ -103,69 +120,43 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
                     });
                     engine.after(secs, Ev::AtGateway { cloud: c });
                 }
-                Ev::AtGateway { cloud } => {
+                // Forwarded completions share the AtGateway tail: once
+                // the forwards were scheduled the re-elected gateway is
+                // alive by construction, so the failover check below is
+                // a no-op the second time around
+                Ev::AtGateway { cloud } | Ev::Forwarded { cloud } => {
                     cloud_pending[cloud] -= 1;
                     if cloud_pending[cloud] > 0 {
                         continue;
                     }
-                    // every member is in: reduce at the gateway (members
-                    // taken in worker-id order so the summation does not
-                    // depend on arrival order), then ship the partial
-                    let members: Vec<ClientUpdate> = clouds[cloud]
-                        .iter()
-                        .map(|&w| member_updates[w].take().expect("member in"))
-                        .collect();
-                    let gw = clouds[cloud][0];
-                    let t0 = Instant::now();
-                    let partial = if self.secure.is_some() {
-                        let psum =
-                            self.secure_partial(&members, n_total, sa_round);
-                        PartialAggregate {
-                            cloud,
-                            n_members: members.len(),
-                            n_samples: members
-                                .iter()
-                                .map(|u| u.n_samples)
-                                .sum(),
-                            // masked partials recombine by plain summation
-                            weight: 0.0,
-                            mean_loss: 0.0,
-                            delta: psum,
-                        }
-                    } else {
-                        let hier = self.hier.as_ref().expect("hier mode");
-                        hier.reduce_cloud(cloud, &members)
-                    };
-                    agg_host += t0.elapsed().as_secs_f64();
-                    let (arrived, secs, wire) = if gw == 0 {
-                        // leader-colocated gateway: codec loopback only
-                        let delta =
-                            self.gw_up[cloud].codec_loopback(&partial.delta)?;
-                        (PartialAggregate { delta, ..partial }, 0.0, 0)
-                    } else {
-                        let d = self.gw_up[cloud].send_update(
-                            &partial.delta,
-                            partial.mean_loss,
-                            partial.n_samples,
-                            partial.weight,
-                            &mut self.wan,
-                        )?;
-                        (
-                            PartialAggregate {
-                                cloud,
-                                n_members: partial.n_members,
-                                n_samples: d.n_samples,
-                                weight: d.weight,
-                                mean_loss: d.local_loss,
-                                delta: d.update,
-                            },
-                            d.secs,
-                            d.wire_bytes,
-                        )
-                    };
+                    // every member is in — but the gateway may have died
+                    // since the uplinks were sent (fault injection): then
+                    // fail over and re-route before reducing
+                    let (delays, wire) = self.hier_failover(
+                        round,
+                        cloud,
+                        &clouds[cloud],
+                        &member_updates,
+                    )?;
                     round_wire += wire;
-                    partials[cloud] = Some(arrived);
-                    engine.after(secs, Ev::PartialArrived { cloud });
+                    if !delays.is_empty() {
+                        cloud_pending[cloud] = delays.len();
+                        for d in delays {
+                            engine.after(d, Ev::Forwarded { cloud });
+                        }
+                        continue;
+                    }
+                    self.hier_cloud_ready(
+                        cloud,
+                        &clouds[cloud],
+                        &mut member_updates,
+                        n_total,
+                        sa_round,
+                        &mut engine,
+                        &mut partials,
+                        &mut round_wire,
+                        &mut agg_host,
+                    )?;
                 }
                 Ev::PartialArrived { .. } => arrived_clouds += 1,
                 _ => unreachable!("no broadcast yet"),
@@ -199,9 +190,11 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
         self.accountant.record_round();
         self.global_version += 1;
 
-        // --- phase 4: two-stage broadcast (leader → gateways → members)
-        for (c, members) in clouds.iter().enumerate() {
-            let gw = members[0];
+        // --- phase 4: two-stage broadcast (leader → gateways → members);
+        // gateways are read from the cluster, which reflects any
+        // re-election this round
+        for c in 0..n_clouds {
+            let gw = self.cluster.gateway(c);
             if gw == 0 {
                 engine.after(0.0, Ev::GwBcast { cloud: c });
             } else {
@@ -216,7 +209,16 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
             match engine.pop().expect("broadcast events pending") {
                 Ev::GwBcast { cloud } => {
                     have_model += 1; // the gateway itself
-                    for &m in &clouds[cloud][1..] {
+                    let gw = self.cluster.gateway(cloud);
+                    for &m in &clouds[cloud] {
+                        if m == gw {
+                            continue;
+                        }
+                        if m == 0 {
+                            // the leader hosts the global model already
+                            have_model += 1;
+                            continue;
+                        }
                         let (secs, wire) = self.down[m]
                             .send_params(&self.global, &mut self.wan)?;
                         round_wire += wire;
@@ -238,5 +240,139 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
             round_end,
             round_wire,
         )
+    }
+
+    /// Shared tail of a cloud's uplink phase — run once every member
+    /// update is at the (live) gateway, whether via healthy `AtGateway`
+    /// arrivals or failover forwards: take the members in worker-id
+    /// order, reduce and ship the partial, schedule its arrival.
+    #[allow(clippy::too_many_arguments)]
+    fn hier_cloud_ready(
+        &mut self,
+        cloud: usize,
+        members: &[usize],
+        member_updates: &mut [Option<ClientUpdate>],
+        n_total: f64,
+        sa_round: u64,
+        engine: &mut EventEngine<Ev>,
+        partials: &mut [Option<PartialAggregate>],
+        round_wire: &mut u64,
+        agg_host: &mut f64,
+    ) -> Result<()> {
+        let taken: Vec<ClientUpdate> = members
+            .iter()
+            .map(|&w| member_updates[w].take().expect("member in"))
+            .collect();
+        let (arrived, secs, wire, host) =
+            self.hier_reduce_and_ship(cloud, taken, n_total, sa_round)?;
+        *agg_host += host;
+        *round_wire += wire;
+        partials[cloud] = Some(arrived);
+        engine.after(secs, Ev::PartialArrived { cloud });
+        Ok(())
+    }
+
+    /// Detect a dead gateway at reduce time and fail over (see module
+    /// docs). Returns the forward-transfer delays for re-routing each
+    /// already-delivered member update to the re-elected gateway, plus
+    /// the wire bytes those forwards cost; empty = gateway healthy, no
+    /// failover needed.
+    fn hier_failover(
+        &mut self,
+        round: usize,
+        cloud: usize,
+        members: &[usize],
+        member_updates: &[Option<ClientUpdate>],
+    ) -> Result<(Vec<f64>, u64)> {
+        let gw = self.cluster.gateway(cloud);
+        if !self.wan.node_down(gw) {
+            return Ok((Vec::new(), 0));
+        }
+        let new_gw = self.fail_over_gateway(round, cloud)?;
+        log::warn!(
+            "round {round}: cloud {cloud} gateway {gw} found dead at reduce \
+             time; re-routing {} member updates to node {new_gw}",
+            members.len() - 1
+        );
+        // the decoded member updates sit at the dead gateway, whose AZ
+        // fabric survives: forward each as a dense frame to the standby
+        let mut delays = Vec::with_capacity(members.len());
+        let mut wire = 0u64;
+        for &w in members {
+            if w == new_gw {
+                continue;
+            }
+            let numel = member_updates[w]
+                .as_ref()
+                .expect("member delivered before failover")
+                .delta
+                .numel();
+            let bytes = self.dense_frame_bytes(numel);
+            let st = self
+                .wan
+                .transfer(gw, new_gw, bytes, self.cfg.protocol, self.cfg.streams)
+                .context("failover forward")?;
+            wire += st.wire_bytes;
+            delays.push(st.time_s);
+        }
+        Ok((delays, wire))
+    }
+
+    /// Reduce one cloud's member updates at its gateway (members in
+    /// worker-id order, so summation never depends on arrival order) and
+    /// ship the partial toward the leader. Returns the partial as it
+    /// arrives, the WAN delay, the wire bytes and the host CPU seconds
+    /// spent reducing.
+    fn hier_reduce_and_ship(
+        &mut self,
+        cloud: usize,
+        members: Vec<ClientUpdate>,
+        n_total: f64,
+        sa_round: u64,
+    ) -> Result<(PartialAggregate, f64, u64, f64)> {
+        let gw = self.cluster.gateway(cloud);
+        let t0 = Instant::now();
+        let partial = if self.secure.is_some() {
+            let psum = self.secure_partial(&members, n_total, sa_round);
+            PartialAggregate {
+                cloud,
+                n_members: members.len(),
+                n_samples: members.iter().map(|u| u.n_samples).sum(),
+                // masked partials recombine by plain summation
+                weight: 0.0,
+                mean_loss: 0.0,
+                delta: psum,
+            }
+        } else {
+            let hier = self.hier.as_ref().expect("hier mode");
+            hier.reduce_cloud(cloud, &members)
+        };
+        let host = t0.elapsed().as_secs_f64();
+        if gw == 0 {
+            // leader-colocated gateway: codec loopback only
+            let delta = self.gw_up[cloud].codec_loopback(&partial.delta)?;
+            Ok((PartialAggregate { delta, ..partial }, 0.0, 0, host))
+        } else {
+            let d = self.gw_up[cloud].send_update(
+                &partial.delta,
+                partial.mean_loss,
+                partial.n_samples,
+                partial.weight,
+                &mut self.wan,
+            )?;
+            Ok((
+                PartialAggregate {
+                    cloud,
+                    n_members: partial.n_members,
+                    n_samples: d.n_samples,
+                    weight: d.weight,
+                    mean_loss: d.local_loss,
+                    delta: d.update,
+                },
+                d.secs,
+                d.wire_bytes,
+                host,
+            ))
+        }
     }
 }

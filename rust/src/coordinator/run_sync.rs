@@ -29,6 +29,7 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
     pub(crate) fn run_sync(&mut self) -> Result<RunResult> {
         let mut reached = false;
         for round in 0..self.cfg.rounds {
+            self.apply_faults(round)?;
             let record = if self.hier.is_some() {
                 self.hier_round(round)?
             } else {

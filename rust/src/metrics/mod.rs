@@ -16,7 +16,9 @@ pub struct RoundRecord {
     pub eval_loss: Option<f32>,
     /// held-out next-token accuracy in [0,1]
     pub eval_acc: Option<f64>,
-    /// per-platform compute seconds this round (load diagnostics)
+    /// per-platform compute seconds this round (load diagnostics; async
+    /// pseudo-rounds report the compute behind the updates applied in
+    /// the round's window)
     pub platform_secs: Vec<f64>,
     /// cumulative DP epsilon after this round
     pub epsilon: f64,

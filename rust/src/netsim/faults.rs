@@ -1,0 +1,413 @@
+//! Deterministic fault injection for the simulated cross-cloud fabric.
+//!
+//! A [`FaultPlan`] is a list of timed [`FaultEvent`]s the schedulers
+//! replay at round boundaries (async: pseudo-round boundaries) on the
+//! shared event engine's clock. Every event is specified — or generated
+//! from a seed — ahead of the run, so a faulty run is exactly as
+//! reproducible as a clean one: same seed + same plan ⇒ bit-identical
+//! histories, which `tests/determinism.rs` pins across thread counts.
+//!
+//! The taxonomy mirrors what actually breaks in cross-cloud training:
+//!
+//! * [`FaultEvent::GatewayDown`] — a cloud's WAN egress (the gateway
+//!   role hosted on its gateway node) fails. Intra-AZ fabric survives;
+//!   the cloud must re-elect a standby gateway to keep talking across
+//!   regions (see `Wan::fail_node` / `ClusterSpec::reelect_gateway`).
+//! * [`FaultEvent::LinkDegrade`] — a directed link loses bandwidth
+//!   (`factor` multiplies `bandwidth_bps`; `0.1` = 10× slower).
+//! * [`FaultEvent::NodeSlowdown`] — a worker node's compute degrades
+//!   (`factor` divides `compute_speed`; `2.0` = twice as slow), the
+//!   persistent-straggler counterpart of the transient straggler model.
+//!
+//! Spec grammar (CLI `--fault`, config JSON `"faults": [...]`, events
+//! separated by `;`):
+//!
+//! ```text
+//! gateway-down:cloud=1,at=round3
+//! link-degrade:src=0,dst=4,at=2,factor=0.25
+//! node-slowdown:node=5,at=round4,factor=2
+//! ```
+
+use std::fmt;
+
+use anyhow::{bail, Context, Result};
+
+use crate::cluster::ClusterSpec;
+use crate::util::rng::Pcg64;
+
+/// RNG stream id for seed-generated chaos plans.
+const FAULT_STREAM: u64 = 0xFA117;
+
+/// One timed fault. `at` is the aggregation round (0-based) at whose
+/// start the fault strikes; in async mode, the pseudo-round boundary.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultEvent {
+    /// The WAN egress of `cloud`'s current gateway node fails.
+    GatewayDown { cloud: usize, at: usize },
+    /// Directed link `src → dst` keeps only `factor` of its bandwidth.
+    LinkDegrade { src: usize, dst: usize, at: usize, factor: f64 },
+    /// `node` computes `factor`× slower from round `at` on.
+    NodeSlowdown { node: usize, at: usize, factor: f64 },
+}
+
+impl FaultEvent {
+    /// Round at whose start this event fires.
+    pub fn at(&self) -> usize {
+        match *self {
+            FaultEvent::GatewayDown { at, .. }
+            | FaultEvent::LinkDegrade { at, .. }
+            | FaultEvent::NodeSlowdown { at, .. } => at,
+        }
+    }
+
+    /// Parse one `kind:key=value,...` spec (see module docs for the
+    /// grammar). Unknown kinds/keys and missing keys are hard errors so
+    /// typos cannot silently drop a fault from an experiment.
+    pub fn parse(spec: &str) -> Result<FaultEvent> {
+        let spec = spec.trim();
+        let (kind, rest) = spec
+            .split_once(':')
+            .with_context(|| format!("fault spec {spec:?}: expected kind:key=value,..."))?;
+        let kind = kind.trim();
+        // per-kind key sets: a key another kind would accept is still a
+        // typo here (e.g. factor= on gateway-down) and must not be
+        // silently dropped
+        let allowed: &[&str] = match kind {
+            "gateway-down" => &["cloud", "at"],
+            "link-degrade" => &["src", "dst", "at", "factor"],
+            "node-slowdown" => &["node", "at", "factor"],
+            other => bail!(
+                "fault spec {spec:?}: unknown kind {other:?} \
+                 (expected gateway-down | link-degrade | node-slowdown)"
+            ),
+        };
+        let mut cloud = None;
+        let mut src = None;
+        let mut dst = None;
+        let mut node = None;
+        let mut at = None;
+        let mut factor = None;
+        for pair in rest.split(',') {
+            let (k, v) = pair
+                .split_once('=')
+                .with_context(|| format!("fault spec {spec:?}: bad pair {pair:?}"))?;
+            let (k, v) = (k.trim(), v.trim());
+            if !allowed.contains(&k) {
+                bail!(
+                    "fault spec {spec:?}: key {k:?} is not valid for \
+                     {kind} (allowed: {allowed:?})"
+                );
+            }
+            match k {
+                "cloud" => set_once(spec, k, &mut cloud, parse_usize(spec, k, v)?)?,
+                "src" => set_once(spec, k, &mut src, parse_usize(spec, k, v)?)?,
+                "dst" => set_once(spec, k, &mut dst, parse_usize(spec, k, v)?)?,
+                "node" => set_once(spec, k, &mut node, parse_usize(spec, k, v)?)?,
+                // `at=round3` and `at=3` are both accepted
+                "at" => set_once(
+                    spec,
+                    k,
+                    &mut at,
+                    parse_usize(spec, k, v.trim_start_matches("round"))?,
+                )?,
+                "factor" => set_once(
+                    spec,
+                    k,
+                    &mut factor,
+                    v.parse::<f64>().with_context(|| {
+                        format!("fault spec {spec:?}: bad factor {v:?}")
+                    })?,
+                )?,
+                _ => unreachable!("key checked against the allowed set"),
+            }
+        }
+        let req = |name: &str, v: Option<usize>| {
+            v.with_context(|| format!("fault spec {spec:?}: missing {name}="))
+        };
+        let ev = match kind {
+            "gateway-down" => FaultEvent::GatewayDown {
+                cloud: req("cloud", cloud)?,
+                at: req("at", at)?,
+            },
+            "link-degrade" => FaultEvent::LinkDegrade {
+                src: req("src", src)?,
+                dst: req("dst", dst)?,
+                at: req("at", at)?,
+                factor: factor
+                    .with_context(|| format!("fault spec {spec:?}: missing factor="))?,
+            },
+            "node-slowdown" => FaultEvent::NodeSlowdown {
+                node: req("node", node)?,
+                at: req("at", at)?,
+                factor: factor
+                    .with_context(|| format!("fault spec {spec:?}: missing factor="))?,
+            },
+            _ => unreachable!("kind checked above"),
+        };
+        ev.validate()?;
+        Ok(ev)
+    }
+
+    /// Structural sanity (cluster-independent; the coordinator checks
+    /// node/cloud ids against its cluster at build time).
+    pub fn validate(&self) -> Result<()> {
+        match *self {
+            FaultEvent::LinkDegrade { src, dst, factor, .. } => {
+                if src == dst {
+                    bail!("link-degrade: src == dst ({src})");
+                }
+                if !(factor > 0.0 && factor.is_finite()) {
+                    bail!("link-degrade: factor must be finite and > 0, got {factor}");
+                }
+            }
+            FaultEvent::NodeSlowdown { factor, .. } => {
+                if !(factor >= 1.0 && factor.is_finite()) {
+                    bail!("node-slowdown: factor must be finite and >= 1, got {factor}");
+                }
+            }
+            FaultEvent::GatewayDown { .. } => {}
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Display for FaultEvent {
+    /// The canonical spec string (round-trips through [`FaultEvent::parse`]).
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            FaultEvent::GatewayDown { cloud, at } => {
+                write!(f, "gateway-down:cloud={cloud},at={at}")
+            }
+            FaultEvent::LinkDegrade { src, dst, at, factor } => {
+                write!(f, "link-degrade:src={src},dst={dst},at={at},factor={factor}")
+            }
+            FaultEvent::NodeSlowdown { node, at, factor } => {
+                write!(f, "node-slowdown:node={node},at={at},factor={factor}")
+            }
+        }
+    }
+}
+
+fn parse_usize(spec: &str, key: &str, v: &str) -> Result<usize> {
+    v.parse::<usize>()
+        .with_context(|| format!("fault spec {spec:?}: bad {key} {v:?}"))
+}
+
+/// A duplicated key is a typo for some other key — silently keeping the
+/// last value would run a different fault than written.
+fn set_once<T>(spec: &str, key: &str, slot: &mut Option<T>, val: T) -> Result<()> {
+    if slot.is_some() {
+        bail!("fault spec {spec:?}: duplicate key {key:?}");
+    }
+    *slot = Some(val);
+    Ok(())
+}
+
+/// An ordered fault schedule (stable-sorted by round, so same-round
+/// events apply in the order they were written).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    pub fn new(mut events: Vec<FaultEvent>) -> FaultPlan {
+        events.sort_by_key(FaultEvent::at);
+        FaultPlan { events }
+    }
+
+    /// Parse a `;`-separated list of event specs (empty input ⇒ empty plan).
+    pub fn parse(specs: &str) -> Result<FaultPlan> {
+        let events = specs
+            .split(';')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(FaultEvent::parse)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(FaultPlan::new(events))
+    }
+
+    /// A reproducible chaos schedule: `n_events` faults drawn from the
+    /// taxonomy, uniformly over `rounds`, shaped by `cluster`. Gateway
+    /// kills only target clouds with a standby member, and degraded
+    /// links are ones guaranteed to exist for the whole run (intra-cloud
+    /// mesh links, which no re-election ever moves; gateway-mesh links
+    /// only when every cloud is single-node, i.e. no re-election can
+    /// happen). Same seed + cluster ⇒ same plan.
+    pub fn random(seed: u64, n_events: usize, rounds: usize, cluster: &ClusterSpec) -> FaultPlan {
+        let mut rng = Pcg64::new(seed, FAULT_STREAM);
+        let n = cluster.n();
+        let survivable: Vec<usize> = (0..cluster.n_clouds())
+            .filter(|&c| cluster.cloud_members(c).len() >= 2)
+            .collect();
+        let mut killed = vec![false; cluster.n_clouds()];
+        let mut events = Vec::with_capacity(n_events);
+        for _ in 0..n_events {
+            let at = rng.below_usize(rounds.max(1));
+            let kind = rng.below(3);
+            let ev = if kind == 0 && !survivable.is_empty() {
+                let cloud = survivable[rng.below_usize(survivable.len())];
+                if killed[cloud] {
+                    // one egress failure per cloud: keep a standby alive
+                    FaultEvent::NodeSlowdown {
+                        node: rng.below_usize(n),
+                        at,
+                        factor: 1.5 + rng.uniform() * 2.5,
+                    }
+                } else {
+                    killed[cloud] = true;
+                    FaultEvent::GatewayDown { cloud, at }
+                }
+            } else if kind == 1 && !survivable.is_empty() {
+                // a link inside a multi-node cloud: the full intra-cloud
+                // mesh exists and never moves under re-election
+                let cloud = survivable[rng.below_usize(survivable.len())];
+                let members = cluster.cloud_members(cloud);
+                let a = rng.below_usize(members.len());
+                let b = (a + 1 + rng.below_usize(members.len() - 1)) % members.len();
+                FaultEvent::LinkDegrade {
+                    src: members[a],
+                    dst: members[b],
+                    at,
+                    factor: 0.1 + rng.uniform() * 0.8,
+                }
+            } else if kind == 1 && n >= 2 {
+                // flat cluster (all clouds single-node): the static
+                // gateway mesh links every pair
+                let src = rng.below_usize(n);
+                let dst = (src + 1 + rng.below_usize(n - 1)) % n;
+                FaultEvent::LinkDegrade {
+                    src,
+                    dst,
+                    at,
+                    factor: 0.1 + rng.uniform() * 0.8,
+                }
+            } else {
+                FaultEvent::NodeSlowdown {
+                    node: rng.below_usize(n),
+                    at,
+                    factor: 1.5 + rng.uniform() * 2.5,
+                }
+            };
+            events.push(ev);
+        }
+        FaultPlan::new(events)
+    }
+
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Events that strike at the start of `round`.
+    pub fn due(&self, round: usize) -> impl Iterator<Item = &FaultEvent> {
+        self.events.iter().filter(move |e| e.at() == round)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_every_kind() {
+        assert_eq!(
+            FaultEvent::parse("gateway-down:cloud=1,at=round3").unwrap(),
+            FaultEvent::GatewayDown { cloud: 1, at: 3 }
+        );
+        assert_eq!(
+            FaultEvent::parse("link-degrade:src=0,dst=4,at=2,factor=0.25").unwrap(),
+            FaultEvent::LinkDegrade { src: 0, dst: 4, at: 2, factor: 0.25 }
+        );
+        assert_eq!(
+            FaultEvent::parse(" node-slowdown:node=5, at=round4, factor=2 ").unwrap(),
+            FaultEvent::NodeSlowdown { node: 5, at: 4, factor: 2.0 }
+        );
+    }
+
+    #[test]
+    fn display_round_trips() {
+        for spec in [
+            "gateway-down:cloud=2,at=7",
+            "link-degrade:src=1,dst=0,at=0,factor=0.5",
+            "node-slowdown:node=3,at=9,factor=3",
+        ] {
+            let ev = FaultEvent::parse(spec).unwrap();
+            assert_eq!(FaultEvent::parse(&ev.to_string()).unwrap(), ev);
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in [
+            "gateway-down",                                // no args
+            "gateway-down:cloud=1",                        // missing at
+            "gateway-down:cloud=x,at=1",                   // bad number
+            "gateway-down:cloud=1,at=1,zone=7",            // unknown key
+            "gateway-down:cloud=1,at=1,factor=0.5",        // key of another kind
+            "node-slowdown:node=1,at=2,factor=2,cloud=1",  // key of another kind
+            "node-slowdown:node=1,at=2,at=5,factor=2",     // duplicate key
+            "meteor-strike:at=1",                          // unknown kind
+            "link-degrade:src=0,dst=1,at=1",               // missing factor
+            "link-degrade:src=2,dst=2,at=1,factor=0.5",    // src == dst
+            "link-degrade:src=0,dst=1,at=1,factor=0",      // zero factor
+            "node-slowdown:node=0,at=1,factor=0.5",        // speedup
+        ] {
+            assert!(FaultEvent::parse(bad).is_err(), "{bad:?} should fail");
+        }
+    }
+
+    #[test]
+    fn plan_parses_lists_and_sorts_by_round() {
+        let p = FaultPlan::parse(
+            "node-slowdown:node=1,at=5,factor=2; gateway-down:cloud=0,at=2",
+        )
+        .unwrap();
+        assert_eq!(p.len(), 2);
+        assert_eq!(p.events()[0], FaultEvent::GatewayDown { cloud: 0, at: 2 });
+        assert_eq!(p.due(5).count(), 1);
+        assert_eq!(p.due(3).count(), 0);
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse("  ;  ").unwrap().is_empty());
+    }
+
+    #[test]
+    fn random_plan_is_deterministic_and_survivable() {
+        let cluster = crate::cluster::ClusterSpec::paper_default_scaled(4);
+        let a = FaultPlan::random(7, 12, 10, &cluster);
+        let b = FaultPlan::random(7, 12, 10, &cluster);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 12);
+        // at most one gateway kill per cloud, every event validates
+        let mut kills = vec![0usize; cluster.n_clouds()];
+        for ev in a.events() {
+            ev.validate().unwrap();
+            assert!(ev.at() < 10);
+            if let FaultEvent::GatewayDown { cloud, .. } = *ev {
+                kills[cloud] += 1;
+            }
+        }
+        assert!(kills.iter().all(|&k| k <= 1));
+        let c = FaultPlan::random(8, 12, 10, &cluster);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn random_plan_never_kills_single_node_clouds() {
+        // paper_default: every cloud has exactly one member — a gateway
+        // kill would strand the cloud, so the generator must not emit any
+        let cluster = crate::cluster::ClusterSpec::paper_default();
+        let p = FaultPlan::random(3, 50, 20, &cluster);
+        assert!(p
+            .events()
+            .iter()
+            .all(|e| !matches!(e, FaultEvent::GatewayDown { .. })));
+    }
+}

@@ -7,10 +7,12 @@
 //! bytes-on-wire and relative transfer times, not on a specific testbed's
 //! absolute throughput.
 
+pub mod faults;
 pub mod link;
 pub mod protocol;
 mod topology;
 
+pub use faults::{FaultEvent, FaultPlan};
 pub use link::{Link, TransferStats, MSS_BYTES};
 pub use protocol::Protocol;
-pub use topology::{LinkClass, Wan};
+pub use topology::{LinkClass, NetError, Wan};

@@ -29,6 +29,17 @@ use crate::util::rng::Pcg64;
 /// RNG stream id for network noise (distinct from data/DP streams).
 const WAN_STREAM: u64 = 0x57414e;
 
+/// Why a route or transfer could not be serviced. Failures are *data*
+/// (not panics) so the coordinator can detect a dead gateway and fail
+/// over instead of tearing the run down.
+#[derive(Debug, thiserror::Error, Clone, Copy, PartialEq, Eq)]
+pub enum NetError {
+    #[error("no route {src}->{dst}: link ({a},{b}) does not exist")]
+    MissingLink { src: usize, dst: usize, a: usize, b: usize },
+    #[error("node {node} WAN egress is down")]
+    NodeDown { node: usize },
+}
+
 /// What kind of path segment a link is (for per-class byte accounting).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum LinkClass {
@@ -47,12 +58,20 @@ pub struct Wan {
     n: usize,
     /// links[(src, dst)]
     links: HashMap<(usize, usize), Link>,
-    /// link class per (src, dst) — parallel to `links`
+    /// link class per (src, dst). Grows monotonically: entries survive a
+    /// link's removal (gateway re-election) so the per-class byte ledger
+    /// keeps counting bytes that crossed a since-torn-down link. A pair's
+    /// class can never change — mesh links connect gateways of different
+    /// clouds, intra-AZ links members of one cloud — so stale entries are
+    /// always accurate. Liveness is `links`' job, not this map's.
     classes: HashMap<(usize, usize), LinkClass>,
     /// owning cloud per node (identity for flat meshes)
     cloud_of: Vec<usize>,
     /// gateway node per cloud
     gateways: Vec<usize>,
+    /// nodes whose WAN egress has failed ([`Wan::fail_node`]): their
+    /// non-intra-AZ links are dead and routes refuse to transit them
+    down: Vec<bool>,
     /// protocol connections already established (src, dst, proto)
     warm: HashMap<(usize, usize, Protocol), bool>,
     /// cumulative wire bytes per (src, dst)
@@ -81,6 +100,7 @@ impl Wan {
             classes,
             cloud_of: (0..n).collect(),
             gateways: (0..n).collect(),
+            down: vec![false; n],
             warm: HashMap::new(),
             ledger: HashMap::new(),
             rng: Pcg64::new(seed, WAN_STREAM),
@@ -164,6 +184,7 @@ impl Wan {
             classes,
             cloud_of,
             gateways,
+            down: vec![false; n],
             warm: HashMap::new(),
             ledger: HashMap::new(),
             rng: Pcg64::new(seed, WAN_STREAM),
@@ -183,18 +204,34 @@ impl Wan {
         self.links.get(&(src, dst))
     }
 
-    /// Class of the direct link (src, dst), if one exists.
+    /// Class of the direct link (src, dst), if one currently exists.
     pub fn link_class(&self, src: usize, dst: usize) -> Option<LinkClass> {
+        if !self.links.contains_key(&(src, dst)) {
+            return None;
+        }
         self.classes.get(&(src, dst)).copied()
     }
 
+    /// Whether the direct link (src, dst) exists and is in service.
+    /// Intra-AZ fabric survives a WAN-egress failure ([`Wan::fail_node`]);
+    /// every other class needs both endpoints' egress up.
+    fn link_up(&self, src: usize, dst: usize) -> bool {
+        match self.link_class(src, dst) {
+            None => false,
+            Some(LinkClass::IntraAz) => true,
+            Some(_) => !self.down[src] && !self.down[dst],
+        }
+    }
+
     /// The hop sequence a transfer src→dst takes: the direct link when
-    /// one exists, otherwise via the clouds' gateways (degenerate hops
-    /// skipped). Every returned hop has a link.
-    pub fn route(&self, src: usize, dst: usize) -> Vec<(usize, usize)> {
+    /// one exists and is up, otherwise via the clouds' gateways
+    /// (degenerate hops skipped). Every returned hop has a live link;
+    /// a missing link or a dead gateway is an error, not a panic, so
+    /// callers can fail over.
+    pub fn route(&self, src: usize, dst: usize) -> Result<Vec<(usize, usize)>, NetError> {
         assert!(src != dst, "loopback transfers are free; don't route them");
-        if self.links.contains_key(&(src, dst)) {
-            return vec![(src, dst)];
+        if self.link_up(src, dst) {
+            return Ok(vec![(src, dst)]);
         }
         let gs = self.gateways[self.cloud_of[src]];
         let gd = self.gateways[self.cloud_of[dst]];
@@ -208,7 +245,16 @@ impl Wan {
         if gd != dst {
             hops.push((gd, dst));
         }
-        hops
+        for &(a, b) in &hops {
+            if !self.links.contains_key(&(a, b)) {
+                return Err(NetError::MissingLink { src, dst, a, b });
+            }
+            if !self.link_up(a, b) {
+                let node = if self.down[a] { a } else { b };
+                return Err(NetError::NodeDown { node });
+            }
+        }
+        Ok(hops)
     }
 
     /// Simulate a transfer along the route src→dst (store-and-forward per
@@ -221,17 +267,17 @@ impl Wan {
         payload_bytes: u64,
         protocol: Protocol,
         streams: usize,
-    ) -> TransferStats {
+    ) -> Result<TransferStats, NetError> {
         assert!(src != dst, "loopback transfers are free; don't simulate them");
-        let hops = self.route(src, dst);
+        let hops = self.route(src, dst)?;
         let mut total = TransferStats { time_s: 0.0, wire_bytes: 0, handshake_s: 0.0 };
         for (s, d) in hops {
-            let st = self.transfer_hop(s, d, payload_bytes, protocol, streams);
+            let st = self.transfer_hop(s, d, payload_bytes, protocol, streams)?;
             total.time_s += st.time_s;
             total.wire_bytes += st.wire_bytes;
             total.handshake_s += st.handshake_s;
         }
-        total
+        Ok(total)
     }
 
     /// One direct-link hop (the pre-routing `transfer` semantics).
@@ -242,14 +288,111 @@ impl Wan {
         payload_bytes: u64,
         protocol: Protocol,
         streams: usize,
-    ) -> TransferStats {
-        let link = self.links.get(&(src, dst)).expect("missing link").clone();
+    ) -> Result<TransferStats, NetError> {
+        let link = match self.links.get(&(src, dst)) {
+            Some(l) => l.clone(),
+            None => {
+                return Err(NetError::MissingLink { src, dst, a: src, b: dst })
+            }
+        };
+        if !self.link_up(src, dst) {
+            let node = if self.down[src] { src } else { dst };
+            return Err(NetError::NodeDown { node });
+        }
         let warm = *self.warm.get(&(src, dst, protocol)).unwrap_or(&false);
         let stats =
             link.transfer(payload_bytes, protocol, warm, streams, &mut self.rng);
         self.warm.insert((src, dst, protocol), true);
         *self.ledger.entry((src, dst)).or_insert(0) += stats.wire_bytes;
-        stats
+        Ok(stats)
+    }
+
+    /// Fail `node`'s WAN egress: its non-intra-AZ links go out of
+    /// service and routes refuse to transit it. The AZ fabric inside its
+    /// cloud keeps working (it is a separate substrate from the WAN
+    /// egress), which is what lets a standby gateway take over without
+    /// losing the node's in-flight training state. Warm connections
+    /// touching the node are dropped.
+    pub fn fail_node(&mut self, node: usize) {
+        assert!(node < self.n);
+        self.down[node] = true;
+        self.warm.retain(|&(s, d, _), _| s != node && d != node);
+    }
+
+    /// Bring `node`'s WAN egress back (connections stay cold until
+    /// re-established).
+    pub fn restore_node(&mut self, node: usize) {
+        assert!(node < self.n);
+        self.down[node] = false;
+    }
+
+    /// Whether `node`'s WAN egress is failed.
+    pub fn node_down(&self, node: usize) -> bool {
+        self.down[node]
+    }
+
+    /// Current gateway node of `cloud` (as this topology routes it).
+    pub fn gateway(&self, cloud: usize) -> usize {
+        self.gateways[cloud]
+    }
+
+    /// Re-elect `new_gw` as `cloud`'s gateway: the old gateway's mesh
+    /// links are torn down and the new gateway inherits a fresh link of
+    /// the same class to every other cloud's gateway (all members of a
+    /// cloud share a region, so the class carries over). All warm
+    /// connections are dropped — failover forces cold handshakes, which
+    /// is exactly the cost a real re-election pays.
+    pub fn reelect_gateway(&mut self, cloud: usize, new_gw: usize) {
+        assert!(new_gw < self.n, "gateway {new_gw} out of range");
+        assert_eq!(
+            self.cloud_of[new_gw], cloud,
+            "node {new_gw} is not a member of cloud {cloud}"
+        );
+        let old = self.gateways[cloud];
+        if old == new_gw {
+            return;
+        }
+        let peer_gateways: Vec<usize> = self
+            .gateways
+            .iter()
+            .enumerate()
+            .filter(|&(c, _)| c != cloud)
+            .map(|(_, &g)| g)
+            .collect();
+        for g in peer_gateways {
+            // class entries are kept (the per-class ledger still counts
+            // bytes that crossed the old mesh); only the links go away
+            let class = *self
+                .classes
+                .get(&(old, g))
+                .expect("gateway mesh link must exist");
+            self.links.remove(&(old, g));
+            self.links.remove(&(g, old));
+            self.links.insert((new_gw, g), Wan::class_link(class));
+            self.links.insert((g, new_gw), Wan::class_link(class));
+            self.classes.insert((new_gw, g), class);
+            self.classes.insert((g, new_gw), class);
+        }
+        self.gateways[cloud] = new_gw;
+        self.reset_connections();
+    }
+
+    /// Multiply the bandwidth of the directed link (src, dst) by
+    /// `factor` (fault injection: `0.1` = 10× slower).
+    pub fn degrade_link(
+        &mut self,
+        src: usize,
+        dst: usize,
+        factor: f64,
+    ) -> Result<(), NetError> {
+        assert!(factor > 0.0 && factor.is_finite(), "bad degrade factor {factor}");
+        match self.links.get_mut(&(src, dst)) {
+            Some(l) => {
+                l.bandwidth_bps *= factor;
+                Ok(())
+            }
+            None => Err(NetError::MissingLink { src, dst, a: src, b: dst }),
+        }
     }
 
     /// Drop all warm connections (e.g. after a simulated failure).
@@ -305,9 +448,9 @@ mod tests {
     #[test]
     fn ledger_accumulates() {
         let mut w = Wan::uniform(2, Link::new(1e9, 0.01), 2);
-        w.transfer(0, 1, 1000, Protocol::Grpc, 1);
-        w.transfer(0, 1, 1000, Protocol::Grpc, 1);
-        w.transfer(1, 0, 500, Protocol::Grpc, 1);
+        w.transfer(0, 1, 1000, Protocol::Grpc, 1).unwrap();
+        w.transfer(0, 1, 1000, Protocol::Grpc, 1).unwrap();
+        w.transfer(1, 0, 500, Protocol::Grpc, 1).unwrap();
         assert!(w.wire_bytes(0, 1) >= 2000);
         assert!(w.wire_bytes(1, 0) >= 500);
         assert_eq!(w.total_wire_bytes(),
@@ -319,11 +462,11 @@ mod tests {
     #[test]
     fn second_transfer_is_warm() {
         let mut w = Wan::uniform(2, Link::new(1e9, 0.05), 3);
-        let cold = w.transfer(0, 1, 10_000, Protocol::Grpc, 1);
-        let warm = w.transfer(0, 1, 10_000, Protocol::Grpc, 1);
+        let cold = w.transfer(0, 1, 10_000, Protocol::Grpc, 1).unwrap();
+        let warm = w.transfer(0, 1, 10_000, Protocol::Grpc, 1).unwrap();
         assert!(warm.handshake_s < cold.handshake_s);
         w.reset_connections();
-        let cold2 = w.transfer(0, 1, 10_000, Protocol::Grpc, 1);
+        let cold2 = w.transfer(0, 1, 10_000, Protocol::Grpc, 1).unwrap();
         assert!((cold2.handshake_s - cold.handshake_s).abs() < 1e-9);
     }
 
@@ -332,9 +475,9 @@ mod tests {
         let c = crate::cluster::ClusterSpec::paper_default();
         let mut w = Wan::from_cluster(&c, 4);
         // aws(us-east) -> gcp(us-central) is cross-region in this preset
-        let t_us = w.transfer(0, 1, 10_000_000, Protocol::Grpc, 8);
+        let t_us = w.transfer(0, 1, 10_000_000, Protocol::Grpc, 8).unwrap();
         // azure is eu-west: same class of link, so just check both are sane
-        let t_eu = w.transfer(0, 2, 10_000_000, Protocol::Grpc, 8);
+        let t_eu = w.transfer(0, 2, 10_000_000, Protocol::Grpc, 8).unwrap();
         assert!(t_us.time_s > 0.0 && t_eu.time_s > 0.0);
         // all paper-default pairs are gateway-to-gateway across regions
         assert_eq!(w.link_class(0, 1), Some(LinkClass::InterRegion));
@@ -346,15 +489,15 @@ mod tests {
         let c = crate::cluster::ClusterSpec::paper_default_scaled(4);
         let w = Wan::from_cluster(&c, 7);
         // same cloud: direct intra-AZ link
-        assert_eq!(w.route(1, 3), vec![(1, 3)]);
+        assert_eq!(w.route(1, 3).unwrap(), vec![(1, 3)]);
         assert_eq!(w.link_class(1, 3), Some(LinkClass::IntraAz));
         // worker 5 (cloud 1, gw 4) -> leader node 0 (cloud 0, gw 0)
-        assert_eq!(w.route(5, 0), vec![(5, 4), (4, 0)]);
+        assert_eq!(w.route(5, 0).unwrap(), vec![(5, 4), (4, 0)]);
         assert_eq!(w.link_class(4, 0), Some(LinkClass::InterRegion));
         // worker to worker across clouds: three hops
-        assert_eq!(w.route(5, 9), vec![(5, 4), (4, 8), (8, 9)]);
+        assert_eq!(w.route(5, 9).unwrap(), vec![(5, 4), (4, 8), (8, 9)]);
         // gateways talk directly
-        assert_eq!(w.route(4, 8), vec![(4, 8)]);
+        assert_eq!(w.route(4, 8).unwrap(), vec![(4, 8)]);
     }
 
     #[test]
@@ -362,7 +505,7 @@ mod tests {
         let c = crate::cluster::ClusterSpec::paper_default_scaled(2);
         let mut w = Wan::from_cluster(&c, 9);
         // node 3 (cloud 1, gw 2) -> node 0: hops (3,2) intra + (2,0) inter
-        let st = w.transfer(3, 0, 1_000_000, Protocol::Grpc, 8);
+        let st = w.transfer(3, 0, 1_000_000, Protocol::Grpc, 8).unwrap();
         assert!(w.wire_bytes(3, 2) >= 1_000_000);
         assert!(w.wire_bytes(2, 0) >= 1_000_000);
         assert_eq!(
@@ -378,7 +521,7 @@ mod tests {
         // the inter-region hop dominates the time
         let intra_only = {
             let mut w2 = Wan::from_cluster(&c, 9);
-            w2.transfer(3, 2, 1_000_000, Protocol::Grpc, 8)
+            w2.transfer(3, 2, 1_000_000, Protocol::Grpc, 8).unwrap()
         };
         assert!(st.time_s > intra_only.time_s);
     }
@@ -387,6 +530,60 @@ mod tests {
     #[should_panic]
     fn loopback_rejected() {
         let mut w = Wan::uniform(2, Link::new(1e9, 0.01), 5);
-        w.transfer(1, 1, 10, Protocol::Tcp, 1);
+        let _ = w.transfer(1, 1, 10, Protocol::Tcp, 1);
+    }
+
+    #[test]
+    fn failed_egress_kills_wan_but_not_az_fabric() {
+        // scaled(2): cloud 1 = {2, 3}, gateway 2
+        let c = crate::cluster::ClusterSpec::paper_default_scaled(2);
+        let mut w = Wan::from_cluster(&c, 11);
+        w.fail_node(2);
+        assert!(w.node_down(2));
+        // WAN leg through the dead gateway errors out...
+        assert_eq!(w.route(3, 0), Err(NetError::NodeDown { node: 2 }));
+        assert!(w.transfer(2, 0, 100, Protocol::Grpc, 1).is_err());
+        // ...but the intra-AZ fabric still works
+        assert_eq!(w.route(3, 2).unwrap(), vec![(3, 2)]);
+        assert!(w.transfer(3, 2, 100, Protocol::Grpc, 1).is_ok());
+        // restore brings the WAN back
+        w.restore_node(2);
+        assert!(!w.node_down(2));
+        assert!(w.transfer(3, 0, 100, Protocol::Grpc, 1).is_ok());
+    }
+
+    #[test]
+    fn reelection_rebuilds_the_mesh_and_drops_warmth() {
+        let c = crate::cluster::ClusterSpec::paper_default_scaled(2);
+        let mut w = Wan::from_cluster(&c, 12);
+        // warm the dying gateway's WAN link, then fail it over
+        let cold = w.transfer(2, 0, 10_000, Protocol::Grpc, 1).unwrap();
+        let inter_before = w.inter_region_bytes();
+        assert!(inter_before >= 10_000);
+        w.fail_node(2);
+        w.reelect_gateway(1, 3);
+        assert_eq!(w.gateway(1), 3);
+        // bytes that crossed the torn-down mesh stay in the class ledger
+        assert_eq!(w.inter_region_bytes(), inter_before);
+        // the old mesh links are gone, the new gateway inherits the class
+        assert_eq!(w.link_class(2, 0), None);
+        assert_eq!(w.link_class(3, 0), Some(LinkClass::InterRegion));
+        assert_eq!(w.link_class(3, 4), Some(LinkClass::InterRegion));
+        // routes now transit the new gateway
+        assert_eq!(w.route(2, 0).unwrap(), vec![(2, 3), (3, 0)]);
+        // failover pays a cold handshake again
+        let after = w.transfer(3, 0, 10_000, Protocol::Grpc, 1).unwrap();
+        assert!((after.handshake_s - cold.handshake_s).abs() < 1e-9);
+    }
+
+    #[test]
+    fn degrade_link_slows_transfers() {
+        let mut w = Wan::uniform(2, Link::new(1e9, 0.01), 13);
+        w.transfer(0, 1, 1_000_000, Protocol::Grpc, 4).unwrap(); // warm up
+        let before = w.transfer(0, 1, 1_000_000, Protocol::Grpc, 4).unwrap();
+        w.degrade_link(0, 1, 0.01).unwrap();
+        let after = w.transfer(0, 1, 1_000_000, Protocol::Grpc, 4).unwrap();
+        assert!(after.time_s > before.time_s * 5.0);
+        assert!(w.degrade_link(0, 0, 0.5).is_err()); // no such link
     }
 }

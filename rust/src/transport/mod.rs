@@ -19,6 +19,12 @@ use crate::model::ParamSet;
 use crate::netsim::{Protocol, Wan};
 use crate::util::bytes::f32s_to_le_into;
 
+/// Update-frame metadata header size: loss f32 (4) + n_samples u64 (8)
+/// + weight f64 (8) + element count u32 (4). Keep in sync with the
+/// build/parse code in [`Channel::send_update`]; the failover forward
+/// pricing (`Coordinator::dense_frame_bytes`) reuses it.
+pub const FRAME_HEADER_BYTES: usize = 24;
+
 /// Per-direction transport channel with its compression + crypto state.
 pub struct Channel {
     pub src: usize,
@@ -133,8 +139,9 @@ impl Channel {
             + if sealed.is_some() { SEAL_OVERHEAD_BYTES } else { 0 };
         self.payload_bytes += n_bytes;
 
-        let stats =
-            wan.transfer(self.src, self.dst, n_bytes, self.protocol, self.streams);
+        let stats = wan
+            .transfer(self.src, self.dst, n_bytes, self.protocol, self.streams)
+            .context("update transfer")?;
 
         // receiver side: verify + decrypt in place (CTR is self-inverse),
         // parse the frame, decompress into the persistent receive buffer
@@ -143,7 +150,10 @@ impl Channel {
             open_in_place(key, nonce, tag, &mut self.frame_buf)
                 .context("transport decrypt")?;
         }
-        anyhow::ensure!(self.frame_buf.len() >= 24, "frame too short");
+        anyhow::ensure!(
+            self.frame_buf.len() >= FRAME_HEADER_BYTES,
+            "frame too short"
+        );
         let meta_loss = f32::from_le_bytes(self.frame_buf[0..4].try_into().unwrap());
         let meta_n =
             u64::from_le_bytes(self.frame_buf[4..12].try_into().unwrap()) as usize;
@@ -154,7 +164,7 @@ impl Channel {
         self.recv_flat.resize(n_elems, 0.0);
         Compressor::decompress_into(
             self.compressor.scheme,
-            &self.frame_buf[24..],
+            &self.frame_buf[FRAME_HEADER_BYTES..],
             &mut self.recv_flat,
         )?;
 
@@ -226,8 +236,9 @@ impl Channel {
             None => self.frame_buf.len() as u64,
         };
         self.payload_bytes += n_bytes;
-        let stats =
-            wan.transfer(self.src, self.dst, n_bytes, self.protocol, self.streams);
+        let stats = wan
+            .transfer(self.src, self.dst, n_bytes, self.protocol, self.streams)
+            .context("params broadcast transfer")?;
         Ok((stats.time_s, stats.wire_bytes))
     }
 }

@@ -39,6 +39,20 @@ fn cfg(mode: &str) -> ExperimentConfig {
         "sync" => {}
         "async" => c.aggregation = AggregationKind::Async { alpha: 0.6 },
         "hier" => c.hierarchical = true,
+        "hier-faulty" => {
+            // a mid-run gateway death + link degrade must stay exactly as
+            // reproducible as a clean run: failover is deterministic
+            c.hierarchical = true;
+            c.faults = crossfed::netsim::FaultPlan::new(vec![
+                crossfed::netsim::FaultEvent::GatewayDown { cloud: 1, at: 1 },
+                crossfed::netsim::FaultEvent::LinkDegrade {
+                    src: 0,
+                    dst: 1,
+                    at: 1,
+                    factor: 0.5,
+                },
+            ]);
+        }
         other => panic!("unknown mode {other}"),
     }
     c
@@ -109,7 +123,7 @@ fn assert_identical(a: &RunResult, b: &RunResult, ctx: &str) {
 
 #[test]
 fn repeat_runs_are_bit_identical() {
-    for mode in ["sync", "async", "hier"] {
+    for mode in ["sync", "async", "hier", "hier-faulty"] {
         let a = run(mode);
         let b = run(mode);
         assert_identical(&a, &b, mode);
@@ -118,7 +132,7 @@ fn repeat_runs_are_bit_identical() {
 
 #[test]
 fn thread_count_does_not_change_results() {
-    for mode in ["sync", "async", "hier"] {
+    for mode in ["sync", "async", "hier", "hier-faulty"] {
         let serial = par::with_threads(1, || run(mode));
         let par4 = par::with_threads(4, || run(mode));
         assert_identical(&serial, &par4, &format!("{mode} 1T vs 4T"));

@@ -1,0 +1,281 @@
+//! Fault injection + gateway failover end-to-end (ISSUE 3).
+//!
+//! The acceptance bar: a hierarchical run that loses a gateway mid-run
+//! must complete every round, re-elect the standby deterministically,
+//! and keep its inter-region WAN savings (≤ 1/4 of the flat star at
+//! `paper_default_scaled(16)`). Also pins the two async accounting
+//! fixes that ride along: the model downlink is part of simulated time,
+//! and pseudo-rounds record per-worker compute seconds.
+
+use crossfed::aggregation::AggregationKind;
+use crossfed::cluster::ClusterSpec;
+use crossfed::config::{preset, ExperimentConfig};
+use crossfed::coordinator::Coordinator;
+use crossfed::data::CorpusConfig;
+use crossfed::metrics::RunResult;
+use crossfed::model::ParamSet;
+use crossfed::netsim::{FaultEvent, FaultPlan};
+use crossfed::runtime::MockRuntime;
+
+fn base_cfg(name: &str) -> ExperimentConfig {
+    let mut c = preset("quick").unwrap();
+    c.name = name.into();
+    c.rounds = 4;
+    c.eval_every = 1;
+    c.eval_batches = 1;
+    c.local_steps = 2;
+    c.local_lr = 4.0; // mock quadratic: grads are (p-t)/n, need big lr
+    c.server_lr = 4.0;
+    c.target_loss = None;
+    // enough documents that every one of 48 dirichlet shards is non-empty
+    c.corpus = CorpusConfig { n_docs: 240, doc_sentences: 2, n_topics: 6, seed: 5 };
+    c
+}
+
+fn init_params() -> ParamSet {
+    ParamSet { leaves: vec![vec![2.0; 64], vec![-1.0; 32]] }
+}
+
+fn run_coord(
+    cfg: ExperimentConfig,
+    cluster: ClusterSpec,
+) -> (RunResult, Coordinator<'static, MockRuntime>) {
+    // leak the backend so the coordinator can outlive this helper; the
+    // few bytes per test are irrelevant
+    let backend: &'static MockRuntime = Box::leak(Box::new(MockRuntime::new(0.4)));
+    let mut coord =
+        Coordinator::new(cfg, cluster, backend, init_params(), 4, 16).unwrap();
+    let r = coord.run().unwrap();
+    (r, coord)
+}
+
+/// Per-round inter-region bytes, net of construction-time distribution.
+fn inter_per_round(cfg: ExperimentConfig, cluster: ClusterSpec) -> (RunResult, u64) {
+    let rounds = cfg.rounds as u64;
+    let backend = MockRuntime::new(0.4);
+    let mut coord =
+        Coordinator::new(cfg, cluster, &backend, init_params(), 4, 16).unwrap();
+    let inter0 = coord.inter_region_wire_bytes();
+    let r = coord.run().unwrap();
+    let inter = (coord.inter_region_wire_bytes() - inter0) / rounds;
+    (r, inter)
+}
+
+#[test]
+fn faulty_hier_completes_and_keeps_savings_at_scale_16() {
+    let cluster = ClusterSpec::paper_default_scaled(16);
+    // clean flat star as the reference
+    let (star, star_inter) = inter_per_round(base_cfg("star"), cluster.clone());
+    assert_eq!(star.rounds_run, 4);
+
+    // hierarchical run that loses cloud 1's gateway before round 1's
+    // reduce — detected at reduce time, standby re-elected mid-round
+    let mut faulty = base_cfg("hier-faulty");
+    faulty.hierarchical = true;
+    faulty.faults =
+        FaultPlan::new(vec![FaultEvent::GatewayDown { cloud: 1, at: 1 }]);
+    let backend = MockRuntime::new(0.4);
+    let mut coord = Coordinator::new(
+        faulty,
+        cluster.clone(),
+        &backend,
+        init_params(),
+        4,
+        16,
+    )
+    .unwrap();
+    let inter0 = coord.inter_region_wire_bytes();
+    let r = coord.run().unwrap();
+    let hier_inter = (coord.inter_region_wire_bytes() - inter0) / 4;
+
+    // every round completed despite the mid-run failover
+    assert_eq!(r.rounds_run, 4);
+    assert!(r.history.iter().all(|h| h.eval_loss.is_some()));
+    // deterministic re-election: cloud 1 = {16..31}, next member by id
+    assert_eq!(coord.cluster.gateway(1), 17);
+    assert!(!coord.cluster.egress_ok(16));
+    // the training still made progress
+    assert!(r.final_eval_loss < r.history[0].train_loss);
+    // acceptance: inter-region savings retained, ≤ 1/4 of the star
+    assert!(
+        hier_inter * 4 <= star_inter,
+        "faulty hier {hier_inter} !<= star {star_inter} / 4"
+    );
+}
+
+#[test]
+fn faulty_runs_are_bit_identical() {
+    let cluster = ClusterSpec::paper_default_scaled(4);
+    let mk = || {
+        let mut c = base_cfg("hier-faulty-det");
+        c.hierarchical = true;
+        c.faults = FaultPlan::new(vec![
+            FaultEvent::GatewayDown { cloud: 2, at: 1 },
+            FaultEvent::LinkDegrade { src: 0, dst: 4, at: 2, factor: 0.5 },
+            FaultEvent::NodeSlowdown { node: 5, at: 2, factor: 2.0 },
+        ]);
+        c
+    };
+    let (a, ca) = run_coord(mk(), cluster.clone());
+    let (b, cb) = run_coord(mk(), cluster);
+    assert_eq!(a.wire_bytes, b.wire_bytes);
+    assert_eq!(a.sim_secs.to_bits(), b.sim_secs.to_bits());
+    assert_eq!(a.final_eval_loss.to_bits(), b.final_eval_loss.to_bits());
+    assert_eq!(ca.cluster.gateway(2), cb.cluster.gateway(2));
+    // cloud 2 = {8..11}: gateway 8 died, 9 took over
+    assert_eq!(ca.cluster.gateway(2), 9);
+}
+
+#[test]
+fn secure_agg_survives_failover() {
+    // pairwise masks span all workers; the failover must keep every
+    // member update flowing into the reduce exactly once or the leader's
+    // coverage assert (and the mask cancellation) would blow up
+    let cluster = ClusterSpec::paper_default_scaled(3);
+    let mut sa = base_cfg("hier-secure-faulty");
+    sa.rounds = 5;
+    sa.hierarchical = true;
+    sa.secure_agg = true;
+    sa.faults = FaultPlan::new(vec![FaultEvent::GatewayDown { cloud: 1, at: 2 }]);
+    let mut plain = base_cfg("hier-plain-faulty");
+    plain.rounds = 5;
+    plain.hierarchical = true;
+    plain.faults =
+        FaultPlan::new(vec![FaultEvent::GatewayDown { cloud: 1, at: 2 }]);
+    let (rs, cs) = run_coord(sa, cluster.clone());
+    let (rp, _) = run_coord(plain, cluster);
+    assert_eq!(rs.rounds_run, 5);
+    assert_eq!(cs.cluster.gateway(1), 4); // {3,4,5}: 3 died, 4 took over
+    // masked failover training tracks the plain failover run
+    assert!(
+        (rs.final_eval_loss - rp.final_eval_loss).abs() < 0.25,
+        "secure {} vs plain {}",
+        rs.final_eval_loss,
+        rp.final_eval_loss
+    );
+}
+
+#[test]
+fn leader_cloud_gateway_failure_is_survivable() {
+    // killing cloud 0's gateway fails the *leader's own* egress: the
+    // leader detects it locally, a standby relays its WAN traffic, and
+    // remote partials route gw -> relay -> leader over the AZ fabric
+    let cluster = ClusterSpec::paper_default_scaled(2);
+    let mut c = base_cfg("hier-leader-faulty");
+    c.hierarchical = true;
+    c.faults = FaultPlan::new(vec![FaultEvent::GatewayDown { cloud: 0, at: 1 }]);
+    let (r, coord) = run_coord(c, cluster);
+    assert_eq!(r.rounds_run, 4);
+    assert_eq!(coord.cluster.gateway(0), 1);
+    assert!(r.final_eval_loss.is_finite());
+}
+
+#[test]
+fn flat_schedulers_survive_gateway_down() {
+    // star and async have no reduce step: the gateway is repaired the
+    // moment the fault strikes, and routed uplinks follow the standby
+    let cluster = ClusterSpec::paper_default_scaled(2);
+    for agg in ["fedavg", "async"] {
+        let mut c = base_cfg(agg);
+        c.aggregation = AggregationKind::parse(agg).unwrap();
+        c.faults =
+            FaultPlan::new(vec![FaultEvent::GatewayDown { cloud: 1, at: 1 }]);
+        let (r, coord) = run_coord(c, cluster.clone());
+        assert_eq!(r.rounds_run, 4, "{agg}");
+        assert_eq!(coord.cluster.gateway(1), 3, "{agg}"); // {2,3}: 2 -> 3
+        assert!(r.final_eval_loss.is_finite(), "{agg}");
+    }
+}
+
+#[test]
+fn node_slowdown_shows_in_platform_secs() {
+    // homogeneous cluster, no stragglers: compute seconds are exact
+    let cluster = ClusterSpec::homogeneous(3);
+    let mut c = base_cfg("slowdown");
+    c.rounds = 2;
+    c.local_steps = 2;
+    c.base_step_secs = 1.0;
+    c.faults = FaultPlan::new(vec![FaultEvent::NodeSlowdown {
+        node: 2,
+        at: 1,
+        factor: 4.0,
+    }]);
+    let (r, _) = run_coord(c, cluster);
+    let before = &r.history[0].platform_secs;
+    let after = &r.history[1].platform_secs;
+    assert!((before[2] - 2.0).abs() < 1e-9, "round 0: {before:?}");
+    assert!((after[2] - 8.0).abs() < 1e-9, "round 1: {after:?}");
+    assert!((after[0] - 2.0).abs() < 1e-9, "healthy node slowed: {after:?}");
+}
+
+#[test]
+fn async_sim_time_includes_the_final_downlink() {
+    // regression for the async time-accounting bug: the model downlink
+    // was priced into the worker's restart but never into sim_secs, so a
+    // one-round run's reported time excluded every final downlink leg.
+    // Degrading only the leader->worker link must therefore show up in
+    // sim_secs even though no later uplink ever rides it.
+    let mk = |faults: FaultPlan, name: &str| {
+        let mut c = base_cfg(name);
+        c.aggregation = AggregationKind::Async { alpha: 0.6 };
+        c.rounds = 1; // 2 aggregations: each worker exactly once
+        c.local_steps = 1;
+        c.base_step_secs = 1.0;
+        c.corpus = CorpusConfig { n_docs: 60, doc_sentences: 3, n_topics: 6, seed: 3 };
+        c.faults = faults;
+        c
+    };
+    let big_model = ParamSet { leaves: vec![vec![0.5; 100_000]] };
+    let run = |cfg: ExperimentConfig| {
+        let backend = MockRuntime::new(0.4);
+        let mut coord = Coordinator::new(
+            cfg,
+            ClusterSpec::homogeneous(2),
+            &backend,
+            big_model.clone(),
+            4,
+            16,
+        )
+        .unwrap();
+        coord.run().unwrap()
+    };
+    let clean = run(mk(FaultPlan::default(), "async-clean"));
+    // downlink 0->1 at 1/10000th bandwidth: ~6s serialization for the
+    // 400 KB dense model, invisible to every uplink
+    let slow_down = run(mk(
+        FaultPlan::new(vec![FaultEvent::LinkDegrade {
+            src: 0,
+            dst: 1,
+            at: 0,
+            factor: 1e-4,
+        }]),
+        "async-slow-downlink",
+    ));
+    assert!(
+        slow_down.sim_secs > clean.sim_secs + 3.0,
+        "downlink not accounted: clean {} vs degraded {}",
+        clean.sim_secs,
+        slow_down.sim_secs
+    );
+    // per-pseudo-round records see it too, and platform_secs is no
+    // longer empty: both workers' applied updates cost exactly one
+    // 1-second local step
+    let rec = slow_down.history.last().unwrap();
+    assert_eq!(rec.platform_secs.len(), 2);
+    assert!((rec.platform_secs[0] - 1.0).abs() < 1e-9, "{:?}", rec.platform_secs);
+    assert!((rec.platform_secs[1] - 1.0).abs() < 1e-9, "{:?}", rec.platform_secs);
+}
+
+#[test]
+fn random_chaos_plan_runs_to_completion() {
+    // seed-driven plans are reproducible and survivable by construction
+    let cluster = ClusterSpec::paper_default_scaled(2);
+    let plan = FaultPlan::random(11, 5, 4, &cluster);
+    assert_eq!(plan, FaultPlan::random(11, 5, 4, &cluster));
+    let mut c = base_cfg("chaos");
+    c.hierarchical = true;
+    c.faults = plan;
+    let (r, _) = run_coord(c, cluster);
+    assert_eq!(r.rounds_run, 4);
+    assert!(r.final_eval_loss.is_finite());
+}

@@ -242,9 +242,9 @@ fn prop_wan_transfer_monotone_in_payload() {
         let mut wan = Wan::uniform(2, link, g.u64());
         let small = g.usize_in(1..1_000_000) as u64;
         let big = small * 2 + g.usize_in(1..1_000_000) as u64;
-        wan.transfer(0, 1, 1, proto, 4); // warm
-        let t_small = wan.transfer(0, 1, small, proto, 4);
-        let t_big = wan.transfer(0, 1, big, proto, 4);
+        wan.transfer(0, 1, 1, proto, 4).unwrap(); // warm
+        let t_small = wan.transfer(0, 1, small, proto, 4).unwrap();
+        let t_big = wan.transfer(0, 1, big, proto, 4).unwrap();
         assert!(t_big.time_s >= t_small.time_s * 0.999);
         assert!(t_big.wire_bytes > t_small.wire_bytes);
     });
