@@ -1,0 +1,141 @@
+//! The paper's cost claim, in dollars: price a flat star against the
+//! two-level hierarchy at `paper_default_scaled(16)` (48 nodes) with the
+//! paper-default price book, and let the placement optimizer pick the
+//! leader cloud.
+//!
+//! Asserts (CI runs this — a regression fails the build):
+//!
+//! * hierarchical egress dollars ≤ 1/4 of the flat star's,
+//! * `placement: auto` never costs more per round than the *worst*
+//!   fixed leader choice,
+//! * dollars decompose exactly (total == sum of per-cloud entries).
+//!
+//! Runs on the mock backend (no artifacts needed):
+//!
+//!     cargo run --release --example cost_report
+
+use crossfed::cluster::ClusterSpec;
+use crossfed::config::{preset, ExperimentConfig};
+use crossfed::coordinator::Coordinator;
+use crossfed::cost::Placement;
+use crossfed::data::CorpusConfig;
+use crossfed::metrics::RunResult;
+use crossfed::model::ParamSet;
+use crossfed::report;
+use crossfed::runtime::MockRuntime;
+
+const ROUNDS: usize = 4;
+const NODES_PER_CLOUD: usize = 16;
+
+/// Params big enough that update traffic dwarfs the one-off shard
+/// distribution.
+fn init_params() -> ParamSet {
+    let a: Vec<f32> = (0..8192).map(|i| ((i % 97) as f32) * 0.01 - 0.5).collect();
+    let b: Vec<f32> = (0..4096).map(|i| ((i % 89) as f32) * -0.01 + 0.4).collect();
+    ParamSet { leaves: vec![a, b] }
+}
+
+fn cfg(name: &str, hier: bool, placement: Placement) -> ExperimentConfig {
+    let mut c = preset("paper-hier-cost").expect("builtin preset");
+    c.name = name.to_string();
+    c.hierarchical = hier;
+    c.placement = placement;
+    c.rounds = ROUNDS;
+    c.eval_every = 2;
+    c.eval_batches = 1;
+    c.local_steps = 2;
+    c.local_lr = 3.0;
+    c.server_lr = 3.0;
+    c.target_loss = None;
+    // enough docs that every dirichlet shard is populated at 48 nodes
+    c.corpus = CorpusConfig { n_docs: 240, doc_sentences: 2, n_topics: 6, seed: 5 };
+    c
+}
+
+/// Returns (result, egress $/round over the training rounds, leader cloud).
+fn run(c: ExperimentConfig) -> anyhow::Result<(RunResult, f64, usize)> {
+    let cluster = ClusterSpec::paper_default_scaled(NODES_PER_CLOUD);
+    let backend = MockRuntime::new(0.4);
+    let mut coord = Coordinator::new(c, cluster, &backend, init_params(), 4, 16)?;
+    let leader_cloud = coord.leader_cloud();
+    let r = coord.run()?;
+    let egress: f64 =
+        r.history.iter().map(|h| h.cost.egress_total_usd()).sum();
+    Ok((r, egress / ROUNDS as f64, leader_cloud))
+}
+
+fn main() -> anyhow::Result<()> {
+    crossfed::util::logging::init();
+
+    let (star, star_usd, _) = run(cfg("star", false, Placement::Fixed(0)))?;
+    let mut fixed = Vec::new();
+    for c in 0..3 {
+        fixed.push(run(cfg(&format!("hier-fixed{c}"), true, Placement::Fixed(c)))?);
+    }
+    let (auto, auto_usd, auto_cloud) = run(cfg("hier-auto", true, Placement::Auto))?;
+
+    println!(
+        "{:>12} {:>8} {:>16} {:>12}",
+        "mode", "leader", "egress $/round", "total $"
+    );
+    println!(
+        "{:>12} {:>8} {:>16.4} {:>12.2}",
+        "star", 0, star_usd, star.cost_usd()
+    );
+    for (c, (r, usd, _)) in fixed.iter().enumerate() {
+        println!("{:>12} {:>8} {:>16.4} {:>12.2}", format!("hier-fix{c}"), c, usd, r.cost_usd());
+    }
+    println!(
+        "{:>12} {:>8} {:>16.4} {:>12.2}",
+        "hier-auto", auto_cloud, auto_usd, auto.cost_usd()
+    );
+
+    let rrefs: Vec<&RunResult> =
+        std::iter::once(&star).chain(fixed.iter().map(|(r, _, _)| r)).chain(std::iter::once(&auto)).collect();
+    println!("\n{}", report::table_cost(&rrefs));
+    println!("{}", report::table_cost_clouds(&auto));
+    report::save("cost_report.json", &auto.to_json().to_string_pretty());
+
+    // --- the cost story, asserted --------------------------------------
+    // 1. hierarchy's egress dollars at 1/4 or better of the flat star
+    let (_, hier0_usd, _) = fixed[0];
+    anyhow::ensure!(
+        hier0_usd * 4.0 <= star_usd,
+        "hierarchy lost its dollar advantage: star ${star_usd:.4}/round \
+         vs hier ${hier0_usd:.4}/round"
+    );
+    println!(
+        "\negress dollars: hierarchy at {:.1}x below the flat star",
+        star_usd / hier0_usd.max(1e-12)
+    );
+    // 2. auto placement is never worse than the worst fixed choice
+    let worst = fixed
+        .iter()
+        .map(|&(_, usd, _)| usd)
+        .fold(f64::MIN, f64::max);
+    anyhow::ensure!(
+        auto_usd <= worst,
+        "auto placement (cloud {auto_cloud}, ${auto_usd:.4}/round) costs \
+         more than the worst fixed leader (${worst:.4}/round)"
+    );
+    // ...and exactly matches the fixed run for its chosen cloud
+    let (_, chosen_usd, _) = fixed[auto_cloud];
+    anyhow::ensure!(
+        (auto_usd - chosen_usd).abs() < 1e-12,
+        "auto != fixed:{auto_cloud}: ${auto_usd} vs ${chosen_usd}"
+    );
+    // 3. dollars decompose exactly
+    let mut manual = 0.0f64;
+    for c in 0..auto.cost.n_clouds() {
+        manual += auto.cost.compute_usd[c];
+        for e in &auto.cost.egress_usd[c] {
+            manual += e;
+        }
+    }
+    anyhow::ensure!(
+        manual.to_bits() == auto.cost.total_usd().to_bits(),
+        "cost breakdown does not decompose exactly"
+    );
+    println!("auto placement picked cloud {auto_cloud}; all cost assertions hold");
+    Ok(())
+}

@@ -191,11 +191,71 @@ fn hier_vs_star_entry() -> Json {
     ])
 }
 
+/// Star vs hierarchy in *dollars* on the paper-default price book (same
+/// scaled cluster as `hier_vs_star_entry`): per-round egress cost of the
+/// training rounds, plus the auto-placement decision.
+fn cost_star_vs_hier_entry() -> Json {
+    use crossfed::cost::Placement;
+    let nodes_per_cloud = 8;
+    let cluster = ClusterSpec::paper_default_scaled(nodes_per_cloud);
+    // params big enough that update traffic dwarfs the shard distribution
+    let init = ParamSet {
+        leaves: vec![vec![0.25f32; 8192], vec![-0.5f32; 4096]],
+    };
+    let run = |hier: bool, placement: Placement| {
+        let mut cfg = preset("paper-hier-cost").expect("builtin");
+        cfg.name = format!("bench-cost-{}", if hier { "hier" } else { "star" });
+        cfg.hierarchical = hier;
+        cfg.placement = placement;
+        cfg.rounds = 2;
+        cfg.eval_every = 1;
+        cfg.eval_batches = 1;
+        cfg.local_steps = 2;
+        cfg.local_lr = 3.0;
+        cfg.server_lr = 3.0;
+        cfg.target_loss = None;
+        cfg.corpus =
+            CorpusConfig { n_docs: 120, doc_sentences: 2, n_topics: 6, seed: 3 };
+        let backend = MockRuntime::new(0.4);
+        let mut coord =
+            Coordinator::new(cfg, cluster.clone(), &backend, init.clone(), 4, 16)
+                .expect("coordinator");
+        let leader_cloud = coord.leader_cloud();
+        let r = coord.run().expect("run");
+        let egress: f64 =
+            r.history.iter().map(|h| h.cost.egress_total_usd()).sum();
+        (egress / 2.0, leader_cloud)
+    };
+    let (star_usd, _) = run(false, Placement::Fixed(0));
+    let (hier_usd, _) = run(true, Placement::Fixed(0));
+    let (auto_usd, auto_cloud) = run(true, Placement::Auto);
+    println!(
+        "\n== bench: cost star vs hier (3 clouds x {nodes_per_cloud}, \
+         paper-default prices) ==\negress $/round: star {star_usd:.4}  \
+         hier {hier_usd:.4}  ({:.1}x less)  auto {auto_usd:.4} \
+         (leader cloud {auto_cloud})",
+        star_usd / hier_usd.max(1e-12)
+    );
+    let r4 = |x: f64| (x * 1e4).round() / 1e4;
+    Json::obj(vec![
+        ("nodes_per_cloud", Json::num(nodes_per_cloud as f64)),
+        ("star_egress_usd_per_round", Json::num(r4(star_usd))),
+        ("hier_egress_usd_per_round", Json::num(r4(hier_usd))),
+        (
+            "egress_saving",
+            Json::num(((star_usd / hier_usd.max(1e-12)) * 100.0).round() / 100.0),
+        ),
+        ("auto_egress_usd_per_round", Json::num(r4(auto_usd))),
+        ("auto_leader_cloud", Json::num(auto_cloud as f64)),
+    ])
+}
+
 fn write_json(
     hw: usize,
     serial: &[BenchSet],
     parallel: &[BenchSet],
     hier_vs_star: Json,
+    cost_star_vs_hier: Json,
 ) {
     let mut entries = Vec::new();
     for (sb, pb) in serial.iter().zip(parallel) {
@@ -219,6 +279,7 @@ fn write_json(
         ("threads", Json::num(hw as f64)),
         ("results", Json::arr(entries)),
         ("hier_vs_star", hier_vs_star),
+        ("cost_star_vs_hier", cost_star_vs_hier),
     ]);
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.json");
     match std::fs::write(path, doc.to_string_pretty() + "\n") {
@@ -234,7 +295,8 @@ fn main() {
     println!("\n== hotpath: parallel ({hw} threads) ==");
     let parallel = kernel_pass(hw);
     let hier = hier_vs_star_entry();
-    write_json(hw, &serial, &parallel, hier);
+    let cost = cost_star_vs_hier_entry();
+    write_json(hw, &serial, &parallel, hier, cost);
 
     // --- netsim transfer computation (pure model, no payload copies)
     let mut b = BenchSet::new("netsim transfer ops");

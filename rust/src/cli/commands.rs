@@ -26,6 +26,7 @@ USAGE:
                  [--artifacts DIR] [--model-preset M] [--seed N]
                  [--save-checkpoint PATH] [--resume PATH]
                  [--nodes-per-cloud N] [--hierarchical]
+                 [--placement auto|fixed:N] [--price-book FILE]
                  [--fault SPEC[;SPEC...]] [--mock] [--curve]
   crossfed sweep --presets a,b,c [--artifacts DIR] [--mock]
   crossfed inspect [--preset NAME]
@@ -37,13 +38,20 @@ the PJRT backend for the quadratic mock (no artifacts needed).
 --nodes-per-cloud puts N AZ-level worker nodes inside each of the 3 paper
 clouds; --hierarchical reduces each cloud at its gateway so only one
 partial aggregate per cloud crosses the inter-region WAN.
+--placement picks the leader cloud: fixed:N pins it (default fixed:0),
+auto scores every cloud's expected egress dollars against the price book
+and takes the cheapest. --price-book FILE loads a JSON price book
+(per-cloud $/node-hour + tiered $/GB egress per link class; see
+EXPERIMENTS.md §Cost); every run prints its dollar bill either way.
 --fault injects deterministic failures at round boundaries (replaces the
 preset's fault plan); `;`-separated specs, e.g.
   --fault \"gateway-down:cloud=1,at=round3;node-slowdown:node=2,at=5,factor=2\"
-Kinds: gateway-down (cloud, at), link-degrade (src, dst, at, factor),
-node-slowdown (node, at, factor). gateway-down needs a standby member:
-run with --nodes-per-cloud >= 2. Preset paper-hier-faulty bundles a
-mid-run gateway kill with the hierarchical setup.";
+Kinds: gateway-down (cloud, at), restore (cloud, at — the egress comes
+back and the gateway role fails back), link-degrade (src, dst, at,
+factor), node-slowdown (node, at, factor). gateway-down needs a standby
+member: run with --nodes-per-cloud >= 2. Preset paper-hier-faulty
+bundles a mid-run gateway kill with the hierarchical setup;
+paper-hier-cost bundles auto placement with the paper price book.";
 
 /// Entry point used by main.rs. Returns process exit code.
 pub fn run_cli(raw: &[String]) -> Result<i32> {
@@ -110,6 +118,13 @@ fn build_config(args: &Args) -> Result<ExperimentConfig> {
     }
     if args.flag("hierarchical") {
         cfg.hierarchical = true;
+    }
+    if let Some(p) = args.get("placement") {
+        cfg.placement = crate::cost::Placement::parse(p)?;
+    }
+    if let Some(path) = args.get("price-book") {
+        cfg.price_book =
+            crate::cost::PriceBook::load(std::path::Path::new(path))?;
     }
     if let Some(f) = args.get("fault") {
         cfg.faults = crate::netsim::FaultPlan::parse(f)
@@ -192,11 +207,12 @@ pub fn run_experiment_ckpt(
 
 fn print_result(r: &RunResult, curve: bool) {
     println!(
-        "run {:<18} rounds={:<4} comm={:<10} time={:<10} eval_loss={:.3} acc={:.1}% {}",
+        "run {:<18} rounds={:<4} comm={:<10} time={:<10} cost=${:<9.2} eval_loss={:.3} acc={:.1}% {}",
         r.name,
         r.rounds_run,
         human_bytes(r.wire_bytes),
         human_duration(r.sim_secs),
+        r.cost_usd(),
         r.final_eval_loss,
         r.acc_pct(),
         if r.reached_target { "(target reached)" } else { "" },
@@ -252,6 +268,7 @@ fn cmd_sweep(args: &Args) -> Result<i32> {
     println!("\n{}", report::table1(&refs));
     println!("{}", report::table2(&rrefs));
     println!("{}", report::table3(&rrefs));
+    println!("{}", report::table_cost(&rrefs));
     Ok(0)
 }
 
@@ -383,6 +400,52 @@ mod tests {
         assert!(run_cli(&s(&[
             "train", "--preset", "quick", "--rounds", "4", "--mock",
             "--hierarchical", "--fault", "gateway-down:cloud=1,at=1",
+        ]))
+        .is_err());
+    }
+
+    #[test]
+    fn train_with_placement_and_price_book() {
+        // auto placement end-to-end on the mock backend
+        assert_eq!(
+            run_cli(&s(&[
+                "train", "--preset", "quick", "--rounds", "2", "--mock",
+                "--hierarchical", "--nodes-per-cloud", "2",
+                "--placement", "auto",
+            ]))
+            .unwrap(),
+            0
+        );
+        // --price-book loads a JSON file into the config
+        let path = std::env::temp_dir().join("crossfed-cli-pricebook.json");
+        std::fs::write(
+            &path,
+            r#"{"name": "cli-book",
+                "egress": {"inter-region": [{"usd_per_gb": 0.5}]}}"#,
+        )
+        .unwrap();
+        let args = Args::parse(
+            &s(&["train", "--preset", "quick", "--price-book",
+                 path.to_str().unwrap(), "--placement", "fixed:1"]),
+            &FLAGS,
+        )
+        .unwrap();
+        let cfg = build_config(&args).unwrap();
+        assert_eq!(cfg.price_book.name, "cli-book");
+        assert_eq!(cfg.placement, crate::cost::Placement::Fixed(1));
+        std::fs::remove_file(&path).ok();
+        // bad placement / missing book are clean errors
+        for bad in [
+            vec!["train", "--placement", "nowhere"],
+            vec!["train", "--price-book", "/nonexistent/book.json"],
+        ] {
+            let args = Args::parse(&s(&bad), &FLAGS).unwrap();
+            assert!(build_config(&args).is_err(), "{bad:?}");
+        }
+        // fixed:9 on a 3-cloud cluster errors at build, not mid-run
+        assert!(run_cli(&s(&[
+            "train", "--preset", "quick", "--rounds", "2", "--mock",
+            "--placement", "fixed:9",
         ]))
         .is_err());
     }

@@ -217,6 +217,22 @@ impl ClusterSpec {
         !self.egress_failed[node]
     }
 
+    /// Record that `node`'s WAN egress recovered: it is eligible for
+    /// (re-)election again (transient-outage recovery; the counterpart
+    /// of [`ClusterSpec::mark_egress_failed`]).
+    pub fn mark_egress_restored(&mut self, node: usize) {
+        self.egress_failed[node] = false;
+    }
+
+    /// Members of cloud `c` whose WAN egress is currently failed, in
+    /// node order (lowest id first — the fail-back priority).
+    pub fn egress_failed_members(&self, c: usize) -> Vec<usize> {
+        self.cloud_members(c)
+            .into_iter()
+            .filter(|&m| self.egress_failed[m])
+            .collect()
+    }
+
     /// Re-elect cloud `c`'s gateway after its egress failed: the next
     /// member by node id with a working egress takes over. The rule is a
     /// pure function of the cluster state, so every replica of the run
@@ -329,6 +345,13 @@ mod tests {
         assert_eq!(c.gateway(0), 0);
         assert_eq!(c.gateway(2), 6);
         assert!(c.egress_ok(0) && !c.egress_ok(3));
+        // restoring the original node fails the gateway role back to it
+        assert_eq!(c.egress_failed_members(1), vec![3, 4, 5]);
+        c.mark_egress_restored(3);
+        assert!(c.egress_ok(3));
+        assert_eq!(c.egress_failed_members(1), vec![4, 5]);
+        assert_eq!(c.reelect_gateway(1).unwrap(), 3);
+        assert_eq!(c.gateway(1), 3);
     }
 
     #[test]

@@ -8,6 +8,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::aggregation::AggregationKind;
 use crate::compress::Compression;
+use crate::cost::{Placement, PriceBook};
 use crate::data::CorpusConfig;
 use crate::netsim::{FaultPlan, Protocol};
 use crate::optimizer::OptimizerKind;
@@ -64,6 +65,15 @@ pub struct ExperimentConfig {
     /// `"faults": ["gateway-down:cloud=1,at=round3", ...]`; CLI:
     /// `--fault`; see [`crate::netsim::faults`])
     pub faults: FaultPlan,
+    /// which cloud hosts the aggregation leader: `fixed:N` pins it
+    /// (seed behaviour: `fixed:0`), `auto` takes the price-book argmin
+    /// (JSON `"placement"`; CLI `--placement`; see
+    /// [`crate::cost::placement`])
+    pub placement: Placement,
+    /// prices for the run's dollar ledger and the auto placement (JSON
+    /// `"price_book"` object; CLI `--price-book FILE`; see
+    /// [`crate::cost::PriceBook`])
+    pub price_book: PriceBook,
 }
 
 impl Default for ExperimentConfig {
@@ -94,6 +104,8 @@ impl Default for ExperimentConfig {
             corpus: CorpusConfig::default(),
             base_step_secs: 18.0,
             faults: FaultPlan::default(),
+            placement: Placement::Fixed(0),
+            price_book: PriceBook::paper_default(),
         }
     }
 }
@@ -151,6 +163,7 @@ impl ExperimentConfig {
                 bail!("target_loss must be positive");
             }
         }
+        self.price_book.validate().context("price_book")?;
         for ev in self.faults.events() {
             ev.validate()?;
             if ev.at() >= self.rounds {
@@ -227,6 +240,12 @@ impl ExperimentConfig {
             };
         }
         c.base_step_secs = v.opt_f64("base_step_secs", c.base_step_secs);
+        if let Some(s) = v.get("placement").and_then(Json::as_str) {
+            c.placement = Placement::parse(s)?;
+        }
+        if let Some(pb) = v.get("price_book") {
+            c.price_book = PriceBook::from_json(pb).context("price_book")?;
+        }
         if let Some(f) = v.get("faults") {
             let fs = f
                 .as_arr()
@@ -292,6 +311,8 @@ impl ExperimentConfig {
             ("server_opt", Json::str(self.server_opt.name())),
             ("server_lr", Json::num(self.server_lr as f64)),
             ("base_step_secs", Json::num(self.base_step_secs)),
+            ("placement", Json::str(self.placement.name())),
+            ("price_book", self.price_book.to_json()),
             (
                 "faults",
                 Json::arr(
@@ -391,6 +412,36 @@ mod tests {
         // a non-array value is a hard error, not a silently-empty plan
         assert!(ExperimentConfig::from_json(
             r#"{"rounds": 9, "faults": "gateway-down:cloud=1,at=3"}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn placement_and_price_book_round_trip() {
+        let c = ExperimentConfig::from_json(
+            r#"{"placement": "auto",
+                "price_book": {"name": "pb",
+                               "egress": {"inter-region": [{"usd_per_gb": 0.2}]}}}"#,
+        )
+        .unwrap();
+        assert_eq!(c.placement, Placement::Auto);
+        assert_eq!(c.price_book.name, "pb");
+        let j = c.to_json().to_string();
+        assert!(j.contains("\"placement\":\"auto\""), "{j}");
+        assert!(j.contains("\"price_book\""), "{j}");
+        let back = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(back.placement, c.placement);
+        assert_eq!(back.price_book, c.price_book);
+        // defaults: fixed:0 + the paper book
+        let d = ExperimentConfig::default();
+        assert_eq!(d.placement, Placement::Fixed(0));
+        assert_eq!(d.price_book, PriceBook::paper_default());
+        // fixed:N round-trips; bad values are rejected
+        let f = ExperimentConfig::from_json(r#"{"placement": "fixed:2"}"#).unwrap();
+        assert_eq!(f.placement, Placement::Fixed(2));
+        assert!(ExperimentConfig::from_json(r#"{"placement": "west"}"#).is_err());
+        assert!(ExperimentConfig::from_json(
+            r#"{"price_book": {"egress": {"intra-az": []}}}"#
         )
         .is_err());
     }

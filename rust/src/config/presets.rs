@@ -20,6 +20,7 @@ pub fn preset_names() -> Vec<&'static str> {
         "paper-async",
         "paper-hier",
         "paper-hier-faulty",
+        "paper-hier-cost",
         "hier-gradient",
         "fig-partition-fixed",
         "fig-partition-dynamic",
@@ -110,6 +111,18 @@ pub fn preset(name: &str) -> Option<ExperimentConfig> {
                 FaultEvent::GatewayDown { cloud: 1, at: 3 },
                 FaultEvent::NodeSlowdown { node: 1, at: 5, factor: 2.0 },
             ]),
+            ..paper_base
+        },
+        // the cost story: two-level reduce + cost-aware leader placement
+        // against the paper-default price book — the preset behind the
+        // Table-C dollar breakdown and `examples/cost_report.rs`.
+        // Run with --nodes-per-cloud >= 4 so hierarchy has bytes to save.
+        "paper-hier-cost" => ExperimentConfig {
+            aggregation: AggregationKind::FedAvg,
+            hierarchical: true,
+            compression: Compression::None,
+            placement: crate::cost::Placement::Auto,
+            price_book: crate::cost::PriceBook::paper_default(),
             ..paper_base
         },
         "hier-gradient" => ExperimentConfig {

@@ -6,6 +6,7 @@ use crate::aggregation::{self, Aggregator, ClientUpdate, HierarchicalAggregator}
 use crate::cluster::ClusterSpec;
 use crate::compress::Compressor;
 use crate::config::ExperimentConfig;
+use crate::cost::{self, CostBreakdown, CostLedger, Placement};
 use crate::crypto::SecureAggregator;
 use crate::data::{BatchIter, SyntheticCorpus};
 use crate::metrics::{RoundRecord, RunResult};
@@ -27,10 +28,17 @@ pub struct Coordinator<'a, B: ComputeBackend + ?Sized> {
     pub cluster: ClusterSpec,
     pub(crate) backend: &'a B,
     pub(crate) wan: Wan,
+    /// the node hosting the global model — the placement decision
+    /// (`cfg.placement`): a fixed cloud's gateway, or the argmin of the
+    /// cost model. The seed behaviour is node 0 (`fixed:0`).
+    pub(crate) leader: usize,
+    /// prices every round's bytes and node-seconds (see [`crate::cost`])
+    pub(crate) cost_ledger: CostLedger,
     pub(crate) workers: Vec<CloudWorker>,
     /// per-worker uplink / downlink channels. Star mode: worker w ↔
-    /// leader (node 0; worker 0 is local). Hierarchical mode: worker w ↔
-    /// its cloud's gateway node (gateway members are local to it).
+    /// leader (the leader's own worker is local). Hierarchical mode:
+    /// worker w ↔ its cloud's gateway node (gateway members are local
+    /// to it).
     pub(crate) up: Vec<Channel>,
     pub(crate) down: Vec<Channel>,
     /// hierarchical mode only: per-cloud gateway ↔ leader channels
@@ -76,9 +84,11 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
         cfg.validate()?;
         anyhow::ensure!(cluster.n() >= 1, "need at least one platform");
         // fault plans must be survivable on *this* cluster: ids in range
-        // and a standby member behind every gateway kill — counted per
-        // cloud, since each kill permanently consumes one standby
-        let mut kills = vec![0usize; cluster.n_clouds()];
+        // and a standby member behind every gateway kill. `down` tracks
+        // how many of a cloud's egresses are failed at each point of the
+        // (round-sorted) plan: a kill consumes one standby, a restore
+        // hands one back — so kill→restore→kill cycles validate
+        let mut down = vec![0usize; cluster.n_clouds()];
         for ev in cfg.faults.events() {
             match *ev {
                 crate::netsim::FaultEvent::GatewayDown { cloud, .. } => {
@@ -87,15 +97,29 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
                         "fault {ev}: cluster has {} clouds",
                         cluster.n_clouds()
                     );
-                    kills[cloud] += 1;
+                    down[cloud] += 1;
                     anyhow::ensure!(
-                        cluster.cloud_members(cloud).len() > kills[cloud],
+                        cluster.cloud_members(cloud).len() > down[cloud],
                         "fault {ev}: cloud {cloud} has {} members but the \
                          plan kills {} of its gateways — no standby would be \
                          left; run with more --nodes-per-cloud",
                         cluster.cloud_members(cloud).len(),
-                        kills[cloud]
+                        down[cloud]
                     );
+                }
+                crate::netsim::FaultEvent::GatewayRestore { cloud, .. } => {
+                    anyhow::ensure!(
+                        cloud < cluster.n_clouds(),
+                        "fault {ev}: cluster has {} clouds",
+                        cluster.n_clouds()
+                    );
+                    anyhow::ensure!(
+                        down[cloud] > 0,
+                        "fault {ev}: cloud {cloud} has no failed gateway \
+                         egress to restore at that point in the plan \
+                         (schedule a gateway-down for an earlier round)"
+                    );
+                    down[cloud] -= 1;
                 }
                 crate::netsim::FaultEvent::LinkDegrade { src, dst, .. } => {
                     anyhow::ensure!(
@@ -156,6 +180,43 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
         let secret: Option<&[u8]> =
             cfg.encrypt.then_some(b"crossfed-session-secret".as_slice());
 
+        // --- placement: which cloud hosts the global model. Fixed pins
+        // a cloud (the seed behaviour is fixed:0); auto scores every
+        // cloud's expected egress dollars per round against the price
+        // book and takes the argmin. The leader node is that cloud's
+        // gateway. Placement changes routing and dollars only, never the
+        // training math (pinned by tests/cost_placement.rs).
+        let leader_cloud = match cfg.placement {
+            Placement::Fixed(c) => {
+                anyhow::ensure!(
+                    c < cluster.n_clouds(),
+                    "placement fixed:{c}: cluster has only {} clouds",
+                    cluster.n_clouds()
+                );
+                c
+            }
+            Placement::Auto => {
+                let traffic = cost::RoundTraffic {
+                    update_bytes: (n_params * 4) as u64,
+                    bcast_bytes: (n_params * 4) as u64,
+                    hierarchical: cfg.hierarchical,
+                };
+                let best =
+                    cost::choose_leader(&cluster, &cfg.price_book, &traffic);
+                log::info!(
+                    "placement auto: leader cloud {} (node {}), expected \
+                     egress ${:.4}/round",
+                    best.cloud,
+                    best.gateway,
+                    best.egress_usd_per_round
+                );
+                best.cloud
+            }
+        };
+        let leader = cluster.gateway(leader_cloud);
+        let cost_ledger =
+            CostLedger::new(cfg.price_book.clone(), cluster.n_clouds());
+
         let mut workers = Vec::with_capacity(cluster.n());
         let mut up = Vec::with_capacity(cluster.n());
         let mut down = Vec::with_capacity(cluster.n());
@@ -172,7 +233,7 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
             let hub = if cfg.hierarchical {
                 cluster.gateway(cluster.cloud_of(i))
             } else {
-                0
+                leader
             };
             up.push(Channel::new(
                 i,
@@ -207,7 +268,7 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
                 let gw = cluster.gateway(c);
                 gw_up.push(Channel::new(
                     gw,
-                    0,
+                    leader,
                     cfg.protocol,
                     cfg.streams,
                     Compressor::new(cfg.compression, cfg.seed ^ ((0x6A7Eu64 << 16) | c as u64)),
@@ -216,7 +277,7 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
                     secret,
                 ));
                 gw_down.push(Channel::new(
-                    0,
+                    leader,
                     gw,
                     cfg.protocol,
                     cfg.streams,
@@ -260,6 +321,8 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
             cluster,
             backend,
             wan,
+            leader,
+            cost_ledger,
             workers,
             up,
             down,
@@ -282,6 +345,12 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
         // initial distribution: every platform receives its (encrypted)
         // shard once — "Ensure Data Security" phase of the Figure-2 cycle
         coord.account_distribution()?;
+        // bill the construction-time distribution into the cumulative
+        // ledger as setup cost, so per-round breakdowns carry training
+        // traffic only (a mid-run re-plan's distribution lands in its
+        // round — that one *is* a consequence of training)
+        let setup = coord.wan.wire_bytes_by_cloud_class();
+        coord.cost_ledger.observe(&setup, &[], &coord.cluster);
         Ok(coord)
     }
 
@@ -289,7 +358,7 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
     pub(crate) fn account_distribution(&mut self) -> Result<()> {
         let mut max_secs = 0.0f64;
         for shard in &self.plan.shards {
-            if shard.platform == 0 {
+            if shard.platform == self.leader {
                 continue; // leader-colocated: local copy
             }
             let bytes = (shard.n_tokens() * 4) as u64
@@ -299,7 +368,7 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
                     0
                 };
             let stats = self.wan.transfer(
-                0,
+                self.leader,
                 shard.platform,
                 bytes,
                 self.cfg.protocol,
@@ -333,9 +402,30 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
                     let gw = self.cluster.gateway(cloud);
                     self.wan.fail_node(gw);
                     self.cluster.mark_egress_failed(gw);
-                    if !self.cfg.hierarchical || gw == 0 {
+                    if !self.cfg.hierarchical || gw == self.leader {
                         self.fail_over_gateway(round, cloud)?;
                     }
+                }
+                crate::netsim::FaultEvent::GatewayRestore { cloud, .. } => {
+                    // transient outage over: the earliest-failed egress
+                    // comes back (build-time validation guarantees one
+                    // exists), then the shared failover sequence fails
+                    // the gateway role back — the restored node is the
+                    // lowest-id eligible member again, so the election
+                    // inside `fail_over_gateway` lands on it
+                    let node = *self
+                        .cluster
+                        .egress_failed_members(cloud)
+                        .first()
+                        .with_context(|| {
+                            format!(
+                                "round {round}: {ev} but cloud {cloud} has \
+                                 no failed egress"
+                            )
+                        })?;
+                    self.wan.restore_node(node);
+                    self.cluster.mark_egress_restored(node);
+                    self.fail_over_gateway(round, cloud)?;
                 }
                 crate::netsim::FaultEvent::LinkDegrade {
                     src, dst, factor, ..
@@ -580,6 +670,9 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
         let comm_secs = (barrier_at - round_start - compute_max)
             + (round_end - barrier_at);
         self.monitor_and_adjust(round, &compute_times, comm_secs)?;
+        // price the round after monitor_and_adjust: a re-plan's shard
+        // re-distribution is traffic this round caused
+        let cost = self.cost_observe(&compute_times);
 
         let (eval_loss, eval_acc) = self.round_eval(round)?;
         let train_loss = locals.iter().map(|l| l.mean_loss).sum::<f32>()
@@ -602,7 +695,20 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
             platform_secs: compute_times,
             epsilon: self.accountant.epsilon(),
             partition_gen: self.plan.generation,
+            cost,
+            cum_cost_usd: self.cost_ledger.cumulative().total_usd(),
         })
+    }
+
+    /// Price everything since the last observation (round boundary):
+    /// the WAN's cumulative per-(cloud, class) byte split plus this
+    /// window's per-worker compute seconds, through the price book.
+    pub(crate) fn cost_observe(
+        &mut self,
+        platform_secs: &[f64],
+    ) -> CostBreakdown {
+        let cum = self.wan.wire_bytes_by_cloud_class();
+        self.cost_ledger.observe(&cum, platform_secs, &self.cluster)
     }
 
     /// End-of-round Figure-2 cycle, shared by the sync schedulers:
@@ -691,6 +797,21 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
         self.wan.inter_region_bytes()
     }
 
+    /// The node hosting the global model (the placement decision).
+    pub fn leader(&self) -> usize {
+        self.leader
+    }
+
+    /// The cloud the leader lives on.
+    pub fn leader_cloud(&self) -> usize {
+        self.cluster.cloud_of(self.leader)
+    }
+
+    /// Dollars billed so far (cumulative breakdown, incl. setup).
+    pub fn run_cost(&self) -> &CostBreakdown {
+        self.cost_ledger.cumulative()
+    }
+
     /// Snapshot the current run state (see [`crate::checkpoint`]).
     pub fn checkpoint(&self) -> crate::checkpoint::Checkpoint {
         crate::checkpoint::Checkpoint {
@@ -704,6 +825,11 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
     }
 
     /// Restore model + counters from a checkpoint (shape-checked).
+    ///
+    /// Note: `sim_secs`/`wire_bytes` resume from the checkpointed
+    /// totals, but the WAN's per-link ledger and the cost ledger start
+    /// fresh (the checkpoint does not carry them) — a resumed run's
+    /// `wire_bytes_class` and `cost` describe the resumed segment only.
     pub fn restore(&mut self, ckpt: &crate::checkpoint::Checkpoint) -> Result<()> {
         ckpt.check_compatible(&self.global)?;
         self.global = ckpt.params.clone();
@@ -735,11 +861,17 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
             rounds_run: self.history.len(),
             sim_secs: self.sim_secs,
             wire_bytes: self.wire_bytes,
+            wire_bytes_class: [
+                self.wan.wire_bytes_class(LinkClass::IntraAz),
+                self.wan.wire_bytes_class(LinkClass::IntraRegion),
+                self.wan.wire_bytes_class(LinkClass::InterRegion),
+            ],
             final_train_loss: final_train,
             final_eval_loss: eval_loss,
             final_eval_acc: eval_acc,
             reached_target,
             host_compute_secs: self.host_secs,
+            cost: self.cost_ledger.cumulative().clone(),
         })
     }
 }

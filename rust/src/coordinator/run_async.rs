@@ -70,14 +70,14 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
             let worker = engine.pop().expect("queue nonempty");
             let at = engine.now();
 
-            // --- uplink (worker 0 is leader-colocated: codec loopback,
+            // --- uplink (the leader-colocated worker: codec loopback,
             // no WAN/encrypt hop — its delta is compressed like everyone
             // else's)
             let (update, mean_loss, compute_secs) =
                 pending[worker].take().expect("pending update");
             round_compute[worker] += compute_secs;
-            let (delivered, up_secs) = if worker == 0 {
-                (self.up[0].codec_loopback(&update)?, 0.0)
+            let (delivered, up_secs) = if worker == self.leader {
+                (self.up[worker].codec_loopback(&update)?, 0.0)
             } else {
                 let d = self.up[worker].send_update(
                     &update,
@@ -111,7 +111,7 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
             train_loss_acc += mean_loss;
 
             // --- unicast fresh model back, then restart the worker
-            let down_secs = if worker == 0 {
+            let down_secs = if worker == self.leader {
                 0.0
             } else {
                 let (secs, wire) =
@@ -149,6 +149,11 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
                 } else {
                     (None, None)
                 };
+                // compute seconds behind the updates applied this
+                // pseudo-round, per worker
+                let platform_secs =
+                    std::mem::replace(&mut round_compute, vec![0.0; n]);
+                let cost = self.cost_observe(&platform_secs);
                 self.history.push(RoundRecord {
                     round,
                     sim_secs: self.sim_secs,
@@ -156,14 +161,11 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
                     train_loss: train_loss_acc / n as f32,
                     eval_loss,
                     eval_acc,
-                    // compute seconds behind the updates applied this
-                    // pseudo-round, per worker
-                    platform_secs: std::mem::replace(
-                        &mut round_compute,
-                        vec![0.0; n],
-                    ),
+                    platform_secs,
                     epsilon: self.accountant.epsilon(),
                     partition_gen: self.plan.generation,
+                    cost,
+                    cum_cost_usd: self.cost_ledger.cumulative().total_usd(),
                 });
                 train_loss_acc = 0.0;
                 if let (Some(l), Some(t)) = (eval_loss, self.cfg.target_loss) {

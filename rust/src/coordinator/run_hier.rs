@@ -195,7 +195,7 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
         // re-election this round
         for c in 0..n_clouds {
             let gw = self.cluster.gateway(c);
-            if gw == 0 {
+            if gw == self.leader {
                 engine.after(0.0, Ev::GwBcast { cloud: c });
             } else {
                 let (secs, wire) =
@@ -214,7 +214,7 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
                         if m == gw {
                             continue;
                         }
-                        if m == 0 {
+                        if m == self.leader {
                             // the leader hosts the global model already
                             have_model += 1;
                             continue;
@@ -348,7 +348,7 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
             hier.reduce_cloud(cloud, &members)
         };
         let host = t0.elapsed().as_secs_f64();
-        if gw == 0 {
+        if gw == self.leader {
             // leader-colocated gateway: codec loopback only
             let delta = self.gw_up[cloud].codec_loopback(&partial.delta)?;
             Ok((PartialAggregate { delta, ..partial }, 0.0, 0, host))

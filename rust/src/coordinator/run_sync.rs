@@ -70,7 +70,7 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
         }
 
         // --- phase 2: uplinks through the real pipeline, as events.
-        // Worker 0 is leader-colocated: its update still passes the codec
+        // The leader-colocated worker's update still passes the codec
         // (loopback), skipping only the WAN/encrypt hop, so aggregation
         // sees uniformly-compressed updates.
         let mut updates: Vec<Option<ClientUpdate>> =
@@ -80,8 +80,8 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
         while n_arrived < n {
             match engine.pop().expect("arrival events pending") {
                 Ev::ComputeDone(w) => {
-                    let (delivered, up_secs, wire) = if w == 0 {
-                        (self.up[0].codec_loopback(&locals[w].update)?, 0.0, 0)
+                    let (delivered, up_secs, wire) = if w == self.leader {
+                        (self.up[w].codec_loopback(&locals[w].update)?, 0.0, 0)
                     } else {
                         let d = self.up[w].send_update(
                             &locals[w].update,
@@ -125,7 +125,10 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
 
         // --- phase 4: broadcast the new global model (transfers overlap;
         // the round ends at the last delivery event)
-        for w in 1..n {
+        for w in 0..n {
+            if w == self.leader {
+                continue; // hosts the global model already
+            }
             let (secs, wire) =
                 self.down[w].send_params(&self.global, &mut self.wan)?;
             round_wire += wire;

@@ -1,0 +1,285 @@
+//! The run's dollar ledger: bytes and node-seconds in, dollars out.
+//!
+//! A [`CostLedger`] is fed by the coordinator at every round boundary
+//! with (a) the WAN's cumulative per-(source cloud, link class) byte
+//! split and (b) the round's per-worker compute seconds, and prices both
+//! against a [`PriceBook`]. It keeps the tier state (cumulative billed
+//! volume per cloud and class), so volume discounts accumulate across
+//! rounds exactly as a monthly cloud bill would.
+//!
+//! Determinism: byte deltas are u64, compute seconds come from the
+//! deterministic simulation, and every f64 summation walks clouds and
+//! classes in a fixed order — pricing a run twice, or on a different
+//! thread count, produces bit-identical dollars.
+
+use crate::cluster::ClusterSpec;
+use crate::cost::pricing::PriceBook;
+use crate::netsim::LinkClass;
+use crate::util::json::Json;
+
+/// Dollars, broken down by cloud and by kind (compute vs egress per link
+/// class). Used both per-round and cumulatively.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CostBreakdown {
+    /// compute dollars per cloud id
+    pub compute_usd: Vec<f64>,
+    /// egress dollars per source cloud per link class
+    /// (`egress_usd[cloud][class.index()]`)
+    pub egress_usd: Vec<[f64; 3]>,
+}
+
+impl CostBreakdown {
+    pub fn zero(n_clouds: usize) -> CostBreakdown {
+        CostBreakdown {
+            compute_usd: vec![0.0; n_clouds],
+            egress_usd: vec![[0.0; 3]; n_clouds],
+        }
+    }
+
+    pub fn n_clouds(&self) -> usize {
+        self.compute_usd.len()
+    }
+
+    /// Total dollars: the exact sum of every per-cloud, per-class entry,
+    /// walked in fixed (cloud, compute-then-classes) order — so
+    /// `total_usd()` always decomposes bit-exactly into its entries.
+    pub fn total_usd(&self) -> f64 {
+        let mut usd = 0.0;
+        for (compute, egress) in self.compute_usd.iter().zip(&self.egress_usd) {
+            usd += compute;
+            for e in egress {
+                usd += e;
+            }
+        }
+        usd
+    }
+
+    /// Compute dollars across clouds.
+    pub fn compute_total_usd(&self) -> f64 {
+        self.compute_usd.iter().sum()
+    }
+
+    /// Egress dollars across clouds and classes.
+    pub fn egress_total_usd(&self) -> f64 {
+        self.egress_usd.iter().flatten().sum()
+    }
+
+    /// Egress dollars over links of one class, across clouds.
+    pub fn egress_class_usd(&self, class: LinkClass) -> f64 {
+        self.egress_usd.iter().map(|row| row[class.index()]).sum()
+    }
+
+    /// Every dollar billed to one cloud (compute + egress).
+    pub fn cloud_usd(&self, cloud: usize) -> f64 {
+        self.compute_usd[cloud] + self.egress_usd[cloud].iter().sum::<f64>()
+    }
+
+    /// Accumulate `other` into `self` entry-by-entry (used for the
+    /// cumulative ledger — cumulative entries are exact sums of the
+    /// per-round entries).
+    pub fn add(&mut self, other: &CostBreakdown) {
+        if self.n_clouds() < other.n_clouds() {
+            self.compute_usd.resize(other.n_clouds(), 0.0);
+            self.egress_usd.resize(other.n_clouds(), [0.0; 3]);
+        }
+        for c in 0..other.n_clouds() {
+            self.compute_usd[c] += other.compute_usd[c];
+            for k in 0..3 {
+                self.egress_usd[c][k] += other.egress_usd[c][k];
+            }
+        }
+    }
+
+    /// JSON form for run reports.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("total_usd", Json::num(self.total_usd())),
+            ("compute_usd", Json::num(self.compute_total_usd())),
+            ("egress_usd", Json::num(self.egress_total_usd())),
+            (
+                "egress_by_class_usd",
+                Json::obj(
+                    LinkClass::ALL
+                        .iter()
+                        .map(|&c| (c.name(), Json::num(self.egress_class_usd(c))))
+                        .collect(),
+                ),
+            ),
+            (
+                "by_cloud",
+                Json::arr((0..self.n_clouds()).map(|c| {
+                    Json::obj(vec![
+                        ("cloud", Json::num(c as f64)),
+                        ("compute_usd", Json::num(self.compute_usd[c])),
+                        (
+                            "egress_usd",
+                            Json::obj(
+                                LinkClass::ALL
+                                    .iter()
+                                    .map(|&k| {
+                                        (
+                                            k.name(),
+                                            Json::num(self.egress_usd[c][k.index()]),
+                                        )
+                                    })
+                                    .collect(),
+                            ),
+                        ),
+                    ])
+                })),
+            ),
+        ])
+    }
+}
+
+/// Prices a run as it happens (see module docs).
+#[derive(Clone, Debug)]
+pub struct CostLedger {
+    book: PriceBook,
+    /// bytes already billed per (cloud, class) — the tier state
+    billed_bytes: Vec<[u64; 3]>,
+    cum: CostBreakdown,
+}
+
+impl CostLedger {
+    pub fn new(book: PriceBook, n_clouds: usize) -> CostLedger {
+        CostLedger {
+            book,
+            billed_bytes: vec![[0u64; 3]; n_clouds],
+            cum: CostBreakdown::zero(n_clouds),
+        }
+    }
+
+    pub fn book(&self) -> &PriceBook {
+        &self.book
+    }
+
+    /// Price everything that happened since the last observation:
+    /// `cum_bytes` is the WAN's *cumulative* per-(cloud, class) byte
+    /// split ([`crate::netsim::Wan::wire_bytes_by_cloud_class`]) and
+    /// `platform_secs` the window's per-worker compute seconds. Returns
+    /// the window's breakdown; the cumulative one accrues internally.
+    pub fn observe(
+        &mut self,
+        cum_bytes: &[[u64; 3]],
+        platform_secs: &[f64],
+        cluster: &ClusterSpec,
+    ) -> CostBreakdown {
+        let n_clouds = self.billed_bytes.len();
+        assert!(
+            cum_bytes.len() <= n_clouds,
+            "byte split covers {} clouds, ledger sized for {n_clouds}",
+            cum_bytes.len()
+        );
+        let mut round = CostBreakdown::zero(n_clouds);
+        for (c, row) in cum_bytes.iter().enumerate() {
+            for k in 0..3 {
+                let billed = self.billed_bytes[c][k];
+                debug_assert!(row[k] >= billed, "WAN byte ledger went backwards");
+                let delta = row[k].saturating_sub(billed);
+                if delta > 0 {
+                    round.egress_usd[c][k] = self.book.egress_cost(
+                        c,
+                        LinkClass::ALL[k],
+                        billed,
+                        delta,
+                    );
+                    self.billed_bytes[c][k] = row[k];
+                }
+            }
+        }
+        for (w, secs) in platform_secs.iter().enumerate() {
+            let cloud = cluster.cloud_of(w);
+            round.compute_usd[cloud] +=
+                secs / 3600.0 * self.book.compute_rate(cloud);
+        }
+        self.cum.add(&round);
+        round
+    }
+
+    /// Everything billed so far (exact sum of the per-window breakdowns).
+    pub fn cumulative(&self) -> &CostBreakdown {
+        &self.cum
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breakdown_decomposes_exactly() {
+        let mut b = CostBreakdown::zero(3);
+        b.compute_usd = vec![1.5, 0.25, 3.125];
+        b.egress_usd = vec![
+            [0.1, 0.2, 0.3],
+            [0.01, 0.02, 0.03],
+            [0.001, 0.002, 0.003],
+        ];
+        // mirror total_usd's summation order: exact bit equality
+        let mut manual = 0.0;
+        for c in 0..3 {
+            manual += b.compute_usd[c];
+            for e in &b.egress_usd[c] {
+                manual += e;
+            }
+        }
+        assert_eq!(manual.to_bits(), b.total_usd().to_bits());
+        assert!((b.cloud_usd(0) - 2.1).abs() < 1e-12);
+        assert!(
+            (b.egress_class_usd(LinkClass::IntraAz) - 0.111).abs() < 1e-12
+        );
+    }
+
+    #[test]
+    fn ledger_prices_deltas_and_accrues_tiers() {
+        let cluster = crate::cluster::ClusterSpec::paper_default();
+        // 1 GB tier boundary on inter-region for every cloud
+        let mut book = PriceBook::uniform(3.6, 0.0);
+        book.egress[LinkClass::InterRegion.index()] =
+            crate::cost::EgressRate::tiered(&[(1.0, 0.10), (f64::INFINITY, 0.02)]);
+        let mut ledger = CostLedger::new(book, 3);
+
+        // first window: 0.6 GB from cloud 0, one node-hour of compute
+        let w1 = vec![[0, 0, 600_000_000u64], [0; 3], [0; 3]];
+        let r1 = ledger.observe(&w1, &[3600.0, 0.0, 0.0], &cluster);
+        assert!((r1.egress_usd[0][2] - 0.06).abs() < 1e-12);
+        assert!((r1.compute_usd[0] - 3.6).abs() < 1e-12);
+        assert_eq!(r1.compute_usd[1], 0.0);
+
+        // second window: 0.8 GB more from cloud 0 — 0.4 GB in tier 0,
+        // 0.4 GB in the discounted tier
+        let w2 = vec![[0, 0, 1_400_000_000u64], [0; 3], [0; 3]];
+        let r2 = ledger.observe(&w2, &[0.0; 3], &cluster);
+        assert!((r2.egress_usd[0][2] - (0.4 * 0.10 + 0.4 * 0.02)).abs() < 1e-12);
+
+        // cumulative is the exact sum of the windows
+        let cum = ledger.cumulative();
+        assert_eq!(
+            cum.egress_usd[0][2].to_bits(),
+            (r1.egress_usd[0][2] + r2.egress_usd[0][2]).to_bits()
+        );
+        assert_eq!(cum.compute_usd[0].to_bits(), r1.compute_usd[0].to_bits());
+    }
+
+    #[test]
+    fn repricing_is_bit_identical() {
+        let cluster = crate::cluster::ClusterSpec::paper_default_scaled(2);
+        let windows: Vec<Vec<[u64; 3]>> = vec![
+            vec![[123, 0, 456_789], [7, 0, 0], [0, 0, 999_999]],
+            vec![[123, 0, 2_456_789], [7, 0, 88], [5, 0, 1_999_999]],
+        ];
+        let secs = vec![10.0, 20.0, 30.0, 40.0, 50.0, 60.0];
+        let price = || {
+            let mut l = CostLedger::new(PriceBook::paper_default(), 3);
+            for w in &windows {
+                l.observe(w, &secs, &cluster);
+            }
+            l.cumulative().clone()
+        };
+        let a = price();
+        let b = price();
+        assert_eq!(a, b);
+        assert_eq!(a.total_usd().to_bits(), b.total_usd().to_bits());
+    }
+}

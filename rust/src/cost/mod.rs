@@ -1,0 +1,18 @@
+//! Cloud economics: price books, the run's dollar ledger, and
+//! cost-aware leader placement.
+//!
+//! The paper claims cross-cloud federated training reduces *training
+//! costs*, not just bytes and hours. This subsystem makes that claim
+//! measurable: [`PriceBook`] turns the WAN's per-(cloud, link-class)
+//! byte ledger and the workers' compute seconds into dollars,
+//! [`CostLedger`] accrues them per round with real volume-tier state,
+//! and [`placement`] uses the same prices to *decide* where the
+//! aggregation leader should live instead of assuming cloud 0.
+
+pub mod ledger;
+pub mod placement;
+pub mod pricing;
+
+pub use ledger::{CostBreakdown, CostLedger};
+pub use placement::{choose_leader, score_leaders, LeaderScore, Placement, RoundTraffic};
+pub use pricing::{EgressRate, PriceBook, Tier};

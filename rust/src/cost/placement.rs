@@ -1,0 +1,283 @@
+//! Cost-aware leader placement: which cloud should host the global
+//! model?
+//!
+//! The seed code hardcoded "cloud 0 is always the leader". This module
+//! turns that into a decision: given the cluster's routed topology and a
+//! [`PriceBook`], it exhaustively scores every cloud (and the gateway
+//! choice inside it) by the expected *egress dollars per round* and picks
+//! the argmin. Compute dollars are placement-independent (every worker
+//! trains the same steps wherever the leader lives), so they are
+//! deliberately left out of the score.
+//!
+//! The model counts link-class crossings exactly as
+//! [`crate::netsim::Wan::route`] routes them (`src → gw(src) → gw(dst) →
+//! dst`, degenerate hops skipped) and prices a dense update/broadcast
+//! payload at each source cloud's *first-tier* marginal rate. Protocol
+//! framing, compression and volume discounts scale every candidate by
+//! similar factors, so they cannot flip the argmin; the realized bill is
+//! the [`crate::cost::CostLedger`]'s job, not this model's.
+//!
+//! Placement never changes training math — worker updates, aggregation
+//! order and eval are leader-independent — only routing and therefore
+//! time and dollars (pinned by `tests/cost_placement.rs`).
+
+use anyhow::{bail, Context, Result};
+
+use crate::cluster::ClusterSpec;
+use crate::cost::pricing::PriceBook;
+use crate::netsim::LinkClass;
+
+/// The leader-placement knob (config `"placement"`, CLI `--placement`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Placement {
+    /// the leader lives on cloud `c`'s gateway (the seed behaviour is
+    /// `Fixed(0)`)
+    Fixed(usize),
+    /// score every cloud against the price book and pick the cheapest
+    Auto,
+}
+
+impl Default for Placement {
+    fn default() -> Self {
+        Placement::Fixed(0)
+    }
+}
+
+impl Placement {
+    /// Parse `"auto"`, `"fixed"` (= cloud 0) or `"fixed:N"`.
+    pub fn parse(s: &str) -> Result<Placement> {
+        let s = s.trim();
+        if s == "auto" {
+            return Ok(Placement::Auto);
+        }
+        if s == "fixed" {
+            return Ok(Placement::Fixed(0));
+        }
+        if let Some(c) = s.strip_prefix("fixed:") {
+            let c = c
+                .parse::<usize>()
+                .with_context(|| format!("placement {s:?}: bad cloud id"))?;
+            return Ok(Placement::Fixed(c));
+        }
+        bail!("unknown placement {s:?} (expected auto | fixed | fixed:N)")
+    }
+
+    /// Canonical name (round-trips through [`Placement::parse`]).
+    pub fn name(&self) -> String {
+        match self {
+            Placement::Auto => "auto".into(),
+            Placement::Fixed(c) => format!("fixed:{c}"),
+        }
+    }
+}
+
+/// One candidate leader cloud's expected per-round bill.
+#[derive(Clone, Debug)]
+pub struct LeaderScore {
+    pub cloud: usize,
+    /// the node that would host the leader (the cloud's current gateway)
+    pub gateway: usize,
+    /// expected egress dollars per round (the score)
+    pub egress_usd_per_round: f64,
+    /// modeled payload bytes crossing each link class per round
+    pub bytes_by_class: [u64; 3],
+}
+
+/// Traffic model for one round (dense payload sizes; see module docs).
+#[derive(Clone, Copy, Debug)]
+pub struct RoundTraffic {
+    /// one worker update's payload bytes (uplink)
+    pub update_bytes: u64,
+    /// one model broadcast's payload bytes (downlink)
+    pub bcast_bytes: u64,
+    /// two-level reduce (one partial per cloud over the WAN) vs flat star
+    pub hierarchical: bool,
+}
+
+/// Link class between two clouds' gateways (mirrors
+/// [`crate::netsim::Wan::from_cluster`]'s region rule).
+fn cloud_pair_class(cluster: &ClusterSpec, a: usize, b: usize) -> LinkClass {
+    let (ga, gb) = (cluster.gateway(a), cluster.gateway(b));
+    if cluster.platforms[ga].region == cluster.platforms[gb].region {
+        LinkClass::IntraRegion
+    } else {
+        LinkClass::InterRegion
+    }
+}
+
+/// Score one candidate leader cloud: walk every transfer a round makes,
+/// count its hops per (source cloud, class), and price them.
+fn score_cloud(
+    cluster: &ClusterSpec,
+    book: &PriceBook,
+    traffic: &RoundTraffic,
+    leader_cloud: usize,
+) -> LeaderScore {
+    let n_clouds = cluster.n_clouds();
+    // bytes[src_cloud][class]
+    let mut bytes = vec![[0u64; 3]; n_clouds];
+    let mut add = |cloud: usize, class: LinkClass, b: u64| {
+        bytes[cloud][class.index()] += b;
+    };
+    let up = traffic.update_bytes;
+    let down = traffic.bcast_bytes;
+
+    for c in 0..n_clouds {
+        let members = cluster.cloud_members(c).len() as u64;
+        let wan_class = cloud_pair_class(cluster, c, leader_cloud);
+        if traffic.hierarchical {
+            // members ⇄ gateway over the AZ fabric (the gateway member
+            // loops back locally)
+            add(c, LinkClass::IntraAz, (members - 1) * (up + down));
+            if c != leader_cloud {
+                // one partial aggregate up, one broadcast down
+                add(c, wan_class, up);
+                add(leader_cloud, wan_class, down);
+            }
+        } else if c == leader_cloud {
+            // leader-cloud workers reach the leader over the AZ fabric
+            add(c, LinkClass::IntraAz, (members - 1) * (up + down));
+        } else {
+            // every worker w routes w → gw(c) → leader and back: the
+            // non-gateway members pay the intra hop, all members' payloads
+            // pay the WAN hop
+            add(c, LinkClass::IntraAz, (members - 1) * (up + down));
+            add(c, wan_class, members * up);
+            add(leader_cloud, wan_class, members * down);
+        }
+    }
+
+    let mut usd = 0.0;
+    for (c, row) in bytes.iter().enumerate() {
+        for class in LinkClass::ALL {
+            let b = row[class.index()];
+            if b > 0 {
+                usd += b as f64 / 1e9
+                    * book.egress_rate(c, class).marginal_rate(0.0);
+            }
+        }
+    }
+    let mut by_class = [0u64; 3];
+    for row in &bytes {
+        for k in 0..3 {
+            by_class[k] += row[k];
+        }
+    }
+    LeaderScore {
+        cloud: leader_cloud,
+        gateway: cluster.gateway(leader_cloud),
+        egress_usd_per_round: usd,
+        bytes_by_class: by_class,
+    }
+}
+
+/// Score every cloud as a leader candidate, in cloud-id order. The
+/// gateway choice inside a cloud is the cluster's current (egress-ok)
+/// gateway: members of a cloud share a region and AZ fabric, so any
+/// other eligible member scores identically — the lowest-id eligible
+/// member is the deterministic representative.
+pub fn score_leaders(
+    cluster: &ClusterSpec,
+    book: &PriceBook,
+    traffic: &RoundTraffic,
+) -> Vec<LeaderScore> {
+    (0..cluster.n_clouds())
+        .map(|c| score_cloud(cluster, book, traffic, c))
+        .collect()
+}
+
+/// The argmin leader (strictly-less comparison, so ties resolve to the
+/// lowest cloud id — deterministic across runs and platforms).
+pub fn choose_leader(
+    cluster: &ClusterSpec,
+    book: &PriceBook,
+    traffic: &RoundTraffic,
+) -> LeaderScore {
+    score_leaders(cluster, book, traffic)
+        .into_iter()
+        .reduce(|best, s| {
+            if s.egress_usd_per_round < best.egress_usd_per_round {
+                s
+            } else {
+                best
+            }
+        })
+        .expect("cluster has at least one cloud")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn traffic(hier: bool) -> RoundTraffic {
+        RoundTraffic { update_bytes: 1_000_000, bcast_bytes: 1_000_000, hierarchical: hier }
+    }
+
+    #[test]
+    fn placement_parses_and_round_trips() {
+        assert_eq!(Placement::parse("auto").unwrap(), Placement::Auto);
+        assert_eq!(Placement::parse("fixed").unwrap(), Placement::Fixed(0));
+        assert_eq!(Placement::parse("fixed:2").unwrap(), Placement::Fixed(2));
+        assert!(Placement::parse("fixed:x").is_err());
+        assert!(Placement::parse("argmin").is_err());
+        for p in [Placement::Auto, Placement::Fixed(3)] {
+            assert_eq!(Placement::parse(&p.name()).unwrap(), p);
+        }
+        assert_eq!(Placement::default(), Placement::Fixed(0));
+    }
+
+    #[test]
+    fn uniform_prices_tie_to_cloud_zero() {
+        let cluster = ClusterSpec::paper_default_scaled(4);
+        let book = PriceBook::uniform(3.0, 0.05);
+        for hier in [false, true] {
+            let best = choose_leader(&cluster, &book, &traffic(hier));
+            assert_eq!(best.cloud, 0, "hier={hier}");
+            assert_eq!(best.gateway, cluster.gateway(0));
+        }
+    }
+
+    #[test]
+    fn auto_avoids_the_expensive_egress_cloud() {
+        // leader cloud L sends 2 broadcasts (src L) and receives one
+        // partial from each other cloud (src c): score(L) grows with
+        // cloud L's own rate, so the argmin is the *cheapest* sender
+        let cluster = ClusterSpec::paper_default_scaled(4);
+        let mut book = PriceBook::uniform(3.0, 0.0);
+        book.egress = [
+            crate::cost::EgressRate::flat(0.0),
+            crate::cost::EgressRate::flat(0.09),
+            crate::cost::EgressRate::flat(0.09),
+        ];
+        book.overrides = vec![
+            (0, LinkClass::InterRegion, crate::cost::EgressRate::flat(0.20)),
+            (1, LinkClass::InterRegion, crate::cost::EgressRate::flat(0.15)),
+            (2, LinkClass::InterRegion, crate::cost::EgressRate::flat(0.05)),
+        ];
+        // paper clouds are pairwise inter-region, so the overrides bind
+        let best = choose_leader(&cluster, &book, &traffic(true));
+        assert_eq!(best.cloud, 2);
+        let scores = score_leaders(&cluster, &book, &traffic(true));
+        assert_eq!(scores.len(), 3);
+        assert!(scores[2].egress_usd_per_round < scores[0].egress_usd_per_round);
+        assert!(scores[2].egress_usd_per_round < scores[1].egress_usd_per_round);
+    }
+
+    #[test]
+    fn hier_crossing_counts_beat_the_star() {
+        let cluster = ClusterSpec::paper_default_scaled(8);
+        let book = PriceBook::paper_default();
+        let star = score_cloud(&cluster, &book, &traffic(false), 0);
+        let hier = score_cloud(&cluster, &book, &traffic(true), 0);
+        let k = LinkClass::InterRegion.index();
+        // star ships m updates + m broadcasts per non-leader cloud over
+        // the WAN; hier ships exactly one of each
+        assert_eq!(star.bytes_by_class[k], 8 * hier.bytes_by_class[k]);
+        assert!(hier.egress_usd_per_round * 4.0 < star.egress_usd_per_round);
+        // intra-AZ volume is identical
+        assert_eq!(
+            star.bytes_by_class[LinkClass::IntraAz.index()],
+            hier.bytes_by_class[LinkClass::IntraAz.index()]
+        );
+    }
+}

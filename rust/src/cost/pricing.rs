@@ -1,0 +1,475 @@
+//! Price books: what a byte and a node-hour cost on each cloud.
+//!
+//! A [`PriceBook`] holds per-cloud compute rates ($/node-hour) and
+//! per-link-class egress rates ($/GB) with optional per-src-cloud
+//! overrides and tiered volume discounts — the shape of real public-cloud
+//! bills: compute is metered per instance-hour, network per GB *leaving*
+//! a cloud, cheaper in bulk and cheaper over same-region interconnect
+//! than over the inter-region internet.
+//!
+//! Everything is deterministic: tier boundaries are walked in order and
+//! dollar sums are pure functions of cumulative byte counts, so pricing a
+//! run twice (or on a different thread count) is bit-identical.
+
+use anyhow::{bail, Context, Result};
+
+use crate::netsim::LinkClass;
+use crate::util::json::Json;
+
+/// One volume tier of an egress rate: traffic up to `upto_gb` cumulative
+/// gigabytes (decimal GB, `f64::INFINITY` for the last tier) is billed at
+/// `usd_per_gb`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Tier {
+    pub upto_gb: f64,
+    pub usd_per_gb: f64,
+}
+
+/// A tiered $/GB egress rate (volume discounts accumulate over the whole
+/// run, per source cloud and link class).
+#[derive(Clone, Debug, PartialEq)]
+pub struct EgressRate {
+    /// ascending tiers; the last tier must be unbounded
+    pub tiers: Vec<Tier>,
+}
+
+impl EgressRate {
+    /// Single-tier rate: every GB costs the same.
+    pub fn flat(usd_per_gb: f64) -> EgressRate {
+        EgressRate { tiers: vec![Tier { upto_gb: f64::INFINITY, usd_per_gb }] }
+    }
+
+    /// Tiered rate from `(upto_gb, usd_per_gb)` pairs (use
+    /// `f64::INFINITY` for the last threshold).
+    pub fn tiered(tiers: &[(f64, f64)]) -> EgressRate {
+        EgressRate {
+            tiers: tiers
+                .iter()
+                .map(|&(upto_gb, usd_per_gb)| Tier { upto_gb, usd_per_gb })
+                .collect(),
+        }
+    }
+
+    /// Structural sanity: at least one tier, thresholds strictly
+    /// ascending, last unbounded, rates finite and non-negative.
+    pub fn validate(&self) -> Result<()> {
+        if self.tiers.is_empty() {
+            bail!("egress rate needs at least one tier");
+        }
+        let mut prev = 0.0f64;
+        for (i, t) in self.tiers.iter().enumerate() {
+            if !(t.usd_per_gb >= 0.0) || !t.usd_per_gb.is_finite() {
+                bail!("tier {i}: rate must be finite and >= 0, got {}", t.usd_per_gb);
+            }
+            if !(t.upto_gb > prev) {
+                bail!(
+                    "tier {i}: threshold {} must exceed the previous ({prev})",
+                    t.upto_gb
+                );
+            }
+            prev = t.upto_gb;
+        }
+        let last = self.tiers.last().unwrap();
+        if last.upto_gb.is_finite() {
+            bail!("last tier must be unbounded (upto_gb = null/inf)");
+        }
+        Ok(())
+    }
+
+    /// Marginal $/GB at cumulative volume `at_gb`.
+    pub fn marginal_rate(&self, at_gb: f64) -> f64 {
+        for t in &self.tiers {
+            if at_gb < t.upto_gb {
+                return t.usd_per_gb;
+            }
+        }
+        self.tiers.last().expect("validated non-empty").usd_per_gb
+    }
+
+    /// Dollars for `delta_bytes` of new traffic given `billed_bytes`
+    /// already billed against this rate (tier discounts straddle the
+    /// boundary exactly).
+    pub fn cost(&self, billed_bytes: u64, delta_bytes: u64) -> f64 {
+        let a = billed_bytes as f64 / 1e9;
+        let b = (billed_bytes + delta_bytes) as f64 / 1e9;
+        let mut usd = 0.0;
+        let mut lo = 0.0f64;
+        for t in &self.tiers {
+            let seg = (b.min(t.upto_gb) - a.max(lo)).max(0.0);
+            usd += seg * t.usd_per_gb;
+            if b <= t.upto_gb {
+                break;
+            }
+            lo = t.upto_gb;
+        }
+        usd
+    }
+
+    fn to_json(&self) -> Json {
+        Json::arr(self.tiers.iter().map(|t| {
+            Json::obj(vec![
+                (
+                    "upto_gb",
+                    if t.upto_gb.is_finite() {
+                        Json::num(t.upto_gb)
+                    } else {
+                        Json::Null
+                    },
+                ),
+                ("usd_per_gb", Json::num(t.usd_per_gb)),
+            ])
+        }))
+    }
+
+    fn from_json(v: &Json) -> Result<EgressRate> {
+        let arr = v.as_arr().context("egress rate must be an array of tiers")?;
+        let mut tiers = Vec::with_capacity(arr.len());
+        for t in arr {
+            let upto_gb = match t.get("upto_gb") {
+                None | Some(Json::Null) => f64::INFINITY,
+                Some(x) => x.as_f64().context("tier upto_gb must be a number or null")?,
+            };
+            let usd_per_gb = t
+                .get("usd_per_gb")
+                .and_then(Json::as_f64)
+                .context("tier missing usd_per_gb")?;
+            tiers.push(Tier { upto_gb, usd_per_gb });
+        }
+        let rate = EgressRate { tiers };
+        rate.validate()?;
+        Ok(rate)
+    }
+}
+
+/// Per-cloud compute and egress prices for one experiment.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PriceBook {
+    pub name: String,
+    /// $/node-hour per cloud id; clouds beyond the list pay
+    /// `default_compute_per_node_hour`
+    pub compute_per_node_hour: Vec<f64>,
+    pub default_compute_per_node_hour: f64,
+    /// base $/GB egress per link class, indexed by [`LinkClass::index`]
+    pub egress: [EgressRate; 3],
+    /// src-cloud-specific overrides `(cloud, class, rate)` — e.g. one
+    /// provider's pricier inter-region egress. First match wins; keep
+    /// the list sorted for readable serialization.
+    pub overrides: Vec<(usize, LinkClass, EgressRate)>,
+}
+
+impl PriceBook {
+    /// Realistic public-cloud numbers for the paper's 3-cloud testbed
+    /// (compute matches [`crate::cluster::ClusterSpec::paper_default`]'s
+    /// p3.2xlarge-class instances; egress follows the familiar published
+    /// shapes: ~$0.01/GB cross-AZ, ~$0.02/GB same-region interconnect,
+    /// ~$0.09/GB inter-region internet with bulk discounts, and cloud 1
+    /// (the GCP stand-in) charging a premium for inter-region egress).
+    pub fn paper_default() -> PriceBook {
+        PriceBook {
+            name: "paper-default".into(),
+            compute_per_node_hour: vec![3.06, 2.48, 3.40],
+            default_compute_per_node_hour: 3.0,
+            egress: [
+                // IntraAz: cross-AZ transfer inside one cloud
+                EgressRate::flat(0.01),
+                // IntraRegion: same-region cross-cloud interconnect
+                EgressRate::flat(0.02),
+                // InterRegion: internet egress with volume discounts
+                EgressRate::tiered(&[
+                    (10_240.0, 0.09),
+                    (51_200.0, 0.085),
+                    (153_600.0, 0.07),
+                    (f64::INFINITY, 0.05),
+                ]),
+            ],
+            overrides: vec![(
+                1,
+                LinkClass::InterRegion,
+                EgressRate::tiered(&[
+                    (1_024.0, 0.12),
+                    (10_240.0, 0.11),
+                    (f64::INFINITY, 0.08),
+                ]),
+            )],
+        }
+    }
+
+    /// Flat uniform book (every cloud, every class, one rate) — handy
+    /// for tests and ablations where tiering is noise.
+    pub fn uniform(compute_per_node_hour: f64, usd_per_gb: f64) -> PriceBook {
+        PriceBook {
+            name: "uniform".into(),
+            compute_per_node_hour: Vec::new(),
+            default_compute_per_node_hour: compute_per_node_hour,
+            egress: [
+                EgressRate::flat(usd_per_gb),
+                EgressRate::flat(usd_per_gb),
+                EgressRate::flat(usd_per_gb),
+            ],
+            overrides: Vec::new(),
+        }
+    }
+
+    /// $/node-hour of compute on `cloud`.
+    pub fn compute_rate(&self, cloud: usize) -> f64 {
+        self.compute_per_node_hour
+            .get(cloud)
+            .copied()
+            .unwrap_or(self.default_compute_per_node_hour)
+    }
+
+    /// The egress rate traffic leaving `cloud` over a `class` link pays
+    /// (override if present, else the class base rate).
+    pub fn egress_rate(&self, cloud: usize, class: LinkClass) -> &EgressRate {
+        self.overrides
+            .iter()
+            .find(|(c, k, _)| *c == cloud && *k == class)
+            .map(|(_, _, r)| r)
+            .unwrap_or(&self.egress[class.index()])
+    }
+
+    /// Dollars for `delta_bytes` leaving `cloud` over `class`, given
+    /// `billed_bytes` already billed for that (cloud, class) pair.
+    pub fn egress_cost(
+        &self,
+        cloud: usize,
+        class: LinkClass,
+        billed_bytes: u64,
+        delta_bytes: u64,
+    ) -> f64 {
+        self.egress_rate(cloud, class).cost(billed_bytes, delta_bytes)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        for (i, r) in self.compute_per_node_hour.iter().enumerate() {
+            if !(*r >= 0.0) || !r.is_finite() {
+                bail!("compute rate for cloud {i} must be finite and >= 0");
+            }
+        }
+        if !(self.default_compute_per_node_hour >= 0.0)
+            || !self.default_compute_per_node_hour.is_finite()
+        {
+            bail!("default compute rate must be finite and >= 0");
+        }
+        for class in LinkClass::ALL {
+            self.egress[class.index()]
+                .validate()
+                .with_context(|| format!("egress rate for {}", class.name()))?;
+        }
+        for (cloud, class, rate) in &self.overrides {
+            rate.validate().with_context(|| {
+                format!("egress override for cloud {cloud}, {}", class.name())
+            })?;
+        }
+        Ok(())
+    }
+
+    /// Serialize (JSON round-trips through [`PriceBook::from_json`]).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            (
+                "compute_per_node_hour",
+                Json::arr(self.compute_per_node_hour.iter().map(|&r| Json::num(r))),
+            ),
+            (
+                "default_compute_per_node_hour",
+                Json::num(self.default_compute_per_node_hour),
+            ),
+            (
+                "egress",
+                Json::obj(
+                    LinkClass::ALL
+                        .iter()
+                        .map(|&c| (c.name(), self.egress[c.index()].to_json()))
+                        .collect(),
+                ),
+            ),
+            (
+                "overrides",
+                Json::arr(self.overrides.iter().map(|(cloud, class, rate)| {
+                    Json::obj(vec![
+                        ("cloud", Json::num(*cloud as f64)),
+                        ("class", Json::str(class.name())),
+                        ("tiers", rate.to_json()),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    /// Parse from a JSON value. Missing fields default to
+    /// [`PriceBook::paper_default`]'s — except that supplying `egress`
+    /// (or `overrides`) resets the default per-cloud overrides, so a
+    /// custom book's rates are never silently shadowed by the paper
+    /// book's cloud-1 premium; list overrides explicitly to keep them.
+    pub fn from_json(v: &Json) -> Result<PriceBook> {
+        let mut book = PriceBook::paper_default();
+        if v.get("egress").is_some() || v.get("overrides").is_some() {
+            book.overrides = Vec::new();
+        }
+        if let Some(s) = v.get("name").and_then(Json::as_str) {
+            book.name = s.to_string();
+        }
+        if let Some(arr) = v.get("compute_per_node_hour").and_then(Json::as_arr) {
+            book.compute_per_node_hour = arr
+                .iter()
+                .map(|x| x.as_f64().context("compute rate must be a number"))
+                .collect::<Result<Vec<f64>>>()?;
+        }
+        book.default_compute_per_node_hour = v.opt_f64(
+            "default_compute_per_node_hour",
+            book.default_compute_per_node_hour,
+        );
+        if let Some(eg) = v.get("egress") {
+            for class in LinkClass::ALL {
+                if let Some(r) = eg.get(class.name()) {
+                    book.egress[class.index()] = EgressRate::from_json(r)
+                        .with_context(|| format!("egress.{}", class.name()))?;
+                }
+            }
+        }
+        if let Some(arr) = v.get("overrides").and_then(Json::as_arr) {
+            book.overrides = arr
+                .iter()
+                .map(|o| {
+                    let cloud = o
+                        .get("cloud")
+                        .and_then(Json::as_usize)
+                        .context("override missing cloud")?;
+                    let class = o
+                        .get("class")
+                        .and_then(Json::as_str)
+                        .and_then(LinkClass::parse)
+                        .context("override missing/unknown class")?;
+                    let rate = EgressRate::from_json(
+                        o.get("tiers").context("override missing tiers")?,
+                    )?;
+                    Ok((cloud, class, rate))
+                })
+                .collect::<Result<Vec<_>>>()?;
+        }
+        book.validate()?;
+        Ok(book)
+    }
+
+    /// Parse from JSON text (see EXPERIMENTS.md §Cost for the schema).
+    pub fn parse(text: &str) -> Result<PriceBook> {
+        let v = Json::parse(text).context("price book JSON")?;
+        PriceBook::from_json(&v)
+    }
+
+    /// Load from a JSON file (the CLI's `--price-book FILE`).
+    pub fn load(path: &std::path::Path) -> Result<PriceBook> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading price book {path:?}"))?;
+        PriceBook::parse(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_rate_is_linear() {
+        let r = EgressRate::flat(0.1);
+        assert!((r.cost(0, 1_000_000_000) - 0.1).abs() < 1e-12);
+        assert!((r.cost(5_000_000_000, 2_000_000_000) - 0.2).abs() < 1e-12);
+        assert_eq!(r.cost(0, 0), 0.0);
+    }
+
+    #[test]
+    fn tiers_straddle_boundaries_exactly() {
+        // 1 GB at $0.10, beyond at $0.02
+        let r = EgressRate::tiered(&[(1.0, 0.10), (f64::INFINITY, 0.02)]);
+        // 0.5 GB entirely in tier 0
+        assert!((r.cost(0, 500_000_000) - 0.05).abs() < 1e-12);
+        // 2 GB from zero: 1 GB * 0.10 + 1 GB * 0.02
+        assert!((r.cost(0, 2_000_000_000) - 0.12).abs() < 1e-12);
+        // resuming past the boundary bills the cheap tier only
+        assert!((r.cost(1_500_000_000, 500_000_000) - 0.01).abs() < 1e-12);
+        // incremental billing sums to the one-shot bill
+        let one_shot = r.cost(0, 3_000_000_000);
+        let a = r.cost(0, 800_000_000);
+        let b = r.cost(800_000_000, 2_200_000_000);
+        assert!((one_shot - (a + b)).abs() < 1e-9);
+        assert!((r.marginal_rate(0.5) - 0.10).abs() < 1e-12);
+        assert!((r.marginal_rate(1.5) - 0.02).abs() < 1e-12);
+    }
+
+    #[test]
+    fn validation_rejects_bad_shapes() {
+        assert!(EgressRate { tiers: vec![] }.validate().is_err());
+        // finite last tier
+        assert!(EgressRate::tiered(&[(10.0, 0.1)]).validate().is_err());
+        // non-ascending thresholds
+        assert!(EgressRate::tiered(&[(10.0, 0.1), (5.0, 0.05), (f64::INFINITY, 0.01)])
+            .validate()
+            .is_err());
+        // negative rate
+        assert!(EgressRate::tiered(&[(f64::INFINITY, -0.1)]).validate().is_err());
+        assert!(PriceBook::paper_default().validate().is_ok());
+    }
+
+    #[test]
+    fn overrides_shadow_base_rates() {
+        let book = PriceBook::paper_default();
+        // cloud 1 pays the override for inter-region...
+        assert!(
+            (book.egress_rate(1, LinkClass::InterRegion).marginal_rate(0.0) - 0.12)
+                .abs()
+                < 1e-12
+        );
+        // ...but the base rate for everything else
+        assert!(
+            (book.egress_rate(1, LinkClass::IntraAz).marginal_rate(0.0) - 0.01).abs()
+                < 1e-12
+        );
+        assert!(
+            (book.egress_rate(0, LinkClass::InterRegion).marginal_rate(0.0) - 0.09)
+                .abs()
+                < 1e-12
+        );
+        // compute falls back to the default beyond the listed clouds
+        assert!((book.compute_rate(2) - 3.40).abs() < 1e-12);
+        assert!((book.compute_rate(7) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let book = PriceBook::paper_default();
+        let back = PriceBook::parse(&book.to_json().to_string()).unwrap();
+        assert_eq!(book, back);
+        // partial JSON keeps paper defaults for the rest
+        let partial = PriceBook::parse(
+            r#"{"name": "x", "egress": {"inter-region": [{"usd_per_gb": 0.2}]}}"#,
+        )
+        .unwrap();
+        assert_eq!(partial.name, "x");
+        assert!(
+            (partial.egress_rate(0, LinkClass::InterRegion).marginal_rate(0.0) - 0.2)
+                .abs()
+                < 1e-12
+        );
+        assert!(
+            (partial.egress_rate(0, LinkClass::IntraAz).marginal_rate(0.0) - 0.01)
+                .abs()
+                < 1e-12
+        );
+        // supplying egress drops the paper book's default overrides:
+        // cloud 1 pays the user's rate, not the stale $0.12 premium
+        assert!(partial.overrides.is_empty());
+        assert!(
+            (partial.egress_rate(1, LinkClass::InterRegion).marginal_rate(0.0) - 0.2)
+                .abs()
+                < 1e-12
+        );
+        // a book with no egress/overrides keys keeps the paper defaults
+        let bare = PriceBook::parse(r#"{"name": "bare"}"#).unwrap();
+        assert_eq!(bare.overrides, PriceBook::paper_default().overrides);
+        // malformed books are rejected
+        assert!(PriceBook::parse(r#"{"egress": {"inter-region": [{"upto_gb": 5, "usd_per_gb": 0.1}]}}"#).is_err());
+        assert!(PriceBook::parse("{").is_err());
+    }
+}

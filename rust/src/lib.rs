@@ -14,6 +14,7 @@ pub mod model;
 pub mod runtime;
 pub mod cluster;
 pub mod netsim;
+pub mod cost;
 pub mod compress;
 pub mod crypto;
 pub mod privacy;

@@ -2,6 +2,10 @@
 
 use std::fmt::Write as _;
 
+use crate::cost::CostBreakdown;
+use crate::netsim::LinkClass;
+use crate::util::json::Json;
+
 /// One aggregation round's record.
 #[derive(Clone, Debug)]
 pub struct RoundRecord {
@@ -24,6 +28,10 @@ pub struct RoundRecord {
     pub epsilon: f64,
     /// partition generation in effect
     pub partition_gen: u64,
+    /// this round's dollar bill (compute + egress, per cloud and class)
+    pub cost: CostBreakdown,
+    /// cumulative dollars at the end of this round (incl. setup)
+    pub cum_cost_usd: f64,
 }
 
 /// Aggregate outcome of a run.
@@ -34,12 +42,20 @@ pub struct RunResult {
     pub rounds_run: usize,
     pub sim_secs: f64,
     pub wire_bytes: u64,
+    /// cumulative wire bytes split by link class, indexed by
+    /// [`LinkClass::index`] — the single source of truth cost, tests and
+    /// figures read (mirrors the WAN's per-link ledger; on a
+    /// checkpoint-resumed run this and `cost` cover the resumed segment,
+    /// while `wire_bytes`/`sim_secs` include the checkpointed totals)
+    pub wire_bytes_class: [u64; 3],
     pub final_train_loss: f32,
     pub final_eval_loss: f32,
     pub final_eval_acc: f64,
     pub reached_target: bool,
     /// real (host) seconds spent inside PJRT/aggregation — profiling
     pub host_compute_secs: f64,
+    /// the run's cumulative dollar bill (see [`crate::cost`])
+    pub cost: CostBreakdown,
 }
 
 impl RunResult {
@@ -58,25 +74,69 @@ impl RunResult {
         self.final_eval_acc * 100.0
     }
 
-    /// Loss/accuracy curve as CSV (round, sim_hours, comm_gb, train_loss,
-    /// eval_loss, eval_acc).
+    /// Total dollars billed (compute + egress, incl. setup).
+    pub fn cost_usd(&self) -> f64 {
+        self.cost.total_usd()
+    }
+
+    /// Egress dollars billed across clouds and classes.
+    pub fn egress_usd(&self) -> f64 {
+        self.cost.egress_total_usd()
+    }
+
+    /// Bytes that crossed links of `class` (per-link ledger split).
+    pub fn wire_bytes_of(&self, class: LinkClass) -> u64 {
+        self.wire_bytes_class[class.index()]
+    }
+
+    /// Loss/accuracy/cost curve as CSV (round, sim_hours, comm_gb,
+    /// cost_usd, train_loss, eval_loss, eval_acc) — the figure series.
     pub fn curve_csv(&self) -> String {
         let mut s = String::from(
-            "round,sim_hours,comm_gb,train_loss,eval_loss,eval_acc\n",
+            "round,sim_hours,comm_gb,cost_usd,train_loss,eval_loss,eval_acc\n",
         );
         for r in &self.history {
             let _ = writeln!(
                 s,
-                "{},{:.4},{:.4},{:.4},{},{}",
+                "{},{:.4},{:.4},{:.4},{:.4},{},{}",
                 r.round,
                 r.sim_secs / 3600.0,
                 r.wire_bytes as f64 / 1e9,
+                r.cum_cost_usd,
                 r.train_loss,
                 r.eval_loss.map_or(String::new(), |x| format!("{x:.4}")),
                 r.eval_acc.map_or(String::new(), |x| format!("{x:.4}")),
             );
         }
         s
+    }
+
+    /// JSON summary (report artifact): headline numbers, the per-class
+    /// wire-byte split and the dollar breakdown — one source of truth
+    /// for cost, tests and figures.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("rounds_run", Json::num(self.rounds_run as f64)),
+            ("sim_secs", Json::num(self.sim_secs)),
+            ("wire_bytes", Json::num(self.wire_bytes as f64)),
+            (
+                "wire_bytes_class",
+                Json::obj(
+                    LinkClass::ALL
+                        .iter()
+                        .map(|&c| {
+                            (c.name(), Json::num(self.wire_bytes_of(c) as f64))
+                        })
+                        .collect(),
+                ),
+            ),
+            ("final_train_loss", Json::num(self.final_train_loss as f64)),
+            ("final_eval_loss", Json::num(self.final_eval_loss as f64)),
+            ("final_eval_acc", Json::num(self.final_eval_acc)),
+            ("reached_target", Json::Bool(self.reached_target)),
+            ("cost", self.cost.to_json()),
+        ])
     }
 
     /// Latest eval numbers walking back from the end.
@@ -103,10 +163,15 @@ mod tests {
             platform_secs: vec![1.0, 1.1],
             epsilon: 0.0,
             partition_gen: 0,
+            cost: CostBreakdown::zero(2),
+            cum_cost_usd: round as f64 * 0.5,
         }
     }
 
     fn result() -> RunResult {
+        let mut cost = CostBreakdown::zero(2);
+        cost.compute_usd = vec![10.0, 5.0];
+        cost.egress_usd = vec![[0.5, 0.0, 2.0], [0.25, 0.0, 1.0]];
         RunResult {
             name: "t".into(),
             history: vec![
@@ -117,11 +182,13 @@ mod tests {
             rounds_run: 3,
             sim_secs: 7200.0,
             wire_bytes: 4_500_000_000,
+            wire_bytes_class: [3_000_000_000, 0, 1_500_000_000],
             final_train_loss: 3.7,
             final_eval_loss: 3.5,
             final_eval_acc: 0.3,
             reached_target: false,
             host_compute_secs: 1.0,
+            cost,
         }
     }
 
@@ -150,5 +217,28 @@ mod tests {
         let (loss, acc) = r.last_eval().unwrap();
         assert_eq!(loss, 3.5);
         assert_eq!(acc, 0.3);
+    }
+
+    #[test]
+    fn cost_and_class_accessors() {
+        let r = result();
+        assert!((r.cost_usd() - 18.75).abs() < 1e-12);
+        assert!((r.egress_usd() - 3.75).abs() < 1e-12);
+        assert_eq!(r.wire_bytes_of(LinkClass::IntraAz), 3_000_000_000);
+        assert_eq!(r.wire_bytes_of(LinkClass::InterRegion), 1_500_000_000);
+        // the curve carries the cumulative dollar column
+        let csv = r.curve_csv();
+        assert!(csv.starts_with("round,sim_hours,comm_gb,cost_usd,"));
+        assert!(csv.lines().nth(2).unwrap().contains("1.0000"));
+    }
+
+    #[test]
+    fn json_summary_has_split_and_cost() {
+        let j = result().to_json().to_string();
+        assert!(j.contains("\"inter-region\":1500000000"), "{j}");
+        assert!(j.contains("\"total_usd\":18.75"), "{j}");
+        assert!(j.contains("\"egress_usd\":3.75"), "{j}");
+        // round-trips through the JSON parser
+        assert!(Json::parse(&j).is_ok());
     }
 }

@@ -13,6 +13,10 @@
 //!   role hosted on its gateway node) fails. Intra-AZ fabric survives;
 //!   the cloud must re-elect a standby gateway to keep talking across
 //!   regions (see `Wan::fail_node` / `ClusterSpec::reelect_gateway`).
+//! * [`FaultEvent::GatewayRestore`] — a previously killed gateway's WAN
+//!   egress comes back (transient outage). The cloud *fails back*: the
+//!   restored node outranks the standby under the lowest-id election
+//!   rule, so the gateway role returns to it at the round boundary.
 //! * [`FaultEvent::LinkDegrade`] — a directed link loses bandwidth
 //!   (`factor` multiplies `bandwidth_bps`; `0.1` = 10× slower).
 //! * [`FaultEvent::NodeSlowdown`] — a worker node's compute degrades
@@ -24,6 +28,7 @@
 //!
 //! ```text
 //! gateway-down:cloud=1,at=round3
+//! restore:cloud=1,at=round5
 //! link-degrade:src=0,dst=4,at=2,factor=0.25
 //! node-slowdown:node=5,at=round4,factor=2
 //! ```
@@ -44,6 +49,9 @@ const FAULT_STREAM: u64 = 0xFA117;
 pub enum FaultEvent {
     /// The WAN egress of `cloud`'s current gateway node fails.
     GatewayDown { cloud: usize, at: usize },
+    /// The earliest-failed egress in `cloud` comes back; the gateway
+    /// role fails back to the restored node (transient-outage recovery).
+    GatewayRestore { cloud: usize, at: usize },
     /// Directed link `src → dst` keeps only `factor` of its bandwidth.
     LinkDegrade { src: usize, dst: usize, at: usize, factor: f64 },
     /// `node` computes `factor`× slower from round `at` on.
@@ -55,6 +63,7 @@ impl FaultEvent {
     pub fn at(&self) -> usize {
         match *self {
             FaultEvent::GatewayDown { at, .. }
+            | FaultEvent::GatewayRestore { at, .. }
             | FaultEvent::LinkDegrade { at, .. }
             | FaultEvent::NodeSlowdown { at, .. } => at,
         }
@@ -73,12 +82,13 @@ impl FaultEvent {
         // typo here (e.g. factor= on gateway-down) and must not be
         // silently dropped
         let allowed: &[&str] = match kind {
-            "gateway-down" => &["cloud", "at"],
+            "gateway-down" | "restore" => &["cloud", "at"],
             "link-degrade" => &["src", "dst", "at", "factor"],
             "node-slowdown" => &["node", "at", "factor"],
             other => bail!(
                 "fault spec {spec:?}: unknown kind {other:?} \
-                 (expected gateway-down | link-degrade | node-slowdown)"
+                 (expected gateway-down | restore | link-degrade | \
+                 node-slowdown)"
             ),
         };
         let mut cloud = None;
@@ -129,6 +139,10 @@ impl FaultEvent {
                 cloud: req("cloud", cloud)?,
                 at: req("at", at)?,
             },
+            "restore" => FaultEvent::GatewayRestore {
+                cloud: req("cloud", cloud)?,
+                at: req("at", at)?,
+            },
             "link-degrade" => FaultEvent::LinkDegrade {
                 src: req("src", src)?,
                 dst: req("dst", dst)?,
@@ -165,7 +179,7 @@ impl FaultEvent {
                     bail!("node-slowdown: factor must be finite and >= 1, got {factor}");
                 }
             }
-            FaultEvent::GatewayDown { .. } => {}
+            FaultEvent::GatewayDown { .. } | FaultEvent::GatewayRestore { .. } => {}
         }
         Ok(())
     }
@@ -177,6 +191,9 @@ impl fmt::Display for FaultEvent {
         match *self {
             FaultEvent::GatewayDown { cloud, at } => {
                 write!(f, "gateway-down:cloud={cloud},at={at}")
+            }
+            FaultEvent::GatewayRestore { cloud, at } => {
+                write!(f, "restore:cloud={cloud},at={at}")
             }
             FaultEvent::LinkDegrade { src, dst, at, factor } => {
                 write!(f, "link-degrade:src={src},dst={dst},at={at},factor={factor}")
@@ -330,12 +347,17 @@ mod tests {
             FaultEvent::parse(" node-slowdown:node=5, at=round4, factor=2 ").unwrap(),
             FaultEvent::NodeSlowdown { node: 5, at: 4, factor: 2.0 }
         );
+        assert_eq!(
+            FaultEvent::parse("restore:cloud=1,at=round5").unwrap(),
+            FaultEvent::GatewayRestore { cloud: 1, at: 5 }
+        );
     }
 
     #[test]
     fn display_round_trips() {
         for spec in [
             "gateway-down:cloud=2,at=7",
+            "restore:cloud=2,at=9",
             "link-degrade:src=1,dst=0,at=0,factor=0.5",
             "node-slowdown:node=3,at=9,factor=3",
         ] {
@@ -355,6 +377,8 @@ mod tests {
             "node-slowdown:node=1,at=2,factor=2,cloud=1",  // key of another kind
             "node-slowdown:node=1,at=2,at=5,factor=2",     // duplicate key
             "meteor-strike:at=1",                          // unknown kind
+            "restore:cloud=1",                             // missing at
+            "restore:cloud=1,at=2,factor=0.5",             // key of another kind
             "link-degrade:src=0,dst=1,at=1",               // missing factor
             "link-degrade:src=2,dst=2,at=1,factor=0.5",    // src == dst
             "link-degrade:src=0,dst=1,at=1,factor=0",      // zero factor

@@ -1,9 +1,10 @@
 //! Routed WAN topology between cloud worker nodes + the leader.
 //!
 //! Nodes 0..n-1 are the cluster's worker nodes; the aggregation leader is
-//! co-located with node 0 (the paper's setup has the global model hosted
-//! on one of the clouds). Links are asymmetric-capable (directed) and
-//! carry a [`LinkClass`]:
+//! co-located with one of them — the gateway of the placement decision's
+//! cloud (the paper's setup has the global model hosted on one of the
+//! clouds; see [`crate::cost::placement`]). Links are asymmetric-capable
+//! (directed) and carry a [`LinkClass`]:
 //!
 //! * [`LinkClass::IntraAz`] — nodes inside the same cloud (AZ-level
 //!   peers): fat, sub-millisecond.
@@ -49,6 +50,36 @@ pub enum LinkClass {
     IntraRegion,
     /// different regions (gateway-to-gateway) — the WAN bottleneck
     InterRegion,
+}
+
+impl LinkClass {
+    /// Every class, in [`LinkClass::index`] order (dense array keys for
+    /// the per-class ledgers and price books).
+    pub const ALL: [LinkClass; 3] =
+        [LinkClass::IntraAz, LinkClass::IntraRegion, LinkClass::InterRegion];
+
+    /// Dense index into `[T; 3]` tables keyed by class.
+    pub fn index(self) -> usize {
+        match self {
+            LinkClass::IntraAz => 0,
+            LinkClass::IntraRegion => 1,
+            LinkClass::InterRegion => 2,
+        }
+    }
+
+    /// Canonical name (price-book JSON, report tables).
+    pub fn name(self) -> &'static str {
+        match self {
+            LinkClass::IntraAz => "intra-az",
+            LinkClass::IntraRegion => "intra-region",
+            LinkClass::InterRegion => "inter-region",
+        }
+    }
+
+    /// Inverse of [`LinkClass::name`].
+    pub fn parse(s: &str) -> Option<LinkClass> {
+        LinkClass::ALL.into_iter().find(|c| c.name() == s)
+    }
 }
 
 /// Directed routed WAN with connection-warmth tracking and per-link
@@ -425,6 +456,25 @@ impl Wan {
         self.wire_bytes_class(LinkClass::InterRegion)
     }
 
+    /// Cumulative wire bytes split by (source cloud, link class) —
+    /// `out[cloud][class.index()]`. This is the measurement a cloud bill
+    /// is computed from: egress is billed to the cloud the bytes *leave*.
+    /// Sums are u64 (order-independent), so the split is identical no
+    /// matter how the ledger's hash map iterates.
+    pub fn wire_bytes_by_cloud_class(&self) -> Vec<[u64; 3]> {
+        let n_clouds =
+            self.cloud_of.iter().map(|&c| c + 1).max().unwrap_or(0);
+        let mut out = vec![[0u64; 3]; n_clouds];
+        for (&(s, d), &bytes) in &self.ledger {
+            let class = self
+                .classes
+                .get(&(s, d))
+                .expect("ledgered link has a recorded class");
+            out[self.cloud_of[s]][class.index()] += bytes;
+        }
+        out
+    }
+
     /// Zero the ledger (per-round accounting).
     pub fn reset_ledger(&mut self) {
         self.ledger.clear();
@@ -524,6 +574,32 @@ mod tests {
             w2.transfer(3, 2, 1_000_000, Protocol::Grpc, 8).unwrap()
         };
         assert!(st.time_s > intra_only.time_s);
+    }
+
+    #[test]
+    fn cloud_class_split_follows_the_ledger() {
+        let c = crate::cluster::ClusterSpec::paper_default_scaled(2);
+        let mut w = Wan::from_cluster(&c, 21);
+        // node 3 (cloud 1, gw 2) -> node 0: intra-az hop src cloud 1,
+        // inter-region hop src cloud 1
+        w.transfer(3, 0, 1_000_000, Protocol::Grpc, 8).unwrap();
+        // node 0 (cloud 0 gateway) -> node 4 (cloud 2 gateway):
+        // one inter-region hop src cloud 0
+        w.transfer(0, 4, 500_000, Protocol::Grpc, 8).unwrap();
+        let split = w.wire_bytes_by_cloud_class();
+        assert_eq!(split.len(), 3);
+        assert_eq!(split[1][LinkClass::IntraAz.index()], w.wire_bytes(3, 2));
+        assert_eq!(split[1][LinkClass::InterRegion.index()], w.wire_bytes(2, 0));
+        assert_eq!(split[0][LinkClass::InterRegion.index()], w.wire_bytes(0, 4));
+        assert_eq!(split[2], [0, 0, 0]);
+        // the split sums back to the flat per-class ledger
+        for class in LinkClass::ALL {
+            let by_cloud: u64 =
+                split.iter().map(|row| row[class.index()]).sum();
+            assert_eq!(by_cloud, w.wire_bytes_class(class));
+        }
+        assert_eq!(LinkClass::parse("inter-region"), Some(LinkClass::InterRegion));
+        assert_eq!(LinkClass::parse("x"), None);
     }
 
     #[test]

@@ -101,6 +101,57 @@ pub fn table3(results: &[&RunResult]) -> String {
     out
 }
 
+/// Render the dollar-cost breakdown table (the paper's "reduced training
+/// costs" claim, measured): compute vs egress per link class, per run.
+pub fn table_cost(results: &[&RunResult]) -> String {
+    use crate::netsim::LinkClass;
+    let mut out = String::new();
+    out.push_str("Table C: Training Cost Breakdown (USD, cumulative)\n");
+    out.push_str(&format!(
+        "{:<22} | {:>10} | {:>10} | {:>12} | {:>12} | {:>10}\n",
+        "Run", "Compute $", "Intra-AZ $", "Intra-Reg $", "Inter-Reg $", "Total $"
+    ));
+    out.push_str(&format!(
+        "{:-<22}-+-{:-<10}-+-{:-<10}-+-{:-<12}-+-{:-<12}-+-{:-<10}\n",
+        "", "", "", "", "", ""
+    ));
+    for r in results {
+        out.push_str(&format!(
+            "{:<22} | {:>10.2} | {:>10.4} | {:>12.4} | {:>12.4} | {:>10.2}\n",
+            r.name,
+            r.cost.compute_total_usd(),
+            r.cost.egress_class_usd(LinkClass::IntraAz),
+            r.cost.egress_class_usd(LinkClass::IntraRegion),
+            r.cost.egress_class_usd(LinkClass::InterRegion),
+            r.cost_usd(),
+        ));
+    }
+    out
+}
+
+/// Per-cloud cost detail for one run (who pays what).
+pub fn table_cost_clouds(r: &RunResult) -> String {
+    use crate::netsim::LinkClass;
+    let mut out = String::new();
+    out.push_str(&format!("Cost by cloud — {}\n", r.name));
+    out.push_str(&format!(
+        "{:<8} | {:>10} | {:>10} | {:>12} | {:>12} | {:>10}\n",
+        "Cloud", "Compute $", "Intra-AZ $", "Intra-Reg $", "Inter-Reg $", "Total $"
+    ));
+    for c in 0..r.cost.n_clouds() {
+        out.push_str(&format!(
+            "{:<8} | {:>10.2} | {:>10.4} | {:>12.4} | {:>12.4} | {:>10.2}\n",
+            format!("cloud{c}"),
+            r.cost.compute_usd[c],
+            r.cost.egress_usd[c][LinkClass::IntraAz.index()],
+            r.cost.egress_usd[c][LinkClass::IntraRegion.index()],
+            r.cost.egress_usd[c][LinkClass::InterRegion.index()],
+            r.cost.cloud_usd(c),
+        ));
+    }
+    out
+}
+
 /// Generic comparison table for ablation benches (figures).
 pub fn comparison(
     title: &str,
@@ -144,17 +195,23 @@ mod tests {
     use crate::metrics::RunResult;
 
     fn result(name: &str, gb: f64, hours: f64, acc: f64, loss: f32) -> RunResult {
+        let mut cost = crate::cost::CostBreakdown::zero(3);
+        cost.compute_usd = vec![8.0, 6.0, 4.0];
+        cost.egress_usd =
+            vec![[0.05, 0.0, 0.9], [0.05, 0.0, 1.2], [0.05, 0.0, 0.75]];
         RunResult {
             name: name.into(),
             history: vec![],
             rounds_run: 100,
             sim_secs: hours * 3600.0,
             wire_bytes: (gb * 1e9) as u64,
+            wire_bytes_class: [0, 0, (gb * 1e9) as u64],
             final_train_loss: loss,
             final_eval_loss: loss,
             final_eval_acc: acc,
             reached_target: true,
             host_compute_secs: 0.0,
+            cost,
         }
     }
 
@@ -184,6 +241,23 @@ mod tests {
         let t = table3(&[&r]);
         assert!(t.contains("90.2"));
         assert!(t.contains("0.290"));
+    }
+
+    #[test]
+    fn table_cost_formats_rows() {
+        let r1 = result("star", 4.5, 12.0, 0.875, 0.34);
+        let r2 = result("hier", 1.1, 11.8, 0.871, 0.35);
+        let t = table_cost(&[&r1, &r2]);
+        assert!(t.contains("Training Cost Breakdown"));
+        assert!(t.contains("star"));
+        assert!(t.contains("hier"));
+        // compute total 18.00 and grand total appear
+        assert!(t.contains("18.00"), "{t}");
+        assert!(t.contains("21.00"), "{t}");
+        let per_cloud = table_cost_clouds(&r1);
+        assert!(per_cloud.contains("cloud0"));
+        assert!(per_cloud.contains("cloud2"));
+        assert!(per_cloud.contains("8.00"));
     }
 
     #[test]

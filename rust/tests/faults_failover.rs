@@ -279,3 +279,75 @@ fn random_chaos_plan_runs_to_completion() {
     assert_eq!(r.rounds_run, 4);
     assert!(r.final_eval_loss.is_finite());
 }
+
+#[test]
+fn restore_fails_back_to_the_original_gateway() {
+    // transient outage: cloud 1's gateway (node 2 at scaled(2)) dies at
+    // round 1 — the standby (node 3) takes over — and its egress returns
+    // at round 3, so the gateway role must fail back to node 2
+    let cluster = ClusterSpec::paper_default_scaled(2);
+    let mk = || {
+        let mut c = base_cfg("hier-restore");
+        c.rounds = 5;
+        c.hierarchical = true;
+        c.faults = FaultPlan::new(vec![
+            FaultEvent::GatewayDown { cloud: 1, at: 1 },
+            FaultEvent::GatewayRestore { cloud: 1, at: 3 },
+        ]);
+        c
+    };
+    let (r, coord) = run_coord(mk(), cluster.clone());
+    assert_eq!(r.rounds_run, 5);
+    // failed back: the original gateway serves again and is eligible
+    assert_eq!(coord.cluster.gateway(1), 2);
+    assert!(coord.cluster.egress_ok(2));
+    assert!(r.final_eval_loss < r.history[0].train_loss);
+    // a transient outage is exactly as reproducible as a clean run
+    let (r2, c2) = run_coord(mk(), cluster.clone());
+    assert_eq!(c2.cluster.gateway(1), 2);
+    assert_eq!(r.wire_bytes, r2.wire_bytes);
+    assert_eq!(r.sim_secs.to_bits(), r2.sim_secs.to_bits());
+    assert_eq!(r.final_eval_loss.to_bits(), r2.final_eval_loss.to_bits());
+
+    // after the fail-back the cloud can survive a *second* outage —
+    // the standby budget was handed back (kill → restore → kill)
+    let mut again = base_cfg("hier-restore-rekill");
+    again.rounds = 5;
+    again.hierarchical = true;
+    again.faults = FaultPlan::new(vec![
+        FaultEvent::GatewayDown { cloud: 1, at: 1 },
+        FaultEvent::GatewayRestore { cloud: 1, at: 2 },
+        FaultEvent::GatewayDown { cloud: 1, at: 3 },
+    ]);
+    let (r3, c3) = run_coord(again, cluster.clone());
+    assert_eq!(r3.rounds_run, 5);
+    assert_eq!(c3.cluster.gateway(1), 3); // 2 died again, 3 re-elected
+
+    // flat schedulers fail back too (repair is eager at the boundary)
+    let mut flat = base_cfg("star-restore");
+    flat.rounds = 5;
+    flat.faults = FaultPlan::new(vec![
+        FaultEvent::GatewayDown { cloud: 1, at: 1 },
+        FaultEvent::GatewayRestore { cloud: 1, at: 3 },
+    ]);
+    let (rf, cf) = run_coord(flat, cluster);
+    assert_eq!(rf.rounds_run, 5);
+    assert_eq!(cf.cluster.gateway(1), 2);
+
+    // a restore with no prior gateway-down is rejected at build
+    let mut bad = base_cfg("restore-without-down");
+    bad.rounds = 5;
+    bad.hierarchical = true;
+    bad.faults =
+        FaultPlan::new(vec![FaultEvent::GatewayRestore { cloud: 1, at: 2 }]);
+    let backend = MockRuntime::new(0.4);
+    assert!(Coordinator::new(
+        bad,
+        ClusterSpec::paper_default_scaled(2),
+        &backend,
+        init_params(),
+        4,
+        16
+    )
+    .is_err());
+}

@@ -1,0 +1,134 @@
+//! `FaultPlan` spec-string surface (ISSUE 5 satellite): the parser's
+//! error cases — malformed kinds, keys of the wrong kind, duplicate
+//! keys — plus horizon validation and the config-JSON round-trip,
+//! exercised through the same public surfaces the CLI and config files
+//! use.
+
+use crossfed::config::ExperimentConfig;
+use crossfed::netsim::{FaultEvent, FaultPlan};
+
+#[test]
+fn every_kind_parses_and_round_trips_through_display() {
+    let specs = [
+        ("gateway-down:cloud=1,at=round3", FaultEvent::GatewayDown { cloud: 1, at: 3 }),
+        ("restore:cloud=1,at=5", FaultEvent::GatewayRestore { cloud: 1, at: 5 }),
+        (
+            "link-degrade:src=0,dst=4,at=2,factor=0.25",
+            FaultEvent::LinkDegrade { src: 0, dst: 4, at: 2, factor: 0.25 },
+        ),
+        (
+            "node-slowdown:node=5,at=round4,factor=2",
+            FaultEvent::NodeSlowdown { node: 5, at: 4, factor: 2.0 },
+        ),
+    ];
+    for (spec, want) in specs {
+        let ev = FaultEvent::parse(spec).unwrap();
+        assert_eq!(ev, want, "{spec}");
+        // canonical form re-parses to the same event
+        assert_eq!(FaultEvent::parse(&ev.to_string()).unwrap(), ev, "{spec}");
+    }
+    // whitespace tolerance and `;` lists
+    let plan = FaultPlan::parse(
+        " gateway-down:cloud=1,at=3 ; restore:cloud=1, at=round5 ;;",
+    )
+    .unwrap();
+    assert_eq!(plan.len(), 2);
+    assert_eq!(plan.events()[1], FaultEvent::GatewayRestore { cloud: 1, at: 5 });
+}
+
+#[test]
+fn malformed_kind_and_key_errors() {
+    let cases: &[(&str, &str)] = &[
+        // unknown kind
+        ("meteor:at=1", "unknown kind"),
+        ("gatewaydown:cloud=1,at=1", "unknown kind"),
+        // missing ':' separator entirely
+        ("gateway-down", "expected kind"),
+        // missing required keys
+        ("gateway-down:cloud=1", "missing at="),
+        ("restore:at=2", "missing cloud="),
+        ("link-degrade:src=0,dst=1,at=1", "missing factor"),
+        // keys that belong to another kind
+        ("gateway-down:cloud=1,at=1,factor=0.5", "not valid"),
+        ("restore:cloud=1,at=1,node=2", "not valid"),
+        ("node-slowdown:node=1,at=1,factor=2,dst=0", "not valid"),
+        // unknown key
+        ("gateway-down:cloud=1,at=1,zone=7", "not valid"),
+        // malformed pair / number
+        ("gateway-down:cloud,at=1", "bad pair"),
+        ("gateway-down:cloud=x,at=1", "bad cloud"),
+        ("link-degrade:src=0,dst=1,at=1,factor=fast", "bad factor"),
+    ];
+    for (spec, needle) in cases {
+        let err = FaultEvent::parse(spec).expect_err(spec).to_string();
+        assert!(err.contains(needle), "{spec}: {err:?} missing {needle:?}");
+    }
+}
+
+#[test]
+fn duplicate_keys_are_rejected() {
+    for spec in [
+        "gateway-down:cloud=1,cloud=2,at=1",
+        "gateway-down:cloud=1,at=1,at=2",
+        "restore:cloud=0,cloud=0,at=1",
+        "link-degrade:src=0,dst=1,dst=2,at=1,factor=0.5",
+        "node-slowdown:node=1,at=2,factor=2,factor=3",
+    ] {
+        let err = FaultEvent::parse(spec).expect_err(spec).to_string();
+        assert!(err.contains("duplicate key"), "{spec}: {err:?}");
+    }
+}
+
+#[test]
+fn out_of_horizon_events_fail_config_validation() {
+    // in-horizon passes
+    assert!(ExperimentConfig::from_json(
+        r#"{"rounds": 6, "faults": ["gateway-down:cloud=1,at=5"]}"#
+    )
+    .is_ok());
+    // at == rounds is already out (rounds are 0-based)
+    for (rounds, spec) in [
+        (6, "gateway-down:cloud=1,at=6"),
+        (4, "restore:cloud=0,at=9"),
+        (3, "node-slowdown:node=0,at=3,factor=2"),
+    ] {
+        let text = format!(r#"{{"rounds": {rounds}, "faults": ["{spec}"]}}"#);
+        let err = ExperimentConfig::from_json(&text)
+            .expect_err(spec)
+            .to_string();
+        assert!(err.contains("rounds"), "{spec}: {err:?}");
+    }
+}
+
+#[test]
+fn faults_json_round_trip_including_restore() {
+    let c = ExperimentConfig::from_json(
+        r#"{"rounds": 10, "faults": [
+            "gateway-down:cloud=1,at=round2",
+            "restore:cloud=1,at=6",
+            "link-degrade:src=0,dst=2,at=1,factor=0.5"
+        ]}"#,
+    )
+    .unwrap();
+    assert_eq!(c.faults.len(), 3);
+    // the plan is sorted by round
+    assert_eq!(
+        c.faults.events()[0],
+        FaultEvent::LinkDegrade { src: 0, dst: 2, at: 1, factor: 0.5 }
+    );
+    assert_eq!(c.faults.events()[2], FaultEvent::GatewayRestore { cloud: 1, at: 6 });
+    // serialize → parse → identical plan
+    let j = c.to_json().to_string();
+    assert!(j.contains("restore:cloud=1,at=6"), "{j}");
+    let back = ExperimentConfig::from_json(&j).unwrap();
+    assert_eq!(back.faults, c.faults);
+    // structural validation still runs through the JSON path
+    assert!(ExperimentConfig::from_json(
+        r#"{"rounds": 9, "faults": ["link-degrade:src=2,dst=2,at=1,factor=0.5"]}"#
+    )
+    .is_err());
+    assert!(ExperimentConfig::from_json(
+        r#"{"rounds": 9, "faults": ["node-slowdown:node=0,at=1,factor=0.5"]}"#
+    )
+    .is_err());
+}
