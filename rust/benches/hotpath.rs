@@ -250,12 +250,54 @@ fn cost_star_vs_hier_entry() -> Json {
     ])
 }
 
+/// WAL round-record durability: CRC + write + fsync of a snapshot-sized
+/// record — the per-round price of crash consistency (EXPERIMENTS.md
+/// §Durability).
+fn wal_append_entry() -> Json {
+    use crossfed::wal::{ByteWriter, WalFile, WalHeader};
+    let dir = std::env::temp_dir().join("crossfed-bench-wal");
+    std::fs::create_dir_all(&dir).ok();
+    let path = dir.join("bench.wal");
+    let header = WalHeader {
+        experiment: "bench".into(),
+        seed: 1,
+        n_workers: 3,
+        leaf_sizes: vec![N as u32],
+    };
+    let mut wal = WalFile::create(&path, &header).expect("wal create");
+    // a snapshot-sized payload: 1M f32 bit patterns, as wal_state writes
+    let xs = vecs(N, 11);
+    let mut w = ByteWriter::new();
+    for x in &xs {
+        w.put_u32(x.to_bits());
+    }
+    let payload = w.into_bytes();
+    let bytes = payload.len() as f64;
+    let mut b = BenchSet::new("wal append (4 MB snapshot record, fsync)");
+    b.measure_iters = 10;
+    b.bench_throughput("append+fsync", bytes, || wal.append(&payload).unwrap());
+    b.report();
+    let r = &b.results[0];
+    let entry = Json::obj(vec![
+        ("record_bytes", Json::num(bytes)),
+        ("append_fsync_gbps", Json::num((gbps(r) * 1e3).round() / 1e3)),
+        (
+            "append_fsync_ms",
+            Json::num((r.summary.mean * 1e3 * 1e3).round() / 1e3),
+        ),
+    ]);
+    drop(wal);
+    std::fs::remove_dir_all(&dir).ok();
+    entry
+}
+
 fn write_json(
     hw: usize,
     serial: &[BenchSet],
     parallel: &[BenchSet],
     hier_vs_star: Json,
     cost_star_vs_hier: Json,
+    wal_append: Json,
 ) {
     let mut entries = Vec::new();
     for (sb, pb) in serial.iter().zip(parallel) {
@@ -280,6 +322,7 @@ fn write_json(
         ("results", Json::arr(entries)),
         ("hier_vs_star", hier_vs_star),
         ("cost_star_vs_hier", cost_star_vs_hier),
+        ("wal_append", wal_append),
     ]);
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.json");
     match std::fs::write(path, doc.to_string_pretty() + "\n") {
@@ -296,7 +339,8 @@ fn main() {
     let parallel = kernel_pass(hw);
     let hier = hier_vs_star_entry();
     let cost = cost_star_vs_hier_entry();
-    write_json(hw, &serial, &parallel, hier, cost);
+    let wal = wal_append_entry();
+    write_json(hw, &serial, &parallel, hier, cost, wal);
 
     // --- netsim transfer computation (pure model, no payload copies)
     let mut b = BenchSet::new("netsim transfer ops");

@@ -76,6 +76,16 @@ pub trait Aggregator: Send {
     fn is_async(&self) -> bool {
         false
     }
+    /// Snapshot mutable aggregator state for the WAL. Default: stateless
+    /// (FedAvg / dynamic / async keep nothing between rounds).
+    fn wal_encode(&self, _w: &mut crate::wal::ByteWriter) {}
+    /// Restore state written by [`Aggregator::wal_encode`].
+    fn wal_decode(
+        &mut self,
+        _r: &mut crate::wal::ByteReader,
+    ) -> anyhow::Result<()> {
+        Ok(())
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -192,6 +202,18 @@ impl Aggregator for GradientAgg {
             .collect();
         agg.axpy_many(&terms);
         self.server_opt.step(global, &agg);
+    }
+
+    // the server optimizer carries momentum/Adam state across rounds
+    fn wal_encode(&self, w: &mut crate::wal::ByteWriter) {
+        self.server_opt.wal_encode(w);
+    }
+
+    fn wal_decode(
+        &mut self,
+        r: &mut crate::wal::ByteReader,
+    ) -> anyhow::Result<()> {
+        self.server_opt.wal_decode(r)
     }
 }
 

@@ -75,6 +75,20 @@ impl HierarchicalAggregator {
         self.kind
     }
 
+    /// Snapshot the server optimizer (the only cross-round state) for
+    /// the WAL.
+    pub fn wal_encode(&self, w: &mut crate::wal::ByteWriter) {
+        self.server_opt.wal_encode(w);
+    }
+
+    /// Restore state written by [`HierarchicalAggregator::wal_encode`].
+    pub fn wal_decode(
+        &mut self,
+        r: &mut crate::wal::ByteReader,
+    ) -> Result<()> {
+        self.server_opt.wal_decode(r)
+    }
+
     /// Per-member weights for the within-cloud mean, plus the partial's
     /// recombination weight on the absolute scale. Dynamic weights are
     /// min-loss-shifted (exact inside the cloud); the absolute scale's

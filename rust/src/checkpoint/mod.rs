@@ -32,10 +32,19 @@ fn paths(base: &Path) -> (PathBuf, PathBuf) {
 
 impl Checkpoint {
     /// Write `<base>.json` + `<base>.bin` atomically-ish (tmp + rename).
+    ///
+    /// The blob is renamed into place *before* the header: the header is
+    /// the commit point, so a crash between the two renames can only
+    /// leave a blob without a header (invisible to [`Checkpoint::load`],
+    /// which starts from the header) — never a header that points at a
+    /// missing blob.
     pub fn save(&self, base: &Path) -> Result<()> {
         let (jpath, bpath) = paths(base);
         if let Some(dir) = base.parent() {
-            std::fs::create_dir_all(dir).ok();
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("creating checkpoint dir {dir:?}"))?;
+            }
         }
         let header = Json::obj(vec![
             ("experiment", Json::str(self.experiment.clone())),
@@ -59,8 +68,10 @@ impl Checkpoint {
             .with_context(|| format!("writing {tmp_j:?}"))?;
         std::fs::write(&tmp_b, f32s_to_le(&self.params.to_flat()))
             .with_context(|| format!("writing {tmp_b:?}"))?;
-        std::fs::rename(&tmp_j, &jpath)?;
-        std::fs::rename(&tmp_b, &bpath)?;
+        std::fs::rename(&tmp_b, &bpath)
+            .with_context(|| format!("publishing blob {bpath:?}"))?;
+        std::fs::rename(&tmp_j, &jpath)
+            .with_context(|| format!("publishing header {jpath:?}"))?;
         Ok(())
     }
 
@@ -78,8 +89,17 @@ impl Checkpoint {
             .iter()
             .map(|v| v.as_usize().context("bad leaf size"))
             .collect::<Result<_>>()?;
-        let blob = std::fs::read(&bpath)
-            .with_context(|| format!("reading {bpath:?}"))?;
+        let blob = match std::fs::read(&bpath) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => bail!(
+                "checkpoint header {jpath:?} exists but its blob {bpath:?} \
+                 is missing (torn save) — no usable checkpoint"
+            ),
+            Err(e) => {
+                return Err(e)
+                    .with_context(|| format!("reading {bpath:?}"));
+            }
+        };
         let flat = le_to_f32s(&blob).context("ragged f32 blob")?;
         let total: usize = leaf_sizes.iter().sum();
         if flat.len() != total {
@@ -184,5 +204,27 @@ mod tests {
         let base = tmp_base("missing-nonexistent");
         let err = Checkpoint::load(&base).unwrap_err();
         assert!(format!("{err:#}").contains("reading"));
+    }
+
+    #[test]
+    fn header_without_blob_is_a_clean_torn_save_error() {
+        // the exact torn window save() now prevents: a header that points
+        // at a blob that never made it
+        let base = tmp_base("torn-pair");
+        sample().save(&base).unwrap();
+        std::fs::remove_file(base.with_extension("bin")).unwrap();
+        let err = Checkpoint::load(&base).unwrap_err().to_string();
+        assert!(err.contains("torn save"), "{err}");
+        std::fs::remove_file(base.with_extension("json")).ok();
+    }
+
+    #[test]
+    fn save_into_unwritable_dir_is_an_error_not_silent() {
+        // create_dir_all failures must surface (they used to be .ok()'d
+        // away, turning into a confusing "No such file" on the tmp write)
+        let base = std::path::Path::new(
+            "/proc/definitely/not/writable/crossfed-ckpt",
+        );
+        assert!(sample().save(base).is_err());
     }
 }

@@ -12,7 +12,7 @@ use crate::metrics::RunResult;
 use crate::model::{Manifest, ParamSet};
 use crate::partition::PartitionPlanner;
 use crate::report;
-use crate::runtime::{MockRuntime, StepRuntime};
+use crate::runtime::{ComputeBackend, MockRuntime, StepRuntime};
 use crate::util::bytes::{human_bytes, human_duration};
 
 const FLAGS: [&str; 4] = ["mock", "no-encrypt", "curve", "hierarchical"];
@@ -25,6 +25,7 @@ USAGE:
                  [--protocol P] [--compression C] [--partition S]
                  [--artifacts DIR] [--model-preset M] [--seed N]
                  [--save-checkpoint PATH] [--resume PATH]
+                 [--wal DIR] [--target-cost USD]
                  [--nodes-per-cloud N] [--hierarchical]
                  [--placement auto|fixed:N] [--price-book FILE]
                  [--fault SPEC[;SPEC...]] [--mock] [--curve]
@@ -48,10 +49,20 @@ preset's fault plan); `;`-separated specs, e.g.
   --fault \"gateway-down:cloud=1,at=round3;node-slowdown:node=2,at=5,factor=2\"
 Kinds: gateway-down (cloud, at), restore (cloud, at — the egress comes
 back and the gateway role fails back), link-degrade (src, dst, at,
-factor), node-slowdown (node, at, factor). gateway-down needs a standby
-member: run with --nodes-per-cloud >= 2. Preset paper-hier-faulty
-bundles a mid-run gateway kill with the hierarchical setup;
-paper-hier-cost bundles auto placement with the paper price book.";
+factor), node-slowdown (node, at, factor), coordinator-crash (at — the
+leader process dies at the start of round `at`; requires --wal).
+gateway-down needs a standby member: run with --nodes-per-cloud >= 2.
+Preset paper-hier-faulty bundles a mid-run gateway kill with the
+hierarchical setup; paper-hier-cost bundles auto placement with the
+paper price book.
+--wal DIR appends a CRC-checked, fsynced write-ahead record of the full
+coordinator state at every round boundary; after a crash (injected or
+real), `--resume DIR` replays it and continues bit-identically — the
+resumed run's losses, wire bytes and dollar bill match an uninterrupted
+run exactly. --resume with a file path restores a --save-checkpoint
+snapshot instead (coarser: params + RNG streams only).
+--target-cost stops the run at the first round boundary whose cumulative
+bill reaches the budget (the cost analogue of a loss target).";
 
 /// Entry point used by main.rs. Returns process exit code.
 pub fn run_cli(raw: &[String]) -> Result<i32> {
@@ -130,6 +141,15 @@ fn build_config(args: &Args) -> Result<ExperimentConfig> {
         cfg.faults = crate::netsim::FaultPlan::parse(f)
             .with_context(|| format!("--fault {f:?}"))?;
     }
+    if let Some(dir) = args.get("wal") {
+        cfg.wal_dir = Some(dir.to_string());
+    }
+    if let Some(budget) = args.get_f64("target-cost")? {
+        if !(budget > 0.0) {
+            bail!("--target-cost must be a positive dollar amount");
+        }
+        cfg.target_cost = Some(budget);
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -159,7 +179,7 @@ pub fn run_experiment(
     run_experiment_ckpt(cfg, cluster, mock, artifacts, model_preset, None, None)
 }
 
-/// `run_experiment` with optional checkpoint restore/save paths.
+/// `run_experiment` with optional restore/save paths.
 pub fn run_experiment_ckpt(
     cfg: &ExperimentConfig,
     cluster: ClusterSpec,
@@ -169,40 +189,70 @@ pub fn run_experiment_ckpt(
     resume: Option<&std::path::Path>,
     save: Option<&std::path::Path>,
 ) -> Result<RunResult> {
-    use crate::checkpoint::Checkpoint;
     if mock {
         let backend = MockRuntime::new(0.4);
         let init = ParamSet { leaves: vec![vec![2.0; 64], vec![-1.0; 32]] };
-        let mut coord =
-            Coordinator::new(cfg.clone(), cluster, &backend, init, 4, 16)?;
-        if let Some(path) = resume {
-            coord.restore(&Checkpoint::load(path)?)?;
-            log::info!("resumed from {path:?}");
-        }
-        let r = coord.run()?;
-        if let Some(path) = save {
-            coord.checkpoint().save(path)?;
-            log::info!("checkpoint saved to {path:?}");
-        }
-        Ok(r)
+        run_with_backend(cfg, cluster, &backend, init, 4, 16, resume, save)
     } else {
         let manifest = Manifest::load(artifacts, model_preset)?;
         let backend = StepRuntime::load(&manifest)?;
         let init = ParamSet::init(&manifest, cfg.seed);
         let (b, s) = (manifest.model.batch_size, manifest.model.seq_len);
-        let mut coord =
-            Coordinator::new(cfg.clone(), cluster, &backend, init, b, s)?;
-        if let Some(path) = resume {
-            coord.restore(&Checkpoint::load(path)?)?;
-            log::info!("resumed from {path:?}");
-        }
-        let r = coord.run()?;
-        if let Some(path) = save {
-            coord.checkpoint().save(path)?;
-            log::info!("checkpoint saved to {path:?}");
-        }
-        Ok(r)
+        run_with_backend(cfg, cluster, &backend, init, b, s, resume, save)
     }
+}
+
+/// Shared run harness: `--resume DIR` replays the write-ahead log
+/// (crash-consistent, bit-identical); `--resume FILE` restores a
+/// checkpoint snapshot; otherwise a fresh coordinator (which attaches a
+/// WAL itself when `cfg.wal_dir` is set).
+#[allow(clippy::too_many_arguments)]
+fn run_with_backend<B: ComputeBackend + ?Sized>(
+    cfg: &ExperimentConfig,
+    cluster: ClusterSpec,
+    backend: &B,
+    init: ParamSet,
+    batch_size: usize,
+    seq_len: usize,
+    resume: Option<&std::path::Path>,
+    save: Option<&std::path::Path>,
+) -> Result<RunResult> {
+    use crate::checkpoint::Checkpoint;
+    let mut coord = match resume {
+        Some(dir) if dir.is_dir() => {
+            let mut cfg = cfg.clone();
+            cfg.wal_dir = Some(dir.to_string_lossy().into_owned());
+            let coord = Coordinator::resume(
+                cfg, cluster, backend, init, batch_size, seq_len,
+            )?;
+            log::info!(
+                "resumed from WAL {dir:?} at round {}",
+                coord.rounds_completed()
+            );
+            coord
+        }
+        _ => {
+            let mut coord = Coordinator::new(
+                cfg.clone(),
+                cluster,
+                backend,
+                init,
+                batch_size,
+                seq_len,
+            )?;
+            if let Some(path) = resume {
+                coord.restore(&Checkpoint::load(path)?)?;
+                log::info!("resumed from checkpoint {path:?}");
+            }
+            coord
+        }
+    };
+    let r = coord.run()?;
+    if let Some(path) = save {
+        coord.checkpoint().save(path)?;
+        log::info!("checkpoint saved to {path:?}");
+    }
+    Ok(r)
 }
 
 fn print_result(r: &RunResult, curve: bool) {
@@ -485,6 +535,69 @@ mod tests {
         // wrong-shape resume (real model vs mock ckpt) must error cleanly
         std::fs::remove_file(base.with_extension("json")).ok();
         std::fs::remove_file(base.with_extension("bin")).ok();
+    }
+
+    #[test]
+    fn train_wal_crash_resume_cli() {
+        let dir = std::env::temp_dir().join("crossfed-cli-wal");
+        std::fs::remove_dir_all(&dir).ok();
+        let d = dir.to_str().unwrap();
+        // the injected crash aborts the run with the typed error...
+        let err = run_cli(&s(&[
+            "train", "--preset", "quick", "--rounds", "4", "--mock",
+            "--wal", d, "--fault", "coordinator-crash:at=2",
+        ]))
+        .unwrap_err();
+        assert!(
+            err.downcast_ref::<crate::coordinator::CoordinatorCrashed>()
+                .is_some(),
+            "{err:#}"
+        );
+        // ...and --resume DIR replays the WAL and finishes the run
+        assert_eq!(
+            run_cli(&s(&[
+                "train", "--preset", "quick", "--rounds", "4", "--mock",
+                "--resume", d,
+            ]))
+            .unwrap(),
+            0
+        );
+        // a crash fault without --wal is rejected at validation
+        let args = Args::parse(
+            &s(&["train", "--preset", "quick",
+                 "--fault", "coordinator-crash:at=2"]),
+            &FLAGS,
+        )
+        .unwrap();
+        assert!(build_config(&args).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn train_stops_at_cost_budget() {
+        let args = Args::parse(
+            &s(&["train", "--preset", "quick", "--rounds", "6", "--mock",
+                 "--target-cost", "0.0000001"]),
+            &FLAGS,
+        )
+        .unwrap();
+        let cfg = build_config(&args).unwrap();
+        assert_eq!(cfg.target_cost, Some(0.0000001));
+        let r = run_experiment_ckpt(
+            &cfg,
+            build_cluster(&args).unwrap(),
+            true,
+            std::path::Path::new("artifacts"),
+            "tiny",
+            None,
+            None,
+        )
+        .unwrap();
+        assert!(r.rounds_run < 6, "budget should stop the run early");
+        // non-positive budgets are a clean error
+        let args =
+            Args::parse(&s(&["train", "--target-cost", "0"]), &FLAGS).unwrap();
+        assert!(build_config(&args).is_err());
     }
 
     #[test]

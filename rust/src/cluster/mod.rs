@@ -267,6 +267,52 @@ impl ClusterSpec {
     pub fn cost(&self, hours: f64) -> f64 {
         self.platforms.iter().map(|p| p.cost_per_hour * hours).sum()
     }
+
+    /// Snapshot the election state (current gateways + failed-egress
+    /// flags) for the WAL. The platform list itself is config, rebuilt
+    /// from the run spec on resume.
+    pub fn wal_encode(&self, w: &mut crate::wal::ByteWriter) {
+        w.put_usize(self.gateways.len());
+        for &g in &self.gateways {
+            w.put_usize(g);
+        }
+        w.put_usize(self.egress_failed.len());
+        for &f in &self.egress_failed {
+            w.put_bool(f);
+        }
+    }
+
+    /// Restore state written by [`ClusterSpec::wal_encode`].
+    pub fn wal_decode(
+        &mut self,
+        r: &mut crate::wal::ByteReader,
+    ) -> anyhow::Result<()> {
+        let n_gw = r.get_usize()?;
+        anyhow::ensure!(
+            n_gw == self.gateways.len(),
+            "WAL cluster state has {n_gw} clouds, run has {}",
+            self.gateways.len()
+        );
+        for g in self.gateways.iter_mut() {
+            *g = r.get_usize()?;
+        }
+        let n_nodes = r.get_usize()?;
+        anyhow::ensure!(
+            n_nodes == self.egress_failed.len(),
+            "WAL cluster state has {n_nodes} nodes, run has {}",
+            self.egress_failed.len()
+        );
+        for f in self.egress_failed.iter_mut() {
+            *f = r.get_bool()?;
+        }
+        for (c, &g) in self.gateways.iter().enumerate() {
+            anyhow::ensure!(
+                g < self.platforms.len() && self.platforms[g].cloud == c,
+                "WAL gateway {g} is not a member of cloud {c}"
+            );
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]

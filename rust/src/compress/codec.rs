@@ -222,6 +222,18 @@ impl Compressor {
         Ok(())
     }
 
+    /// Stochastic-scheme RNG state (WAL snapshot; the scratch buffers are
+    /// derived per call and carry no state across rounds).
+    pub fn rng_state(&self) -> [u64; 4] {
+        self.rng.state_words()
+    }
+
+    /// Restore the RNG (WAL resume) so int8 rounding / RandK sampling
+    /// continue their exact streams.
+    pub fn restore_rng(&mut self, state: [u64; 4]) {
+        self.rng = Pcg64::from_state_words(state);
+    }
+
     /// Compression ratio estimate (payload bytes / dense bytes).
     pub fn ratio_estimate(&self, n: usize) -> f64 {
         if n == 0 {

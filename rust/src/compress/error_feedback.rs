@@ -100,6 +100,32 @@ impl ErrorFeedback {
         Ok(nbytes)
     }
 
+    /// Snapshot the residual memory for the WAL (exact f32 bit patterns;
+    /// the scratch buffers are recomputed every call).
+    pub fn wal_encode(&self, w: &mut crate::wal::ByteWriter) {
+        w.put_usize(self.residual.len());
+        for &x in &self.residual {
+            w.put_f32(x);
+        }
+    }
+
+    /// Restore state written by [`ErrorFeedback::wal_encode`].
+    pub fn wal_decode(
+        &mut self,
+        r: &mut crate::wal::ByteReader,
+    ) -> Result<()> {
+        let n = r.get_usize()?;
+        anyhow::ensure!(
+            n == self.residual.len(),
+            "WAL error-feedback residual has {n} elems, channel expects {}",
+            self.residual.len()
+        );
+        for x in self.residual.iter_mut() {
+            *x = r.get_f32()?;
+        }
+        Ok(())
+    }
+
     /// Current residual L2 norm (diagnostics).
     pub fn residual_norm(&self) -> f64 {
         self.residual

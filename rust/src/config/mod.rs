@@ -27,6 +27,9 @@ pub struct ExperimentConfig {
     /// stop early once eval loss <= target (Table 2's "training time to
     /// convergence" semantics)
     pub target_loss: Option<f64>,
+    /// stop early once the cumulative dollar bill crosses this budget
+    /// (budget-constrained training; mirrors `target_loss`)
+    pub target_cost: Option<f64>,
     pub eval_every: usize,
     /// eval batches per evaluation
     pub eval_batches: usize,
@@ -74,6 +77,12 @@ pub struct ExperimentConfig {
     /// `"price_book"` object; CLI `--price-book FILE`; see
     /// [`crate::cost::PriceBook`])
     pub price_book: PriceBook,
+    /// directory for the write-ahead log of round-boundary state (JSON
+    /// `"wal_dir"`; CLI `--wal DIR`). When set, every round is durably
+    /// logged before it is acknowledged and the run can be resumed
+    /// bit-identically after a crash (see [`crate::wal`]); required by
+    /// the `coordinator-crash` fault.
+    pub wal_dir: Option<String>,
 }
 
 impl Default for ExperimentConfig {
@@ -83,6 +92,7 @@ impl Default for ExperimentConfig {
             seed: 42,
             rounds: 100,
             target_loss: None,
+            target_cost: None,
             eval_every: 5,
             eval_batches: 4,
             aggregation: AggregationKind::FedAvg,
@@ -106,6 +116,7 @@ impl Default for ExperimentConfig {
             faults: FaultPlan::default(),
             placement: Placement::Fixed(0),
             price_book: PriceBook::paper_default(),
+            wal_dir: None,
         }
     }
 }
@@ -163,6 +174,11 @@ impl ExperimentConfig {
                 bail!("target_loss must be positive");
             }
         }
+        if let Some(t) = self.target_cost {
+            if !(t > 0.0) {
+                bail!("target_cost must be positive");
+            }
+        }
         self.price_book.validate().context("price_book")?;
         for ev in self.faults.events() {
             ev.validate()?;
@@ -172,6 +188,14 @@ impl ExperimentConfig {
                      rounds",
                     ev.at(),
                     self.rounds
+                );
+            }
+            if matches!(ev, crate::netsim::FaultEvent::CoordinatorCrash { .. })
+                && self.wal_dir.is_none()
+            {
+                bail!(
+                    "fault {ev} kills the coordinator, but no WAL is \
+                     configured to resume from — set wal_dir (CLI --wal DIR)"
                 );
             }
         }
@@ -189,6 +213,12 @@ impl ExperimentConfig {
         c.rounds = v.opt_usize("rounds", c.rounds);
         if let Some(t) = v.get("target_loss").and_then(Json::as_f64) {
             c.target_loss = Some(t);
+        }
+        if let Some(t) = v.get("target_cost").and_then(Json::as_f64) {
+            c.target_cost = Some(t);
+        }
+        if let Some(d) = v.get("wal_dir").and_then(Json::as_str) {
+            c.wal_dir = Some(d.to_string());
         }
         c.eval_every = v.opt_usize("eval_every", c.eval_every);
         c.eval_batches = v.opt_usize("eval_batches", c.eval_batches);
@@ -288,6 +318,16 @@ impl ExperimentConfig {
             (
                 "target_loss",
                 self.target_loss.map_or(Json::Null, Json::num),
+            ),
+            (
+                "target_cost",
+                self.target_cost.map_or(Json::Null, Json::num),
+            ),
+            (
+                "wal_dir",
+                self.wal_dir
+                    .as_ref()
+                    .map_or(Json::Null, |d| Json::str(d.clone())),
             ),
             ("eval_every", Json::num(self.eval_every as f64)),
             ("eval_batches", Json::num(self.eval_batches as f64)),
@@ -442,6 +482,49 @@ mod tests {
         assert!(ExperimentConfig::from_json(r#"{"placement": "west"}"#).is_err());
         assert!(ExperimentConfig::from_json(
             r#"{"price_book": {"egress": {"intra-az": []}}}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn target_cost_and_wal_dir_round_trip() {
+        let c = ExperimentConfig::from_json(
+            r#"{"target_cost": 125.5, "wal_dir": "/tmp/wals"}"#,
+        )
+        .unwrap();
+        assert_eq!(c.target_cost, Some(125.5));
+        assert_eq!(c.wal_dir.as_deref(), Some("/tmp/wals"));
+        let j = c.to_json().to_string();
+        assert!(j.contains("\"target_cost\":125.5"), "{j}");
+        assert!(j.contains("\"wal_dir\":\"/tmp/wals\""), "{j}");
+        let back = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(back.target_cost, c.target_cost);
+        assert_eq!(back.wal_dir, c.wal_dir);
+        // defaults: both off, serialized as null
+        let d = ExperimentConfig::default();
+        assert_eq!(d.target_cost, None);
+        assert_eq!(d.wal_dir, None);
+        assert!(ExperimentConfig::from_json(r#"{"target_cost": 0}"#).is_err());
+        assert!(ExperimentConfig::from_json(r#"{"target_cost": -3}"#).is_err());
+    }
+
+    #[test]
+    fn coordinator_crash_requires_wal() {
+        // a crash fault without a WAL would be unrecoverable — reject it
+        let bad = ExperimentConfig::from_json(
+            r#"{"rounds": 10, "faults": ["coordinator-crash:at=3"]}"#,
+        );
+        assert!(bad.unwrap_err().to_string().contains("wal"), "needs wal_dir");
+        let ok = ExperimentConfig::from_json(
+            r#"{"rounds": 10, "wal_dir": "/tmp/w",
+                "faults": ["coordinator-crash:at=3"]}"#,
+        )
+        .unwrap();
+        assert_eq!(ok.faults.len(), 1);
+        // crash at round 0 is structurally invalid (empty WAL)
+        assert!(ExperimentConfig::from_json(
+            r#"{"rounds": 10, "wal_dir": "/tmp/w",
+                "faults": ["coordinator-crash:at=0"]}"#
         )
         .is_err());
     }

@@ -65,6 +65,15 @@ pub struct Coordinator<'a, B: ComputeBackend + ?Sized> {
     pub(crate) history: Vec<RoundRecord>,
     pub(crate) batch_size: usize,
     pub(crate) seq_len: usize,
+    /// open write-ahead log (attached when `cfg.wal_dir` is set; see
+    /// [`crate::wal`] and `coordinator/wal_state.rs`)
+    pub(crate) wal: Option<crate::wal::WalFile>,
+    /// bit patterns of the global params as last written to the WAL —
+    /// the base of the next record's XOR delta
+    pub(crate) wal_prev_params: Option<Vec<Vec<u32>>>,
+    /// async-scheduler state decoded from the WAL, consumed by
+    /// `run_async` on its first iteration after a resume
+    pub(crate) async_resume: Option<crate::coordinator::wal_state::AsyncWalSnapshot>,
 }
 
 impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
@@ -134,6 +143,11 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
                         "fault {ev}: cluster has {} nodes",
                         cluster.n()
                     );
+                }
+                crate::netsim::FaultEvent::CoordinatorCrash { .. } => {
+                    // structural checks (at >= 1, wal_dir present) already
+                    // ran in FaultEvent::validate / cfg.validate; nothing
+                    // is cluster-shaped about a coordinator death
                 }
             }
         }
@@ -341,6 +355,9 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
             history: Vec::new(),
             batch_size,
             seq_len,
+            wal: None,
+            wal_prev_params: None,
+            async_resume: None,
         };
         // initial distribution: every platform receives its (encrypted)
         // shard once — "Ensure Data Security" phase of the Figure-2 cycle
@@ -395,6 +412,18 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
         }
         let due: Vec<crate::netsim::FaultEvent> =
             self.cfg.faults.due(round).copied().collect();
+        // crash-first: if the coordinator dies this round it dies *before*
+        // applying any other fault due at the same boundary — the WAL's
+        // last record predates all of them, so the resumed run replays
+        // them exactly once (resume strips the crash, then re-enters this
+        // method for the same round)
+        let crashes = |e: &crate::netsim::FaultEvent| {
+            matches!(e, crate::netsim::FaultEvent::CoordinatorCrash { .. })
+        };
+        if due.iter().any(crashes) {
+            log::warn!("round {round}: injecting fault coordinator-crash");
+            return Err(crate::coordinator::CoordinatorCrashed { round }.into());
+        }
         for ev in due {
             log::warn!("round {round}: injecting fault {ev}");
             match ev {
@@ -446,6 +475,9 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
                 } => {
                     self.workers[node].platform.compute_speed /= factor;
                 }
+                crate::netsim::FaultEvent::CoordinatorCrash { .. } => {
+                    unreachable!("crash events return before this loop")
+                }
             }
         }
         Ok(())
@@ -471,6 +503,46 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
             "round {round}: cloud {cloud} re-elected node {new_gw} as \
              gateway (was {old})"
         );
+        // re-score leader placement against the post-failover topology:
+        // gateways moved, so the expected egress bill per candidate cloud
+        // changed. Advisory only — migrating the global model mid-run
+        // would cost a full-model transfer and change routing history, so
+        // we log the new argmin instead of acting on it.
+        let traffic = cost::RoundTraffic {
+            update_bytes: (self.global.numel() * 4) as u64,
+            bcast_bytes: (self.global.numel() * 4) as u64,
+            hierarchical: self.cfg.hierarchical,
+        };
+        let scores = cost::placement::score_leaders(
+            &self.cluster,
+            &self.cfg.price_book,
+            &traffic,
+        );
+        if let Some(best) = scores.iter().min_by(|a, b| {
+            a.egress_usd_per_round
+                .partial_cmp(&b.egress_usd_per_round)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cloud.cmp(&b.cloud))
+        }) {
+            let current = self.cluster.cloud_of(self.leader);
+            if best.cloud == current {
+                log::info!(
+                    "round {round}: placement re-check after failover — \
+                     leader cloud {current} still the argmin \
+                     (${:.4}/round egress)",
+                    best.egress_usd_per_round
+                );
+            } else {
+                log::warn!(
+                    "round {round}: placement re-check after failover — \
+                     cloud {} is now the egress argmin (${:.4}/round) but \
+                     the leader stays on cloud {current}; mid-run \
+                     migration is not modeled",
+                    best.cloud,
+                    best.egress_usd_per_round
+                );
+            }
+        }
         Ok(new_gw)
     }
 
@@ -839,8 +911,18 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
         Ok(())
     }
 
-    /// Run the configured experiment to completion.
+    /// Run the configured experiment to completion. A fresh run with
+    /// `cfg.wal_dir` set starts a new write-ahead log (truncating any
+    /// previous log of the same experiment — resuming instead is
+    /// [`Coordinator::resume`]'s job, which arrives here with the log
+    /// already attached and history replayed).
     pub fn run(&mut self) -> Result<RunResult> {
+        if self.wal.is_none()
+            && self.cfg.wal_dir.is_some()
+            && self.history.is_empty()
+        {
+            self.attach_wal()?;
+        }
         if self.aggregator.is_async() {
             self.run_async()
         } else {

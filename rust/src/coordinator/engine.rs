@@ -94,6 +94,21 @@ impl<E> EventEngine<E> {
         Some(s.event)
     }
 
+    /// Queued events in pop order — `(at, event)` sorted by time then
+    /// insertion sequence. A WAL snapshot replays these through
+    /// [`EventEngine::at`] on a fresh engine positioned at the same
+    /// `now`: seq numbers are reassigned densely but the *relative*
+    /// order (and therefore every future pop) is preserved exactly.
+    pub fn queued(&self) -> Vec<(f64, &E)> {
+        let mut items: Vec<&Scheduled<E>> = self.heap.iter().collect();
+        items.sort_by(|a, b| {
+            a.at.partial_cmp(&b.at)
+                .expect("event times are finite (enforced in at())")
+                .then(a.seq.cmp(&b.seq))
+        });
+        items.into_iter().map(|s| (s.at, &s.event)).collect()
+    }
+
     #[allow(dead_code)] // diagnostics + tests
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()

@@ -14,5 +14,21 @@ mod engine;
 mod run_async;
 mod run_hier;
 mod run_sync;
+mod wal_state;
 
 pub use build::Coordinator;
+
+/// The typed abort raised when a [`crate::netsim::FaultEvent::CoordinatorCrash`]
+/// strikes: the coordinator "process" dies at the start of a round, before
+/// any other fault due that round is applied. The harness catches this
+/// (downcast through `anyhow`), drops the coordinator and calls
+/// [`Coordinator::resume`] against the same WAL directory — the resumed
+/// run replays bit-identically from the last durable round boundary.
+#[derive(Debug, thiserror::Error)]
+#[error(
+    "coordinator crashed at the start of round {round} (injected fault); \
+     resume from the write-ahead log"
+)]
+pub struct CoordinatorCrashed {
+    pub round: usize,
+}

@@ -30,40 +30,63 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
         let kind = self.cfg.aggregation.update_kind();
 
         // event payload: the worker whose local training completed
-        let mut engine: EventEngine<usize> = EventEngine::new(self.sim_secs);
+        let mut engine: EventEngine<usize>;
         // in-flight updates awaiting pickup, per worker:
         // (delta, mean loss, compute seconds spent producing it)
-        let mut pending: Vec<Option<(ParamSet, f32, f64)>> =
-            (0..n).map(|_| None).collect();
+        let mut pending: Vec<Option<(ParamSet, f32, f64)>>;
         // per-worker compute seconds applied within the current
         // pseudo-round (the async analogue of the sync schedulers'
         // platform_secs — feeds the heterogeneity diagnostics)
         let mut round_compute = vec![0.0f64; n];
+        let mut aggs: usize;
 
-        // faults due at the very first pseudo-round strike before any
-        // platform starts
-        self.apply_faults(0)?;
+        if let Some(snap) = self.async_resume.take() {
+            // WAL resume: rebuild the event queue and in-flight updates
+            // exactly as the crashed run logged them at the boundary.
+            // Replaying `queued` in pop order onto a fresh engine
+            // reassigns seq numbers densely but preserves the relative
+            // order, so every future pop matches the original run.
+            engine = EventEngine::new(snap.now);
+            for (at, worker) in snap.queued {
+                engine.at(at, worker);
+            }
+            pending = snap.pending;
+            aggs = self.history.len() * n;
+            if aggs < total_aggs {
+                // faults due at the pseudo-round the crash interrupted
+                // (the crash event itself was stripped on resume)
+                self.apply_faults(self.history.len())?;
+            }
+        } else {
+            engine = EventEngine::new(self.sim_secs);
+            pending = (0..n).map(|_| None).collect();
+            aggs = 0;
 
-        // kick off every platform at t = now, all from the same global
-        let t_base = self.sim_secs;
-        for w in 0..n {
-            self.workers[w].base_version = self.global_version;
-            let global = self.global.clone();
-            let r = self.workers[w].local_round(
-                self.backend,
-                &global,
-                kind,
-                self.cfg.local_steps,
-                self.cfg.local_lr,
-                self.cfg.base_step_secs,
-                &self.cfg.dp,
-            )?;
-            self.host_secs += r.host_secs;
-            engine.at(t_base + r.compute_secs, w);
-            pending[w] = Some((r.update, r.mean_loss, r.compute_secs));
+            // faults due at the very first pseudo-round strike before
+            // any platform starts
+            self.apply_faults(0)?;
+
+            // kick off every platform at t = now, all from the same
+            // global
+            let t_base = self.sim_secs;
+            for w in 0..n {
+                self.workers[w].base_version = self.global_version;
+                let global = self.global.clone();
+                let r = self.workers[w].local_round(
+                    self.backend,
+                    &global,
+                    kind,
+                    self.cfg.local_steps,
+                    self.cfg.local_lr,
+                    self.cfg.base_step_secs,
+                    &self.cfg.dp,
+                )?;
+                self.host_secs += r.host_secs;
+                engine.at(t_base + r.compute_secs, w);
+                pending[w] = Some((r.update, r.mean_loss, r.compute_secs));
+            }
         }
 
-        let mut aggs = 0usize;
         let mut train_loss_acc = 0.0f32;
         let mut reached = false;
         while aggs < total_aggs {
@@ -168,9 +191,27 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
                     cum_cost_usd: self.cost_ledger.cumulative().total_usd(),
                 });
                 train_loss_acc = 0.0;
+                // log the pseudo-round boundary durably before acting
+                // on it; at this point every worker has a pending update
+                // and round_compute/train_loss_acc are freshly zeroed,
+                // so the queue + pending capture the full live state
+                self.wal_append_async(&engine, &pending)?;
                 if let (Some(l), Some(t)) = (eval_loss, self.cfg.target_loss) {
                     if (l as f64) <= t {
                         reached = true;
+                        break;
+                    }
+                }
+                if let Some(budget) = self.cfg.target_cost {
+                    let cum = self
+                        .history
+                        .last()
+                        .map_or(0.0, |r| r.cum_cost_usd);
+                    if cum >= budget {
+                        log::info!(
+                            "pseudo-round {round}: cost budget {budget} \
+                             USD exhausted, stopping"
+                        );
                         break;
                     }
                 }

@@ -24,27 +24,43 @@ enum Ev {
 }
 
 impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
-    /// Run synchronous rounds until `cfg.rounds` or the loss target
-    /// (star or hierarchical per the config).
+    /// Run synchronous rounds until `cfg.rounds`, the loss target or the
+    /// cost budget (star or hierarchical per the config). On a WAL
+    /// resume the history is pre-populated and the loop picks up at the
+    /// first un-logged round.
     pub(crate) fn run_sync(&mut self) -> Result<RunResult> {
         let mut reached = false;
-        for round in 0..self.cfg.rounds {
+        for round in self.history.len()..self.cfg.rounds {
             self.apply_faults(round)?;
             let record = if self.hier.is_some() {
                 self.hier_round(round)?
             } else {
                 self.sync_round(round)?
             };
-            let hit_target = match (record.eval_loss, self.cfg.target_loss) {
+            let hit_loss = match (record.eval_loss, self.cfg.target_loss) {
                 (Some(l), Some(t)) => (l as f64) <= t,
                 _ => false,
             };
+            let hit_budget = match self.cfg.target_cost {
+                Some(budget) => record.cum_cost_usd >= budget,
+                None => false,
+            };
             self.history.push(record);
-            if hit_target {
+            // log the round before acting on it: a crash after the stop
+            // decision must resume into the identical decision
+            self.wal_append_sync()?;
+            if hit_loss {
                 reached = true;
                 log::info!(
                     "round {round}: eval loss target {:?} reached",
                     self.cfg.target_loss
+                );
+                break;
+            }
+            if hit_budget {
+                log::info!(
+                    "round {round}: cost budget {:?} USD exhausted, stopping",
+                    self.cfg.target_cost
                 );
                 break;
             }

@@ -1,0 +1,585 @@
+//! WAL round records: what the coordinator durably logs at every
+//! (pseudo-)round boundary, and how a crashed run restores it.
+//!
+//! One record holds *everything* round r+1 depends on: the global model
+//! (full snapshot every [`SNAPSHOT_EVERY`] records, XOR-of-bit-patterns
+//! delta in between), every RNG stream (worker straggle/DP noise, batch
+//! samplers, codec stochastic rounding, WAN jitter, eval sampler), the
+//! per-channel error-feedback scratch and AEAD sequence counters, the
+//! partition plan's generation + weights (the shards themselves are
+//! regenerated, not stored), the load monitor / granularity / privacy
+//! accountant positions, the gateway-election state, the cost ledger's
+//! volume-tier positions, and — in async mode — the event queue and the
+//! in-flight updates awaiting pickup.
+//!
+//! Restore order matters and is fixed by the encode order: the partition
+//! plan is regenerated first (so `set_shard` rebuilds each worker's token
+//! buffer), then worker RNGs are overlaid; the cluster's gateway state is
+//! restored before channels are retargeted at the elected gateways.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::cluster::ClusterSpec;
+use crate::config::ExperimentConfig;
+use crate::coordinator::build::Coordinator;
+use crate::coordinator::engine::EventEngine;
+use crate::cost::CostBreakdown;
+use crate::metrics::RoundRecord;
+use crate::model::ParamSet;
+use crate::runtime::ComputeBackend;
+use crate::wal::{
+    read_param_set, wal_path, write_param_set, ByteReader, ByteWriter,
+    WalFile, WalHeader, SNAPSHOT_EVERY,
+};
+
+/// Async-scheduler state decoded from the last WAL record: the event
+/// queue and the per-worker in-flight `(delta, mean_loss, compute_secs)`
+/// updates. `run_async` consumes this instead of re-kicking the workers.
+pub(crate) struct AsyncWalSnapshot {
+    /// simulated time the engine had advanced to at the boundary
+    pub now: f64,
+    /// queued `(at, worker)` completion events, in pop order
+    pub queued: Vec<(f64, usize)>,
+    /// per-worker update awaiting pickup
+    pub pending: Vec<Option<(ParamSet, f32, f64)>>,
+}
+
+/// The chain/counter prefix shared by every record (decoded for *all*
+/// records to rebuild the history and the parameter chain; the state
+/// section after it is only applied from the last record).
+struct WalPrefix {
+    record: RoundRecord,
+    global_version: u64,
+    sim_secs: f64,
+    wire_bytes: u64,
+    host_secs: f64,
+}
+
+impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
+    /// This run's WAL identity (checked against the file on resume).
+    fn wal_header(&self) -> WalHeader {
+        WalHeader {
+            experiment: self.cfg.name.clone(),
+            seed: self.cfg.seed,
+            n_workers: self.workers.len() as u32,
+            leaf_sizes: self
+                .global
+                .leaves
+                .iter()
+                .map(|l| l.len() as u32)
+                .collect(),
+        }
+    }
+
+    /// Start a fresh write-ahead log under `cfg.wal_dir` (truncating any
+    /// previous log of this experiment). `run()` calls this automatically
+    /// on a fresh run when `wal_dir` is configured.
+    pub fn attach_wal(&mut self) -> Result<()> {
+        let dir = self
+            .cfg
+            .wal_dir
+            .clone()
+            .context("attach_wal: cfg.wal_dir is not set")?;
+        let path = wal_path(Path::new(&dir), &self.cfg.name);
+        self.wal = Some(WalFile::create(&path, &self.wal_header())?);
+        self.wal_prev_params = None;
+        log::info!("write-ahead log started at {path:?}");
+        Ok(())
+    }
+
+    /// Bytes in the attached WAL so far (None when no WAL is attached).
+    pub fn wal_len_bytes(&self) -> Option<u64> {
+        self.wal.as_ref().map(|w| w.len_bytes())
+    }
+
+    /// Rounds whose records are already in the history (== the next
+    /// round index the run loop will execute).
+    pub fn rounds_completed(&self) -> usize {
+        self.history.len()
+    }
+
+    /// Durably log the just-pushed round record (sync/hier schedulers).
+    /// No-op without an attached WAL.
+    pub(crate) fn wal_append_sync(&mut self) -> Result<()> {
+        self.wal_append_with(None)
+    }
+
+    /// Durably log the just-pushed pseudo-round record plus the async
+    /// scheduler's live state (event queue + in-flight updates).
+    pub(crate) fn wal_append_async(
+        &mut self,
+        engine: &EventEngine<usize>,
+        pending: &[Option<(ParamSet, f32, f64)>],
+    ) -> Result<()> {
+        self.wal_append_with(Some((engine, pending)))
+    }
+
+    fn wal_append_with(
+        &mut self,
+        async_state: Option<(&EventEngine<usize>, &[Option<(ParamSet, f32, f64)>])>,
+    ) -> Result<()> {
+        if self.wal.is_none() {
+            return Ok(());
+        }
+        let idx = self
+            .history
+            .len()
+            .checked_sub(1)
+            .expect("wal_append after history.push");
+        let bits: Vec<Vec<u32>> = self
+            .global
+            .leaves
+            .iter()
+            .map(|l| l.iter().map(|x| x.to_bits()).collect())
+            .collect();
+
+        let mut w = ByteWriter::new();
+        w.put_u64(idx as u64);
+        // --- global params: periodic full snapshot, XOR delta between.
+        // XOR of bit patterns (never f32 arithmetic) keeps the chain
+        // bit-exact through NaNs, -0.0 and denormals alike.
+        let snapshot =
+            idx % SNAPSHOT_EVERY == 0 || self.wal_prev_params.is_none();
+        w.put_u8(if snapshot { 0 } else { 1 });
+        w.put_usize(bits.len());
+        if snapshot {
+            for leaf in &bits {
+                w.put_usize(leaf.len());
+                for &b in leaf {
+                    w.put_u32(b);
+                }
+            }
+        } else {
+            let prev = self.wal_prev_params.as_ref().expect("delta has a base");
+            for (leaf, pleaf) in bits.iter().zip(prev) {
+                debug_assert_eq!(leaf.len(), pleaf.len(), "model shape is fixed");
+                w.put_usize(leaf.len());
+                for (&b, &p) in leaf.iter().zip(pleaf) {
+                    w.put_u32(b ^ p);
+                }
+            }
+        }
+        // --- running counters
+        w.put_u64(self.global_version);
+        w.put_f64(self.sim_secs);
+        w.put_u64(self.wire_bytes);
+        w.put_f64(self.host_secs);
+        // --- the round's RoundRecord (round/sim/wire reuse the fields
+        // above; they are identical at the boundary by construction)
+        let rec = &self.history[idx];
+        w.put_f32(rec.train_loss);
+        w.put_opt_f32(rec.eval_loss);
+        w.put_opt_f64(rec.eval_acc);
+        w.put_usize(rec.platform_secs.len());
+        for &s in &rec.platform_secs {
+            w.put_f64(s);
+        }
+        w.put_f64(rec.epsilon);
+        w.put_u64(rec.partition_gen);
+        w.put_usize(rec.cost.compute_usd.len());
+        for &usd in &rec.cost.compute_usd {
+            w.put_f64(usd);
+        }
+        for row in &rec.cost.egress_usd {
+            for &usd in row {
+                w.put_f64(usd);
+            }
+        }
+        w.put_f64(rec.cum_cost_usd);
+        // --- partition plan: generation + the capacity weights that
+        // produced it — enough to regenerate the exact shards on resume
+        // (every strategy is deterministic in (seed, generation, weights))
+        w.put_u64(self.plan.generation);
+        w.put_usize(self.plan.weights.len());
+        for &c in &self.plan.weights {
+            w.put_f64(c);
+        }
+        self.monitor.wal_encode(&mut w);
+        w.put_usize(self.granularity.local_steps());
+        w.put_u64(self.accountant.rounds());
+        w.put_u64x4(self.eval_iter.rng_state());
+        for worker in &self.workers {
+            worker.wal_encode(&mut w);
+        }
+        self.cluster.wal_encode(&mut w);
+        for ch in &self.up {
+            ch.wal_encode(&mut w);
+        }
+        for ch in &self.down {
+            ch.wal_encode(&mut w);
+        }
+        w.put_usize(self.gw_up.len());
+        for ch in &self.gw_up {
+            ch.wal_encode(&mut w);
+        }
+        for ch in &self.gw_down {
+            ch.wal_encode(&mut w);
+        }
+        self.aggregator.wal_encode(&mut w);
+        w.put_bool(self.hier.is_some());
+        if let Some(h) = &self.hier {
+            h.wal_encode(&mut w);
+        }
+        self.wan.wal_encode(&mut w);
+        self.cost_ledger.wal_encode(&mut w);
+        // --- async scheduler extras
+        match async_state {
+            None => w.put_bool(false),
+            Some((engine, pending)) => {
+                w.put_bool(true);
+                w.put_f64(engine.now());
+                let queued = engine.queued();
+                w.put_usize(queued.len());
+                for (at, &worker) in queued {
+                    w.put_f64(at);
+                    w.put_u64(worker as u64);
+                }
+                debug_assert_eq!(pending.len(), self.workers.len());
+                for p in pending {
+                    match p {
+                        None => w.put_bool(false),
+                        Some((delta, loss, secs)) => {
+                            w.put_bool(true);
+                            write_param_set(&mut w, delta);
+                            w.put_f32(*loss);
+                            w.put_f64(*secs);
+                        }
+                    }
+                }
+            }
+        }
+
+        let payload = w.into_bytes();
+        self.wal
+            .as_mut()
+            .expect("checked above")
+            .append(&payload)
+            .with_context(|| format!("WAL append, round {idx}"))?;
+        self.wal_prev_params = Some(bits);
+        Ok(())
+    }
+
+    /// Decode one record's prefix: advance the parameter bit chain and
+    /// rebuild the round's `RoundRecord` + counters. Leaves `r` at the
+    /// start of the state section.
+    fn wal_read_prefix(
+        &self,
+        r: &mut ByteReader<'_>,
+        idx: usize,
+        bits: &mut Vec<Vec<u32>>,
+    ) -> Result<WalPrefix> {
+        let round = r.get_u64()? as usize;
+        anyhow::ensure!(
+            round == idx,
+            "WAL record {idx} claims round {round} (log out of order)"
+        );
+        let tag = r.get_u8()?;
+        let n_leaves = r.get_usize()?;
+        match tag {
+            0 => {
+                bits.clear();
+                for _ in 0..n_leaves {
+                    let n = r.get_usize()?;
+                    let mut leaf = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        leaf.push(r.get_u32()?);
+                    }
+                    bits.push(leaf);
+                }
+            }
+            1 => {
+                anyhow::ensure!(
+                    !bits.is_empty(),
+                    "WAL record {idx} is a delta with no prior snapshot"
+                );
+                anyhow::ensure!(
+                    n_leaves == bits.len(),
+                    "WAL record {idx}: delta has {n_leaves} leaves, \
+                     chain has {}",
+                    bits.len()
+                );
+                for leaf in bits.iter_mut() {
+                    let n = r.get_usize()?;
+                    anyhow::ensure!(
+                        n == leaf.len(),
+                        "WAL record {idx}: delta leaf size {n} != {}",
+                        leaf.len()
+                    );
+                    for b in leaf.iter_mut() {
+                        *b ^= r.get_u32()?;
+                    }
+                }
+            }
+            other => anyhow::bail!("WAL record {idx}: bad params tag {other}"),
+        }
+        let global_version = r.get_u64()?;
+        let sim_secs = r.get_f64()?;
+        let wire_bytes = r.get_u64()?;
+        let host_secs = r.get_f64()?;
+        let train_loss = r.get_f32()?;
+        let eval_loss = r.get_opt_f32()?;
+        let eval_acc = r.get_opt_f64()?;
+        let n_secs = r.get_usize()?;
+        anyhow::ensure!(
+            n_secs == self.workers.len(),
+            "WAL record {idx} covers {n_secs} platforms, run has {}",
+            self.workers.len()
+        );
+        let mut platform_secs = Vec::with_capacity(n_secs);
+        for _ in 0..n_secs {
+            platform_secs.push(r.get_f64()?);
+        }
+        let epsilon = r.get_f64()?;
+        let partition_gen = r.get_u64()?;
+        let n_clouds = r.get_usize()?;
+        anyhow::ensure!(
+            n_clouds == self.cluster.n_clouds(),
+            "WAL record {idx} bills {n_clouds} clouds, run has {}",
+            self.cluster.n_clouds()
+        );
+        let mut cost = CostBreakdown::zero(n_clouds);
+        for usd in cost.compute_usd.iter_mut() {
+            *usd = r.get_f64()?;
+        }
+        for row in cost.egress_usd.iter_mut() {
+            for usd in row.iter_mut() {
+                *usd = r.get_f64()?;
+            }
+        }
+        let cum_cost_usd = r.get_f64()?;
+        Ok(WalPrefix {
+            record: RoundRecord {
+                round,
+                sim_secs,
+                wire_bytes,
+                train_loss,
+                eval_loss,
+                eval_acc,
+                platform_secs,
+                epsilon,
+                partition_gen,
+                cost,
+                cum_cost_usd,
+            },
+            global_version,
+            sim_secs,
+            wire_bytes,
+            host_secs,
+        })
+    }
+
+    /// Apply the state section of the *last* WAL record (everything after
+    /// the prefix), in the order it was encoded.
+    fn wal_apply_state(&mut self, r: &mut ByteReader<'_>) -> Result<()> {
+        // --- partition plan: regenerate the stored generation's exact
+        // shards, then rebuild each worker's token buffer from them
+        let gen = r.get_u64()?;
+        let n_weights = r.get_usize()?;
+        anyhow::ensure!(
+            n_weights == self.workers.len(),
+            "WAL plan weights cover {n_weights} platforms, run has {}",
+            self.workers.len()
+        );
+        let mut weights = Vec::with_capacity(n_weights);
+        for _ in 0..n_weights {
+            weights.push(r.get_f64()?);
+        }
+        if gen != self.plan.generation {
+            self.planner.set_generation(gen);
+            self.plan = self.planner.plan(&self.corpus, &self.cluster, &weights);
+            for (w, shard) in self.plan.shards.iter().enumerate() {
+                self.workers[w].set_shard(
+                    &shard.tokens,
+                    self.batch_size,
+                    self.seq_len,
+                    self.cfg.seed ^ gen,
+                );
+            }
+        }
+        self.monitor.wal_decode(r)?;
+        self.granularity.restore_steps(r.get_usize()?);
+        self.accountant.restore_rounds(r.get_u64()?);
+        self.eval_iter.restore_rng(r.get_u64x4()?);
+        // worker RNG overlays come after set_shard rebuilt the samplers
+        for worker in &mut self.workers {
+            worker.wal_decode(r)?;
+        }
+        // gateway elections first, then point the channels at them; the
+        // channels' own codec/EF/seq state is overlaid afterwards
+        // (retargeting only moves the far end of the pipe)
+        self.cluster.wal_decode(r)?;
+        for c in 0..self.cluster.n_clouds() {
+            self.retarget_cloud_channels(c);
+        }
+        for ch in &mut self.up {
+            ch.wal_decode(r)?;
+        }
+        for ch in &mut self.down {
+            ch.wal_decode(r)?;
+        }
+        let n_gw = r.get_usize()?;
+        anyhow::ensure!(
+            n_gw == self.gw_up.len(),
+            "WAL has {n_gw} gateway channel pairs, run has {} \
+             (hierarchical config changed across resume?)",
+            self.gw_up.len()
+        );
+        for ch in &mut self.gw_up {
+            ch.wal_decode(r)?;
+        }
+        for ch in &mut self.gw_down {
+            ch.wal_decode(r)?;
+        }
+        self.aggregator.wal_decode(r)?;
+        let has_hier = r.get_bool()?;
+        anyhow::ensure!(
+            has_hier == self.hier.is_some(),
+            "hierarchical config changed across resume"
+        );
+        if let Some(h) = &mut self.hier {
+            h.wal_decode(r)?;
+        }
+        self.wan.wal_decode(r)?;
+        self.cost_ledger.wal_decode(r)?;
+        // --- async scheduler extras
+        let is_async = r.get_bool()?;
+        anyhow::ensure!(
+            is_async == self.aggregator.is_async(),
+            "aggregation mode changed across resume \
+             (WAL async={is_async}, config async={})",
+            self.aggregator.is_async()
+        );
+        if is_async {
+            let now = r.get_f64()?;
+            let nq = r.get_usize()?;
+            let mut queued = Vec::with_capacity(nq);
+            for _ in 0..nq {
+                let at = r.get_f64()?;
+                let worker = r.get_u64()? as usize;
+                anyhow::ensure!(
+                    worker < self.workers.len(),
+                    "WAL queued event names worker {worker}, run has {}",
+                    self.workers.len()
+                );
+                queued.push((at, worker));
+            }
+            let mut pending = Vec::with_capacity(self.workers.len());
+            for _ in 0..self.workers.len() {
+                pending.push(if r.get_bool()? {
+                    let delta = read_param_set(r)?;
+                    let loss = r.get_f32()?;
+                    let secs = r.get_f64()?;
+                    Some((delta, loss, secs))
+                } else {
+                    None
+                });
+            }
+            self.async_resume = Some(AsyncWalSnapshot { now, queued, pending });
+        }
+        Ok(())
+    }
+
+    /// Resume a crashed run from its write-ahead log, bit-identically:
+    /// open and validate the WAL under `cfg.wal_dir`, rebuild the
+    /// coordinator exactly as a fresh run would, replay every record to
+    /// reconstruct the history and the parameter chain, overlay the last
+    /// record's state, and strip the crash event that stopped the run so
+    /// it cannot fire again. The returned coordinator's `run()` continues
+    /// from the first un-logged round.
+    pub fn resume(
+        cfg: ExperimentConfig,
+        cluster: ClusterSpec,
+        backend: &'a B,
+        init: ParamSet,
+        batch_size: usize,
+        seq_len: usize,
+    ) -> Result<Coordinator<'a, B>> {
+        let dir = cfg
+            .wal_dir
+            .clone()
+            .context("resume: cfg.wal_dir is not set")?;
+        let path = wal_path(Path::new(&dir), &cfg.name);
+        let (wal, header, records) = WalFile::open(&path)?;
+        // identity + shape guard before building anything: a WAL must
+        // never silently restore into a different experiment or model
+        anyhow::ensure!(
+            header.experiment == cfg.name,
+            "WAL {path:?} belongs to experiment {:?}, not {:?}",
+            header.experiment,
+            cfg.name
+        );
+        anyhow::ensure!(
+            header.seed == cfg.seed,
+            "WAL {path:?} was written with seed {}, config has {}",
+            header.seed,
+            cfg.seed
+        );
+        anyhow::ensure!(
+            header.n_workers as usize == cluster.n(),
+            "WAL {path:?} covers {} workers, cluster has {}",
+            header.n_workers,
+            cluster.n()
+        );
+        let leaf_sizes: Vec<u32> =
+            init.leaves.iter().map(|l| l.len() as u32).collect();
+        anyhow::ensure!(
+            header.leaf_sizes == leaf_sizes,
+            "WAL {path:?} model shape {:?} does not match this model {:?}",
+            header.leaf_sizes,
+            leaf_sizes
+        );
+        anyhow::ensure!(
+            !records.is_empty(),
+            "WAL {path:?} has a header but no round records — nothing to \
+             resume (the run crashed before its first round boundary)"
+        );
+
+        let mut coord =
+            Coordinator::new(cfg, cluster, backend, init, batch_size, seq_len)?;
+        let mut bits: Vec<Vec<u32>> = Vec::new();
+        let last = records.len() - 1;
+        for (i, payload) in records.iter().enumerate() {
+            let mut r = ByteReader::new(payload);
+            let prefix = coord
+                .wal_read_prefix(&mut r, i, &mut bits)
+                .with_context(|| format!("WAL {path:?}: record {i}"))?;
+            if i == last {
+                coord.global_version = prefix.global_version;
+                coord.sim_secs = prefix.sim_secs;
+                coord.wire_bytes = prefix.wire_bytes;
+                coord.host_secs = prefix.host_secs;
+            }
+            coord.history.push(prefix.record);
+            if i == last {
+                coord
+                    .wal_apply_state(&mut r)
+                    .with_context(|| format!("WAL {path:?}: record {i} state"))?;
+                r.finish()
+                    .with_context(|| format!("WAL {path:?}: record {i}"))?;
+            }
+        }
+        coord.global = ParamSet {
+            leaves: bits
+                .iter()
+                .map(|l| l.iter().map(|&b| f32::from_bits(b)).collect())
+                .collect(),
+        };
+        coord.wal_prev_params = Some(bits);
+        let resume_round = coord.history.len();
+        // the crash that stopped the run (and any earlier one) must not
+        // fire again; every other past fault's *effect* was restored from
+        // the log, and faults due at resume_round replay normally
+        coord.cfg.faults.strip_crashes_through(resume_round);
+        coord.wal = Some(wal);
+        log::info!(
+            "resumed experiment {:?} at round {resume_round} from WAL \
+             {path:?} ({} records, {} bytes)",
+            coord.cfg.name,
+            records.len(),
+            coord.wal.as_ref().map(|w| w.len_bytes()).unwrap_or(0),
+        );
+        Ok(coord)
+    }
+}

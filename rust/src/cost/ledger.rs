@@ -201,6 +201,53 @@ impl CostLedger {
     pub fn cumulative(&self) -> &CostBreakdown {
         &self.cum
     }
+
+    /// Snapshot the accrual state for the WAL: the tier positions
+    /// (`billed_bytes`) and the cumulative dollars, as raw bit patterns.
+    /// The price book is config and is rebuilt on resume.
+    pub fn wal_encode(&self, w: &mut crate::wal::ByteWriter) {
+        w.put_usize(self.billed_bytes.len());
+        for row in &self.billed_bytes {
+            for &b in row {
+                w.put_u64(b);
+            }
+        }
+        for &usd in &self.cum.compute_usd {
+            w.put_f64(usd);
+        }
+        for row in &self.cum.egress_usd {
+            for &usd in row {
+                w.put_f64(usd);
+            }
+        }
+    }
+
+    /// Restore state written by [`CostLedger::wal_encode`].
+    pub fn wal_decode(
+        &mut self,
+        r: &mut crate::wal::ByteReader,
+    ) -> anyhow::Result<()> {
+        let n = r.get_usize()?;
+        anyhow::ensure!(
+            n == self.billed_bytes.len(),
+            "WAL cost ledger covers {n} clouds, run has {}",
+            self.billed_bytes.len()
+        );
+        for row in self.billed_bytes.iter_mut() {
+            for b in row.iter_mut() {
+                *b = r.get_u64()?;
+            }
+        }
+        for usd in self.cum.compute_usd.iter_mut() {
+            *usd = r.get_f64()?;
+        }
+        for row in self.cum.egress_usd.iter_mut() {
+            for usd in row.iter_mut() {
+                *usd = r.get_f64()?;
+            }
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -260,6 +307,48 @@ mod tests {
             (r1.egress_usd[0][2] + r2.egress_usd[0][2]).to_bits()
         );
         assert_eq!(cum.compute_usd[0].to_bits(), r1.compute_usd[0].to_bits());
+    }
+
+    #[test]
+    fn wal_roundtrip_restores_tier_positions() {
+        let cluster = crate::cluster::ClusterSpec::paper_default();
+        let mut book = PriceBook::uniform(3.6, 0.0);
+        book.egress[LinkClass::InterRegion.index()] =
+            crate::cost::EgressRate::tiered(&[(1.0, 0.10), (f64::INFINITY, 0.02)]);
+        let mut a = CostLedger::new(book.clone(), 3);
+        let w1 = vec![[0, 0, 600_000_000u64], [0; 3], [0; 3]];
+        a.observe(&w1, &[3600.0, 0.0, 0.0], &cluster);
+
+        // snapshot -> fresh ledger -> restore
+        let mut w = crate::wal::ByteWriter::new();
+        a.wal_encode(&mut w);
+        let bytes = w.into_bytes();
+        let mut b = CostLedger::new(book, 3);
+        let mut r = crate::wal::ByteReader::new(&bytes);
+        b.wal_decode(&mut r).unwrap();
+        r.finish().unwrap();
+
+        // both must bill the second window identically — including the
+        // tier boundary crossing that depends on billed_bytes
+        let w2 = vec![[0, 0, 1_400_000_000u64], [0; 3], [0; 3]];
+        let ra = a.observe(&w2, &[0.0; 3], &cluster);
+        let rb = b.observe(&w2, &[0.0; 3], &cluster);
+        assert_eq!(ra, rb);
+        assert_eq!(
+            a.cumulative().total_usd().to_bits(),
+            b.cumulative().total_usd().to_bits()
+        );
+    }
+
+    #[test]
+    fn wal_decode_rejects_cloud_count_mismatch() {
+        let a = CostLedger::new(PriceBook::paper_default(), 3);
+        let mut w = crate::wal::ByteWriter::new();
+        a.wal_encode(&mut w);
+        let bytes = w.into_bytes();
+        let mut b = CostLedger::new(PriceBook::paper_default(), 2);
+        let mut r = crate::wal::ByteReader::new(&bytes);
+        assert!(b.wal_decode(&mut r).is_err());
     }
 
     #[test]

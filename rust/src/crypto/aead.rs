@@ -92,6 +92,20 @@ impl TransportKey {
         mac.copy_from_slice(&mac_full);
         TransportKey { enc, mac, seq: 0 }
     }
+
+    /// Current nonce counter (WAL snapshot). Key material itself is
+    /// re-derived from the shared secret on resume; only the counter is
+    /// run state.
+    pub fn seq(&self) -> u64 {
+        self.seq
+    }
+
+    /// Restore the nonce counter (WAL resume). Replaying a run from round
+    /// r must continue the nonce sequence where the original left off —
+    /// both for nonce uniqueness and for bit-identical ciphertexts.
+    pub fn set_seq(&mut self, seq: u64) {
+        self.seq = seq;
+    }
 }
 
 /// An encrypted, authenticated payload.

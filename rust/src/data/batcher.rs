@@ -51,6 +51,17 @@ impl BatchIter {
     pub fn n_tokens(&self) -> usize {
         self.tokens.len()
     }
+
+    /// Sampler RNG state (WAL snapshot; the token buffer is regenerated
+    /// from the partition plan on resume).
+    pub fn rng_state(&self) -> [u64; 4] {
+        self.rng.state_words()
+    }
+
+    /// Restore the sampler RNG (WAL resume).
+    pub fn restore_rng(&mut self, state: [u64; 4]) {
+        self.rng = Pcg64::from_state_words(state);
+    }
 }
 
 #[cfg(test)]

@@ -31,3 +31,4 @@ pub mod report;
 pub mod cli;
 pub mod testkit;
 pub mod checkpoint;
+pub mod wal;

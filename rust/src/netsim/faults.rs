@@ -22,6 +22,13 @@
 //! * [`FaultEvent::NodeSlowdown`] — a worker node's compute degrades
 //!   (`factor` divides `compute_speed`; `2.0` = twice as slow), the
 //!   persistent-straggler counterpart of the transient straggler model.
+//! * [`FaultEvent::CoordinatorCrash`] — the coordinator process itself
+//!   dies at the start of round `at`. The run aborts with a typed
+//!   [`crate::coordinator::CoordinatorCrashed`] error; the harness drops
+//!   the coordinator and resumes from the write-ahead log
+//!   (`Coordinator::resume`), so recovery is a simulated, replayable,
+//!   priced scenario like any other fault. Requires `wal_dir` to be set
+//!   and `at >= 1` (a crash before round 0 leaves an empty log).
 //!
 //! Spec grammar (CLI `--fault`, config JSON `"faults": [...]`, events
 //! separated by `;`):
@@ -31,6 +38,7 @@
 //! restore:cloud=1,at=round5
 //! link-degrade:src=0,dst=4,at=2,factor=0.25
 //! node-slowdown:node=5,at=round4,factor=2
+//! coordinator-crash:at=round4
 //! ```
 
 use std::fmt;
@@ -56,6 +64,10 @@ pub enum FaultEvent {
     LinkDegrade { src: usize, dst: usize, at: usize, factor: f64 },
     /// `node` computes `factor`× slower from round `at` on.
     NodeSlowdown { node: usize, at: usize, factor: f64 },
+    /// The coordinator dies at the start of round `at`, before any other
+    /// fault due that round is applied (so resume replays them exactly
+    /// once). Recovery goes through the write-ahead log.
+    CoordinatorCrash { at: usize },
 }
 
 impl FaultEvent {
@@ -65,7 +77,8 @@ impl FaultEvent {
             FaultEvent::GatewayDown { at, .. }
             | FaultEvent::GatewayRestore { at, .. }
             | FaultEvent::LinkDegrade { at, .. }
-            | FaultEvent::NodeSlowdown { at, .. } => at,
+            | FaultEvent::NodeSlowdown { at, .. }
+            | FaultEvent::CoordinatorCrash { at } => at,
         }
     }
 
@@ -85,10 +98,11 @@ impl FaultEvent {
             "gateway-down" | "restore" => &["cloud", "at"],
             "link-degrade" => &["src", "dst", "at", "factor"],
             "node-slowdown" => &["node", "at", "factor"],
+            "coordinator-crash" => &["at"],
             other => bail!(
                 "fault spec {spec:?}: unknown kind {other:?} \
                  (expected gateway-down | restore | link-degrade | \
-                 node-slowdown)"
+                 node-slowdown | coordinator-crash)"
             ),
         };
         let mut cloud = None;
@@ -156,6 +170,9 @@ impl FaultEvent {
                 factor: factor
                     .with_context(|| format!("fault spec {spec:?}: missing factor="))?,
             },
+            "coordinator-crash" => {
+                FaultEvent::CoordinatorCrash { at: req("at", at)? }
+            }
             _ => unreachable!("kind checked above"),
         };
         ev.validate()?;
@@ -179,6 +196,14 @@ impl FaultEvent {
                     bail!("node-slowdown: factor must be finite and >= 1, got {factor}");
                 }
             }
+            FaultEvent::CoordinatorCrash { at } => {
+                if at == 0 {
+                    bail!(
+                        "coordinator-crash: at must be >= 1 (a crash before \
+                         round 0 leaves an empty WAL with nothing to resume)"
+                    );
+                }
+            }
             FaultEvent::GatewayDown { .. } | FaultEvent::GatewayRestore { .. } => {}
         }
         Ok(())
@@ -200,6 +225,9 @@ impl fmt::Display for FaultEvent {
             }
             FaultEvent::NodeSlowdown { node, at, factor } => {
                 write!(f, "node-slowdown:node={node},at={at},factor={factor}")
+            }
+            FaultEvent::CoordinatorCrash { at } => {
+                write!(f, "coordinator-crash:at={at}")
             }
         }
     }
@@ -327,6 +355,15 @@ impl FaultPlan {
     pub fn due(&self, round: usize) -> impl Iterator<Item = &FaultEvent> {
         self.events.iter().filter(move |e| e.at() == round)
     }
+
+    /// Drop coordinator-crash events striking at or before `round` (WAL
+    /// resume: the crash that stopped the run must not fire again; every
+    /// other past fault's *effect* is restored from the log).
+    pub fn strip_crashes_through(&mut self, round: usize) {
+        self.events.retain(|e| {
+            !matches!(e, FaultEvent::CoordinatorCrash { at } if *at <= round)
+        });
+    }
 }
 
 #[cfg(test)]
@@ -351,6 +388,10 @@ mod tests {
             FaultEvent::parse("restore:cloud=1,at=round5").unwrap(),
             FaultEvent::GatewayRestore { cloud: 1, at: 5 }
         );
+        assert_eq!(
+            FaultEvent::parse("coordinator-crash:at=round4").unwrap(),
+            FaultEvent::CoordinatorCrash { at: 4 }
+        );
     }
 
     #[test]
@@ -360,6 +401,7 @@ mod tests {
             "restore:cloud=2,at=9",
             "link-degrade:src=1,dst=0,at=0,factor=0.5",
             "node-slowdown:node=3,at=9,factor=3",
+            "coordinator-crash:at=2",
         ] {
             let ev = FaultEvent::parse(spec).unwrap();
             assert_eq!(FaultEvent::parse(&ev.to_string()).unwrap(), ev);
@@ -383,6 +425,9 @@ mod tests {
             "link-degrade:src=2,dst=2,at=1,factor=0.5",    // src == dst
             "link-degrade:src=0,dst=1,at=1,factor=0",      // zero factor
             "node-slowdown:node=0,at=1,factor=0.5",        // speedup
+            "coordinator-crash:at=0",                      // empty-WAL crash
+            "coordinator-crash:at=1,cloud=0",              // key of another kind
+            "coordinator-crash:cloud=1",                   // missing at
         ] {
             assert!(FaultEvent::parse(bad).is_err(), "{bad:?} should fail");
         }
@@ -400,6 +445,22 @@ mod tests {
         assert_eq!(p.due(3).count(), 0);
         assert!(FaultPlan::parse("").unwrap().is_empty());
         assert!(FaultPlan::parse("  ;  ").unwrap().is_empty());
+    }
+
+    #[test]
+    fn strip_crashes_removes_only_fired_crashes() {
+        let mut p = FaultPlan::parse(
+            "coordinator-crash:at=2; node-slowdown:node=0,at=2,factor=2; \
+             coordinator-crash:at=6",
+        )
+        .unwrap();
+        p.strip_crashes_through(2);
+        assert_eq!(p.len(), 2);
+        assert_eq!(p.due(2).count(), 1); // the slowdown survives
+        assert_eq!(
+            p.events()[1],
+            FaultEvent::CoordinatorCrash { at: 6 } // a later crash survives
+        );
     }
 
     #[test]

@@ -479,6 +479,135 @@ impl Wan {
     pub fn reset_ledger(&mut self) {
         self.ledger.clear();
     }
+
+    /// Snapshot the WAN's run state for the WAL: links (fault-mutable —
+    /// degradations and re-elections change them), class map, gateways,
+    /// down flags, warm connections, the byte ledger and the noise RNG.
+    /// Maps are walked in sorted key order so the encoding is identical
+    /// across runs regardless of hash-map iteration order.
+    pub fn wal_encode(&self, w: &mut crate::wal::ByteWriter) {
+        let mut links: Vec<(&(usize, usize), &Link)> = self.links.iter().collect();
+        links.sort_by_key(|(&k, _)| k);
+        w.put_usize(links.len());
+        for (&(s, d), l) in links {
+            w.put_usize(s);
+            w.put_usize(d);
+            w.put_f64(l.bandwidth_bps);
+            w.put_f64(l.rtt_s);
+            w.put_f64(l.jitter);
+            w.put_f64(l.loss_rate);
+        }
+        let mut classes: Vec<(&(usize, usize), &LinkClass)> =
+            self.classes.iter().collect();
+        classes.sort_by_key(|(&k, _)| k);
+        w.put_usize(classes.len());
+        for (&(s, d), c) in classes {
+            w.put_usize(s);
+            w.put_usize(d);
+            w.put_u8(c.index() as u8);
+        }
+        w.put_usize(self.gateways.len());
+        for &g in &self.gateways {
+            w.put_usize(g);
+        }
+        w.put_usize(self.down.len());
+        for &f in &self.down {
+            w.put_bool(f);
+        }
+        let mut warm: Vec<(usize, usize, Protocol)> = self
+            .warm
+            .iter()
+            .filter(|(_, &v)| v)
+            .map(|(&k, _)| k)
+            .collect();
+        warm.sort_by_key(|&(s, d, p)| (s, d, p.name()));
+        w.put_usize(warm.len());
+        for (s, d, p) in warm {
+            w.put_usize(s);
+            w.put_usize(d);
+            w.put_str(p.name());
+        }
+        let mut ledger: Vec<(&(usize, usize), &u64)> = self.ledger.iter().collect();
+        ledger.sort_by_key(|(&k, _)| k);
+        w.put_usize(ledger.len());
+        for (&(s, d), &bytes) in ledger {
+            w.put_usize(s);
+            w.put_usize(d);
+            w.put_u64(bytes);
+        }
+        w.put_u64x4(self.rng.state_words());
+    }
+
+    /// Restore state written by [`Wan::wal_encode`]. `self` must have
+    /// been built from the same cluster spec (same node/cloud layout).
+    pub fn wal_decode(
+        &mut self,
+        r: &mut crate::wal::ByteReader,
+    ) -> anyhow::Result<()> {
+        use anyhow::ensure;
+        let n_links = r.get_usize()?;
+        self.links.clear();
+        for _ in 0..n_links {
+            let s = r.get_usize()?;
+            let d = r.get_usize()?;
+            ensure!(s < self.n && d < self.n, "WAL WAN link ({s},{d}) out of range");
+            let link = Link {
+                bandwidth_bps: r.get_f64()?,
+                rtt_s: r.get_f64()?,
+                jitter: r.get_f64()?,
+                loss_rate: r.get_f64()?,
+            };
+            self.links.insert((s, d), link);
+        }
+        let n_classes = r.get_usize()?;
+        self.classes.clear();
+        for _ in 0..n_classes {
+            let s = r.get_usize()?;
+            let d = r.get_usize()?;
+            let idx = r.get_u8()? as usize;
+            ensure!(idx < LinkClass::ALL.len(), "WAL bad link class {idx}");
+            self.classes.insert((s, d), LinkClass::ALL[idx]);
+        }
+        let n_gw = r.get_usize()?;
+        ensure!(
+            n_gw == self.gateways.len(),
+            "WAL WAN has {n_gw} clouds, run has {}",
+            self.gateways.len()
+        );
+        for g in self.gateways.iter_mut() {
+            *g = r.get_usize()?;
+        }
+        let n_down = r.get_usize()?;
+        ensure!(
+            n_down == self.down.len(),
+            "WAL WAN has {n_down} nodes, run has {}",
+            self.down.len()
+        );
+        for f in self.down.iter_mut() {
+            *f = r.get_bool()?;
+        }
+        let n_warm = r.get_usize()?;
+        self.warm.clear();
+        for _ in 0..n_warm {
+            let s = r.get_usize()?;
+            let d = r.get_usize()?;
+            let name = r.get_str()?;
+            let p = Protocol::parse(&name).ok_or_else(|| {
+                anyhow::anyhow!("WAL unknown protocol {name:?}")
+            })?;
+            self.warm.insert((s, d, p), true);
+        }
+        let n_ledger = r.get_usize()?;
+        self.ledger.clear();
+        for _ in 0..n_ledger {
+            let s = r.get_usize()?;
+            let d = r.get_usize()?;
+            let bytes = r.get_u64()?;
+            self.ledger.insert((s, d), bytes);
+        }
+        self.rng = Pcg64::from_state_words(r.get_u64x4()?);
+        Ok(())
+    }
 }
 
 #[cfg(test)]

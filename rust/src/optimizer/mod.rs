@@ -107,6 +107,34 @@ impl Optimizer {
     pub fn steps_taken(&self) -> u64 {
         self.t
     }
+
+    /// Snapshot the mutable state (step count + moment buffers) for the
+    /// WAL. `kind`/`lr` are configuration and not part of the snapshot.
+    pub fn wal_encode(&self, w: &mut crate::wal::ByteWriter) {
+        w.put_u64(self.t);
+        for s in [&self.m, &self.v] {
+            match s {
+                None => w.put_u8(0),
+                Some(p) => {
+                    w.put_u8(1);
+                    crate::wal::write_param_set(w, p);
+                }
+            }
+        }
+    }
+
+    /// Restore state written by [`Optimizer::wal_encode`].
+    pub fn wal_decode(
+        &mut self,
+        r: &mut crate::wal::ByteReader,
+    ) -> anyhow::Result<()> {
+        self.t = r.get_u64()?;
+        self.m =
+            if r.get_u8()? == 1 { Some(crate::wal::read_param_set(r)?) } else { None };
+        self.v =
+            if r.get_u8()? == 1 { Some(crate::wal::read_param_set(r)?) } else { None };
+        Ok(())
+    }
 }
 
 #[cfg(test)]

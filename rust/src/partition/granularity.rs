@@ -37,6 +37,12 @@ impl GranularityController {
         self.steps
     }
 
+    /// Restore the adapted step count (WAL resume).
+    pub fn restore_steps(&mut self, steps: usize) {
+        assert!(steps >= self.min_steps && steps <= self.max_steps);
+        self.steps = steps;
+    }
+
     /// Update from one round's measured compute and communication time.
     /// Returns the (possibly changed) step count.
     pub fn observe(&mut self, compute_secs: f64, comm_secs: f64) -> usize {

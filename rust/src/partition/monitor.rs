@@ -87,6 +87,34 @@ impl LoadMonitor {
     pub fn times_fired(&self) -> u64 {
         self.fired_total
     }
+
+    /// Snapshot the mutable trigger state for the WAL (thresholds and
+    /// patience are configuration, not state).
+    pub fn wal_encode(&self, w: &mut crate::wal::ByteWriter) {
+        w.put_u64(self.ewmas.len() as u64);
+        for e in &self.ewmas {
+            w.put_opt_f64(e.get());
+        }
+        w.put_u64(self.skewed_streak as u64);
+        w.put_u64(self.cooldown_left as u64);
+        w.put_u64(self.fired_total);
+    }
+
+    /// Restore state written by [`LoadMonitor::wal_encode`].
+    pub fn wal_decode(
+        &mut self,
+        r: &mut crate::wal::ByteReader,
+    ) -> anyhow::Result<()> {
+        let n = r.get_usize()?;
+        anyhow::ensure!(n == self.ewmas.len(), "load-monitor width mismatch");
+        for e in &mut self.ewmas {
+            e.set_value(r.get_opt_f64()?);
+        }
+        self.skewed_streak = r.get_usize()?;
+        self.cooldown_left = r.get_usize()?;
+        self.fired_total = r.get_u64()?;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

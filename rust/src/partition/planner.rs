@@ -80,6 +80,18 @@ impl PartitionPlanner {
         self.strategy
     }
 
+    /// Next plan generation this planner will emit.
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Rewind/advance the generation counter (WAL resume: re-issuing
+    /// `plan()` at a stored generation regenerates that exact plan, since
+    /// every strategy is deterministic in (seed, generation, weights)).
+    pub fn set_generation(&mut self, generation: u64) {
+        self.generation = generation;
+    }
+
     /// Build the initial plan. `capacities` are the platforms' relative
     /// speeds (used by Dynamic; ignored by Fixed).
     pub fn plan(

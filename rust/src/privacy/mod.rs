@@ -89,6 +89,11 @@ impl PrivacyAccountant {
         self.rounds
     }
 
+    /// Restore the accounted round count (WAL resume).
+    pub fn restore_rounds(&mut self, rounds: u64) {
+        self.rounds = rounds;
+    }
+
     /// Per-round ε at the configured δ.
     pub fn epsilon_per_round(&self) -> f64 {
         if !self.cfg.enabled() {

@@ -207,6 +207,61 @@ impl Channel {
             .context("loopback decode has wrong size")
     }
 
+    /// Snapshot this channel's run state for the WAL: the codec RNG, the
+    /// error-feedback residual, the sender nonce counter and the byte
+    /// accumulator. Identity (src/dst/protocol/streams) and key material
+    /// are config — the channel is rebuilt from the run spec on resume
+    /// and this state overlaid.
+    pub fn wal_encode(&self, w: &mut crate::wal::ByteWriter) {
+        w.put_u64x4(self.compressor.rng_state());
+        match &self.error_feedback {
+            None => w.put_bool(false),
+            Some(ef) => {
+                w.put_bool(true);
+                ef.wal_encode(w);
+            }
+        }
+        match &self.send_key {
+            None => w.put_bool(false),
+            Some(key) => {
+                w.put_bool(true);
+                w.put_u64(key.seq());
+            }
+        }
+        w.put_u64(self.payload_bytes);
+    }
+
+    /// Restore state written by [`Channel::wal_encode`].
+    pub fn wal_decode(
+        &mut self,
+        r: &mut crate::wal::ByteReader,
+    ) -> Result<()> {
+        self.compressor.restore_rng(r.get_u64x4()?);
+        let had_ef = r.get_bool()?;
+        anyhow::ensure!(
+            had_ef == self.error_feedback.is_some(),
+            "WAL channel {}->{}: error-feedback config changed across resume",
+            self.src,
+            self.dst
+        );
+        if let Some(ef) = &mut self.error_feedback {
+            ef.wal_decode(r)?;
+        }
+        let had_key = r.get_bool()?;
+        anyhow::ensure!(
+            had_key == self.send_key.is_some(),
+            "WAL channel {}->{}: encryption config changed across resume",
+            self.src,
+            self.dst
+        );
+        if had_key {
+            let seq = r.get_u64()?;
+            self.send_key.as_mut().expect("checked").set_seq(seq);
+        }
+        self.payload_bytes = r.get_u64()?;
+        Ok(())
+    }
+
     /// Broadcast raw params (dense f32, optionally sealed) to a worker.
     /// Returns (secs, wire_bytes).
     pub fn send_params(

@@ -42,6 +42,26 @@ impl Pcg64 {
         rng
     }
 
+    /// Raw generator state as four words (WAL snapshots): the 128-bit
+    /// state and increment, each split high/low.
+    pub fn state_words(&self) -> [u64; 4] {
+        [
+            (self.state >> 64) as u64,
+            self.state as u64,
+            (self.inc >> 64) as u64,
+            self.inc as u64,
+        ]
+    }
+
+    /// Rebuild a generator from [`Pcg64::state_words`] — continues the
+    /// stream exactly where the snapshot left off.
+    pub fn from_state_words(w: [u64; 4]) -> Pcg64 {
+        Pcg64 {
+            state: ((w[0] as u128) << 64) | w[1] as u128,
+            inc: ((w[2] as u128) << 64) | w[3] as u128,
+        }
+    }
+
     /// Derive an independent child generator (for per-worker streams).
     pub fn child(&mut self, tag: u64) -> Pcg64 {
         let seed = self.next_u64() ^ tag.wrapping_mul(0x9e37_79b9_7f4a_7c15);
@@ -212,6 +232,18 @@ mod tests {
         let mut a = Pcg64::new(42, 1);
         let mut b = Pcg64::new(42, 1);
         for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn state_words_roundtrip_continues_stream() {
+        let mut a = Pcg64::new(99, 5);
+        for _ in 0..17 {
+            a.next_u64();
+        }
+        let mut b = Pcg64::from_state_words(a.state_words());
+        for _ in 0..50 {
             assert_eq!(a.next_u64(), b.next_u64());
         }
     }

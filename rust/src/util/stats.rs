@@ -66,6 +66,12 @@ impl Ewma {
     pub fn get(&self) -> Option<f64> {
         self.value
     }
+
+    /// Overwrite the smoothed value (WAL state restore; `alpha` is fixed
+    /// at construction and not part of the snapshot).
+    pub fn set_value(&mut self, value: Option<f64>) {
+        self.value = value;
+    }
 }
 
 /// Percentile over a sample (linear interpolation, like numpy's default).

@@ -1,0 +1,655 @@
+//! Write-ahead log of round-boundary coordinator state.
+//!
+//! The coordinator appends one checksummed record per (pseudo-)round so a
+//! crashed run can resume *bit-identically*: every RNG stream, channel
+//! scratch buffer, cost accrual and queued event is restored exactly as it
+//! was, and `tests/wal_resume.rs` pins `resumed == uninterrupted` as a
+//! bit-equality over loss history, wire-byte splits and dollar streams.
+//!
+//! ## File format
+//!
+//! A WAL file is a sequence of records, each framed as
+//!
+//! ```text
+//! [len: u64 LE] [crc32(payload): u32 LE] [payload: len bytes]
+//! ```
+//!
+//! Record 0 is the header (magic, format version, experiment identity);
+//! record k (k >= 1) is the state snapshot taken at the end of round k-1.
+//! Appends are `write` + `sync_data` before the round is acknowledged, so
+//! a crash can only ever lose or tear the *last* record.
+//!
+//! On open, a record that stops at end-of-file — short frame, short
+//! payload, or checksum mismatch on bytes that run exactly to EOF — is a
+//! torn tail: it is truncated away and the log stays usable. A checksum
+//! mismatch anywhere *before* EOF means the file was corrupted in place
+//! and is a hard error, not a truncation.
+//!
+//! Everything is serialized as little-endian bit patterns (floats via
+//! `to_bits`) — never through decimal formatting — so state survives the
+//! round-trip bit-for-bit. The CRC32 (IEEE, reflected 0xEDB88320) is
+//! hand-rolled to keep the crate dependency-free.
+
+use std::fs::{File, OpenOptions};
+use std::io::{Read as _, Seek, SeekFrom, Write as _};
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::ParamSet;
+
+/// First bytes of every WAL file.
+pub const WAL_MAGIC: &[u8; 8] = b"XFEDWAL1";
+/// Bump on any incompatible record-layout change.
+pub const WAL_VERSION: u32 = 1;
+/// Frame overhead per record (length + checksum).
+pub const FRAME_BYTES: u64 = 12;
+/// A full parameter snapshot is written every this many records; records
+/// in between carry XOR deltas against the previous record's parameters.
+pub const SNAPSHOT_EVERY: usize = 8;
+
+// ---------------------------------------------------------------------------
+// CRC32 (IEEE 802.3, reflected polynomial 0xEDB88320)
+// ---------------------------------------------------------------------------
+
+const fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = crc32_table();
+
+/// CRC32 of `data` (same polynomial as zip/zlib/ethernet).
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+// ---------------------------------------------------------------------------
+// Byte codec
+// ---------------------------------------------------------------------------
+
+/// Little-endian binary encoder for WAL payloads.
+#[derive(Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub fn new() -> ByteWriter {
+        ByteWriter { buf: Vec::new() }
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_bool(&mut self, v: bool) {
+        self.buf.push(v as u8);
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_usize(&mut self, v: usize) {
+        self.put_u64(v as u64);
+    }
+
+    /// f32 as its exact bit pattern.
+    pub fn put_f32(&mut self, v: f32) {
+        self.put_u32(v.to_bits());
+    }
+
+    /// f64 as its exact bit pattern.
+    pub fn put_f64(&mut self, v: f64) {
+        self.put_u64(v.to_bits());
+    }
+
+    pub fn put_bytes(&mut self, v: &[u8]) {
+        self.put_u64(v.len() as u64);
+        self.buf.extend_from_slice(v);
+    }
+
+    pub fn put_str(&mut self, v: &str) {
+        self.put_bytes(v.as_bytes());
+    }
+
+    pub fn put_opt_f32(&mut self, v: Option<f32>) {
+        match v {
+            None => self.put_u8(0),
+            Some(x) => {
+                self.put_u8(1);
+                self.put_f32(x);
+            }
+        }
+    }
+
+    pub fn put_opt_f64(&mut self, v: Option<f64>) {
+        match v {
+            None => self.put_u8(0),
+            Some(x) => {
+                self.put_u8(1);
+                self.put_f64(x);
+            }
+        }
+    }
+
+    /// Four words — the shape of a [`crate::util::rng::Pcg64`] snapshot.
+    pub fn put_u64x4(&mut self, v: [u64; 4]) {
+        for x in v {
+            self.put_u64(x);
+        }
+    }
+}
+
+/// Little-endian binary decoder. Every read is bounds-checked; running
+/// past the end is a clean error, never a panic.
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> ByteReader<'a> {
+        ByteReader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            bail!(
+                "wal: truncated payload (wanted {n} bytes at offset {}, {} left)",
+                self.pos,
+                self.remaining()
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn get_u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn get_bool(&mut self) -> Result<bool> {
+        match self.get_u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            other => bail!("wal: bad bool byte {other}"),
+        }
+    }
+
+    pub fn get_u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn get_u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn get_usize(&mut self) -> Result<usize> {
+        Ok(self.get_u64()? as usize)
+    }
+
+    pub fn get_f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.get_u32()?))
+    }
+
+    pub fn get_f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.get_u64()?))
+    }
+
+    pub fn get_bytes(&mut self) -> Result<&'a [u8]> {
+        let n = self.get_u64()? as usize;
+        self.take(n)
+    }
+
+    pub fn get_str(&mut self) -> Result<String> {
+        let b = self.get_bytes()?;
+        Ok(std::str::from_utf8(b).context("wal: non-utf8 string")?.to_string())
+    }
+
+    pub fn get_opt_f32(&mut self) -> Result<Option<f32>> {
+        Ok(if self.get_u8()? == 1 { Some(self.get_f32()?) } else { None })
+    }
+
+    pub fn get_opt_f64(&mut self) -> Result<Option<f64>> {
+        Ok(if self.get_u8()? == 1 { Some(self.get_f64()?) } else { None })
+    }
+
+    pub fn get_u64x4(&mut self) -> Result<[u64; 4]> {
+        Ok([self.get_u64()?, self.get_u64()?, self.get_u64()?, self.get_u64()?])
+    }
+
+    /// All payload bytes must be consumed — leftover bytes mean the
+    /// decoder and encoder disagree about the layout.
+    pub fn finish(self) -> Result<()> {
+        if self.remaining() != 0 {
+            bail!("wal: {} undecoded bytes at end of payload", self.remaining());
+        }
+        Ok(())
+    }
+}
+
+/// Encode a [`ParamSet`] (leaf-structured f32 bit patterns).
+pub fn write_param_set(w: &mut ByteWriter, p: &ParamSet) {
+    w.put_u64(p.leaves.len() as u64);
+    for leaf in &p.leaves {
+        w.put_u64(leaf.len() as u64);
+        for &x in leaf {
+            w.put_f32(x);
+        }
+    }
+}
+
+/// Decode a [`ParamSet`] written by [`write_param_set`].
+pub fn read_param_set(r: &mut ByteReader) -> Result<ParamSet> {
+    let n_leaves = r.get_usize()?;
+    let mut leaves = Vec::with_capacity(n_leaves);
+    for _ in 0..n_leaves {
+        let n = r.get_usize()?;
+        let mut leaf = Vec::with_capacity(n);
+        for _ in 0..n {
+            leaf.push(r.get_f32()?);
+        }
+        leaves.push(leaf);
+    }
+    Ok(ParamSet { leaves })
+}
+
+// ---------------------------------------------------------------------------
+// WAL file
+// ---------------------------------------------------------------------------
+
+/// Identity of the run a WAL belongs to — checked on resume so a log can
+/// never silently restore into a different experiment or model shape.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WalHeader {
+    pub experiment: String,
+    pub seed: u64,
+    pub n_workers: u32,
+    /// per-leaf element counts of the model (shape guard)
+    pub leaf_sizes: Vec<u32>,
+}
+
+impl WalHeader {
+    fn encode(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.buf.extend_from_slice(WAL_MAGIC);
+        w.put_u32(WAL_VERSION);
+        w.put_str(&self.experiment);
+        w.put_u64(self.seed);
+        w.put_u32(self.n_workers);
+        w.put_u64(self.leaf_sizes.len() as u64);
+        for &s in &self.leaf_sizes {
+            w.put_u32(s);
+        }
+        w.into_bytes()
+    }
+
+    fn decode(payload: &[u8]) -> Result<WalHeader> {
+        let mut r = ByteReader::new(payload);
+        let magic = r.take(8).context("wal header")?;
+        if magic != WAL_MAGIC {
+            bail!("wal: bad magic {magic:?} (not a crossfed WAL)");
+        }
+        let version = r.get_u32()?;
+        if version != WAL_VERSION {
+            bail!("wal: format version {version} (this build reads {WAL_VERSION})");
+        }
+        let experiment = r.get_str()?;
+        let seed = r.get_u64()?;
+        let n_workers = r.get_u32()?;
+        let n_leaves = r.get_usize()?;
+        let mut leaf_sizes = Vec::with_capacity(n_leaves);
+        for _ in 0..n_leaves {
+            leaf_sizes.push(r.get_u32()?);
+        }
+        r.finish()?;
+        Ok(WalHeader { experiment, seed, n_workers, leaf_sizes })
+    }
+}
+
+/// An open write-ahead log. Appends are durable (fsync'd) before they
+/// return — a record that `append` acknowledged survives any crash.
+pub struct WalFile {
+    file: File,
+    path: PathBuf,
+    /// records written so far, header included
+    records: u64,
+    bytes: u64,
+}
+
+impl WalFile {
+    /// Create (truncate) a WAL at `path` and durably write the header.
+    pub fn create(path: &Path, header: &WalHeader) -> Result<WalFile> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("creating WAL dir {dir:?}"))?;
+            }
+        }
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(path)
+            .with_context(|| format!("creating WAL {path:?}"))?;
+        let mut wal =
+            WalFile { file, path: path.to_path_buf(), records: 0, bytes: 0 };
+        wal.append(&header.encode())?;
+        Ok(wal)
+    }
+
+    /// Open an existing WAL: validate the header, collect every intact
+    /// round record, truncate a torn tail if the last append was cut
+    /// short. Returns the log positioned for further appends.
+    pub fn open(path: &Path) -> Result<(WalFile, WalHeader, Vec<Vec<u8>>)> {
+        let mut file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .open(path)
+            .with_context(|| format!("opening WAL {path:?}"))?;
+        let mut raw = Vec::new();
+        file.read_to_end(&mut raw).with_context(|| format!("reading WAL {path:?}"))?;
+
+        let mut payloads: Vec<Vec<u8>> = Vec::new();
+        let mut offset = 0usize;
+        let mut valid_len = 0usize;
+        while offset < raw.len() {
+            let rest = raw.len() - offset;
+            if rest < FRAME_BYTES as usize {
+                break; // torn frame at the tail
+            }
+            let len = u64::from_le_bytes(raw[offset..offset + 8].try_into().unwrap())
+                as usize;
+            let crc =
+                u32::from_le_bytes(raw[offset + 8..offset + 12].try_into().unwrap());
+            let body_start = offset + FRAME_BYTES as usize;
+            if raw.len() - body_start < len {
+                break; // torn payload at the tail
+            }
+            let payload = &raw[body_start..body_start + len];
+            if crc32(payload) != crc {
+                if body_start + len == raw.len() {
+                    break; // torn tail: record runs to EOF with a bad sum
+                }
+                bail!(
+                    "wal {path:?}: corrupt record {} (checksum mismatch not at \
+                     end of file)",
+                    payloads.len()
+                );
+            }
+            payloads.push(payload.to_vec());
+            offset = body_start + len;
+            valid_len = offset;
+        }
+        if valid_len < raw.len() {
+            log::warn!(
+                "wal {path:?}: truncating torn tail ({} bytes after record {})",
+                raw.len() - valid_len,
+                payloads.len().saturating_sub(1),
+            );
+            file.set_len(valid_len as u64).context("truncating torn WAL tail")?;
+            file.sync_data().context("syncing truncated WAL")?;
+        }
+        if payloads.is_empty() {
+            bail!("wal {path:?}: no intact header record");
+        }
+        let header = WalHeader::decode(&payloads.remove(0))
+            .with_context(|| format!("wal {path:?}: header"))?;
+        file.seek(SeekFrom::End(0)).context("seeking WAL end")?;
+        let records = 1 + payloads.len() as u64;
+        let wal = WalFile {
+            file,
+            path: path.to_path_buf(),
+            records,
+            bytes: valid_len as u64,
+        };
+        Ok((wal, header, payloads))
+    }
+
+    /// Append one record and fsync before returning — the ack side of
+    /// write-ahead logging: the caller may only act on (or report) a
+    /// round once its record is durable.
+    pub fn append(&mut self, payload: &[u8]) -> Result<()> {
+        let mut frame = Vec::with_capacity(FRAME_BYTES as usize + payload.len());
+        frame.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        frame.extend_from_slice(&crc32(payload).to_le_bytes());
+        frame.extend_from_slice(payload);
+        self.file
+            .write_all(&frame)
+            .with_context(|| format!("appending to WAL {:?}", self.path))?;
+        self.file
+            .sync_data()
+            .with_context(|| format!("fsyncing WAL {:?}", self.path))?;
+        self.records += 1;
+        self.bytes += frame.len() as u64;
+        Ok(())
+    }
+
+    /// Records written (header included).
+    pub fn records(&self) -> u64 {
+        self.records
+    }
+
+    /// Bytes in the log (frames included).
+    pub fn len_bytes(&self) -> u64 {
+        self.bytes
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+/// The WAL file for experiment `name` inside `dir`.
+pub fn wal_path(dir: &Path, name: &str) -> PathBuf {
+    dir.join(format!("{name}.wal"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn header() -> WalHeader {
+        WalHeader {
+            experiment: "unit".into(),
+            seed: 7,
+            n_workers: 3,
+            leaf_sizes: vec![64, 32],
+        }
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("crossfed-wal-{name}-{}", std::process::id()))
+    }
+
+    #[test]
+    fn crc32_reference_vector() {
+        // the classic check value for this polynomial
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_ne!(crc32(b"a"), crc32(b"b"));
+    }
+
+    #[test]
+    fn codec_roundtrip_bit_exact() {
+        let mut w = ByteWriter::new();
+        w.put_u8(9);
+        w.put_bool(true);
+        w.put_u32(u32::MAX - 1);
+        w.put_u64(1 << 63);
+        w.put_f32(-0.0);
+        w.put_f64(f64::from_bits(0x7ff8_0000_0000_0001)); // a specific NaN
+        w.put_str("héllo");
+        w.put_opt_f32(None);
+        w.put_opt_f64(Some(1.5e-300));
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        assert_eq!(r.get_u8().unwrap(), 9);
+        assert!(r.get_bool().unwrap());
+        assert_eq!(r.get_u32().unwrap(), u32::MAX - 1);
+        assert_eq!(r.get_u64().unwrap(), 1 << 63);
+        assert_eq!(r.get_f32().unwrap().to_bits(), (-0.0f32).to_bits());
+        assert_eq!(r.get_f64().unwrap().to_bits(), 0x7ff8_0000_0000_0001);
+        assert_eq!(r.get_str().unwrap(), "héllo");
+        assert_eq!(r.get_opt_f32().unwrap(), None);
+        assert_eq!(r.get_opt_f64().unwrap(), Some(1.5e-300));
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn reader_rejects_overrun_and_leftovers() {
+        let mut w = ByteWriter::new();
+        w.put_u32(5);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        assert!(r.get_u64().is_err()); // only 4 bytes there
+        let mut r2 = ByteReader::new(&bytes);
+        r2.get_u8().unwrap();
+        assert!(r2.finish().is_err()); // 3 bytes left over
+    }
+
+    #[test]
+    fn param_set_roundtrip() {
+        let p = ParamSet { leaves: vec![vec![1.5, -2.25, 0.0], vec![], vec![9.0]] };
+        let mut w = ByteWriter::new();
+        write_param_set(&mut w, &p);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        assert_eq!(read_param_set(&mut r).unwrap(), p);
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn wal_create_append_open_roundtrip() {
+        let path = tmp("roundtrip");
+        let mut wal = WalFile::create(&path, &header()).unwrap();
+        wal.append(b"round-zero").unwrap();
+        wal.append(b"round-one").unwrap();
+        assert_eq!(wal.records(), 3);
+        drop(wal);
+        let (wal, h, recs) = WalFile::open(&path).unwrap();
+        assert_eq!(h, header());
+        assert_eq!(recs, vec![b"round-zero".to_vec(), b"round-one".to_vec()]);
+        assert_eq!(wal.records(), 3);
+        assert_eq!(
+            wal.len_bytes(),
+            std::fs::metadata(&path).unwrap().len()
+        );
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn append_after_reopen_continues_the_log() {
+        let path = tmp("reopen");
+        let mut wal = WalFile::create(&path, &header()).unwrap();
+        wal.append(b"a").unwrap();
+        drop(wal);
+        let (mut wal, _, _) = WalFile::open(&path).unwrap();
+        wal.append(b"b").unwrap();
+        drop(wal);
+        let (_, _, recs) = WalFile::open(&path).unwrap();
+        assert_eq!(recs, vec![b"a".to_vec(), b"b".to_vec()]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn torn_tail_is_truncated_not_fatal() {
+        let path = tmp("torn");
+        let mut wal = WalFile::create(&path, &header()).unwrap();
+        wal.append(b"intact").unwrap();
+        wal.append(b"will-be-torn").unwrap();
+        drop(wal);
+        // tear the last record: chop 5 bytes off the file
+        let len = std::fs::metadata(&path).unwrap().len();
+        let f = OpenOptions::new().write(true).open(&path).unwrap();
+        f.set_len(len - 5).unwrap();
+        drop(f);
+        let (_, _, recs) = WalFile::open(&path).unwrap();
+        assert_eq!(recs, vec![b"intact".to_vec()]);
+        // the torn bytes are gone from disk too
+        assert!(std::fs::metadata(&path).unwrap().len() < len - 5);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn bad_crc_at_tail_is_torn_tail() {
+        let path = tmp("tailcrc");
+        let mut wal = WalFile::create(&path, &header()).unwrap();
+        wal.append(b"good").unwrap();
+        wal.append(b"flip").unwrap();
+        drop(wal);
+        // flip a payload byte of the *last* record
+        let mut raw = std::fs::read(&path).unwrap();
+        let n = raw.len();
+        raw[n - 1] ^= 0xFF;
+        std::fs::write(&path, &raw).unwrap();
+        let (_, _, recs) = WalFile::open(&path).unwrap();
+        assert_eq!(recs, vec![b"good".to_vec()]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn mid_file_corruption_is_a_hard_error() {
+        let path = tmp("midcrc");
+        let mut wal = WalFile::create(&path, &header()).unwrap();
+        wal.append(b"first-record").unwrap();
+        wal.append(b"second-record").unwrap();
+        drop(wal);
+        // corrupt the *first* round record's payload, not the tail
+        let header_len = header().encode().len();
+        let mut raw = std::fs::read(&path).unwrap();
+        let idx = FRAME_BYTES as usize + header_len + FRAME_BYTES as usize;
+        raw[idx] ^= 0xFF;
+        std::fs::write(&path, &raw).unwrap();
+        let err = WalFile::open(&path).unwrap_err().to_string();
+        assert!(err.contains("corrupt record"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_foreign_files() {
+        let path = tmp("foreign");
+        std::fs::write(&path, b"this is not a wal at all............").unwrap();
+        assert!(WalFile::open(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -78,6 +78,32 @@ impl CloudWorker {
         );
     }
 
+    /// Snapshot this worker's mutable state for the WAL: the straggler,
+    /// DP-noise and batch-sampler RNG streams, the async base version and
+    /// the (fault-mutable) compute speed. The shard itself is not stored —
+    /// it is regenerated bit-identically from the partition plan on
+    /// resume, after which these RNG states are overlaid.
+    pub fn wal_encode(&self, w: &mut crate::wal::ByteWriter) {
+        w.put_u64x4(self.straggle_rng.state_words());
+        w.put_u64x4(self.dp_rng.state_words());
+        w.put_u64x4(self.batches.rng_state());
+        w.put_u64(self.base_version);
+        w.put_f64(self.platform.compute_speed);
+    }
+
+    /// Restore state written by [`CloudWorker::wal_encode`].
+    pub fn wal_decode(
+        &mut self,
+        r: &mut crate::wal::ByteReader,
+    ) -> Result<()> {
+        self.straggle_rng = Pcg64::from_state_words(r.get_u64x4()?);
+        self.dp_rng = Pcg64::from_state_words(r.get_u64x4()?);
+        self.batches.restore_rng(r.get_u64x4()?);
+        self.base_version = r.get_u64()?;
+        self.platform.compute_speed = r.get_f64()?;
+        Ok(())
+    }
+
     /// Run `steps` local SGD steps from `global`, produce the update.
     pub fn local_round<B: ComputeBackend + ?Sized>(
         &mut self,

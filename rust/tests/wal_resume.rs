@@ -1,0 +1,367 @@
+//! Crash-consistent resume: a run killed by an injected
+//! `coordinator-crash` at EVERY possible round, then resumed from its
+//! write-ahead log, must match the uninterrupted run bit-for-bit —
+//! losses, simulated time, wire bytes per link class and the dollar
+//! bill. Exercised across all three schedulers (sync star, async,
+//! hierarchical) with active fault plans, plus the WAL error taxonomy
+//! at the coordinator level.
+
+use crossfed::cluster::ClusterSpec;
+use crossfed::config::{preset, ExperimentConfig};
+use crossfed::coordinator::{Coordinator, CoordinatorCrashed};
+use crossfed::metrics::RunResult;
+use crossfed::model::ParamSet;
+use crossfed::netsim::FaultPlan;
+use crossfed::runtime::MockRuntime;
+use crossfed::wal::{wal_path, WalFile, WalHeader};
+
+const ROUNDS: usize = 5;
+
+fn init() -> ParamSet {
+    ParamSet { leaves: vec![vec![2.0; 48], vec![-1.0; 16]] }
+}
+
+fn base_cfg(base_faults: &str) -> ExperimentConfig {
+    let mut c = preset("quick").unwrap();
+    c.rounds = ROUNDS;
+    // mixed eval / non-eval rounds so the eval sampler's RNG position
+    // is part of what resume must restore
+    c.eval_every = 2;
+    c.local_lr = 3.0;
+    c.faults = FaultPlan::parse(base_faults).unwrap();
+    c
+}
+
+/// Bit-level equality of everything the paper's tables read.
+fn assert_identical(a: &RunResult, b: &RunResult, ctx: &str) {
+    assert_eq!(a.history.len(), b.history.len(), "{ctx}: round count");
+    for (ra, rb) in a.history.iter().zip(&b.history) {
+        let r = ra.round;
+        assert_eq!(ra.round, rb.round, "{ctx}: round index");
+        assert_eq!(
+            ra.train_loss.to_bits(),
+            rb.train_loss.to_bits(),
+            "{ctx}: train_loss r{r}"
+        );
+        assert_eq!(
+            ra.eval_loss.map(f32::to_bits),
+            rb.eval_loss.map(f32::to_bits),
+            "{ctx}: eval_loss r{r}"
+        );
+        assert_eq!(
+            ra.eval_acc.map(f64::to_bits),
+            rb.eval_acc.map(f64::to_bits),
+            "{ctx}: eval_acc r{r}"
+        );
+        assert_eq!(
+            ra.sim_secs.to_bits(),
+            rb.sim_secs.to_bits(),
+            "{ctx}: sim_secs r{r}"
+        );
+        assert_eq!(ra.wire_bytes, rb.wire_bytes, "{ctx}: wire_bytes r{r}");
+        assert_eq!(
+            ra.epsilon.to_bits(),
+            rb.epsilon.to_bits(),
+            "{ctx}: epsilon r{r}"
+        );
+        assert_eq!(
+            ra.partition_gen, rb.partition_gen,
+            "{ctx}: partition_gen r{r}"
+        );
+        assert_eq!(
+            ra.cum_cost_usd.to_bits(),
+            rb.cum_cost_usd.to_bits(),
+            "{ctx}: cum_cost_usd r{r}"
+        );
+        for (sa, sb) in ra.platform_secs.iter().zip(&rb.platform_secs) {
+            assert_eq!(
+                sa.to_bits(),
+                sb.to_bits(),
+                "{ctx}: platform_secs r{r}"
+            );
+        }
+    }
+    assert_eq!(a.rounds_run, b.rounds_run, "{ctx}: rounds_run");
+    assert_eq!(a.wire_bytes, b.wire_bytes, "{ctx}: wire_bytes");
+    assert_eq!(
+        a.wire_bytes_class, b.wire_bytes_class,
+        "{ctx}: wire_bytes_class"
+    );
+    assert_eq!(
+        a.sim_secs.to_bits(),
+        b.sim_secs.to_bits(),
+        "{ctx}: sim_secs"
+    );
+    assert_eq!(
+        a.final_train_loss.to_bits(),
+        b.final_train_loss.to_bits(),
+        "{ctx}: final_train_loss"
+    );
+    assert_eq!(
+        a.final_eval_loss.to_bits(),
+        b.final_eval_loss.to_bits(),
+        "{ctx}: final_eval_loss"
+    );
+    assert_eq!(
+        a.cost.total_usd().to_bits(),
+        b.cost.total_usd().to_bits(),
+        "{ctx}: total cost"
+    );
+}
+
+/// Kill the run at every round boundary in turn and resume it; every
+/// resumed run must be indistinguishable from the uninterrupted one.
+fn crash_resume_matches(
+    tag: &str,
+    cluster: fn() -> ClusterSpec,
+    base_faults: &str,
+    tweak: fn(&mut ExperimentConfig),
+) {
+    let backend = MockRuntime::new(0.4);
+    let mut cfg = base_cfg(base_faults);
+    tweak(&mut cfg);
+    // uninterrupted baseline, no WAL attached — also proves attaching a
+    // WAL never perturbs a run
+    let baseline = Coordinator::new(cfg.clone(), cluster(), &backend, init(), 4, 16)
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(baseline.rounds_run, ROUNDS, "{tag}: baseline ran fully");
+
+    for crash_at in 1..ROUNDS {
+        let dir = std::env::temp_dir()
+            .join(format!("crossfed-walres-{tag}-{crash_at}"));
+        std::fs::remove_dir_all(&dir).ok();
+        let mut c = cfg.clone();
+        c.faults = FaultPlan::parse(&format!(
+            "{base_faults};coordinator-crash:at={crash_at}"
+        ))
+        .unwrap();
+        c.wal_dir = Some(dir.to_string_lossy().into_owned());
+
+        let mut coord =
+            Coordinator::new(c.clone(), cluster(), &backend, init(), 4, 16)
+                .unwrap();
+        let err = coord.run().unwrap_err();
+        let crash = err
+            .downcast_ref::<CoordinatorCrashed>()
+            .unwrap_or_else(|| {
+                panic!("{tag}@{crash_at}: expected a crash, got {err:#}")
+            });
+        assert_eq!(crash.round, crash_at, "{tag}: crash round");
+        drop(coord); // the coordinator "process" dies here
+
+        let resumed =
+            Coordinator::resume(c, cluster(), &backend, init(), 4, 16)
+                .unwrap()
+                .run()
+                .unwrap();
+        assert_identical(
+            &baseline,
+            &resumed,
+            &format!("{tag} crash@{crash_at}"),
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+#[test]
+fn sync_star_kill_at_every_round() {
+    crash_resume_matches(
+        "sync",
+        ClusterSpec::paper_default,
+        "node-slowdown:node=1,at=2,factor=2;\
+         link-degrade:src=0,dst=1,at=3,factor=1.5",
+        |c| {
+            c.partition =
+                crossfed::partition::PartitionStrategy::parse("dynamic")
+                    .unwrap();
+        },
+    );
+}
+
+#[test]
+fn async_kill_at_every_pseudo_round() {
+    crash_resume_matches(
+        "async",
+        ClusterSpec::paper_default,
+        "node-slowdown:node=2,at=1,factor=3;\
+         link-degrade:src=0,dst=2,at=3,factor=2",
+        |c| {
+            c.aggregation =
+                crossfed::aggregation::AggregationKind::parse("async")
+                    .unwrap();
+        },
+    );
+}
+
+#[test]
+fn hier_kill_at_every_round_with_failover() {
+    crash_resume_matches(
+        "hier",
+        || ClusterSpec::paper_default_scaled(2),
+        "gateway-down:cloud=1,at=1;restore:cloud=1,at=3",
+        |c| {
+            c.hierarchical = true;
+        },
+    );
+}
+
+/// A bad checksum on the *last* record is a torn tail: the WAL truncates
+/// it on open and the run resumes from one round earlier — and still
+/// ends bit-identical, because the re-run round is deterministic.
+#[test]
+fn corrupt_tail_resumes_from_previous_round() {
+    let backend = MockRuntime::new(0.4);
+    let base_faults = "node-slowdown:node=1,at=2,factor=2";
+    let cfg = base_cfg(base_faults);
+    let baseline =
+        Coordinator::new(cfg.clone(), ClusterSpec::paper_default(), &backend, init(), 4, 16)
+            .unwrap()
+            .run()
+            .unwrap();
+
+    let dir = std::env::temp_dir().join("crossfed-walres-torn");
+    std::fs::remove_dir_all(&dir).ok();
+    let mut c = cfg.clone();
+    c.faults =
+        FaultPlan::parse(&format!("{base_faults};coordinator-crash:at=3"))
+            .unwrap();
+    c.wal_dir = Some(dir.to_string_lossy().into_owned());
+    let mut coord =
+        Coordinator::new(c.clone(), ClusterSpec::paper_default(), &backend, init(), 4, 16)
+            .unwrap();
+    coord.run().unwrap_err();
+    drop(coord);
+
+    // flip a byte inside the last record's payload
+    let path = wal_path(std::path::Path::new(dir.to_str().unwrap()), &c.name);
+    let mut bytes = std::fs::read(&path).unwrap();
+    let last = bytes.len() - 1;
+    bytes[last] ^= 0xFF;
+    std::fs::write(&path, &bytes).unwrap();
+
+    // resume without the crash event (only 2 rounds are now on record,
+    // so a crash at round 3 would legitimately fire again)
+    let mut c2 = cfg.clone();
+    c2.wal_dir = c.wal_dir.clone();
+    let resumed = Coordinator::resume(
+        c2,
+        ClusterSpec::paper_default(),
+        &backend,
+        init(),
+        4,
+        16,
+    )
+    .unwrap()
+    .run()
+    .unwrap();
+    assert_identical(&baseline, &resumed, "torn tail");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Write a WAL under `dir` by running 2 rounds of the quick preset.
+fn write_small_wal(dir: &std::path::Path) -> ExperimentConfig {
+    let backend = MockRuntime::new(0.4);
+    let mut c = base_cfg("node-slowdown:node=1,at=1,factor=2");
+    c.rounds = 2;
+    c.wal_dir = Some(dir.to_string_lossy().into_owned());
+    Coordinator::new(c.clone(), ClusterSpec::paper_default(), &backend, init(), 4, 16)
+        .unwrap()
+        .run()
+        .unwrap();
+    c
+}
+
+#[test]
+fn resume_rejects_wrong_experiment_seed_and_shape() {
+    let backend = MockRuntime::new(0.4);
+    let dir = std::env::temp_dir().join("crossfed-walres-taxonomy");
+    std::fs::remove_dir_all(&dir).ok();
+    let c = write_small_wal(&dir);
+
+    // cross-experiment restore is refused by name...
+    let mut other = c.clone();
+    other.name = "other-experiment".to_string();
+    let err = Coordinator::resume(
+        other,
+        ClusterSpec::paper_default(),
+        &backend,
+        init(),
+        4,
+        16,
+    )
+    .unwrap_err();
+    assert!(err.to_string().contains("belongs to experiment"), "{err:#}");
+
+    // ...by seed...
+    let mut reseeded = c.clone();
+    reseeded.seed ^= 1;
+    let err = Coordinator::resume(
+        reseeded,
+        ClusterSpec::paper_default(),
+        &backend,
+        init(),
+        4,
+        16,
+    )
+    .unwrap_err();
+    assert!(err.to_string().contains("seed"), "{err:#}");
+
+    // ...and by model shape
+    let err = Coordinator::resume(
+        c.clone(),
+        ClusterSpec::paper_default(),
+        &backend,
+        ParamSet { leaves: vec![vec![0.0; 8]] },
+        4,
+        16,
+    )
+    .unwrap_err();
+    assert!(err.to_string().contains("model shape"), "{err:#}");
+
+    // a healthy resume of a *finished* run is still well-formed: all
+    // rounds are on record, so run() has nothing left to do
+    let again = Coordinator::resume(
+        c,
+        ClusterSpec::paper_default(),
+        &backend,
+        init(),
+        4,
+        16,
+    )
+    .unwrap()
+    .run()
+    .unwrap();
+    assert_eq!(again.rounds_run, 2);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn resume_from_header_only_wal_errors() {
+    let backend = MockRuntime::new(0.4);
+    let dir = std::env::temp_dir().join("crossfed-walres-empty");
+    std::fs::remove_dir_all(&dir).ok();
+    let mut c = base_cfg("node-slowdown:node=1,at=1,factor=2");
+    c.wal_dir = Some(dir.to_string_lossy().into_owned());
+    // a crash before the first round boundary leaves a header-only WAL
+    let header = WalHeader {
+        experiment: c.name.clone(),
+        seed: c.seed,
+        n_workers: 3,
+        leaf_sizes: vec![48, 16],
+    };
+    let path = wal_path(std::path::Path::new(dir.to_str().unwrap()), &c.name);
+    WalFile::create(&path, &header).unwrap();
+    let err = Coordinator::resume(
+        c,
+        ClusterSpec::paper_default(),
+        &backend,
+        init(),
+        4,
+        16,
+    )
+    .unwrap_err();
+    assert!(err.to_string().contains("nothing to resume"), "{err:#}");
+    std::fs::remove_dir_all(&dir).ok();
+}
