@@ -1,0 +1,129 @@
+//! Planet-scale simulator smoke: 10k+ nodes across 64 clouds.
+//!
+//! Exercises the scale path end-to-end on the mock backend: the
+//! heterogeneous cluster generator (`ClusterSpec::scaled`), the indexed
+//! WAN (CSR adjacency over ~1.7M directed links), the arena-backed event
+//! engine and the per-cloud parallel round scheduler (`par_rounds`). The
+//! run executes twice — single-threaded and multi-threaded — and asserts
+//! the histories are bit-identical: parallelism must never change a
+//! simulated result, only the wall-clock it takes to produce it.
+//!
+//! Runs on the mock backend (no artifacts needed — CI executes this):
+//!
+//!     cargo run --release --example planet_scale
+
+use std::time::Instant;
+
+use crossfed::cluster::ClusterSpec;
+use crossfed::config::preset;
+use crossfed::coordinator::Coordinator;
+use crossfed::data::CorpusConfig;
+use crossfed::metrics::RunResult;
+use crossfed::model::ParamSet;
+use crossfed::partition::PartitionStrategy;
+use crossfed::runtime::MockRuntime;
+use crossfed::util::bytes::human_bytes;
+use crossfed::util::par::with_threads;
+
+const N_CLOUDS: usize = 64;
+/// AZ-node counts cycled across the clouds: 22×192 + 21×160 + 21×128
+/// = 10_272 worker nodes.
+const CLOUD_SIZES: [usize; 3] = [192, 160, 128];
+const ROUNDS: usize = 2;
+
+/// One full run at `threads` host threads. Returns the result plus the
+/// wall seconds and the simulator event count.
+fn run(threads: usize) -> anyhow::Result<(RunResult, f64, u64)> {
+    let mut cfg = preset("quick").expect("builtin preset");
+    cfg.name = "planet-scale".into();
+    cfg.hierarchical = true;
+    cfg.par_rounds = true;
+    cfg.rounds = ROUNDS;
+    cfg.eval_every = 1;
+    cfg.eval_batches = 1;
+    cfg.local_steps = 2;
+    cfg.target_loss = None;
+    // one doc per worker: equal_shards needs docs >= workers to keep
+    // every cloud's reduce weight positive
+    cfg.partition = PartitionStrategy::Fixed;
+    cfg.corpus =
+        CorpusConfig { n_docs: 12_000, doc_sentences: 1, n_topics: 6, seed: 11 };
+
+    let cluster = ClusterSpec::scaled(N_CLOUDS, &CLOUD_SIZES);
+    let n_nodes = cluster.n();
+    anyhow::ensure!(n_nodes >= 10_000, "scale floor: {n_nodes} nodes");
+    let backend = MockRuntime::new(0.4);
+    let init = ParamSet { leaves: vec![vec![0.5f32; 64], vec![-0.25f32; 32]] };
+    with_threads(threads, || {
+        let mut coord = Coordinator::new(cfg, cluster, &backend, init, 4, 16)?;
+        let t0 = Instant::now();
+        let r = coord.run()?;
+        Ok((r, t0.elapsed().as_secs_f64(), coord.sim_events()))
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    crossfed::util::logging::init();
+    let n_nodes: usize = (0..N_CLOUDS).map(|c| CLOUD_SIZES[c % 3]).sum();
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .max(2);
+    println!(
+        "planet scale: {n_nodes} nodes / {N_CLOUDS} clouds / {ROUNDS} rounds"
+    );
+
+    let (serial, serial_wall, serial_events) = run(1)?;
+    let (parallel, parallel_wall, parallel_events) = run(threads)?;
+
+    for (label, r, wall, events) in [
+        ("1 thread", &serial, serial_wall, serial_events),
+        ("N threads", &parallel, parallel_wall, parallel_events),
+    ] {
+        println!(
+            "{label:>9}: wall={wall:>6.2}s  {:>9.0} node-rounds/s  \
+             {:>9.0} events/s  wire={}  sim={:.0}s",
+            (n_nodes * ROUNDS) as f64 / wall,
+            events as f64 / wall,
+            human_bytes(r.wire_bytes),
+            r.sim_secs,
+        );
+    }
+    println!(
+        "speedup: {:.2}x at {threads} threads",
+        serial_wall / parallel_wall
+    );
+
+    // determinism gate: the simulated outcome is a pure function of the
+    // seed — thread count must not leak into any simulated quantity
+    anyhow::ensure!(serial.history.len() == parallel.history.len());
+    for (a, b) in serial.history.iter().zip(&parallel.history) {
+        anyhow::ensure!(
+            a.train_loss.to_bits() == b.train_loss.to_bits(),
+            "round {}: train loss diverged across thread counts",
+            a.round
+        );
+        anyhow::ensure!(
+            a.sim_secs.to_bits() == b.sim_secs.to_bits(),
+            "round {}: simulated time diverged across thread counts",
+            a.round
+        );
+        anyhow::ensure!(
+            a.wire_bytes == b.wire_bytes,
+            "round {}: wire bytes diverged across thread counts",
+            a.round
+        );
+        anyhow::ensure!(
+            a.cum_cost_usd.to_bits() == b.cum_cost_usd.to_bits(),
+            "round {}: dollar bill diverged across thread counts",
+            a.round
+        );
+    }
+    anyhow::ensure!(serial.wire_bytes == parallel.wire_bytes);
+    anyhow::ensure!(serial_events == parallel_events);
+    anyhow::ensure!(
+        serial.final_eval_loss.to_bits() == parallel.final_eval_loss.to_bits()
+    );
+    println!("determinism: 1-thread and {threads}-thread histories are bit-identical");
+    Ok(())
+}

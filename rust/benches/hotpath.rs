@@ -250,6 +250,70 @@ fn cost_star_vs_hier_entry() -> Json {
     ])
 }
 
+/// Simulator scale sweep: one hierarchical `par_rounds` round per cloud
+/// count on heterogeneous scaled clusters (EXPERIMENTS.md §Scale),
+/// measuring wall-clock throughput of the arena engine + indexed WAN
+/// core in node-rounds/s and simulator events/s. Quick mode trims the
+/// sweep so CI exercises the path without paying for the largest runs
+/// (the 10k-node end is covered by the `planet_scale` example).
+fn sim_scale_entry() -> Json {
+    use crossfed::partition::PartitionStrategy;
+    use crossfed::testkit::bench_kit::quick_mode;
+    let clouds: &[usize] =
+        if quick_mode() { &[1, 16] } else { &[1, 16, 64, 128] };
+    let mut entries = Vec::new();
+    println!(
+        "\n== bench: sim scale (hierarchical par-rounds, {} threads) ==",
+        par::current_threads()
+    );
+    for &nc in clouds {
+        let cluster = ClusterSpec::scaled(nc, &[48, 40, 32]);
+        let nodes = cluster.n();
+        let mut cfg = preset("quick").expect("builtin");
+        cfg.name = format!("bench-scale-{nc}");
+        cfg.hierarchical = true;
+        cfg.par_rounds = true;
+        cfg.rounds = 1;
+        cfg.eval_every = 1;
+        cfg.eval_batches = 1;
+        cfg.local_steps = 2;
+        cfg.target_loss = None;
+        // one doc per worker keeps every equal shard non-empty after the
+        // 10% eval holdout
+        cfg.partition = PartitionStrategy::Fixed;
+        cfg.corpus = CorpusConfig {
+            n_docs: nodes + nodes / 8 + 16,
+            doc_sentences: 1,
+            n_topics: 6,
+            seed: 5,
+        };
+        let backend = MockRuntime::new(0.4);
+        let init =
+            ParamSet { leaves: vec![vec![0.5f32; 64], vec![-0.25f32; 32]] };
+        let mut coord = Coordinator::new(cfg, cluster, &backend, init, 4, 16)
+            .expect("coordinator");
+        let t0 = std::time::Instant::now();
+        coord.run().expect("run");
+        let wall = t0.elapsed().as_secs_f64();
+        let events = coord.sim_events();
+        println!(
+            "{nc:>4} clouds / {nodes:>5} nodes: wall {wall:>7.3}s  \
+             {:>9.0} node-rounds/s  {:>9.0} events/s",
+            nodes as f64 / wall,
+            events as f64 / wall
+        );
+        entries.push(Json::obj(vec![
+            ("clouds", Json::num(nc as f64)),
+            ("nodes", Json::num(nodes as f64)),
+            ("rounds", Json::num(1.0)),
+            ("wall_secs", Json::num((wall * 1e3).round() / 1e3)),
+            ("nodes_per_sec", Json::num((nodes as f64 / wall).round())),
+            ("events_per_sec", Json::num((events as f64 / wall).round())),
+        ]));
+    }
+    Json::arr(entries)
+}
+
 /// WAL round-record durability: CRC + write + fsync of a snapshot-sized
 /// record — the per-round price of crash consistency (EXPERIMENTS.md
 /// §Durability).
@@ -298,6 +362,7 @@ fn write_json(
     hier_vs_star: Json,
     cost_star_vs_hier: Json,
     wal_append: Json,
+    sim_scale: Json,
 ) {
     let mut entries = Vec::new();
     for (sb, pb) in serial.iter().zip(parallel) {
@@ -323,6 +388,7 @@ fn write_json(
         ("hier_vs_star", hier_vs_star),
         ("cost_star_vs_hier", cost_star_vs_hier),
         ("wal_append", wal_append),
+        ("sim_scale", sim_scale),
     ]);
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.json");
     match std::fs::write(path, doc.to_string_pretty() + "\n") {
@@ -340,7 +406,8 @@ fn main() {
     let hier = hier_vs_star_entry();
     let cost = cost_star_vs_hier_entry();
     let wal = wal_append_entry();
-    write_json(hw, &serial, &parallel, hier, cost, wal);
+    let scale = sim_scale_entry();
+    write_json(hw, &serial, &parallel, hier, cost, wal, scale);
 
     // --- netsim transfer computation (pure model, no payload copies)
     let mut b = BenchSet::new("netsim transfer ops");

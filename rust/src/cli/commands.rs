@@ -15,7 +15,8 @@ use crate::report;
 use crate::runtime::{ComputeBackend, MockRuntime, StepRuntime};
 use crate::util::bytes::{human_bytes, human_duration};
 
-const FLAGS: [&str; 4] = ["mock", "no-encrypt", "curve", "hierarchical"];
+const FLAGS: [&str; 5] =
+    ["mock", "no-encrypt", "curve", "hierarchical", "par-rounds"];
 
 const USAGE: &str = "\
 crossfed — cross-cloud federated LLM training (Yang et al. 2024 reproduction)
@@ -29,6 +30,7 @@ USAGE:
                  [--nodes-per-cloud N] [--hierarchical]
                  [--placement auto|fixed:N] [--price-book FILE]
                  [--fault SPEC[;SPEC...]] [--mock] [--curve]
+                 [--par-rounds] [--history-every N] [--history-csv FILE]
   crossfed sweep --presets a,b,c [--artifacts DIR] [--mock]
   crossfed inspect [--preset NAME]
   crossfed partition-plan [--strategy S] [--platforms N]
@@ -62,7 +64,12 @@ resumed run's losses, wire bytes and dollar bill match an uninterrupted
 run exactly. --resume with a file path restores a --save-checkpoint
 snapshot instead (coarser: params + RNG streams only).
 --target-cost stops the run at the first round boundary whose cumulative
-bill reaches the budget (the cost analogue of a loss target).";
+bill reaches the budget (the cost analogue of a loss target).
+--par-rounds runs each cloud's intra-round traffic on its own thread
+(hierarchical only; deterministic at any thread count via per-cloud RNG
+streams — see CROSSFED_THREADS). --history-every N keeps every Nth round
+record in memory; --history-csv FILE streams every round to a CSV as it
+completes, so long runs don't need the full in-memory history.";
 
 /// Entry point used by main.rs. Returns process exit code.
 pub fn run_cli(raw: &[String]) -> Result<i32> {
@@ -129,6 +136,15 @@ fn build_config(args: &Args) -> Result<ExperimentConfig> {
     }
     if args.flag("hierarchical") {
         cfg.hierarchical = true;
+    }
+    if args.flag("par-rounds") {
+        cfg.par_rounds = true;
+    }
+    if let Some(n) = args.get_usize("history-every")? {
+        cfg.history_every = n;
+    }
+    if let Some(path) = args.get("history-csv") {
+        cfg.history_csv = Some(path.to_string());
     }
     if let Some(p) = args.get("placement") {
         cfg.placement = crate::cost::Placement::parse(p)?;
@@ -597,6 +613,42 @@ mod tests {
         // non-positive budgets are a clean error
         let args =
             Args::parse(&s(&["train", "--target-cost", "0"]), &FLAGS).unwrap();
+        assert!(build_config(&args).is_err());
+    }
+
+    #[test]
+    fn train_par_rounds_and_history_knobs() {
+        // end-to-end: parallel hierarchical rounds + thinned history +
+        // streamed CSV on the mock backend
+        let csv = std::env::temp_dir().join("crossfed-cli-history.csv");
+        assert_eq!(
+            run_cli(&s(&[
+                "train", "--preset", "quick", "--rounds", "4", "--mock",
+                "--hierarchical", "--nodes-per-cloud", "2", "--par-rounds",
+                "--history-every", "2",
+                "--history-csv", csv.to_str().unwrap(),
+            ]))
+            .unwrap(),
+            0
+        );
+        let text = std::fs::read_to_string(&csv).unwrap();
+        // header + one row per round, streamed regardless of thinning
+        assert_eq!(text.trim().lines().count(), 5, "{text}");
+        assert!(text.starts_with("round,"));
+        std::fs::remove_file(&csv).ok();
+        // --par-rounds without --hierarchical is rejected at validation
+        let args = Args::parse(
+            &s(&["train", "--preset", "quick", "--par-rounds"]),
+            &FLAGS,
+        )
+        .unwrap();
+        assert!(build_config(&args).is_err());
+        // --history-every 0 is rejected at validation
+        let args = Args::parse(
+            &s(&["train", "--preset", "quick", "--history-every", "0"]),
+            &FLAGS,
+        )
+        .unwrap();
         assert!(build_config(&args).is_err());
     }
 

@@ -146,6 +146,47 @@ impl ClusterSpec {
         ClusterSpec::new(platforms)
     }
 
+    /// Planet-scale heterogeneous generator: `n_clouds` clouds whose
+    /// member counts cycle through `sizes` (cloud `c` gets
+    /// `sizes[c % sizes.len()]` nodes). Clouds cycle through the three
+    /// paper platform profiles (AWS/GCP/Azure-like speed, cost and
+    /// straggler shape) and are grouped four-per-region, so the WAN mesh
+    /// exercises intra-region *and* inter-region gateway links at scale.
+    /// `scaled(64, &[320, 128, 64])` is the ≥10k-node planet-scale
+    /// topology the `sim_scale` bench and `examples/planet_scale.rs` run.
+    pub fn scaled(n_clouds: usize, sizes: &[usize]) -> ClusterSpec {
+        assert!(n_clouds >= 1, "need at least one cloud");
+        assert!(
+            !sizes.is_empty() && sizes.iter().all(|&s| s >= 1),
+            "every cloud needs at least one node"
+        );
+        // (speed, $/h, straggler_prob, straggler_factor) per profile,
+        // matching the paper_default platforms
+        let profiles = [
+            (1.00, 3.06, 0.05, 2.5),
+            (0.85, 2.48, 0.05, 2.5),
+            (0.70, 3.40, 0.08, 3.0),
+        ];
+        let total: usize = (0..n_clouds).map(|c| sizes[c % sizes.len()]).sum();
+        let mut platforms = Vec::with_capacity(total);
+        for c in 0..n_clouds {
+            let (speed, cost, sprob, sfac) = profiles[c % profiles.len()];
+            let region = format!("region{}", c / 4);
+            for az in 0..sizes[c % sizes.len()] {
+                platforms.push(CloudPlatform {
+                    name: format!("c{c}-az{az}"),
+                    compute_speed: speed,
+                    cost_per_hour: cost,
+                    region: region.clone(),
+                    straggler_prob: sprob,
+                    straggler_factor: sfac,
+                    cloud: c,
+                });
+            }
+        }
+        ClusterSpec::new(platforms)
+    }
+
     /// Homogeneous cluster of `n` identical platforms (ablation baseline).
     pub fn homogeneous(n: usize) -> ClusterSpec {
         ClusterSpec::new(
@@ -419,5 +460,30 @@ mod tests {
         let groups = c.clouds();
         assert_eq!(groups.len(), 3);
         assert_eq!(groups[2], vec![8, 9, 10, 11]);
+    }
+
+    #[test]
+    fn scaled_generator_cycles_sizes_and_profiles() {
+        let c = ClusterSpec::scaled(6, &[4, 2]);
+        assert_eq!(c.n_clouds(), 6);
+        assert_eq!(c.n(), 3 * (4 + 2));
+        // sizes cycle: clouds 0,2,4 get 4 nodes, clouds 1,3,5 get 2
+        assert_eq!(c.cloud_members(0).len(), 4);
+        assert_eq!(c.cloud_members(1).len(), 2);
+        assert_eq!(c.cloud_members(4).len(), 4);
+        // profiles cycle through the paper's three platforms
+        let g0 = c.gateway(0);
+        let g3 = c.gateway(3);
+        assert_eq!(c.platforms[g0].compute_speed, 1.00);
+        assert_eq!(c.platforms[g3].compute_speed, 1.00);
+        assert_eq!(c.platforms[c.gateway(1)].compute_speed, 0.85);
+        // four clouds per region: 0..=3 share one, 4..=5 the next
+        assert_eq!(c.platforms[g0].region, "region0");
+        assert_eq!(c.platforms[g3].region, "region0");
+        assert_eq!(c.platforms[c.gateway(4)].region, "region1");
+        // every cloud's first member is its gateway
+        for cloud in 0..6 {
+            assert_eq!(c.gateway(cloud), c.cloud_members(cloud)[0]);
+        }
     }
 }

@@ -83,6 +83,25 @@ pub struct ExperimentConfig {
     /// bit-identically after a crash (see [`crate::wal`]); required by
     /// the `coordinator-crash` fault.
     pub wal_dir: Option<String>,
+    /// simulate independent clouds' intra-round legs (training uplinks,
+    /// gateway broadcasts) on separate threads — the planet-scale path.
+    /// Requires `hierarchical`; per-cloud WAN noise comes from dedicated
+    /// RNG streams, so results are deterministic and identical at any
+    /// thread count (but not bit-identical to the serial event-engine
+    /// schedule, which interleaves one shared noise stream). JSON
+    /// `"par_rounds"`; CLI `--par-rounds`.
+    pub par_rounds: bool,
+    /// keep every Nth round's [`crate::metrics::RoundRecord`] in the
+    /// in-memory history (1 = keep all, the default). Planet-scale runs
+    /// set N high and stream rounds to `history_csv` instead of holding
+    /// O(rounds × clouds) in memory. JSON `"history_every"`; CLI
+    /// `--history-every N`.
+    pub history_every: usize,
+    /// stream every round's curve-CSV row to this file as it completes
+    /// (the streaming metrics sink; rows match
+    /// [`crate::metrics::RunResult::curve_csv`] exactly). JSON
+    /// `"history_csv"`; CLI `--history-csv FILE`.
+    pub history_csv: Option<String>,
 }
 
 impl Default for ExperimentConfig {
@@ -117,6 +136,9 @@ impl Default for ExperimentConfig {
             placement: Placement::Fixed(0),
             price_book: PriceBook::paper_default(),
             wal_dir: None,
+            par_rounds: false,
+            history_every: 1,
+            history_csv: None,
         }
     }
 }
@@ -169,6 +191,30 @@ impl ExperimentConfig {
         if self.dp.enabled() && self.dp.clip_norm <= 0.0 {
             bail!("DP requires clip_norm > 0");
         }
+        if self.history_every == 0 {
+            bail!("history_every must be >= 1");
+        }
+        if self.par_rounds {
+            if !self.hierarchical {
+                bail!(
+                    "par_rounds parallelizes independent clouds' intra-round \
+                     legs, which only exist under hierarchical aggregation \
+                     — set hierarchical too"
+                );
+            }
+            if self.secure_agg {
+                bail!(
+                    "par_rounds does not yet support secure aggregation's \
+                     pairwise masking order; drop secure_agg or par_rounds"
+                );
+            }
+            if !self.faults.events().is_empty() {
+                bail!(
+                    "par_rounds does not yet support mid-round fault \
+                     injection/failover; drop the fault plan or par_rounds"
+                );
+            }
+        }
         if let Some(t) = self.target_loss {
             if !(t > 0.0) {
                 bail!("target_loss must be positive");
@@ -219,6 +265,11 @@ impl ExperimentConfig {
         }
         if let Some(d) = v.get("wal_dir").and_then(Json::as_str) {
             c.wal_dir = Some(d.to_string());
+        }
+        c.par_rounds = v.opt_bool("par_rounds", c.par_rounds);
+        c.history_every = v.opt_usize("history_every", c.history_every);
+        if let Some(p) = v.get("history_csv").and_then(Json::as_str) {
+            c.history_csv = Some(p.to_string());
         }
         c.eval_every = v.opt_usize("eval_every", c.eval_every);
         c.eval_batches = v.opt_usize("eval_batches", c.eval_batches);
@@ -328,6 +379,14 @@ impl ExperimentConfig {
                 self.wal_dir
                     .as_ref()
                     .map_or(Json::Null, |d| Json::str(d.clone())),
+            ),
+            ("par_rounds", Json::Bool(self.par_rounds)),
+            ("history_every", Json::num(self.history_every as f64)),
+            (
+                "history_csv",
+                self.history_csv
+                    .as_ref()
+                    .map_or(Json::Null, |p| Json::str(p.clone())),
             ),
             ("eval_every", Json::num(self.eval_every as f64)),
             ("eval_batches", Json::num(self.eval_batches as f64)),
@@ -527,6 +586,38 @@ mod tests {
                 "faults": ["coordinator-crash:at=0"]}"#
         )
         .is_err());
+    }
+
+    #[test]
+    fn par_rounds_and_history_knobs_round_trip() {
+        let c = ExperimentConfig::from_json(
+            r#"{"hierarchical": true, "par_rounds": true,
+                "history_every": 10, "history_csv": "/tmp/curve.csv"}"#,
+        )
+        .unwrap();
+        assert!(c.par_rounds);
+        assert_eq!(c.history_every, 10);
+        assert_eq!(c.history_csv.as_deref(), Some("/tmp/curve.csv"));
+        let j = c.to_json().to_string();
+        assert!(j.contains("\"par_rounds\":true"), "{j}");
+        assert!(j.contains("\"history_every\":10"), "{j}");
+        let back = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(back.par_rounds, c.par_rounds);
+        assert_eq!(back.history_every, c.history_every);
+        assert_eq!(back.history_csv, c.history_csv);
+        // par_rounds requires the hierarchical topology
+        assert!(ExperimentConfig::from_json(r#"{"par_rounds": true}"#).is_err());
+        // ...and rejects the not-yet-supported combinations
+        assert!(ExperimentConfig::from_json(
+            r#"{"hierarchical": true, "par_rounds": true, "secure_agg": true}"#
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_json(
+            r#"{"hierarchical": true, "par_rounds": true, "rounds": 10,
+                "faults": ["gateway-down:cloud=1,at=round3"]}"#
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_json(r#"{"history_every": 0}"#).is_err());
     }
 
     #[test]

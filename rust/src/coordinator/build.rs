@@ -1,5 +1,8 @@
 //! Coordinator construction and shared round machinery.
 
+use std::fs::File;
+use std::io::{BufWriter, Write as _};
+
 use anyhow::{Context, Result};
 
 use crate::aggregation::{self, Aggregator, ClientUpdate, HierarchicalAggregator};
@@ -62,6 +65,18 @@ pub struct Coordinator<'a, B: ComputeBackend + ?Sized> {
     pub(crate) wire_bytes: u64,
     pub(crate) host_secs: f64,
     pub(crate) global_version: u64,
+    /// rounds committed so far — the loop counter. `history` may be a
+    /// subsample of them (`cfg.history_every`), so this is the round
+    /// count, not `history.len()`
+    pub(crate) rounds_done: usize,
+    /// the most recent round's record, kept even when `history_every`
+    /// thins it out of `history`
+    pub(crate) last_record: Option<RoundRecord>,
+    /// streaming metrics sink (`cfg.history_csv`): every round's curve
+    /// row is appended as the round commits, independent of thinning
+    pub(crate) history_csv: Option<BufWriter<File>>,
+    /// cumulative simulator events scheduled (events/sec diagnostics)
+    pub(crate) sim_events: u64,
     pub(crate) history: Vec<RoundRecord>,
     pub(crate) batch_size: usize,
     pub(crate) seq_len: usize,
@@ -325,6 +340,19 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
         );
         let accountant = PrivacyAccountant::new(cfg.dp);
 
+        let history_csv = match cfg.history_csv.as_deref() {
+            Some(path) => {
+                let file = File::create(path).with_context(|| {
+                    format!("creating history CSV {path:?}")
+                })?;
+                let mut w = BufWriter::new(file);
+                w.write_all(RoundRecord::CSV_HEADER.as_bytes())
+                    .context("writing history CSV header")?;
+                Some(w)
+            }
+            None => None,
+        };
+
         let mut coord = Coordinator {
             monitor,
             granularity,
@@ -352,6 +380,10 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
             wire_bytes: 0,
             host_secs: 0.0,
             global_version: 0,
+            rounds_done: 0,
+            last_record: None,
+            history_csv,
+            sim_events: 0,
             history: Vec::new(),
             batch_size,
             seq_len,
@@ -694,13 +726,41 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
     }
 
     /// Phase 1 of every synchronous round: run local training on all
-    /// workers against the current global model (sequential on the host;
-    /// the caller turns each `compute_secs` into a completion event).
+    /// workers against the current global model. When the backend offers
+    /// a [`ComputeBackend::sync_view`] the workers train on host threads
+    /// (`CROSSFED_THREADS`); each worker owns its RNG streams and reads
+    /// a shared `&global`, so the results are bit-identical to the
+    /// serial path in any thread count (host_secs is summed in worker
+    /// order afterwards). Thread-affine backends (PJRT) return `None`
+    /// and stay on the serial loop.
     pub(crate) fn train_all_workers(
         &mut self,
         step_counts: &[usize],
     ) -> Result<Vec<LocalRound>> {
         let kind = self.cfg.aggregation.update_kind();
+        if let Some(sv) = self.backend.sync_view() {
+            let global = &self.global;
+            let (lr, secs, dp) =
+                (self.cfg.local_lr, self.cfg.base_step_secs, &self.cfg.dp);
+            let mut out: Vec<Option<Result<LocalRound>>> =
+                (0..self.workers.len()).map(|_| None).collect();
+            let items: Vec<(usize, &mut CloudWorker, &mut Option<Result<LocalRound>>)> =
+                self.workers.iter_mut().zip(out.iter_mut()).enumerate()
+                    .map(|(i, (w, slot))| (i, w, slot))
+                    .collect();
+            crate::util::par::run_items(items, |(i, w, slot)| {
+                *slot = Some(w.local_round(
+                    sv, global, kind, step_counts[i], lr, secs, dp,
+                ));
+            });
+            let mut locals = Vec::with_capacity(out.len());
+            for slot in out {
+                let r = slot.expect("every worker trained")?;
+                self.host_secs += r.host_secs;
+                locals.push(r);
+            }
+            return Ok(locals);
+        }
         let mut locals = Vec::with_capacity(self.workers.len());
         for w in 0..self.workers.len() {
             let r = self.workers[w].local_round(
@@ -770,6 +830,27 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
             cost,
             cum_cost_usd: self.cost_ledger.cumulative().total_usd(),
         })
+    }
+
+    /// Commit one finished round's record through the metrics sink:
+    /// stream its CSV row when `cfg.history_csv` is set (every round,
+    /// regardless of thinning), keep it as `last_record`, retain it in
+    /// `history` on the `cfg.history_every` schedule, and advance the
+    /// round counter. Every scheduler (and the WAL replay) routes each
+    /// round through here exactly once.
+    pub(crate) fn commit_round(&mut self, record: RoundRecord) -> Result<()> {
+        if let Some(w) = self.history_csv.as_mut() {
+            writeln!(w, "{}", record.csv_row())
+                .context("writing history CSV row")?;
+        }
+        if record.round % self.cfg.history_every == 0 {
+            self.last_record = Some(record.clone());
+            self.history.push(record);
+        } else {
+            self.last_record = Some(record);
+        }
+        self.rounds_done += 1;
+        Ok(())
     }
 
     /// Price everything since the last observation (round boundary):
@@ -853,6 +934,12 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
         self.sim_secs
     }
 
+    /// Simulator events processed so far (transfer hops, barriers,
+    /// broadcast completions) — the events/sec throughput numerator.
+    pub fn sim_events(&self) -> u64 {
+        self.sim_events
+    }
+
     /// Total wire bytes so far.
     pub fn wire_bytes(&self) -> u64 {
         self.wire_bytes
@@ -888,7 +975,7 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
     pub fn checkpoint(&self) -> crate::checkpoint::Checkpoint {
         crate::checkpoint::Checkpoint {
             params: self.global.clone(),
-            round: self.history.len(),
+            round: self.rounds_done,
             global_version: self.global_version,
             sim_secs: self.sim_secs,
             wire_bytes: self.wire_bytes,
@@ -919,7 +1006,7 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
     pub fn run(&mut self) -> Result<RunResult> {
         if self.wal.is_none()
             && self.cfg.wal_dir.is_some()
-            && self.history.is_empty()
+            && self.rounds_done == 0
         {
             self.attach_wal()?;
         }
@@ -931,16 +1018,19 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
     }
 
     pub(crate) fn finish(&mut self, reached_target: bool) -> Result<RunResult> {
+        if let Some(w) = self.history_csv.as_mut() {
+            w.flush().context("flushing history CSV")?;
+        }
         let (eval_loss, eval_acc) = self.evaluate()?;
         let final_train = self
-            .history
-            .last()
+            .last_record
+            .as_ref()
             .map(|r| r.train_loss)
             .unwrap_or(f32::NAN);
         Ok(RunResult {
             name: self.cfg.name.clone(),
             history: self.history.clone(),
-            rounds_run: self.history.len(),
+            rounds_run: self.rounds_done,
             sim_secs: self.sim_secs,
             wire_bytes: self.wire_bytes,
             wire_bytes_class: [

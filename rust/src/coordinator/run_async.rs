@@ -51,11 +51,11 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
                 engine.at(at, worker);
             }
             pending = snap.pending;
-            aggs = self.history.len() * n;
+            aggs = self.rounds_done * n;
             if aggs < total_aggs {
                 // faults due at the pseudo-round the crash interrupted
                 // (the crash event itself was stripped on resume)
-                self.apply_faults(self.history.len())?;
+                self.apply_faults(self.rounds_done)?;
             }
         } else {
             engine = EventEngine::new(self.sim_secs);
@@ -177,7 +177,7 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
                 let platform_secs =
                     std::mem::replace(&mut round_compute, vec![0.0; n]);
                 let cost = self.cost_observe(&platform_secs);
-                self.history.push(RoundRecord {
+                let record = RoundRecord {
                     round,
                     sim_secs: self.sim_secs,
                     wire_bytes: self.wire_bytes,
@@ -189,13 +189,15 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
                     partition_gen: self.plan.generation,
                     cost,
                     cum_cost_usd: self.cost_ledger.cumulative().total_usd(),
-                });
+                };
+                let cum_cost = record.cum_cost_usd;
                 train_loss_acc = 0.0;
                 // log the pseudo-round boundary durably before acting
                 // on it; at this point every worker has a pending update
                 // and round_compute/train_loss_acc are freshly zeroed,
                 // so the queue + pending capture the full live state
-                self.wal_append_async(&engine, &pending)?;
+                self.wal_append_async(&record, &engine, &pending)?;
+                self.commit_round(record)?;
                 if let (Some(l), Some(t)) = (eval_loss, self.cfg.target_loss) {
                     if (l as f64) <= t {
                         reached = true;
@@ -203,11 +205,7 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
                     }
                 }
                 if let Some(budget) = self.cfg.target_cost {
-                    let cum = self
-                        .history
-                        .last()
-                        .map_or(0.0, |r| r.cum_cost_usd);
-                    if cum >= budget {
+                    if cum_cost >= budget {
                         log::info!(
                             "pseudo-round {round}: cost budget {budget} \
                              USD exhausted, stopping"
@@ -221,6 +219,7 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
                 }
             }
         }
+        self.sim_events += engine.scheduled_total();
         self.finish(reached)
     }
 }

@@ -230,6 +230,264 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
             }
         }
         let round_end = engine.now();
+        self.sim_events += engine.scheduled_total();
+
+        // --- phase 5: totals, monitor & adjust (Figure-2 cycle), eval
+        self.finalize_round(
+            round,
+            &locals,
+            round_start,
+            barrier_at,
+            round_end,
+            round_wire,
+        )
+    }
+
+    /// One hierarchical round with every cloud's intra-round traffic on
+    /// its own host thread (`cfg.par_rounds`). Clouds are independent
+    /// between the round barrier and the gateway legs: member uplinks
+    /// ride intra-AZ links owned by one cloud, and the gateway reduce
+    /// only reads that cloud's updates. Each parallel task draws link
+    /// jitter from its cloud's dedicated RNG stream and records byte
+    /// ledger/warmth effects into a [`WanScratch`], merged serially in
+    /// cloud order afterwards — so the result is deterministic and
+    /// thread-count-invariant (but on a different jitter stream than the
+    /// serial scheduler, which draws from the shared WAN RNG in event
+    /// order). Cross-cloud phases (partial legs, reduce, gateway
+    /// broadcast) stay serial in cloud order. `cfg.validate` keeps
+    /// secure aggregation and fault plans off this path.
+    pub(crate) fn hier_round_par(
+        &mut self,
+        round: usize,
+    ) -> Result<RoundRecord> {
+        use crate::netsim::WanScratch;
+        use crate::transport::Channel;
+        use crate::util::rng::Pcg64;
+
+        struct CloudOut {
+            partial: PartialAggregate,
+            /// when the cloud's reduce input is complete (compute +
+            /// member uplinks, gateway loopback free)
+            ready_at: f64,
+            wire: u64,
+            host: f64,
+        }
+        type Slot<T> = Option<Result<T>>;
+
+        let n = self.workers.len();
+        let clouds = self.cluster.clouds();
+        let n_clouds = clouds.len();
+        let step_counts = self.local_step_counts();
+        let round_start = self.sim_secs;
+
+        // --- phase 1: local training on every worker node
+        let locals = self.train_all_workers(&step_counts)?;
+
+        // --- phase 2: per-cloud parallel member uplinks + gateway reduce
+        let gws: Vec<usize> =
+            (0..n_clouds).map(|c| self.cluster.gateway(c)).collect();
+        let n_samples: Vec<usize> =
+            self.workers.iter().map(|w| w.n_samples).collect();
+        let mut rngs = self.wan.take_cloud_rngs();
+        let mut scratches: Vec<WanScratch> =
+            vec![WanScratch::default(); n_clouds];
+        let mut outs: Vec<Slot<CloudOut>> =
+            (0..n_clouds).map(|_| None).collect();
+        {
+            let wan = &self.wan;
+            let hier = self.hier.as_ref().expect("hier mode");
+            let locals = &locals;
+            let (gws, n_samples) = (&gws, &n_samples);
+            let mut up_refs: Vec<Option<&mut Channel>> =
+                self.up.iter_mut().map(Some).collect();
+            let mut items: Vec<(
+                usize,
+                Vec<(usize, &mut Channel)>,
+                &mut Pcg64,
+                &mut WanScratch,
+                &mut Slot<CloudOut>,
+            )> = Vec::with_capacity(n_clouds);
+            for (((c, rng), scratch), out) in (0..n_clouds)
+                .zip(rngs.iter_mut())
+                .zip(scratches.iter_mut())
+                .zip(outs.iter_mut())
+            {
+                let ups = clouds[c]
+                    .iter()
+                    .map(|&w| {
+                        (w, up_refs[w].take().expect("worker in one cloud"))
+                    })
+                    .collect();
+                items.push((c, ups, rng, scratch, out));
+            }
+            crate::util::par::run_items(items, |(c, ups, rng, scratch, out)| {
+                let task = || -> Result<CloudOut> {
+                    let gw = gws[c];
+                    let mut ready_at = round_start;
+                    let mut wire = 0u64;
+                    let mut members = Vec::with_capacity(ups.len());
+                    // worker-id order (the member list), so the reduce
+                    // and the rng draws are arrival-order-independent
+                    for (w, ch) in ups {
+                        let (delivered, secs) = if w == gw {
+                            (ch.codec_loopback(&locals[w].update)?, 0.0)
+                        } else {
+                            let d = ch.send_update_scoped(
+                                &locals[w].update,
+                                locals[w].mean_loss,
+                                n_samples[w],
+                                1.0,
+                                wan,
+                                rng,
+                                scratch,
+                            )?;
+                            wire += d.wire_bytes;
+                            (d.update, d.secs)
+                        };
+                        ready_at = ready_at
+                            .max(round_start + locals[w].compute_secs + secs);
+                        members.push(ClientUpdate {
+                            worker: w,
+                            n_samples: n_samples[w],
+                            local_loss: locals[w].mean_loss,
+                            delta: delivered,
+                            staleness: 0,
+                        });
+                    }
+                    let t0 = Instant::now();
+                    let partial = hier.reduce_cloud(c, &members);
+                    let host = t0.elapsed().as_secs_f64();
+                    Ok(CloudOut { partial, ready_at, wire, host })
+                };
+                *out = Some(task());
+            });
+        }
+        self.wan.restore_cloud_rngs(rngs);
+
+        // serial merge in cloud order: ledgers, warmth, totals
+        let mut round_wire = 0u64;
+        let mut agg_host = 0.0f64;
+        let mut partials = Vec::with_capacity(n_clouds);
+        let mut ready = Vec::with_capacity(n_clouds);
+        for (c, out) in outs.into_iter().enumerate() {
+            let o = out.expect("every cloud reduced")?;
+            self.wan.apply_scratch(&scratches[c]);
+            round_wire += o.wire;
+            agg_host += o.host;
+            partials.push(o.partial);
+            ready.push(o.ready_at);
+        }
+
+        // --- phase 3: gateway → leader legs (serial, shared WAN RNG,
+        // cloud order) and the cross-cloud reduce at the barrier
+        let mut barrier_at = round_start;
+        let mut arrived = Vec::with_capacity(n_clouds);
+        for (c, p) in partials.into_iter().enumerate() {
+            if gws[c] == self.leader {
+                let delta = self.gw_up[c].codec_loopback(&p.delta)?;
+                barrier_at = barrier_at.max(ready[c]);
+                arrived.push(PartialAggregate { delta, ..p });
+            } else {
+                let d = self.gw_up[c].send_update(
+                    &p.delta,
+                    p.mean_loss,
+                    p.n_samples,
+                    p.weight,
+                    &mut self.wan,
+                )?;
+                round_wire += d.wire_bytes;
+                barrier_at = barrier_at.max(ready[c] + d.secs);
+                arrived.push(PartialAggregate {
+                    cloud: c,
+                    n_members: p.n_members,
+                    n_samples: d.n_samples,
+                    weight: d.weight,
+                    mean_loss: d.local_loss,
+                    delta: d.update,
+                });
+            }
+        }
+        let t0 = Instant::now();
+        let hier = self.hier.as_mut().expect("hier mode");
+        hier.reduce_global(&mut self.global, &arrived);
+        self.host_secs += agg_host + t0.elapsed().as_secs_f64();
+        self.accountant.record_round();
+        self.global_version += 1;
+
+        // --- phase 4: two-stage broadcast. Leader → gateways stays
+        // serial (shared WAN RNG, cloud order) ...
+        let mut gw_at = vec![0.0f64; n_clouds];
+        for c in 0..n_clouds {
+            if gws[c] == self.leader {
+                gw_at[c] = barrier_at;
+            } else {
+                let (secs, wire) =
+                    self.gw_down[c].send_params(&self.global, &mut self.wan)?;
+                round_wire += wire;
+                gw_at[c] = barrier_at + secs;
+            }
+        }
+        // ... then each gateway fans out to its members in parallel
+        let mut rngs = self.wan.take_cloud_rngs();
+        let mut scratches: Vec<WanScratch> =
+            vec![WanScratch::default(); n_clouds];
+        let mut outs: Vec<Slot<(f64, u64)>> =
+            (0..n_clouds).map(|_| None).collect();
+        let mut fanout = 0u64;
+        {
+            let wan = &self.wan;
+            let global = &self.global;
+            let leader = self.leader;
+            let gw_at = &gw_at;
+            let mut down_refs: Vec<Option<&mut Channel>> =
+                self.down.iter_mut().map(Some).collect();
+            let mut items: Vec<(
+                usize,
+                Vec<&mut Channel>,
+                &mut Pcg64,
+                &mut WanScratch,
+                &mut Slot<(f64, u64)>,
+            )> = Vec::with_capacity(n_clouds);
+            for (((c, rng), scratch), out) in (0..n_clouds)
+                .zip(rngs.iter_mut())
+                .zip(scratches.iter_mut())
+                .zip(outs.iter_mut())
+            {
+                let downs: Vec<&mut Channel> = clouds[c]
+                    .iter()
+                    .filter(|&&m| m != gws[c] && m != leader)
+                    .map(|&m| down_refs[m].take().expect("one cloud"))
+                    .collect();
+                fanout += downs.len() as u64;
+                items.push((c, downs, rng, scratch, out));
+            }
+            crate::util::par::run_items(items, |(c, downs, rng, scratch, out)| {
+                let task = || -> Result<(f64, u64)> {
+                    let mut end = gw_at[c];
+                    let mut wire = 0u64;
+                    for ch in downs {
+                        let (secs, w) =
+                            ch.send_params_scoped(global, wan, rng, scratch)?;
+                        wire += w;
+                        end = end.max(gw_at[c] + secs);
+                    }
+                    Ok((end, wire))
+                };
+                *out = Some(task());
+            });
+        }
+        self.wan.restore_cloud_rngs(rngs);
+        let mut round_end = barrier_at;
+        for (c, out) in outs.into_iter().enumerate() {
+            let (end, wire) = out.expect("every cloud broadcast")?;
+            self.wan.apply_scratch(&scratches[c]);
+            round_wire += wire;
+            round_end = round_end.max(gw_at[c]).max(end);
+        }
+        // event accounting mirrors the serial engine's schedule: compute
+        // completions, gateway arrivals, partial legs, gateway broadcasts
+        // and the member fan-out
+        self.sim_events += 2 * n as u64 + 2 * n_clouds as u64 + fanout;
 
         // --- phase 5: totals, monitor & adjust (Figure-2 cycle), eval
         self.finalize_round(

@@ -30,10 +30,14 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
     /// first un-logged round.
     pub(crate) fn run_sync(&mut self) -> Result<RunResult> {
         let mut reached = false;
-        for round in self.history.len()..self.cfg.rounds {
+        for round in self.rounds_done..self.cfg.rounds {
             self.apply_faults(round)?;
             let record = if self.hier.is_some() {
-                self.hier_round(round)?
+                if self.cfg.par_rounds {
+                    self.hier_round_par(round)?
+                } else {
+                    self.hier_round(round)?
+                }
             } else {
                 self.sync_round(round)?
             };
@@ -45,10 +49,10 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
                 Some(budget) => record.cum_cost_usd >= budget,
                 None => false,
             };
-            self.history.push(record);
             // log the round before acting on it: a crash after the stop
             // decision must resume into the identical decision
-            self.wal_append_sync()?;
+            self.wal_append_sync(&record)?;
+            self.commit_round(record)?;
             if hit_loss {
                 reached = true;
                 log::info!(
@@ -154,6 +158,7 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
             debug_assert!(matches!(_ev, Ev::BcastDone(_)));
         }
         let round_end = engine.now();
+        self.sim_events += engine.scheduled_total();
 
         // --- phase 5: totals, monitor & adjust (Figure-2 cycle), eval
         self.finalize_round(

@@ -94,40 +94,39 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
         self.wal.as_ref().map(|w| w.len_bytes())
     }
 
-    /// Rounds whose records are already in the history (== the next
-    /// round index the run loop will execute).
+    /// Rounds committed so far (== the next round index the run loop
+    /// will execute). Independent of `history.len()`, which may be a
+    /// `cfg.history_every` subsample.
     pub fn rounds_completed(&self) -> usize {
-        self.history.len()
+        self.rounds_done
     }
 
-    /// Durably log the just-pushed round record (sync/hier schedulers).
-    /// No-op without an attached WAL.
-    pub(crate) fn wal_append_sync(&mut self) -> Result<()> {
-        self.wal_append_with(None)
+    /// Durably log the finished round's record (sync/hier schedulers;
+    /// called before `commit_round`). No-op without an attached WAL.
+    pub(crate) fn wal_append_sync(&mut self, record: &RoundRecord) -> Result<()> {
+        self.wal_append_with(record, None)
     }
 
-    /// Durably log the just-pushed pseudo-round record plus the async
+    /// Durably log the finished pseudo-round's record plus the async
     /// scheduler's live state (event queue + in-flight updates).
     pub(crate) fn wal_append_async(
         &mut self,
+        record: &RoundRecord,
         engine: &EventEngine<usize>,
         pending: &[Option<(ParamSet, f32, f64)>],
     ) -> Result<()> {
-        self.wal_append_with(Some((engine, pending)))
+        self.wal_append_with(record, Some((engine, pending)))
     }
 
     fn wal_append_with(
         &mut self,
+        record: &RoundRecord,
         async_state: Option<(&EventEngine<usize>, &[Option<(ParamSet, f32, f64)>])>,
     ) -> Result<()> {
         if self.wal.is_none() {
             return Ok(());
         }
-        let idx = self
-            .history
-            .len()
-            .checked_sub(1)
-            .expect("wal_append after history.push");
+        let idx = record.round;
         let bits: Vec<Vec<u32>> = self
             .global
             .leaves
@@ -168,7 +167,7 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
         w.put_f64(self.host_secs);
         // --- the round's RoundRecord (round/sim/wire reuse the fields
         // above; they are identical at the boundary by construction)
-        let rec = &self.history[idx];
+        let rec = record;
         w.put_f32(rec.train_loss);
         w.put_opt_f32(rec.eval_loss);
         w.put_opt_f64(rec.eval_acc);
@@ -551,7 +550,10 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
                 coord.wire_bytes = prefix.wire_bytes;
                 coord.host_secs = prefix.host_secs;
             }
-            coord.history.push(prefix.record);
+            // route the replayed record through the same sink a live
+            // round uses: CSV streaming, history_every thinning and the
+            // round counter all match the uninterrupted run
+            coord.commit_round(prefix.record)?;
             if i == last {
                 coord
                     .wal_apply_state(&mut r)
@@ -567,7 +569,7 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
                 .collect(),
         };
         coord.wal_prev_params = Some(bits);
-        let resume_round = coord.history.len();
+        let resume_round = coord.rounds_done;
         // the crash that stopped the run (and any earlier one) must not
         // fire again; every other past fault's *effect* was restored from
         // the log, and faults due at resume_round replay normally

@@ -34,6 +34,28 @@ pub struct RoundRecord {
     pub cum_cost_usd: f64,
 }
 
+impl RoundRecord {
+    /// Header line of the curve CSV ([`RoundRecord::csv_row`] columns).
+    pub const CSV_HEADER: &'static str =
+        "round,sim_hours,comm_gb,cost_usd,train_loss,eval_loss,eval_acc\n";
+
+    /// One curve-CSV row (no trailing newline) — shared by
+    /// [`RunResult::curve_csv`] and the coordinator's streaming metrics
+    /// sink, so a streamed curve is byte-identical to a post-hoc one.
+    pub fn csv_row(&self) -> String {
+        format!(
+            "{},{:.4},{:.4},{:.4},{:.4},{},{}",
+            self.round,
+            self.sim_secs / 3600.0,
+            self.wire_bytes as f64 / 1e9,
+            self.cum_cost_usd,
+            self.train_loss,
+            self.eval_loss.map_or(String::new(), |x| format!("{x:.4}")),
+            self.eval_acc.map_or(String::new(), |x| format!("{x:.4}")),
+        )
+    }
+}
+
 /// Aggregate outcome of a run.
 #[derive(Clone, Debug)]
 pub struct RunResult {
@@ -92,21 +114,9 @@ impl RunResult {
     /// Loss/accuracy/cost curve as CSV (round, sim_hours, comm_gb,
     /// cost_usd, train_loss, eval_loss, eval_acc) — the figure series.
     pub fn curve_csv(&self) -> String {
-        let mut s = String::from(
-            "round,sim_hours,comm_gb,cost_usd,train_loss,eval_loss,eval_acc\n",
-        );
+        let mut s = String::from(RoundRecord::CSV_HEADER);
         for r in &self.history {
-            let _ = writeln!(
-                s,
-                "{},{:.4},{:.4},{:.4},{:.4},{},{}",
-                r.round,
-                r.sim_secs / 3600.0,
-                r.wire_bytes as f64 / 1e9,
-                r.cum_cost_usd,
-                r.train_loss,
-                r.eval_loss.map_or(String::new(), |x| format!("{x:.4}")),
-                r.eval_acc.map_or(String::new(), |x| format!("{x:.4}")),
-            );
+            let _ = writeln!(s, "{}", r.csv_row());
         }
         s
     }

@@ -15,4 +15,4 @@ mod topology;
 pub use faults::{FaultEvent, FaultPlan};
 pub use link::{Link, TransferStats, MSS_BYTES};
 pub use protocol::Protocol;
-pub use topology::{LinkClass, NetError, Wan};
+pub use topology::{LinkClass, NetError, Wan, WanScratch};

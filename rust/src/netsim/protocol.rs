@@ -35,6 +35,15 @@ impl Protocol {
         }
     }
 
+    /// Dense index (0..3) — used for per-protocol bitmasks and tables.
+    pub fn index(&self) -> usize {
+        match self {
+            Protocol::Tcp => 0,
+            Protocol::Grpc => 1,
+            Protocol::Quic => 2,
+        }
+    }
+
     pub fn parse(s: &str) -> Option<Protocol> {
         match s.to_ascii_lowercase().as_str() {
             "tcp" => Some(Protocol::Tcp),

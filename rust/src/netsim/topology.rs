@@ -19,8 +19,18 @@
 //! per hop, store-and-forward. The per-link byte ledger therefore tells
 //! exactly how many bytes crossed each class of link — the measurement
 //! behind the hierarchical-vs-star comparison.
+//!
+//! Storage is CSR-style indexed adjacency: per-node sorted neighbor rows
+//! over parallel edge arrays (link spec, byte ledger, per-protocol
+//! warmth bitmask). A hop is a binary search in one row plus array
+//! loads — no hashing — and a planet-scale mesh (millions of directed
+//! intra-cloud edges) stays cache-resident. A link's class is a pure
+//! function of the endpoint clouds' (construction-time) regions, so no
+//! per-pair class table is needed; bytes that crossed since-torn-down
+//! links (gateway re-election) move to a small `retired` map so every
+//! ledger query stays exact across failovers.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 
 use crate::cluster::ClusterSpec;
 use crate::netsim::link::{Link, TransferStats};
@@ -82,60 +92,180 @@ impl LinkClass {
     }
 }
 
+/// One directed edge for [`Wan::rebuild`]: `(src, dst, link, ledgered
+/// bytes, warm-protocol bitmask)`.
+type EdgeRec = (usize, usize, Link, u64, u8);
+
+/// Deferred warmth + ledger effects of read-only
+/// [`Wan::transfer_scoped`] calls, merged back serially with
+/// [`Wan::apply_scratch`]. This is what lets independent clouds
+/// simulate their intra-cloud legs on separate threads against a shared
+/// `&Wan` without locking: each thread owns its scratch (and its own
+/// noise RNG stream), and the merge runs in fixed cloud order, so every
+/// ledger stays bit-identical at any thread count.
+#[derive(Clone, Debug, Default)]
+pub struct WanScratch {
+    /// (src, dst, warm bits newly set, wire bytes) per touched edge
+    touched: Vec<(usize, usize, u8, u64)>,
+}
+
 /// Directed routed WAN with connection-warmth tracking and per-link
 /// byte accounting.
 #[derive(Clone, Debug)]
 pub struct Wan {
     n: usize,
-    /// links[(src, dst)]
-    links: HashMap<(usize, usize), Link>,
-    /// link class per (src, dst). Grows monotonically: entries survive a
-    /// link's removal (gateway re-election) so the per-class byte ledger
-    /// keeps counting bytes that crossed a since-torn-down link. A pair's
-    /// class can never change — mesh links connect gateways of different
-    /// clouds, intra-AZ links members of one cloud — so stale entries are
-    /// always accurate. Liveness is `links`' job, not this map's.
-    classes: HashMap<(usize, usize), LinkClass>,
     /// owning cloud per node (identity for flat meshes)
     cloud_of: Vec<usize>,
+    /// interned region id per cloud, captured at construction from each
+    /// cloud's gateway platform. A pair's [`LinkClass`] is a pure
+    /// function of `cloud_of` + this table (same cloud → intra-AZ, same
+    /// region → intra-region, else inter-region) and can never change —
+    /// members of a cloud share the original gateway's region — so the
+    /// per-class byte ledger keeps counting bytes that crossed a
+    /// since-torn-down link across gateway re-elections.
+    region_of: Vec<u32>,
     /// gateway node per cloud
     gateways: Vec<usize>,
     /// nodes whose WAN egress has failed ([`Wan::fail_node`]): their
     /// non-intra-AZ links are dead and routes refuse to transit them
     down: Vec<bool>,
-    /// protocol connections already established (src, dst, proto)
-    warm: HashMap<(usize, usize, Protocol), bool>,
-    /// cumulative wire bytes per (src, dst)
-    ledger: HashMap<(usize, usize), u64>,
+    /// CSR row offsets into `col`/`links`/`edge_bytes`/`warm`; len n+1
+    row_start: Vec<u32>,
+    /// neighbor node per directed edge, sorted within each row
+    col: Vec<u32>,
+    /// link spec per directed edge (fault-mutable: degradations)
+    links: Vec<Link>,
+    /// cumulative wire bytes per live directed edge
+    edge_bytes: Vec<u64>,
+    /// warm-connection bitmask per edge, bit = `1 << Protocol::index()`
+    warm: Vec<u8>,
+    /// bytes that crossed links later torn down by re-election, keyed
+    /// (src, dst) — keeps [`Wan::wire_bytes`] exact after failovers
+    retired: BTreeMap<(usize, usize), u64>,
+    /// authoritative cumulative wire bytes per (source cloud, class):
+    /// incremented at transfer time, never recomputed by scanning edges
+    by_cloud_class: Vec<[u64; 3]>,
     rng: Pcg64,
+    /// per-cloud noise RNG streams for the parallel hierarchical round
+    /// ([`Wan::transfer_scoped`]); unused (and untouched) otherwise
+    cloud_rngs: Vec<Pcg64>,
 }
 
 impl Wan {
+    fn empty(
+        n: usize,
+        cloud_of: Vec<usize>,
+        region_of: Vec<u32>,
+        gateways: Vec<usize>,
+        seed: u64,
+    ) -> Wan {
+        let n_clouds = gateways.len();
+        let cloud_rngs = (0..n_clouds)
+            .map(|c| Pcg64::new(seed, WAN_STREAM ^ ((c as u64 + 1) << 24)))
+            .collect();
+        Wan {
+            n,
+            cloud_of,
+            region_of,
+            gateways,
+            down: vec![false; n],
+            row_start: vec![0; n + 1],
+            col: Vec::new(),
+            links: Vec::new(),
+            edge_bytes: Vec::new(),
+            warm: Vec::new(),
+            retired: BTreeMap::new(),
+            by_cloud_class: vec![[0u64; 3]; n_clouds],
+            rng: Pcg64::new(seed, WAN_STREAM),
+            cloud_rngs,
+        }
+    }
+
+    /// Replace the adjacency with `edges` (sorted here; ledgered bytes
+    /// and warmth carry per edge record).
+    fn rebuild(&mut self, mut edges: Vec<EdgeRec>) {
+        assert!(
+            u32::try_from(edges.len()).is_ok(),
+            "edge count fits in u32"
+        );
+        edges.sort_unstable_by_key(|&(s, d, ..)| (s, d));
+        self.row_start.clear();
+        self.col.clear();
+        self.links.clear();
+        self.edge_bytes.clear();
+        self.warm.clear();
+        self.row_start.reserve(self.n + 1);
+        self.col.reserve(edges.len());
+        self.links.reserve(edges.len());
+        self.edge_bytes.reserve(edges.len());
+        self.warm.reserve(edges.len());
+        let mut row = 0usize;
+        self.row_start.push(0);
+        for (s, d, link, bytes, warm) in edges {
+            debug_assert!(s < self.n && d < self.n && s != d);
+            while row < s {
+                row += 1;
+                self.row_start.push(self.col.len() as u32);
+            }
+            self.col.push(d as u32);
+            self.links.push(link);
+            self.edge_bytes.push(bytes);
+            self.warm.push(warm);
+        }
+        while row < self.n {
+            row += 1;
+            self.row_start.push(self.col.len() as u32);
+        }
+    }
+
+    /// Dense edge index of the directed link (src, dst), if present:
+    /// one binary search in `src`'s neighbor row.
+    fn edge_index(&self, src: usize, dst: usize) -> Option<usize> {
+        if src >= self.n || dst >= self.n {
+            return None;
+        }
+        let lo = self.row_start[src] as usize;
+        let hi = self.row_start[src + 1] as usize;
+        self.col[lo..hi]
+            .binary_search(&(dst as u32))
+            .ok()
+            .map(|i| lo + i)
+    }
+
+    /// Class of the (src, dst) pair — pure function of clouds/regions,
+    /// independent of whether a link currently exists.
+    fn class_of(&self, src: usize, dst: usize) -> LinkClass {
+        let (cs, cd) = (self.cloud_of[src], self.cloud_of[dst]);
+        if cs == cd {
+            LinkClass::IntraAz
+        } else if self.region_of[cs] == self.region_of[cd] {
+            LinkClass::IntraRegion
+        } else {
+            LinkClass::InterRegion
+        }
+    }
+
     /// Uniform mesh: every pair gets the same link spec (class
     /// [`LinkClass::InterRegion`]); every node is its own cloud, so all
     /// routes are single-hop.
     pub fn uniform(n: usize, link: Link, seed: u64) -> Wan {
-        let mut links = HashMap::new();
-        let mut classes = HashMap::new();
+        let mut wan = Wan::empty(
+            n,
+            (0..n).collect(),
+            (0..n as u32).collect(), // distinct region per cloud
+            (0..n).collect(),
+            seed,
+        );
+        let mut edges = Vec::with_capacity(n.saturating_sub(1) * n);
         for s in 0..n {
             for d in 0..n {
                 if s != d {
-                    links.insert((s, d), link.clone());
-                    classes.insert((s, d), LinkClass::InterRegion);
+                    edges.push((s, d, link.clone(), 0, 0));
                 }
             }
         }
-        Wan {
-            n,
-            links,
-            classes,
-            cloud_of: (0..n).collect(),
-            gateways: (0..n).collect(),
-            down: vec![false; n],
-            warm: HashMap::new(),
-            ledger: HashMap::new(),
-            rng: Pcg64::new(seed, WAN_STREAM),
-        }
+        wan.rebuild(edges);
+        wan
     }
 
     /// Link presets per class (bandwidth bps, rtt s, jitter, loss).
@@ -175,19 +305,29 @@ impl Wan {
         let cloud_of: Vec<usize> = (0..n).map(|i| cluster.cloud_of(i)).collect();
         let n_clouds = cluster.n_clouds();
         let gateways: Vec<usize> = (0..n_clouds).map(|c| cluster.gateway(c)).collect();
+        // intern each cloud's (gateway) region to a dense id
+        let mut region_ids: HashMap<&str, u32> = HashMap::new();
+        let region_of: Vec<u32> = (0..n_clouds)
+            .map(|c| {
+                let r = cluster.platforms[gateways[c]].region.as_str();
+                let next = region_ids.len() as u32;
+                *region_ids.entry(r).or_insert(next)
+            })
+            .collect();
 
-        let mut links = HashMap::new();
-        let mut classes = HashMap::new();
-        let mut add = |s: usize, d: usize, class: LinkClass| {
-            links.insert((s, d), Wan::class_link(class));
-            classes.insert((s, d), class);
-        };
-
+        let mut members: Vec<Vec<usize>> = vec![Vec::new(); n_clouds];
+        for i in 0..n {
+            members[cloud_of[i]].push(i);
+        }
+        let mut wan = Wan::empty(n, cloud_of, region_of, gateways, seed);
+        let mut edges: Vec<EdgeRec> = Vec::new();
         // intra-cloud mesh
-        for s in 0..n {
-            for d in 0..n {
-                if s != d && cloud_of[s] == cloud_of[d] {
-                    add(s, d, LinkClass::IntraAz);
+        for mem in &members {
+            for &s in mem {
+                for &d in mem {
+                    if s != d {
+                        edges.push((s, d, Wan::class_link(LinkClass::IntraAz), 0, 0));
+                    }
                 }
             }
         }
@@ -197,29 +337,13 @@ impl Wan {
                 if a == b {
                     continue;
                 }
-                let (ga, gb) = (gateways[a], gateways[b]);
-                let same_region = cluster.platforms[ga].region
-                    == cluster.platforms[gb].region;
-                let class = if same_region {
-                    LinkClass::IntraRegion
-                } else {
-                    LinkClass::InterRegion
-                };
-                add(ga, gb, class);
+                let (ga, gb) = (wan.gateways[a], wan.gateways[b]);
+                let class = wan.class_of(ga, gb);
+                edges.push((ga, gb, Wan::class_link(class), 0, 0));
             }
         }
-
-        Wan {
-            n,
-            links,
-            classes,
-            cloud_of,
-            gateways,
-            down: vec![false; n],
-            warm: HashMap::new(),
-            ledger: HashMap::new(),
-            rng: Pcg64::new(seed, WAN_STREAM),
-        }
+        wan.rebuild(edges);
+        wan
     }
 
     pub fn n(&self) -> usize {
@@ -228,19 +352,16 @@ impl Wan {
 
     /// Mutable access for ablations (e.g. degrade one link mid-run).
     pub fn link_mut(&mut self, src: usize, dst: usize) -> Option<&mut Link> {
-        self.links.get_mut(&(src, dst))
+        self.edge_index(src, dst).map(|e| &mut self.links[e])
     }
 
     pub fn link(&self, src: usize, dst: usize) -> Option<&Link> {
-        self.links.get(&(src, dst))
+        self.edge_index(src, dst).map(|e| &self.links[e])
     }
 
     /// Class of the direct link (src, dst), if one currently exists.
     pub fn link_class(&self, src: usize, dst: usize) -> Option<LinkClass> {
-        if !self.links.contains_key(&(src, dst)) {
-            return None;
-        }
-        self.classes.get(&(src, dst)).copied()
+        self.edge_index(src, dst).map(|_| self.class_of(src, dst))
     }
 
     /// Whether the direct link (src, dst) exists and is in service.
@@ -277,7 +398,7 @@ impl Wan {
             hops.push((gd, dst));
         }
         for &(a, b) in &hops {
-            if !self.links.contains_key(&(a, b)) {
+            if self.edge_index(a, b).is_none() {
                 return Err(NetError::MissingLink { src, dst, a, b });
             }
             if !self.link_up(a, b) {
@@ -320,22 +441,86 @@ impl Wan {
         protocol: Protocol,
         streams: usize,
     ) -> Result<TransferStats, NetError> {
-        let link = match self.links.get(&(src, dst)) {
-            Some(l) => l.clone(),
-            None => {
-                return Err(NetError::MissingLink { src, dst, a: src, b: dst })
-            }
+        let e = match self.edge_index(src, dst) {
+            Some(e) => e,
+            None => return Err(NetError::MissingLink { src, dst, a: src, b: dst }),
         };
         if !self.link_up(src, dst) {
             let node = if self.down[src] { src } else { dst };
             return Err(NetError::NodeDown { node });
         }
-        let warm = *self.warm.get(&(src, dst, protocol)).unwrap_or(&false);
+        let bit = 1u8 << protocol.index();
+        let warm = self.warm[e] & bit != 0;
         let stats =
-            link.transfer(payload_bytes, protocol, warm, streams, &mut self.rng);
-        self.warm.insert((src, dst, protocol), true);
-        *self.ledger.entry((src, dst)).or_insert(0) += stats.wire_bytes;
+            self.links[e].transfer(payload_bytes, protocol, warm, streams, &mut self.rng);
+        self.warm[e] |= bit;
+        self.edge_bytes[e] += stats.wire_bytes;
+        let class = self.class_of(src, dst);
+        self.by_cloud_class[self.cloud_of[src]][class.index()] += stats.wire_bytes;
         Ok(stats)
+    }
+
+    /// Read-only variant of [`Wan::transfer`] for the parallel
+    /// hierarchical round: noise comes from the caller's `rng` (one
+    /// per-cloud stream) and warmth/ledger effects land in `scratch`
+    /// instead of `self`, so independent clouds can run concurrently
+    /// against a shared `&Wan`. Warmth established earlier in the same
+    /// scratch is honored (second transfer over a hop is warm).
+    pub(crate) fn transfer_scoped(
+        &self,
+        src: usize,
+        dst: usize,
+        payload_bytes: u64,
+        protocol: Protocol,
+        streams: usize,
+        rng: &mut Pcg64,
+        scratch: &mut WanScratch,
+    ) -> Result<TransferStats, NetError> {
+        assert!(src != dst, "loopback transfers are free; don't simulate them");
+        let hops = self.route(src, dst)?;
+        let mut total = TransferStats { time_s: 0.0, wire_bytes: 0, handshake_s: 0.0 };
+        let bit = 1u8 << protocol.index();
+        for (s, d) in hops {
+            let e = self.edge_index(s, d).expect("routed hop has a live link");
+            let at = scratch.touched.iter().position(|t| t.0 == s && t.1 == d);
+            let warm = self.warm[e] & bit != 0
+                || at.is_some_and(|i| scratch.touched[i].2 & bit != 0);
+            let st = self.links[e].transfer(payload_bytes, protocol, warm, streams, rng);
+            match at {
+                Some(i) => {
+                    scratch.touched[i].2 |= bit;
+                    scratch.touched[i].3 += st.wire_bytes;
+                }
+                None => scratch.touched.push((s, d, bit, st.wire_bytes)),
+            }
+            total.time_s += st.time_s;
+            total.wire_bytes += st.wire_bytes;
+            total.handshake_s += st.handshake_s;
+        }
+        Ok(total)
+    }
+
+    /// Fold a [`WanScratch`] back into warmth + ledgers. Call serially,
+    /// in fixed cloud order, after the parallel phase joins.
+    pub(crate) fn apply_scratch(&mut self, scratch: &WanScratch) {
+        for &(s, d, bits, bytes) in &scratch.touched {
+            let e = self.edge_index(s, d).expect("scratch edge has a live link");
+            self.warm[e] |= bits;
+            self.edge_bytes[e] += bytes;
+            let class = self.class_of(s, d);
+            self.by_cloud_class[self.cloud_of[s]][class.index()] += bytes;
+        }
+    }
+
+    /// Move the per-cloud noise RNG streams out (parallel round phase);
+    /// pair with [`Wan::restore_cloud_rngs`].
+    pub(crate) fn take_cloud_rngs(&mut self) -> Vec<Pcg64> {
+        std::mem::take(&mut self.cloud_rngs)
+    }
+
+    /// Put the per-cloud noise RNG streams back after a parallel phase.
+    pub(crate) fn restore_cloud_rngs(&mut self, rngs: Vec<Pcg64>) {
+        self.cloud_rngs = rngs;
     }
 
     /// Fail `node`'s WAN egress: its non-intra-AZ links go out of
@@ -347,7 +532,16 @@ impl Wan {
     pub fn fail_node(&mut self, node: usize) {
         assert!(node < self.n);
         self.down[node] = true;
-        self.warm.retain(|&(s, d, _), _| s != node && d != node);
+        let (lo, hi) = (self.row_start[node] as usize, self.row_start[node + 1] as usize);
+        for e in lo..hi {
+            self.warm[e] = 0;
+            // adjacency is symmetric by construction: cool the reverse
+            // edge too
+            let d = self.col[e] as usize;
+            if let Some(re) = self.edge_index(d, node) {
+                self.warm[re] = 0;
+            }
+        }
     }
 
     /// Bring `node`'s WAN egress back (connections stay cold until
@@ -372,7 +566,9 @@ impl Wan {
     /// the same class to every other cloud's gateway (all members of a
     /// cloud share a region, so the class carries over). All warm
     /// connections are dropped — failover forces cold handshakes, which
-    /// is exactly the cost a real re-election pays.
+    /// is exactly the cost a real re-election pays. Bytes that crossed
+    /// the torn-down mesh move to the `retired` ledger so per-pair and
+    /// per-class queries stay exact.
     pub fn reelect_gateway(&mut self, cloud: usize, new_gw: usize) {
         assert!(new_gw < self.n, "gateway {new_gw} out of range");
         assert_eq!(
@@ -383,29 +579,40 @@ impl Wan {
         if old == new_gw {
             return;
         }
-        let peer_gateways: Vec<usize> = self
-            .gateways
-            .iter()
-            .enumerate()
-            .filter(|&(c, _)| c != cloud)
-            .map(|(_, &g)| g)
-            .collect();
-        for g in peer_gateways {
-            // class entries are kept (the per-class ledger still counts
-            // bytes that crossed the old mesh); only the links go away
-            let class = *self
-                .classes
-                .get(&(old, g))
-                .expect("gateway mesh link must exist");
-            self.links.remove(&(old, g));
-            self.links.remove(&(g, old));
-            self.links.insert((new_gw, g), Wan::class_link(class));
-            self.links.insert((g, new_gw), Wan::class_link(class));
-            self.classes.insert((new_gw, g), class);
-            self.classes.insert((g, new_gw), class);
+        let mut removed: Vec<(usize, usize)> = Vec::new();
+        for (c, &g) in self.gateways.iter().enumerate() {
+            if c != cloud {
+                self.edge_index(old, g).expect("gateway mesh link must exist");
+                removed.push((old, g));
+                removed.push((g, old));
+            }
         }
+        let mut edges: Vec<EdgeRec> = Vec::with_capacity(self.col.len());
+        for s in 0..self.n {
+            let (lo, hi) = (self.row_start[s] as usize, self.row_start[s + 1] as usize);
+            for e in lo..hi {
+                let d = self.col[e] as usize;
+                if removed.contains(&(s, d)) {
+                    // per-pair + per-class ledgers still count bytes
+                    // that crossed the old mesh
+                    if self.edge_bytes[e] > 0 {
+                        *self.retired.entry((s, d)).or_insert(0) += self.edge_bytes[e];
+                    }
+                    continue;
+                }
+                // re-election drops all warmth (cold handshakes)
+                edges.push((s, d, self.links[e].clone(), self.edge_bytes[e], 0));
+            }
+        }
+        for (c, &g) in self.gateways.iter().enumerate() {
+            if c != cloud {
+                let class = self.class_of(new_gw, g);
+                edges.push((new_gw, g, Wan::class_link(class), 0, 0));
+                edges.push((g, new_gw, Wan::class_link(class), 0, 0));
+            }
+        }
+        self.rebuild(edges);
         self.gateways[cloud] = new_gw;
-        self.reset_connections();
     }
 
     /// Multiply the bandwidth of the directed link (src, dst) by
@@ -417,9 +624,9 @@ impl Wan {
         factor: f64,
     ) -> Result<(), NetError> {
         assert!(factor > 0.0 && factor.is_finite(), "bad degrade factor {factor}");
-        match self.links.get_mut(&(src, dst)) {
-            Some(l) => {
-                l.bandwidth_bps *= factor;
+        match self.edge_index(src, dst) {
+            Some(e) => {
+                self.links[e].bandwidth_bps *= factor;
                 Ok(())
             }
             None => Err(NetError::MissingLink { src, dst, a: src, b: dst }),
@@ -428,27 +635,25 @@ impl Wan {
 
     /// Drop all warm connections (e.g. after a simulated failure).
     pub fn reset_connections(&mut self) {
-        self.warm.clear();
+        self.warm.fill(0);
     }
 
     /// Total bytes that crossed any link.
     pub fn total_wire_bytes(&self) -> u64 {
-        self.ledger.values().sum()
+        self.by_cloud_class.iter().flatten().sum()
     }
 
-    /// Bytes sent from `src` to `dst` so far (direct link only).
+    /// Bytes sent from `src` to `dst` so far (direct link only),
+    /// including bytes over a since-torn-down link of that pair.
     pub fn wire_bytes(&self, src: usize, dst: usize) -> u64 {
-        *self.ledger.get(&(src, dst)).unwrap_or(&0)
+        let live = self.edge_index(src, dst).map_or(0, |e| self.edge_bytes[e]);
+        live + self.retired.get(&(src, dst)).copied().unwrap_or(0)
     }
 
     /// Total bytes that crossed links of `class` — e.g. how much update
     /// traffic actually paid the inter-region WAN.
     pub fn wire_bytes_class(&self, class: LinkClass) -> u64 {
-        self.ledger
-            .iter()
-            .filter(|(k, _)| self.classes.get(k) == Some(&class))
-            .map(|(_, v)| v)
-            .sum()
+        self.by_cloud_class.iter().map(|row| row[class.index()]).sum()
     }
 
     /// Convenience: bytes over [`LinkClass::InterRegion`] links.
@@ -459,52 +664,40 @@ impl Wan {
     /// Cumulative wire bytes split by (source cloud, link class) —
     /// `out[cloud][class.index()]`. This is the measurement a cloud bill
     /// is computed from: egress is billed to the cloud the bytes *leave*.
-    /// Sums are u64 (order-independent), so the split is identical no
-    /// matter how the ledger's hash map iterates.
+    /// Maintained incrementally at transfer time (u64 sums, so the split
+    /// is identical no matter what order transfers land in).
     pub fn wire_bytes_by_cloud_class(&self) -> Vec<[u64; 3]> {
-        let n_clouds =
-            self.cloud_of.iter().map(|&c| c + 1).max().unwrap_or(0);
-        let mut out = vec![[0u64; 3]; n_clouds];
-        for (&(s, d), &bytes) in &self.ledger {
-            let class = self
-                .classes
-                .get(&(s, d))
-                .expect("ledgered link has a recorded class");
-            out[self.cloud_of[s]][class.index()] += bytes;
-        }
-        out
+        self.by_cloud_class.clone()
     }
 
     /// Zero the ledger (per-round accounting).
     pub fn reset_ledger(&mut self) {
-        self.ledger.clear();
+        self.edge_bytes.fill(0);
+        self.retired.clear();
+        self.by_cloud_class.fill([0; 3]);
     }
 
-    /// Snapshot the WAN's run state for the WAL: links (fault-mutable —
-    /// degradations and re-elections change them), class map, gateways,
-    /// down flags, warm connections, the byte ledger and the noise RNG.
-    /// Maps are walked in sorted key order so the encoding is identical
-    /// across runs regardless of hash-map iteration order.
+    /// Snapshot the WAN's run state for the WAL: every directed edge
+    /// (link spec is fault-mutable — degradations and re-elections
+    /// change it) with its ledgered bytes and warm-protocol bits, plus
+    /// gateways, down flags, the retired ledger, the per-cloud-class
+    /// split and every noise RNG stream. Edges are walked in CSR (sorted
+    /// key) order so the encoding is identical across runs.
     pub fn wal_encode(&self, w: &mut crate::wal::ByteWriter) {
-        let mut links: Vec<(&(usize, usize), &Link)> = self.links.iter().collect();
-        links.sort_by_key(|(&k, _)| k);
-        w.put_usize(links.len());
-        for (&(s, d), l) in links {
-            w.put_usize(s);
-            w.put_usize(d);
-            w.put_f64(l.bandwidth_bps);
-            w.put_f64(l.rtt_s);
-            w.put_f64(l.jitter);
-            w.put_f64(l.loss_rate);
-        }
-        let mut classes: Vec<(&(usize, usize), &LinkClass)> =
-            self.classes.iter().collect();
-        classes.sort_by_key(|(&k, _)| k);
-        w.put_usize(classes.len());
-        for (&(s, d), c) in classes {
-            w.put_usize(s);
-            w.put_usize(d);
-            w.put_u8(c.index() as u8);
+        w.put_usize(self.col.len());
+        for s in 0..self.n {
+            let (lo, hi) = (self.row_start[s] as usize, self.row_start[s + 1] as usize);
+            for e in lo..hi {
+                w.put_usize(s);
+                w.put_usize(self.col[e] as usize);
+                let l = &self.links[e];
+                w.put_f64(l.bandwidth_bps);
+                w.put_f64(l.rtt_s);
+                w.put_f64(l.jitter);
+                w.put_f64(l.loss_rate);
+                w.put_u64(self.edge_bytes[e]);
+                w.put_u8(self.warm[e]);
+            }
         }
         w.put_usize(self.gateways.len());
         for &g in &self.gateways {
@@ -514,28 +707,23 @@ impl Wan {
         for &f in &self.down {
             w.put_bool(f);
         }
-        let mut warm: Vec<(usize, usize, Protocol)> = self
-            .warm
-            .iter()
-            .filter(|(_, &v)| v)
-            .map(|(&k, _)| k)
-            .collect();
-        warm.sort_by_key(|&(s, d, p)| (s, d, p.name()));
-        w.put_usize(warm.len());
-        for (s, d, p) in warm {
-            w.put_usize(s);
-            w.put_usize(d);
-            w.put_str(p.name());
-        }
-        let mut ledger: Vec<(&(usize, usize), &u64)> = self.ledger.iter().collect();
-        ledger.sort_by_key(|(&k, _)| k);
-        w.put_usize(ledger.len());
-        for (&(s, d), &bytes) in ledger {
+        w.put_usize(self.retired.len());
+        for (&(s, d), &bytes) in &self.retired {
             w.put_usize(s);
             w.put_usize(d);
             w.put_u64(bytes);
         }
+        w.put_usize(self.by_cloud_class.len());
+        for row in &self.by_cloud_class {
+            for &b in row {
+                w.put_u64(b);
+            }
+        }
         w.put_u64x4(self.rng.state_words());
+        w.put_usize(self.cloud_rngs.len());
+        for rng in &self.cloud_rngs {
+            w.put_u64x4(rng.state_words());
+        }
     }
 
     /// Restore state written by [`Wan::wal_encode`]. `self` must have
@@ -545,9 +733,9 @@ impl Wan {
         r: &mut crate::wal::ByteReader,
     ) -> anyhow::Result<()> {
         use anyhow::ensure;
-        let n_links = r.get_usize()?;
-        self.links.clear();
-        for _ in 0..n_links {
+        let n_edges = r.get_usize()?;
+        let mut edges: Vec<EdgeRec> = Vec::with_capacity(n_edges);
+        for _ in 0..n_edges {
             let s = r.get_usize()?;
             let d = r.get_usize()?;
             ensure!(s < self.n && d < self.n, "WAL WAN link ({s},{d}) out of range");
@@ -557,17 +745,11 @@ impl Wan {
                 jitter: r.get_f64()?,
                 loss_rate: r.get_f64()?,
             };
-            self.links.insert((s, d), link);
+            let bytes = r.get_u64()?;
+            let warm = r.get_u8()?;
+            edges.push((s, d, link, bytes, warm));
         }
-        let n_classes = r.get_usize()?;
-        self.classes.clear();
-        for _ in 0..n_classes {
-            let s = r.get_usize()?;
-            let d = r.get_usize()?;
-            let idx = r.get_u8()? as usize;
-            ensure!(idx < LinkClass::ALL.len(), "WAL bad link class {idx}");
-            self.classes.insert((s, d), LinkClass::ALL[idx]);
-        }
+        self.rebuild(edges);
         let n_gw = r.get_usize()?;
         ensure!(
             n_gw == self.gateways.len(),
@@ -586,26 +768,35 @@ impl Wan {
         for f in self.down.iter_mut() {
             *f = r.get_bool()?;
         }
-        let n_warm = r.get_usize()?;
-        self.warm.clear();
-        for _ in 0..n_warm {
-            let s = r.get_usize()?;
-            let d = r.get_usize()?;
-            let name = r.get_str()?;
-            let p = Protocol::parse(&name).ok_or_else(|| {
-                anyhow::anyhow!("WAL unknown protocol {name:?}")
-            })?;
-            self.warm.insert((s, d, p), true);
-        }
-        let n_ledger = r.get_usize()?;
-        self.ledger.clear();
-        for _ in 0..n_ledger {
+        let n_retired = r.get_usize()?;
+        self.retired.clear();
+        for _ in 0..n_retired {
             let s = r.get_usize()?;
             let d = r.get_usize()?;
             let bytes = r.get_u64()?;
-            self.ledger.insert((s, d), bytes);
+            self.retired.insert((s, d), bytes);
+        }
+        let n_split = r.get_usize()?;
+        ensure!(
+            n_split == self.by_cloud_class.len(),
+            "WAL WAN split has {n_split} clouds, run has {}",
+            self.by_cloud_class.len()
+        );
+        for row in self.by_cloud_class.iter_mut() {
+            for b in row.iter_mut() {
+                *b = r.get_u64()?;
+            }
         }
         self.rng = Pcg64::from_state_words(r.get_u64x4()?);
+        let n_crng = r.get_usize()?;
+        ensure!(
+            n_crng == self.cloud_rngs.len(),
+            "WAL WAN has {n_crng} cloud RNG streams, run has {}",
+            self.cloud_rngs.len()
+        );
+        for rng in self.cloud_rngs.iter_mut() {
+            *rng = Pcg64::from_state_words(r.get_u64x4()?);
+        }
         Ok(())
     }
 }
@@ -764,12 +955,14 @@ mod tests {
         // warm the dying gateway's WAN link, then fail it over
         let cold = w.transfer(2, 0, 10_000, Protocol::Grpc, 1).unwrap();
         let inter_before = w.inter_region_bytes();
+        let pair_before = w.wire_bytes(2, 0);
         assert!(inter_before >= 10_000);
         w.fail_node(2);
         w.reelect_gateway(1, 3);
         assert_eq!(w.gateway(1), 3);
-        // bytes that crossed the torn-down mesh stay in the class ledger
+        // bytes that crossed the torn-down mesh stay in the ledgers
         assert_eq!(w.inter_region_bytes(), inter_before);
+        assert_eq!(w.wire_bytes(2, 0), pair_before);
         // the old mesh links are gone, the new gateway inherits the class
         assert_eq!(w.link_class(2, 0), None);
         assert_eq!(w.link_class(3, 0), Some(LinkClass::InterRegion));
@@ -790,5 +983,38 @@ mod tests {
         let after = w.transfer(0, 1, 1_000_000, Protocol::Grpc, 4).unwrap();
         assert!(after.time_s > before.time_s * 5.0);
         assert!(w.degrade_link(0, 0, 0.5).is_err()); // no such link
+    }
+
+    #[test]
+    fn scoped_transfers_overlay_then_merge_exactly() {
+        let c = crate::cluster::ClusterSpec::paper_default_scaled(2);
+        let mut w = Wan::from_cluster(&c, 31);
+        let mut rng = Pcg64::new(31, 0xC0FFEE);
+        let mut scratch = WanScratch::default();
+        // member 3 -> gateway 2 of cloud 1, twice: wire bytes must match
+        // the mutating path (jitter noise only affects times) and the
+        // second transfer must see the scratch-established warmth
+        let a = w
+            .transfer_scoped(3, 2, 50_000, Protocol::Grpc, 4, &mut rng, &mut scratch)
+            .unwrap();
+        let b = w
+            .transfer_scoped(3, 2, 50_000, Protocol::Grpc, 4, &mut rng, &mut scratch)
+            .unwrap();
+        assert!(b.handshake_s < a.handshake_s);
+        // nothing landed on the shared state yet
+        assert_eq!(w.total_wire_bytes(), 0);
+        w.apply_scratch(&scratch);
+        assert_eq!(w.wire_bytes(3, 2), a.wire_bytes + b.wire_bytes);
+        assert_eq!(w.total_wire_bytes(), a.wire_bytes + b.wire_bytes);
+        let split = w.wire_bytes_by_cloud_class();
+        assert_eq!(split[1][LinkClass::IntraAz.index()], a.wire_bytes + b.wire_bytes);
+        // applied warmth carries over to the mutating path
+        let c2 = w.transfer(3, 2, 50_000, Protocol::Grpc, 4).unwrap();
+        assert!(c2.handshake_s < a.handshake_s);
+        // wire bytes are rng-independent: a mutating transfer on a fresh
+        // topology produces the same byte count as the scoped one
+        let mut w2 = Wan::from_cluster(&c, 99);
+        let direct = w2.transfer(3, 2, 50_000, Protocol::Grpc, 4).unwrap();
+        assert_eq!(direct.wire_bytes, a.wire_bytes);
     }
 }

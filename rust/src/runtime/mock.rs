@@ -87,6 +87,12 @@ impl ComputeBackend for MockRuntime {
     fn tokens_per_batch(&self) -> u32 {
         self.tokens_per_batch
     }
+
+    fn sync_view(&self) -> Option<&(dyn ComputeBackend + Sync)> {
+        // plain data, no interior mutability: safe to share across the
+        // per-worker training threads
+        Some(self)
+    }
 }
 
 #[cfg(test)]

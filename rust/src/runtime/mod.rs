@@ -45,6 +45,15 @@ pub trait ComputeBackend {
     fn eval(&self, params: &ParamSet, batch: &Batch) -> Result<EvalOut>;
     /// Tokens per batch (accuracy denominator).
     fn tokens_per_batch(&self) -> u32;
+    /// A `Sync` view of this backend, when it is safe to call from
+    /// several threads at once. The coordinator parallelizes local
+    /// training across workers only when this returns `Some`; the
+    /// default `None` keeps backends with thread-affine state (PJRT
+    /// clients) on the serial path without imposing a `Sync` bound on
+    /// the whole trait.
+    fn sync_view(&self) -> Option<&(dyn ComputeBackend + Sync)> {
+        None
+    }
 }
 
 impl ComputeBackend for StepRuntime {

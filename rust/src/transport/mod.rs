@@ -16,8 +16,9 @@ use anyhow::{Context, Result};
 use crate::compress::{Compressor, ErrorFeedback};
 use crate::crypto::{open_in_place, seal_in_place, TransportKey, SEAL_OVERHEAD_BYTES};
 use crate::model::ParamSet;
-use crate::netsim::{Protocol, Wan};
+use crate::netsim::{NetError, Protocol, TransferStats, Wan, WanScratch};
 use crate::util::bytes::f32s_to_le_into;
+use crate::util::rng::Pcg64;
 
 /// Update-frame metadata header size: loss f32 (4) + n_samples u64 (8)
 /// + weight f64 (8) + element count u32 (4). Keep in sync with the
@@ -106,6 +107,42 @@ impl Channel {
         weight: f64,
         wan: &mut Wan,
     ) -> Result<Delivery> {
+        self.send_update_via(update, local_loss, n_samples, weight, |s, d, b, p, st| {
+            wan.transfer(s, d, b, p, st)
+        })
+    }
+
+    /// [`Channel::send_update`] against a shared `&Wan`: noise comes from
+    /// `rng` and warmth/ledger effects land in `scratch` (see
+    /// [`Wan::transfer_scoped`]) — the per-cloud parallel round path.
+    pub(crate) fn send_update_scoped(
+        &mut self,
+        update: &ParamSet,
+        local_loss: f32,
+        n_samples: usize,
+        weight: f64,
+        wan: &Wan,
+        rng: &mut Pcg64,
+        scratch: &mut WanScratch,
+    ) -> Result<Delivery> {
+        self.send_update_via(update, local_loss, n_samples, weight, |s, d, b, p, st| {
+            wan.transfer_scoped(s, d, b, p, st, rng, scratch)
+        })
+    }
+
+    /// The full serialize→compress→encrypt→transfer→decode pipeline,
+    /// generic over how the framed bytes cross the WAN.
+    fn send_update_via<F>(
+        &mut self,
+        update: &ParamSet,
+        local_loss: f32,
+        n_samples: usize,
+        weight: f64,
+        transfer: F,
+    ) -> Result<Delivery>
+    where
+        F: FnOnce(usize, usize, u64, Protocol, usize) -> Result<TransferStats, NetError>,
+    {
         // flatten into the persistent buffer (parallel copy, no fresh
         // allocation once warm)
         self.flat_buf.resize(update.numel(), 0.0);
@@ -139,8 +176,7 @@ impl Channel {
             + if sealed.is_some() { SEAL_OVERHEAD_BYTES } else { 0 };
         self.payload_bytes += n_bytes;
 
-        let stats = wan
-            .transfer(self.src, self.dst, n_bytes, self.protocol, self.streams)
+        let stats = transfer(self.src, self.dst, n_bytes, self.protocol, self.streams)
             .context("update transfer")?;
 
         // receiver side: verify + decrypt in place (CTR is self-inverse),
@@ -269,6 +305,28 @@ impl Channel {
         params: &ParamSet,
         wan: &mut Wan,
     ) -> Result<(f64, u64)> {
+        self.send_params_via(params, |s, d, b, p, st| wan.transfer(s, d, b, p, st))
+    }
+
+    /// [`Channel::send_params`] against a shared `&Wan` (see
+    /// [`Channel::send_update_scoped`]).
+    pub(crate) fn send_params_scoped(
+        &mut self,
+        params: &ParamSet,
+        wan: &Wan,
+        rng: &mut Pcg64,
+        scratch: &mut WanScratch,
+    ) -> Result<(f64, u64)> {
+        self.send_params_via(params, |s, d, b, p, st| {
+            wan.transfer_scoped(s, d, b, p, st, rng, scratch)
+        })
+    }
+
+    /// Dense-broadcast pipeline, generic over the WAN leg.
+    fn send_params_via<F>(&mut self, params: &ParamSet, transfer: F) -> Result<(f64, u64)>
+    where
+        F: FnOnce(usize, usize, u64, Protocol, usize) -> Result<TransferStats, NetError>,
+    {
         self.flat_buf.resize(params.numel(), 0.0);
         params.write_flat(&mut self.flat_buf);
         self.frame_buf.clear();
@@ -291,8 +349,7 @@ impl Channel {
             None => self.frame_buf.len() as u64,
         };
         self.payload_bytes += n_bytes;
-        let stats = wan
-            .transfer(self.src, self.dst, n_bytes, self.protocol, self.streams)
+        let stats = transfer(self.src, self.dst, n_bytes, self.protocol, self.streams)
             .context("params broadcast transfer")?;
         Ok((stats.time_s, stats.wire_bytes))
     }
@@ -404,5 +461,29 @@ mod tests {
         // lossless codec: loopback is the identity
         let mut dense = channel(Compression::None, false);
         assert_eq!(dense.codec_loopback(&u).unwrap(), u);
+    }
+
+    #[test]
+    fn scoped_send_matches_direct_send() {
+        // the parallel-round path must decode the same update and charge
+        // the same bytes as the mutating path (only jitter noise, which
+        // affects times, comes from a different rng stream)
+        let u = update(256);
+        let mut direct = channel(Compression::None, true);
+        let mut w = wan();
+        let d = direct.send_update(&u, 0.5, 9, 2.0, &mut w).unwrap();
+        let mut scoped = channel(Compression::None, true);
+        let w2 = wan();
+        let mut rng = Pcg64::new(7, 1);
+        let mut scratch = WanScratch::default();
+        let s = scoped
+            .send_update_scoped(&u, 0.5, 9, 2.0, &w2, &mut rng, &mut scratch)
+            .unwrap();
+        assert_eq!(s.update, d.update);
+        assert_eq!(s.local_loss, d.local_loss);
+        assert_eq!(s.n_samples, d.n_samples);
+        assert_eq!(s.weight, d.weight);
+        assert_eq!(s.wire_bytes, d.wire_bytes);
+        assert_eq!(scoped.payload_bytes, direct.payload_bytes);
     }
 }

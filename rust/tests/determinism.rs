@@ -39,6 +39,12 @@ fn cfg(mode: &str) -> ExperimentConfig {
         "sync" => {}
         "async" => c.aggregation = AggregationKind::Async { alpha: 0.6 },
         "hier" => c.hierarchical = true,
+        "hier-par" => {
+            // per-cloud parallel rounds: results must not depend on how
+            // many host threads execute the clouds
+            c.hierarchical = true;
+            c.par_rounds = true;
+        }
         "hier-faulty" => {
             // a mid-run gateway death + link degrade must stay exactly as
             // reproducible as a clean run: failover is deterministic
@@ -123,7 +129,7 @@ fn assert_identical(a: &RunResult, b: &RunResult, ctx: &str) {
 
 #[test]
 fn repeat_runs_are_bit_identical() {
-    for mode in ["sync", "async", "hier", "hier-faulty"] {
+    for mode in ["sync", "async", "hier", "hier-par", "hier-faulty"] {
         let a = run(mode);
         let b = run(mode);
         assert_identical(&a, &b, mode);
@@ -132,7 +138,7 @@ fn repeat_runs_are_bit_identical() {
 
 #[test]
 fn thread_count_does_not_change_results() {
-    for mode in ["sync", "async", "hier", "hier-faulty"] {
+    for mode in ["sync", "async", "hier", "hier-par", "hier-faulty"] {
         let serial = par::with_threads(1, || run(mode));
         let par4 = par::with_threads(4, || run(mode));
         assert_identical(&serial, &par4, &format!("{mode} 1T vs 4T"));

@@ -1,0 +1,398 @@
+//! Equivalence proofs for the planet-scale simulator core.
+//!
+//! The CSR-indexed [`Wan`] replaced per-pair hash tables; this suite
+//! pins its observable semantics to an embedded reference
+//! implementation that still uses the old storage (one `HashMap` per
+//! ledger) while sharing the public [`Link::transfer`] hop math and the
+//! same noise-RNG stream. Every transfer, error, warmth transition,
+//! gateway failover and ledger query must agree bit-for-bit — the
+//! refactor is allowed to change cache behaviour, not results.
+//!
+//! The coordinator-level tests then check the two new run-loop knobs on
+//! top: `history_every` thinning streams the same records an unthinned
+//! run keeps, and `par_rounds` is invariant to the host thread count.
+
+use std::collections::HashMap;
+
+use crossfed::cluster::ClusterSpec;
+use crossfed::config::preset;
+use crossfed::coordinator::Coordinator;
+use crossfed::data::CorpusConfig;
+use crossfed::metrics::RunResult;
+use crossfed::model::ParamSet;
+use crossfed::netsim::{Link, LinkClass, NetError, Protocol, TransferStats, Wan};
+use crossfed::partition::PartitionStrategy;
+use crossfed::runtime::MockRuntime;
+use crossfed::util::par;
+use crossfed::util::rng::Pcg64;
+
+/// The WAN noise stream id (`netsim::topology::WAN_STREAM`) — the
+/// reference must draw jitter from the very same stream to stay
+/// bit-comparable.
+const WAN_STREAM: u64 = 0x57414e;
+
+/// Pre-CSR reference WAN: hash-table storage, same routing rules, same
+/// per-hop [`Link::transfer`] math, same RNG stream. Deliberately naive
+/// — correctness is obvious from the code, so any divergence indicts
+/// the indexed implementation.
+struct RefWan {
+    cloud_of: Vec<usize>,
+    /// region name per cloud (class is derived by string compare, the
+    /// pre-interning semantics)
+    region_of: Vec<String>,
+    gateways: Vec<usize>,
+    down: Vec<bool>,
+    links: HashMap<(usize, usize), Link>,
+    bytes: HashMap<(usize, usize), u64>,
+    /// warm-protocol bitmask per directed pair
+    warm: HashMap<(usize, usize), u8>,
+    by_cloud_class: Vec<[u64; 3]>,
+    /// pristine construction-time link spec per link class (what a
+    /// re-elected gateway's fresh mesh links are built from)
+    exemplar: HashMap<usize, Link>,
+    rng: Pcg64,
+}
+
+impl RefWan {
+    /// Mirror `wan`'s freshly-built topology (same cluster, same seed).
+    fn new(cluster: &ClusterSpec, wan: &Wan, seed: u64) -> RefWan {
+        let n = cluster.n();
+        let n_clouds = cluster.n_clouds();
+        let cloud_of: Vec<usize> = (0..n).map(|i| cluster.cloud_of(i)).collect();
+        let gateways: Vec<usize> =
+            (0..n_clouds).map(|c| cluster.gateway(c)).collect();
+        let region_of: Vec<String> = (0..n_clouds)
+            .map(|c| cluster.platforms[gateways[c]].region.clone())
+            .collect();
+        let mut links = HashMap::new();
+        let mut exemplar: HashMap<usize, Link> = HashMap::new();
+        for s in 0..n {
+            for d in 0..n {
+                if let Some(l) = wan.link(s, d) {
+                    let class = wan.link_class(s, d).expect("link has a class");
+                    exemplar.entry(class.index()).or_insert_with(|| l.clone());
+                    links.insert((s, d), l.clone());
+                }
+            }
+        }
+        RefWan {
+            cloud_of,
+            region_of,
+            gateways,
+            down: vec![false; n],
+            links,
+            bytes: HashMap::new(),
+            warm: HashMap::new(),
+            by_cloud_class: vec![[0u64; 3]; n_clouds],
+            exemplar,
+            rng: Pcg64::new(seed, WAN_STREAM),
+        }
+    }
+
+    fn class(&self, s: usize, d: usize) -> LinkClass {
+        let (cs, cd) = (self.cloud_of[s], self.cloud_of[d]);
+        if cs == cd {
+            LinkClass::IntraAz
+        } else if self.region_of[cs] == self.region_of[cd] {
+            LinkClass::IntraRegion
+        } else {
+            LinkClass::InterRegion
+        }
+    }
+
+    fn link_up(&self, s: usize, d: usize) -> bool {
+        if !self.links.contains_key(&(s, d)) {
+            return false;
+        }
+        self.class(s, d) == LinkClass::IntraAz || (!self.down[s] && !self.down[d])
+    }
+
+    fn route(&self, src: usize, dst: usize) -> Result<Vec<(usize, usize)>, NetError> {
+        assert!(src != dst);
+        if self.link_up(src, dst) {
+            return Ok(vec![(src, dst)]);
+        }
+        let gs = self.gateways[self.cloud_of[src]];
+        let gd = self.gateways[self.cloud_of[dst]];
+        let mut hops = Vec::new();
+        if src != gs {
+            hops.push((src, gs));
+        }
+        if gs != gd {
+            hops.push((gs, gd));
+        }
+        if gd != dst {
+            hops.push((gd, dst));
+        }
+        for &(a, b) in &hops {
+            if !self.links.contains_key(&(a, b)) {
+                return Err(NetError::MissingLink { src, dst, a, b });
+            }
+            if !self.link_up(a, b) {
+                let node = if self.down[a] { a } else { b };
+                return Err(NetError::NodeDown { node });
+            }
+        }
+        Ok(hops)
+    }
+
+    fn transfer(
+        &mut self,
+        src: usize,
+        dst: usize,
+        payload: u64,
+        protocol: Protocol,
+        streams: usize,
+    ) -> Result<TransferStats, NetError> {
+        let hops = self.route(src, dst)?;
+        let mut total = TransferStats { time_s: 0.0, wire_bytes: 0, handshake_s: 0.0 };
+        let bit = 1u8 << protocol.index();
+        for (s, d) in hops {
+            let warm = self.warm.get(&(s, d)).copied().unwrap_or(0) & bit != 0;
+            let st = self.links[&(s, d)]
+                .transfer(payload, protocol, warm, streams, &mut self.rng);
+            *self.warm.entry((s, d)).or_insert(0) |= bit;
+            *self.bytes.entry((s, d)).or_insert(0) += st.wire_bytes;
+            self.by_cloud_class[self.cloud_of[s]][self.class(s, d).index()] +=
+                st.wire_bytes;
+            total.time_s += st.time_s;
+            total.wire_bytes += st.wire_bytes;
+            total.handshake_s += st.handshake_s;
+        }
+        Ok(total)
+    }
+
+    /// WAN egress failure: every warm connection touching the node drops.
+    fn fail_node(&mut self, node: usize) {
+        self.down[node] = true;
+        self.warm.retain(|&(s, d), _| s != node && d != node);
+    }
+
+    fn restore_node(&mut self, node: usize) {
+        self.down[node] = false;
+    }
+
+    /// Tear down the old gateway's mesh, build the new one cold, drop
+    /// all warmth. Ledgered bytes stay where they are — per-pair and
+    /// per-class queries keep counting traffic over torn-down links.
+    fn reelect_gateway(&mut self, cloud: usize, new_gw: usize) {
+        let old = self.gateways[cloud];
+        for c in 0..self.gateways.len() {
+            if c == cloud {
+                continue;
+            }
+            let g = self.gateways[c];
+            self.links.remove(&(old, g));
+            self.links.remove(&(g, old));
+            let class = self.class(new_gw, g);
+            let l = self.exemplar[&class.index()].clone();
+            self.links.insert((new_gw, g), l.clone());
+            self.links.insert((g, new_gw), l);
+        }
+        self.warm.clear();
+        self.gateways[cloud] = new_gw;
+    }
+
+    fn class_total(&self, class: LinkClass) -> u64 {
+        self.by_cloud_class.iter().map(|row| row[class.index()]).sum()
+    }
+}
+
+const PROTOCOLS: [Protocol; 3] = [Protocol::Grpc, Protocol::Quic, Protocol::Tcp];
+
+/// 400 scripted operations — random routed transfers interleaved with a
+/// gateway death, a re-election, a restore, a degradation and a
+/// connection reset — produce bit-identical stats, errors and ledgers
+/// on the indexed WAN and the hash-table reference.
+#[test]
+fn indexed_wan_matches_hashmap_reference() {
+    // 6 clouds x sizes (3,2,...) = 15 nodes over 2 regions: all three
+    // link classes and multi-hop routes exist
+    let cluster = ClusterSpec::scaled(6, &[3, 2]);
+    let seed = 77;
+    let mut wan = Wan::from_cluster(&cluster, seed);
+    let mut reference = RefWan::new(&cluster, &wan, seed);
+    let n = wan.n();
+    assert_eq!(n, 15);
+    let (g1, alt1) = (cluster.gateway(1), cluster.gateway(1) + 1);
+    let (g0, g4) = (cluster.gateway(0), cluster.gateway(4));
+
+    let mut script = Pcg64::new(5150, 0xB0B);
+    for step in 0..400 {
+        match step {
+            // cloud 1's gateway dies: WAN routes through it must error
+            120 => {
+                wan.fail_node(g1);
+                reference.fail_node(g1);
+                continue;
+            }
+            // failover to its AZ peer: fresh cold mesh links
+            180 => {
+                wan.reelect_gateway(1, alt1);
+                reference.reelect_gateway(1, alt1);
+                continue;
+            }
+            240 => {
+                wan.restore_node(g1);
+                reference.restore_node(g1);
+                continue;
+            }
+            // degrade an inter-region gateway link 4x
+            300 => {
+                wan.degrade_link(g0, g4, 0.25).expect("live link");
+                reference.links.get_mut(&(g0, g4)).expect("live link").bandwidth_bps *=
+                    0.25;
+                continue;
+            }
+            330 => {
+                wan.reset_connections();
+                reference.warm.clear();
+                continue;
+            }
+            _ => {}
+        }
+        let src = script.below_usize(n);
+        let mut dst = script.below_usize(n);
+        if dst == src {
+            dst = (dst + 1) % n;
+        }
+        let payload = 1_000 + script.below(2_000_000);
+        let protocol = PROTOCOLS[script.below_usize(3)];
+        let streams = 1 + script.below_usize(8);
+        let got = wan.transfer(src, dst, payload, protocol, streams);
+        let want = reference.transfer(src, dst, payload, protocol, streams);
+        assert_eq!(got, want, "step {step}: {src}->{dst} {payload}B {protocol:?}");
+    }
+
+    // every ledger view agrees, including bytes over torn-down links
+    for s in 0..n {
+        for d in 0..n {
+            assert_eq!(
+                wan.wire_bytes(s, d),
+                reference.bytes.get(&(s, d)).copied().unwrap_or(0),
+                "pair ({s},{d})"
+            );
+        }
+    }
+    for class in LinkClass::ALL {
+        assert_eq!(
+            wan.wire_bytes_class(class),
+            reference.class_total(class),
+            "{}",
+            class.name()
+        );
+    }
+    let ref_total: u64 = reference.by_cloud_class.iter().flatten().sum();
+    assert_eq!(wan.total_wire_bytes(), ref_total);
+    assert_eq!(wan.wire_bytes_by_cloud_class(), reference.by_cloud_class);
+    assert_eq!(wan.gateway(1), alt1);
+}
+
+fn scaled_coord_run(
+    history_every: usize,
+    history_csv: Option<String>,
+    par_rounds: bool,
+) -> RunResult {
+    let mut cfg = preset("quick").expect("builtin preset");
+    cfg.name = format!("equiv-h{history_every}-p{par_rounds}");
+    cfg.hierarchical = true;
+    cfg.par_rounds = par_rounds;
+    cfg.rounds = 4;
+    cfg.eval_every = 2;
+    cfg.eval_batches = 1;
+    cfg.local_steps = 2;
+    cfg.target_loss = None;
+    cfg.history_every = history_every;
+    cfg.history_csv = history_csv;
+    cfg.partition = PartitionStrategy::Fixed;
+    cfg.corpus = CorpusConfig { n_docs: 60, doc_sentences: 2, n_topics: 6, seed: 9 };
+    // 16 clouds x sizes (3,2,...) = 40 nodes
+    let cluster = ClusterSpec::scaled(16, &[3, 2]);
+    let backend = MockRuntime::new(0.4);
+    let init = ParamSet { leaves: vec![vec![1.0f32; 64], vec![-0.5f32; 32]] };
+    let mut coord =
+        Coordinator::new(cfg, cluster, &backend, init, 4, 16).expect("coordinator");
+    coord.run().expect("run")
+}
+
+/// `history_every` only thins what is *kept*: the thinned history is
+/// exactly the unthinned one filtered to round % N == 0, the streamed
+/// CSV carries every round, and the final-round metrics still come from
+/// the true last round.
+#[test]
+fn history_thinning_streams_the_same_records() {
+    let csv_path = std::env::temp_dir()
+        .join(format!("crossfed-equiv-hist-{}.csv", std::process::id()));
+    let full = scaled_coord_run(1, None, false);
+    let thinned = scaled_coord_run(
+        2,
+        Some(csv_path.to_string_lossy().into_owned()),
+        false,
+    );
+
+    assert_eq!(full.history.len(), 4);
+    let kept: Vec<_> = full.history.iter().filter(|r| r.round % 2 == 0).collect();
+    assert_eq!(thinned.history.len(), kept.len());
+    for (t, k) in thinned.history.iter().zip(&kept) {
+        assert_eq!(t.round, k.round);
+        assert_eq!(t.wire_bytes, k.wire_bytes);
+        assert_eq!(t.sim_secs.to_bits(), k.sim_secs.to_bits());
+        assert_eq!(t.train_loss.to_bits(), k.train_loss.to_bits());
+    }
+    // the dropped records still shaped the run: totals and final-round
+    // metrics match the unthinned run bit for bit
+    assert_eq!(thinned.rounds_run, full.rounds_run);
+    assert_eq!(thinned.wire_bytes, full.wire_bytes);
+    assert_eq!(thinned.sim_secs.to_bits(), full.sim_secs.to_bits());
+    assert_eq!(
+        thinned.final_train_loss.to_bits(),
+        full.final_train_loss.to_bits()
+    );
+    // the CSV streamed all four rounds plus the header
+    let csv = std::fs::read_to_string(&csv_path).expect("history CSV written");
+    let lines: Vec<&str> = csv.lines().collect();
+    assert_eq!(lines.len(), 5, "header + 4 rows");
+    assert!(lines[0].starts_with("round,"));
+    for (i, row) in lines[1..].iter().enumerate() {
+        assert!(row.starts_with(&format!("{i},")), "row {i}: {row}");
+    }
+    std::fs::remove_file(&csv_path).ok();
+}
+
+/// The per-cloud parallel hierarchical round is a pure function of the
+/// seed: any host thread count produces the same bits.
+#[test]
+fn par_rounds_thread_count_invariant_at_16_clouds() {
+    let serial = par::with_threads(1, || scaled_coord_run(1, None, true));
+    let par4 = par::with_threads(4, || scaled_coord_run(1, None, true));
+    let par9 = par::with_threads(9, || scaled_coord_run(1, None, true));
+    for (a, b, ctx) in [(&serial, &par4, "1T vs 4T"), (&serial, &par9, "1T vs 9T")] {
+        assert_eq!(a.rounds_run, b.rounds_run, "{ctx}");
+        assert_eq!(a.wire_bytes, b.wire_bytes, "{ctx}");
+        assert_eq!(a.sim_secs.to_bits(), b.sim_secs.to_bits(), "{ctx}");
+        assert_eq!(
+            a.final_eval_loss.to_bits(),
+            b.final_eval_loss.to_bits(),
+            "{ctx}"
+        );
+        assert_eq!(a.history.len(), b.history.len(), "{ctx}");
+        for (ra, rb) in a.history.iter().zip(&b.history) {
+            assert_eq!(ra.wire_bytes, rb.wire_bytes, "{ctx} round {}", ra.round);
+            assert_eq!(
+                ra.sim_secs.to_bits(),
+                rb.sim_secs.to_bits(),
+                "{ctx} round {}",
+                ra.round
+            );
+            assert_eq!(
+                ra.train_loss.to_bits(),
+                rb.train_loss.to_bits(),
+                "{ctx} round {}",
+                ra.round
+            );
+            let pa: Vec<u64> = ra.platform_secs.iter().map(|x| x.to_bits()).collect();
+            let pb: Vec<u64> = rb.platform_secs.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(pa, pb, "{ctx} round {}", ra.round);
+        }
+    }
+}
