@@ -16,7 +16,9 @@
 
 mod bench_common;
 
-use crossfed::aggregation::{Aggregator, ClientUpdate, DynamicWeighted, FedAvg};
+use crossfed::aggregation::{
+    AggregationKind, Aggregator, ClientUpdate, DynamicWeighted, FedAvg,
+};
 use crossfed::cluster::ClusterSpec;
 use crossfed::compress::{Compression, Compressor};
 use crossfed::config::preset;
@@ -191,6 +193,66 @@ fn hier_vs_star_entry() -> Json {
     ])
 }
 
+/// Synchronous barrier vs buffered async on the same hierarchy (3 clouds
+/// x 8): per-round simulated seconds and simulator events — the price of
+/// the barrier, and the event-engine throughput of the buffered path
+/// (EXPERIMENTS.md §Elasticity).
+fn hier_async_entry() -> Json {
+    let nodes_per_cloud = 8;
+    let cluster = ClusterSpec::paper_default_scaled(nodes_per_cloud);
+    let run = |buffered: bool| {
+        let mut cfg = preset("quick").expect("builtin");
+        cfg.name =
+            if buffered { "bench-hier-buf".into() } else { "bench-hier-sync".into() };
+        cfg.hierarchical = true;
+        if buffered {
+            cfg.aggregation = AggregationKind::Async { alpha: 0.6 };
+        }
+        cfg.rounds = 2;
+        cfg.eval_every = 1;
+        cfg.eval_batches = 1;
+        cfg.local_lr = 3.0;
+        cfg.server_lr = 3.0;
+        cfg.target_loss = None;
+        cfg.corpus =
+            CorpusConfig { n_docs: 120, doc_sentences: 2, n_topics: 6, seed: 3 };
+        let backend = MockRuntime::new(0.4);
+        let init = ParamSet { leaves: vec![vec![2.0f32; 64], vec![-1.0f32; 32]] };
+        let mut coord =
+            Coordinator::new(cfg, cluster.clone(), &backend, init, 4, 16)
+                .expect("coordinator");
+        let t0 = std::time::Instant::now();
+        let r = coord.run().expect("run");
+        (r.sim_secs / 2.0, coord.sim_events(), t0.elapsed().as_secs_f64())
+    };
+    let (sync_secs, _, _) = run(false);
+    let (buf_secs, buf_events, buf_wall) = run(true);
+    println!(
+        "\n== bench: hier sync vs buffered async (3 clouds x \
+         {nodes_per_cloud}) ==\nsim secs/round: sync {sync_secs:.1}  \
+         buffered {buf_secs:.1}  ({:.2}x)\nbuffered engine: {} events, \
+         {:.0} events/s",
+        sync_secs / buf_secs.max(1e-9),
+        buf_events,
+        buf_events as f64 / buf_wall.max(1e-9)
+    );
+    let r1 = |x: f64| (x * 10.0).round() / 10.0;
+    Json::obj(vec![
+        ("nodes_per_cloud", Json::num(nodes_per_cloud as f64)),
+        ("sync_sim_secs_per_round", Json::num(r1(sync_secs))),
+        ("buffered_sim_secs_per_round", Json::num(r1(buf_secs))),
+        (
+            "barrier_cost",
+            Json::num(((sync_secs / buf_secs.max(1e-9)) * 100.0).round() / 100.0),
+        ),
+        ("buffered_events", Json::num(buf_events as f64)),
+        (
+            "buffered_events_per_sec",
+            Json::num((buf_events as f64 / buf_wall.max(1e-9)).round()),
+        ),
+    ])
+}
+
 /// Star vs hierarchy in *dollars* on the paper-default price book (same
 /// scaled cluster as `hier_vs_star_entry`): per-round egress cost of the
 /// training rounds, plus the auto-placement decision.
@@ -359,10 +421,7 @@ fn write_json(
     hw: usize,
     serial: &[BenchSet],
     parallel: &[BenchSet],
-    hier_vs_star: Json,
-    cost_star_vs_hier: Json,
-    wal_append: Json,
-    sim_scale: Json,
+    sections: Vec<(&'static str, Json)>,
 ) {
     let mut entries = Vec::new();
     for (sb, pb) in serial.iter().zip(parallel) {
@@ -380,16 +439,14 @@ fn write_json(
             ]));
         }
     }
-    let doc = Json::obj(vec![
+    let mut fields = vec![
         ("bench", Json::str("hotpath")),
         ("elements", Json::num(N as f64)),
         ("threads", Json::num(hw as f64)),
         ("results", Json::arr(entries)),
-        ("hier_vs_star", hier_vs_star),
-        ("cost_star_vs_hier", cost_star_vs_hier),
-        ("wal_append", wal_append),
-        ("sim_scale", sim_scale),
-    ]);
+    ];
+    fields.extend(sections);
+    let doc = Json::obj(fields);
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.json");
     match std::fs::write(path, doc.to_string_pretty() + "\n") {
         Ok(()) => println!("\nwrote {path}"),
@@ -403,11 +460,14 @@ fn main() {
     let serial = kernel_pass(1);
     println!("\n== hotpath: parallel ({hw} threads) ==");
     let parallel = kernel_pass(hw);
-    let hier = hier_vs_star_entry();
-    let cost = cost_star_vs_hier_entry();
-    let wal = wal_append_entry();
-    let scale = sim_scale_entry();
-    write_json(hw, &serial, &parallel, hier, cost, wal, scale);
+    let sections = vec![
+        ("hier_vs_star", hier_vs_star_entry()),
+        ("hier_async", hier_async_entry()),
+        ("cost_star_vs_hier", cost_star_vs_hier_entry()),
+        ("wal_append", wal_append_entry()),
+        ("sim_scale", sim_scale_entry()),
+    ];
+    write_json(hw, &serial, &parallel, sections);
 
     // --- netsim transfer computation (pure model, no payload copies)
     let mut b = BenchSet::new("netsim transfer ops");

@@ -20,7 +20,12 @@
 //! regime.
 //!
 //! Async aggregation (formula 4) applies updates on arrival and has no
-//! barrier to factor across; [`HierarchicalAggregator::new`] rejects it.
+//! barrier to factor across, so the barrier reduces below do not apply
+//! to it. Hierarchical async instead runs FedBuff-style *buffered*
+//! aggregation: each gateway scales member updates by the staleness
+//! mixing rate ([`HierarchicalAggregator::mixing_rate`]) as they arrive
+//! and buffers the running sum; the leader consumes the buffered
+//! cloud-level updates on arrival (`coordinator/run_buffered.rs`).
 //!
 //! Numerical stability of dynamic weights: member weights inside a cloud
 //! are computed with the cloud's min-loss shift (exact — the shift
@@ -31,7 +36,7 @@
 //! the clamp range the two-level reduce equals the flat softmax exactly
 //! (in real arithmetic).
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
 use crate::aggregation::{AggregationKind, ClientUpdate};
 use crate::model::ParamSet;
@@ -62,17 +67,29 @@ pub struct HierarchicalAggregator {
 }
 
 impl HierarchicalAggregator {
-    /// Rejects [`AggregationKind::Async`]: apply-on-arrival has no
-    /// barrier to factor into a two-level reduce.
+    /// Synchronous kinds use the two-level barrier reduce
+    /// ([`HierarchicalAggregator::reduce_cloud`] /
+    /// [`HierarchicalAggregator::reduce_global`]);
+    /// [`AggregationKind::Async`] uses the buffered gateway path
+    /// ([`HierarchicalAggregator::mixing_rate`]) instead.
     pub fn new(kind: AggregationKind, server_opt: Optimizer) -> Result<HierarchicalAggregator> {
-        if matches!(kind, AggregationKind::Async { .. }) {
-            bail!("hierarchical aggregation requires a synchronous algorithm");
-        }
         Ok(HierarchicalAggregator { kind, server_opt })
     }
 
     pub fn kind(&self) -> AggregationKind {
         self.kind
+    }
+
+    /// FedBuff gateway mixing rate for buffered-async mode:
+    /// `α₀ / (1 + staleness)` — the same staleness discount the leader's
+    /// [`crate::aggregation::AsyncAgg`] applies to cloud-level updates,
+    /// here applied per member update as it reaches the gateway buffer.
+    /// Only defined for [`AggregationKind::Async`].
+    pub fn mixing_rate(&self, staleness: u64) -> f32 {
+        match self.kind {
+            AggregationKind::Async { alpha } => alpha / (1.0 + staleness as f32),
+            _ => panic!("mixing_rate is only defined for buffered async"),
+        }
     }
 
     /// Snapshot the server optimizer (the only cross-round state) for
@@ -117,7 +134,9 @@ impl HierarchicalAggregator {
                 let scale = (-lo / t).clamp(-700.0, 700.0).exp();
                 (ws, z_shifted * scale)
             }
-            AggregationKind::Async { .. } => unreachable!("rejected in new()"),
+            AggregationKind::Async { .. } => {
+                panic!("async uses the buffered gateway path, not the barrier reduce")
+            }
         }
     }
 
@@ -186,7 +205,9 @@ impl HierarchicalAggregator {
                 agg.axpy_many(&terms);
                 self.server_opt.step(global, &agg);
             }
-            AggregationKind::Async { .. } => unreachable!("rejected in new()"),
+            AggregationKind::Async { .. } => {
+                panic!("async uses the buffered gateway path, not the barrier reduce")
+            }
         }
     }
 }
@@ -288,11 +309,29 @@ mod tests {
     }
 
     #[test]
-    fn async_rejected() {
-        assert!(
+    fn async_uses_the_buffered_mixing_path() {
+        let hier =
             HierarchicalAggregator::new(AggregationKind::Async { alpha: 0.6 }, opt())
-                .is_err()
-        );
+                .unwrap();
+        assert!((hier.mixing_rate(0) - 0.6).abs() < 1e-6);
+        assert!((hier.mixing_rate(2) - 0.2).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "buffered gateway path")]
+    fn async_rejects_the_barrier_reduce() {
+        let hier =
+            HierarchicalAggregator::new(AggregationKind::Async { alpha: 0.6 }, opt())
+                .unwrap();
+        hier.reduce_cloud(0, &updates(2, 8, 1));
+    }
+
+    #[test]
+    #[should_panic(expected = "only defined for buffered async")]
+    fn sync_kinds_have_no_mixing_rate() {
+        let hier =
+            HierarchicalAggregator::new(AggregationKind::FedAvg, opt()).unwrap();
+        hier.mixing_rate(0);
     }
 
     #[test]

@@ -15,8 +15,8 @@ use crate::report;
 use crate::runtime::{ComputeBackend, MockRuntime, StepRuntime};
 use crate::util::bytes::{human_bytes, human_duration};
 
-const FLAGS: [&str; 5] =
-    ["mock", "no-encrypt", "curve", "hierarchical", "par-rounds"];
+const FLAGS: [&str; 6] =
+    ["mock", "no-encrypt", "curve", "hierarchical", "par-rounds", "spot"];
 
 const USAGE: &str = "\
 crossfed — cross-cloud federated LLM training (Yang et al. 2024 reproduction)
@@ -27,7 +27,7 @@ USAGE:
                  [--artifacts DIR] [--model-preset M] [--seed N]
                  [--save-checkpoint PATH] [--resume PATH]
                  [--wal DIR] [--target-cost USD]
-                 [--nodes-per-cloud N] [--hierarchical]
+                 [--nodes-per-cloud N] [--hierarchical] [--spot]
                  [--placement auto|fixed:N] [--price-book FILE]
                  [--fault SPEC[;SPEC...]] [--mock] [--curve]
                  [--par-rounds] [--history-every N] [--history-csv FILE]
@@ -52,8 +52,20 @@ preset's fault plan); `;`-separated specs, e.g.
 Kinds: gateway-down (cloud, at), restore (cloud, at — the egress comes
 back and the gateway role fails back), link-degrade (src, dst, at,
 factor), node-slowdown (node, at, factor), coordinator-crash (at — the
-leader process dies at the start of round `at`; requires --wal).
-gateway-down needs a standby member: run with --nodes-per-cloud >= 2.
+leader process dies at the start of round `at`; requires --wal),
+worker-leave (node, at — the member drops out of the roster at the
+round boundary; secure aggregation re-keys over the survivors) and
+worker-join (node, at — a departed member rejoins and the partition
+plan regenerates). gateway-down needs a standby member: run with
+--nodes-per-cloud >= 2; so does worker-leave on a gateway node.
+--agg async with --hierarchical selects the buffered asynchronous
+hierarchy: each gateway mixes member updates into a buffer as they
+arrive (rate alpha/(1+staleness)) and ships it when every active member
+contributed once; the leader applies cloud buffers without any
+cross-cloud barrier. --spot bills every non-gateway node at its cloud's
+preemptible rate (see the price book's spot_rate). Preset
+paper-hier-async-spot bundles buffered async, spot billing and a
+scripted preemption churn — the spot-market scenario.
 Preset paper-hier-faulty bundles a mid-run gateway kill with the
 hierarchical setup; paper-hier-cost bundles auto placement with the
 paper price book.
@@ -139,6 +151,9 @@ fn build_config(args: &Args) -> Result<ExperimentConfig> {
     }
     if args.flag("par-rounds") {
         cfg.par_rounds = true;
+    }
+    if args.flag("spot") {
+        cfg.spot = true;
     }
     if let Some(n) = args.get_usize("history-every")? {
         cfg.history_every = n;
@@ -432,10 +447,67 @@ mod tests {
             .unwrap(),
             0
         );
-        // async + hierarchical must be rejected at validation
+        // async + hierarchical selects the buffered hierarchy and runs
+        // end-to-end
+        assert_eq!(
+            run_cli(&s(&[
+                "train", "--preset", "quick", "--rounds", "2", "--mock",
+                "--agg", "async", "--hierarchical",
+                "--nodes-per-cloud", "2",
+            ]))
+            .unwrap(),
+            0
+        );
+    }
+
+    #[test]
+    fn par_rounds_rejects_async_schedules() {
+        // --par-rounds parallelizes the synchronous barrier; both async
+        // schedules run on the serial event engine and must be rejected
+        // at validation with a pointable error, not a mid-run panic
+        for extra in [vec![], vec!["--hierarchical"]] {
+            let mut argv = vec![
+                "train", "--preset", "quick", "--agg", "async",
+                "--par-rounds",
+            ];
+            argv.extend(extra.iter());
+            let args = Args::parse(&s(&argv), &FLAGS).unwrap();
+            let err = build_config(&args).unwrap_err();
+            assert!(
+                format!("{err:#}").contains("par_rounds"),
+                "{argv:?}: {err:#}"
+            );
+        }
+    }
+
+    #[test]
+    fn train_spot_market_preset() {
+        // the paper-hier-async-spot preset (buffered hierarchy, spot
+        // billing, scripted preemption churn) runs end-to-end; shrink it
+        // so the roster plan stays valid (--nodes-per-cloud >= 2)
+        assert_eq!(
+            run_cli(&s(&[
+                "train", "--preset", "paper-hier-async-spot", "--rounds",
+                "4", "--mock", "--nodes-per-cloud", "2",
+            ]))
+            .unwrap(),
+            0
+        );
+        // elastic membership via --fault: a leave + rejoin mid-run
+        assert_eq!(
+            run_cli(&s(&[
+                "train", "--preset", "quick", "--rounds", "4", "--mock",
+                "--agg", "async", "--hierarchical",
+                "--nodes-per-cloud", "2", "--spot",
+                "--fault", "worker-leave:node=1,at=1;worker-join:node=1,at=3",
+            ]))
+            .unwrap(),
+            0
+        );
+        // leaving a node that was never there is a clean error
         let args = Args::parse(
-            &s(&["train", "--preset", "quick", "--agg", "async",
-                 "--hierarchical"]),
+            &s(&["train", "--preset", "quick", "--fault",
+                 "worker-leave:at=1"]),
             &FLAGS,
         )
         .unwrap();

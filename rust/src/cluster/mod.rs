@@ -68,6 +68,10 @@ pub struct ClusterSpec {
     gateways: Vec<usize>,
     /// nodes whose WAN egress failed: ineligible for (re-)election
     egress_failed: Vec<bool>,
+    /// elastic-membership roster: inactive nodes (preempted spot
+    /// instances, departed workers) hold no shard, run no steps and are
+    /// ineligible for gateway election until they re-join
+    active: Vec<bool>,
 }
 
 impl ClusterSpec {
@@ -84,7 +88,8 @@ impl ClusterSpec {
             })
             .collect();
         let egress_failed = vec![false; platforms.len()];
-        ClusterSpec { platforms, gateways, egress_failed }
+        let active = vec![true; platforms.len()];
+        ClusterSpec { platforms, gateways, egress_failed, active }
     }
 
     pub fn n(&self) -> usize {
@@ -274,6 +279,41 @@ impl ClusterSpec {
             .collect()
     }
 
+    /// Whether `node` is currently part of the training roster.
+    pub fn is_active(&self, node: usize) -> bool {
+        self.active[node]
+    }
+
+    /// Drop `node` from the roster (spot preemption / `worker-leave:`).
+    /// The node keeps its channels and local state so a later
+    /// [`ClusterSpec::activate`] can bring it back.
+    pub fn deactivate(&mut self, node: usize) {
+        self.active[node] = false;
+    }
+
+    /// Return `node` to the roster (`worker-join:` after a preemption).
+    pub fn activate(&mut self, node: usize) {
+        self.active[node] = true;
+    }
+
+    /// Roster members of cloud `c`, in node order.
+    pub fn active_members(&self, c: usize) -> Vec<usize> {
+        self.cloud_members(c)
+            .into_iter()
+            .filter(|&m| self.active[m])
+            .collect()
+    }
+
+    /// All roster members across clouds, in node order.
+    pub fn active_nodes(&self) -> Vec<usize> {
+        (0..self.platforms.len()).filter(|&i| self.active[i]).collect()
+    }
+
+    /// Current roster size.
+    pub fn n_active(&self) -> usize {
+        self.active.iter().filter(|&&a| a).count()
+    }
+
     /// Re-elect cloud `c`'s gateway after its egress failed: the next
     /// member by node id with a working egress takes over. The rule is a
     /// pure function of the cluster state, so every replica of the run
@@ -283,11 +323,12 @@ impl ClusterSpec {
         let new_gw = self
             .cloud_members(c)
             .into_iter()
-            .find(|&m| !self.egress_failed[m])
+            .find(|&m| !self.egress_failed[m] && self.active[m])
             .ok_or_else(|| {
                 anyhow::anyhow!(
-                    "cloud {c} has no standby gateway left (all {} members' \
-                     egress failed); run with --nodes-per-cloud >= 2",
+                    "cloud {c} has no standby gateway left (none of its {} \
+                     members is active with working egress); run with \
+                     --nodes-per-cloud >= 2",
                     self.cloud_members(c).len()
                 )
             })?;
@@ -310,8 +351,8 @@ impl ClusterSpec {
     }
 
     /// Snapshot the election state (current gateways + failed-egress
-    /// flags) for the WAL. The platform list itself is config, rebuilt
-    /// from the run spec on resume.
+    /// flags + the elastic roster) for the WAL. The platform list itself
+    /// is config, rebuilt from the run spec on resume.
     pub fn wal_encode(&self, w: &mut crate::wal::ByteWriter) {
         w.put_usize(self.gateways.len());
         for &g in &self.gateways {
@@ -320,6 +361,10 @@ impl ClusterSpec {
         w.put_usize(self.egress_failed.len());
         for &f in &self.egress_failed {
             w.put_bool(f);
+        }
+        w.put_usize(self.active.len());
+        for &a in &self.active {
+            w.put_bool(a);
         }
     }
 
@@ -345,6 +390,15 @@ impl ClusterSpec {
         );
         for f in self.egress_failed.iter_mut() {
             *f = r.get_bool()?;
+        }
+        let n_active = r.get_usize()?;
+        anyhow::ensure!(
+            n_active == self.active.len(),
+            "WAL roster covers {n_active} nodes, run has {}",
+            self.active.len()
+        );
+        for a in self.active.iter_mut() {
+            *a = r.get_bool()?;
         }
         for (c, &g) in self.gateways.iter().enumerate() {
             anyhow::ensure!(
@@ -460,6 +514,28 @@ mod tests {
         let groups = c.clouds();
         assert_eq!(groups.len(), 3);
         assert_eq!(groups[2], vec![8, 9, 10, 11]);
+    }
+
+    #[test]
+    fn roster_tracks_leave_and_join() {
+        let mut c = ClusterSpec::paper_default_scaled(3);
+        assert_eq!(c.n_active(), 9);
+        assert!(c.is_active(4));
+        c.deactivate(4);
+        assert!(!c.is_active(4));
+        assert_eq!(c.n_active(), 8);
+        // cloud 1 = {3, 4, 5}
+        assert_eq!(c.active_members(1), vec![3, 5]);
+        assert_eq!(c.cloud_members(1), vec![3, 4, 5], "topology unchanged");
+        // an inactive node is skipped by gateway election
+        c.deactivate(3);
+        assert_eq!(c.reelect_gateway(1).unwrap(), 5);
+        // no active member with working egress left: hard error
+        c.deactivate(5);
+        assert!(c.reelect_gateway(1).is_err());
+        c.activate(4);
+        assert_eq!(c.reelect_gateway(1).unwrap(), 4);
+        assert_eq!(c.active_nodes(), vec![0, 1, 2, 4, 6, 7, 8]);
     }
 
     #[test]

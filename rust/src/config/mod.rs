@@ -36,8 +36,11 @@ pub struct ExperimentConfig {
 
     pub aggregation: AggregationKind,
     /// two-level aggregation: reduce inside each cloud at its gateway,
-    /// exchange one partial aggregate per cloud over the WAN (requires a
-    /// synchronous aggregation algorithm)
+    /// exchange one partial aggregate per cloud over the WAN. With a
+    /// synchronous algorithm this is a barrier reduce; combined with
+    /// `aggregation = async` it becomes the buffered (FedBuff-style)
+    /// hierarchy: gateways mix member updates as they arrive and the
+    /// leader consumes cloud-level buffered aggregates.
     pub hierarchical: bool,
     pub partition: PartitionStrategy,
     pub protocol: Protocol,
@@ -47,6 +50,12 @@ pub struct ExperimentConfig {
     pub encrypt: bool,
     pub secure_agg: bool,
     pub dp: DpConfig,
+    /// bill compute at the price book's preemptible (spot) rates instead
+    /// of on-demand (see [`crate::cost::PriceBook::spot_rate`]); pair
+    /// with a preemption fault plan
+    /// ([`crate::netsim::FaultPlan::spot_preemptions`]) for the
+    /// spot-market scenario. JSON `"spot"`; CLI `--spot`.
+    pub spot: bool,
 
     /// local SGD steps per round (the granularity knob)
     pub local_steps: usize,
@@ -124,6 +133,7 @@ impl Default for ExperimentConfig {
             encrypt: true,
             secure_agg: false,
             dp: DpConfig::disabled(),
+            spot: false,
             local_steps: 4,
             proportional_local_work: false,
             adaptive_granularity: false,
@@ -158,15 +168,6 @@ impl ExperimentConfig {
         if self.streams == 0 {
             bail!("streams must be >= 1");
         }
-        if self.hierarchical
-            && matches!(self.aggregation, AggregationKind::Async { .. })
-        {
-            bail!(
-                "hierarchical aggregation factors a synchronous barrier \
-                 into per-cloud reduces; async applies updates on arrival \
-                 — use fedavg, dynamic or gradient"
-            );
-        }
         if self.secure_agg {
             // masked sums are only compatible with fixed pre-scaling:
             // FedAvg / gradient mean, not loss-dependent dynamic weights
@@ -178,8 +179,15 @@ impl ExperimentConfig {
                      server-side; use fedavg or gradient"
                 );
             }
-            if matches!(self.aggregation, AggregationKind::Async { .. }) {
-                bail!("secure aggregation requires a synchronous barrier");
+            if matches!(self.aggregation, AggregationKind::Async { .. })
+                && !self.hierarchical
+            {
+                bail!(
+                    "flat async applies each worker's update alone, so \
+                     pairwise masks never cancel; secure aggregation with \
+                     async needs the buffered hierarchy (set hierarchical) \
+                     where gateways sum a full cloud buffer per cycle"
+                );
             }
             if !matches!(self.compression, Compression::None) {
                 bail!(
@@ -206,6 +214,13 @@ impl ExperimentConfig {
                 bail!(
                     "par_rounds does not yet support secure aggregation's \
                      pairwise masking order; drop secure_agg or par_rounds"
+                );
+            }
+            if matches!(self.aggregation, AggregationKind::Async { .. }) {
+                bail!(
+                    "par_rounds parallelizes a synchronous barrier round; \
+                     async/buffered schedules run on the serial event \
+                     engine — drop par_rounds or use a sync aggregation"
                 );
             }
             if !self.faults.events().is_empty() {
@@ -294,6 +309,7 @@ impl ExperimentConfig {
         c.error_feedback = v.opt_bool("error_feedback", c.error_feedback);
         c.encrypt = v.opt_bool("encrypt", c.encrypt);
         c.secure_agg = v.opt_bool("secure_agg", c.secure_agg);
+        c.spot = v.opt_bool("spot", c.spot);
         if let Some(dp) = v.get("dp") {
             c.dp = DpConfig {
                 clip_norm: dp.opt_f64("clip_norm", 1.0),
@@ -399,6 +415,7 @@ impl ExperimentConfig {
             ("error_feedback", Json::Bool(self.error_feedback)),
             ("encrypt", Json::Bool(self.encrypt)),
             ("secure_agg", Json::Bool(self.secure_agg)),
+            ("spot", Json::Bool(self.spot)),
             ("dp", dp),
             ("local_steps", Json::num(self.local_steps as f64)),
             (
@@ -468,16 +485,30 @@ mod tests {
 
     #[test]
     fn hierarchical_constraints() {
+        // hierarchical + async is the buffered (FedBuff-style) schedule
         let c = ExperimentConfig::from_json(
             r#"{"hierarchical": true, "aggregation": "async"}"#,
-        );
-        assert!(c.is_err());
+        )
+        .unwrap();
+        assert!(c.hierarchical);
+        assert!(matches!(c.aggregation, AggregationKind::Async { .. }));
         let c = ExperimentConfig::from_json(
             r#"{"hierarchical": true, "aggregation": "dynamic"}"#,
         )
         .unwrap();
         assert!(c.hierarchical);
         assert!(c.to_json().to_string().contains("\"hierarchical\":true"));
+    }
+
+    #[test]
+    fn spot_round_trips() {
+        let c = ExperimentConfig::from_json(r#"{"spot": true}"#).unwrap();
+        assert!(c.spot);
+        let j = c.to_json().to_string();
+        assert!(j.contains("\"spot\":true"), "{j}");
+        let back = ExperimentConfig::from_json(&j).unwrap();
+        assert!(back.spot);
+        assert!(!ExperimentConfig::default().spot);
     }
 
     #[test]
@@ -617,6 +648,13 @@ mod tests {
                 "faults": ["gateway-down:cloud=1,at=round3"]}"#
         )
         .is_err());
+        // async/buffered schedules run serially — par_rounds is rejected
+        let e = ExperimentConfig::from_json(
+            r#"{"hierarchical": true, "par_rounds": true,
+                "aggregation": "async"}"#,
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("par_rounds"), "{e}");
         assert!(ExperimentConfig::from_json(r#"{"history_every": 0}"#).is_err());
     }
 
@@ -634,5 +672,16 @@ mod tests {
             r#"{"secure_agg": true, "aggregation": "fedavg"}"#,
         );
         assert!(c.is_ok());
+        // flat async never forms a maskable sum...
+        assert!(ExperimentConfig::from_json(
+            r#"{"secure_agg": true, "aggregation": "async"}"#
+        )
+        .is_err());
+        // ...but the buffered hierarchy sums full cloud buffers
+        assert!(ExperimentConfig::from_json(
+            r#"{"secure_agg": true, "aggregation": "async",
+                "hierarchical": true}"#
+        )
+        .is_ok());
     }
 }

@@ -21,6 +21,7 @@ pub fn preset_names() -> Vec<&'static str> {
         "paper-hier",
         "paper-hier-faulty",
         "paper-hier-cost",
+        "paper-hier-async-spot",
         "hier-gradient",
         "fig-partition-fixed",
         "fig-partition-dynamic",
@@ -123,6 +124,31 @@ pub fn preset(name: &str) -> Option<ExperimentConfig> {
             compression: Compression::None,
             placement: crate::cost::Placement::Auto,
             price_book: crate::cost::PriceBook::paper_default(),
+            ..paper_base
+        },
+        // the spot-market scenario: buffered (FedBuff-style) hierarchy on
+        // preemptible capacity billed at spot rates. Gateways mix member
+        // updates as they arrive; the leader consumes cloud-level buffered
+        // aggregates; secure aggregation re-keys over the survivor set on
+        // every roster change. The embedded churn plan preempts the second
+        // member of each paper cloud and brings two of them back, so it is
+        // valid for any --nodes-per-cloud >= 2 (each cloud's first member
+        // never leaves). `examples/spot_market.rs` swaps in a seeded
+        // `FaultPlan::spot_preemptions` plan for the cost comparison.
+        "paper-hier-async-spot" => ExperimentConfig {
+            aggregation: AggregationKind::Async { alpha: 0.6 },
+            hierarchical: true,
+            secure_agg: true,
+            encrypt: true,
+            compression: Compression::None,
+            spot: true,
+            faults: FaultPlan::new(vec![
+                FaultEvent::WorkerLeave { node: 1, at: 2 },
+                FaultEvent::WorkerLeave { node: 3, at: 4 },
+                FaultEvent::WorkerJoin { node: 1, at: 6 },
+                FaultEvent::WorkerLeave { node: 5, at: 8 },
+                FaultEvent::WorkerJoin { node: 3, at: 10 },
+            ]),
             ..paper_base
         },
         "hier-gradient" => ExperimentConfig {
@@ -240,5 +266,17 @@ mod tests {
         assert_eq!(a.corpus.n_docs, b.corpus.n_docs);
         // only the algorithm-specific knobs differ
         assert_ne!(a.aggregation, b.aggregation);
+    }
+
+    #[test]
+    fn spot_preset_is_the_buffered_elastic_scenario() {
+        let c = preset("paper-hier-async-spot").unwrap();
+        assert!(c.hierarchical);
+        assert!(matches!(c.aggregation, AggregationKind::Async { .. }));
+        assert!(c.secure_agg);
+        assert!(c.spot);
+        // churn plan leaves then rejoins; every event inside the horizon
+        assert!(!c.faults.events().is_empty());
+        assert!(c.faults.events().iter().all(|e| e.at() < c.rounds));
     }
 }

@@ -25,6 +25,18 @@ use crate::worker::{CloudWorker, LocalRound};
 /// Fraction of documents held out for evaluation.
 const EVAL_FRACTION: f64 = 0.1;
 
+/// Session secret for the roster-epoch's secure-aggregation sessions.
+/// Epoch 0 is the seed's fixed secret byte-for-byte, so fault-free runs
+/// reproduce the pre-elastic behaviour exactly; later epochs salt it so
+/// departed members' pairwise seeds are useless post-change.
+fn sa_secret(epoch: u64) -> Vec<u8> {
+    let mut s = b"crossfed-sa".to_vec();
+    if epoch > 0 {
+        s.extend_from_slice(&epoch.to_le_bytes());
+    }
+    s
+}
+
 /// The federation leader plus its simulated platforms.
 pub struct Coordinator<'a, B: ComputeBackend + ?Sized> {
     pub cfg: ExperimentConfig,
@@ -57,7 +69,24 @@ pub struct Coordinator<'a, B: ComputeBackend + ?Sized> {
     pub(crate) planner: PartitionPlanner,
     pub(crate) plan: PartitionPlan,
     pub(crate) accountant: PrivacyAccountant,
+    /// secure-aggregation session over the *current* roster (sync
+    /// schedules; flat star and hierarchical barrier). Rebuilt by
+    /// [`Coordinator::rekey_secure`] on every roster change so masks
+    /// cancel exactly over the survivor set.
     pub(crate) secure: Option<SecureAggregator>,
+    /// worker id → dense index into `secure` (None = not in the roster)
+    pub(crate) sa_index: Vec<Option<usize>>,
+    /// buffered hierarchy only: one secure-aggregation session per cloud
+    /// — masks cancel inside the gateway's per-cycle buffer sum
+    pub(crate) secure_clouds: Vec<SecureAggregator>,
+    /// worker id → dense index into its cloud's session
+    pub(crate) sa_cloud_index: Vec<Option<usize>>,
+    /// bumped on every worker-leave/worker-join; salts the re-keyed
+    /// secure-aggregation secrets (epoch 0 = the seed behaviour)
+    pub(crate) roster_epoch: u64,
+    /// clouds whose roster changed in the last `apply_faults` call — the
+    /// buffered scheduler aborts these clouds' in-progress cycles
+    pub(crate) roster_dirty: Vec<usize>,
     pub(crate) eval_iter: BatchIter,
     pub(crate) corpus: SyntheticCorpus,
     // running totals
@@ -89,6 +118,10 @@ pub struct Coordinator<'a, B: ComputeBackend + ?Sized> {
     /// async-scheduler state decoded from the WAL, consumed by
     /// `run_async` on its first iteration after a resume
     pub(crate) async_resume: Option<crate::coordinator::wal_state::AsyncWalSnapshot>,
+    /// buffered-scheduler state decoded from the WAL, consumed by
+    /// `run_buffered` on its first iteration after a resume
+    pub(crate) buffered_resume:
+        Option<crate::coordinator::wal_state::BufferedWalSnapshot>,
 }
 
 impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
@@ -111,8 +144,19 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
         // and a standby member behind every gateway kill. `down` tracks
         // how many of a cloud's egresses are failed at each point of the
         // (round-sorted) plan: a kill consumes one standby, a restore
-        // hands one back — so kill→restore→kill cycles validate
+        // hands one back — so kill→restore→kill cycles validate.
+        // `inactive` walks the elastic roster the same way: a leave must
+        // keep at least one active member with working egress per cloud,
+        // a join must name a node that actually left
         let mut down = vec![0usize; cluster.n_clouds()];
+        let mut inactive = vec![false; cluster.n()];
+        let active_in = |cloud: usize, inactive: &[bool]| {
+            cluster
+                .cloud_members(cloud)
+                .iter()
+                .filter(|&&m| !inactive[m])
+                .count()
+        };
         for ev in cfg.faults.events() {
             match *ev {
                 crate::netsim::FaultEvent::GatewayDown { cloud, .. } => {
@@ -123,7 +167,7 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
                     );
                     down[cloud] += 1;
                     anyhow::ensure!(
-                        cluster.cloud_members(cloud).len() > down[cloud],
+                        active_in(cloud, &inactive) > down[cloud],
                         "fault {ev}: cloud {cloud} has {} members but the \
                          plan kills {} of its gateways — no standby would be \
                          left; run with more --nodes-per-cloud",
@@ -163,6 +207,40 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
                     // structural checks (at >= 1, wal_dir present) already
                     // ran in FaultEvent::validate / cfg.validate; nothing
                     // is cluster-shaped about a coordinator death
+                }
+                crate::netsim::FaultEvent::WorkerLeave { node, .. } => {
+                    anyhow::ensure!(
+                        node < cluster.n(),
+                        "fault {ev}: cluster has {} nodes",
+                        cluster.n()
+                    );
+                    anyhow::ensure!(
+                        !inactive[node],
+                        "fault {ev}: node {node} already left at that point \
+                         in the plan (schedule a worker-join first)"
+                    );
+                    inactive[node] = true;
+                    let cloud = cluster.cloud_of(node);
+                    anyhow::ensure!(
+                        active_in(cloud, &inactive) > down[cloud],
+                        "fault {ev}: cloud {cloud} would be left without an \
+                         active member with working egress; run with more \
+                         --nodes-per-cloud or stagger the preemptions"
+                    );
+                }
+                crate::netsim::FaultEvent::WorkerJoin { node, .. } => {
+                    anyhow::ensure!(
+                        node < cluster.n(),
+                        "fault {ev}: cluster has {} nodes",
+                        cluster.n()
+                    );
+                    anyhow::ensure!(
+                        inactive[node],
+                        "fault {ev}: node {node} is already an active member \
+                         at that point in the plan (schedule a worker-leave \
+                         first)"
+                    );
+                    inactive[node] = false;
                 }
             }
         }
@@ -243,8 +321,21 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
             }
         };
         let leader = cluster.gateway(leader_cloud);
-        let cost_ledger =
+        // the leader node hosts the coordinator process; a spot plan that
+        // preempts it would kill the run, not shrink the roster
+        for ev in cfg.faults.events() {
+            if let crate::netsim::FaultEvent::WorkerLeave { node, .. } = *ev {
+                anyhow::ensure!(
+                    node != leader,
+                    "fault {ev}: node {node} hosts the aggregation leader; \
+                     the coordinator cannot preempt itself — pin placement \
+                     elsewhere or preempt another node"
+                );
+            }
+        }
+        let mut cost_ledger =
             CostLedger::new(cfg.price_book.clone(), cluster.n_clouds());
+        cost_ledger.set_spot(cfg.spot);
 
         let mut workers = Vec::with_capacity(cluster.n());
         let mut up = Vec::with_capacity(cluster.n());
@@ -324,10 +415,6 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
             None
         };
 
-        let secure = cfg
-            .secure_agg
-            .then(|| SecureAggregator::new(cluster.n(), b"crossfed-sa"));
-
         let aggregator = aggregation::build(
             cfg.aggregation,
             Optimizer::new(cfg.server_opt, cfg.server_lr),
@@ -357,7 +444,12 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
             monitor,
             granularity,
             accountant,
-            secure,
+            secure: None,
+            sa_index: Vec::new(),
+            secure_clouds: Vec::new(),
+            sa_cloud_index: Vec::new(),
+            roster_epoch: 0,
+            roster_dirty: Vec::new(),
             aggregator,
             cfg,
             cluster,
@@ -390,7 +482,11 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
             wal: None,
             wal_prev_params: None,
             async_resume: None,
+            buffered_resume: None,
         };
+        // secure-aggregation sessions over the build-time (full) roster;
+        // epoch 0 reproduces the fixed-roster seed behaviour exactly
+        coord.rekey_secure();
         // initial distribution: every platform receives its (encrypted)
         // shard once — "Ensure Data Security" phase of the Figure-2 cycle
         coord.account_distribution()?;
@@ -510,9 +606,99 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
                 crate::netsim::FaultEvent::CoordinatorCrash { .. } => {
                     unreachable!("crash events return before this loop")
                 }
+                crate::netsim::FaultEvent::WorkerLeave { node, .. } => {
+                    let cloud = self.cluster.cloud_of(node);
+                    self.cluster.deactivate(node);
+                    if self.cluster.gateway(cloud) == node {
+                        // the departing node held the cloud's WAN egress:
+                        // elect the lowest-id active standby and retarget
+                        // the cloud's channels at it
+                        self.fail_over_gateway(round, cloud)?;
+                    }
+                    self.roster_changed(round, cloud)?;
+                }
+                crate::netsim::FaultEvent::WorkerJoin { node, .. } => {
+                    let cloud = self.cluster.cloud_of(node);
+                    self.cluster.activate(node);
+                    self.roster_changed(round, cloud)?;
+                }
             }
         }
         Ok(())
+    }
+
+    /// Shared tail of every roster change (worker-leave/worker-join):
+    /// bump the roster epoch, re-key secure aggregation over the survivor
+    /// set, regenerate the partition plan, and flag the cloud for the
+    /// buffered scheduler's cycle abort.
+    fn roster_changed(&mut self, round: usize, cloud: usize) -> Result<()> {
+        self.roster_epoch += 1;
+        self.rekey_secure();
+        if !self.roster_dirty.contains(&cloud) {
+            self.roster_dirty.push(cloud);
+        }
+        // regenerate the partition plan against the new roster. The
+        // capacity estimates still cover every node (an inactive worker's
+        // shard simply goes untrained until it rejoins), so re-planning
+        // stays well-defined for every strategy.
+        let caps = self.monitor.capacity_estimates();
+        let plan = self.planner.plan(&self.corpus, &self.cluster, &caps);
+        log::info!(
+            "round {round}: roster epoch {} ({} active members) — \
+             re-partitioning (gen {} -> {})",
+            self.roster_epoch,
+            self.cluster.n_active(),
+            self.plan.generation,
+            plan.generation
+        );
+        self.plan = plan;
+        for (w, shard) in self.plan.shards.iter().enumerate() {
+            self.workers[w].set_shard(
+                &shard.tokens,
+                self.batch_size,
+                self.seq_len,
+                self.cfg.seed ^ self.plan.generation,
+            );
+        }
+        self.account_distribution()?;
+        Ok(())
+    }
+
+    /// (Re)build the secure-aggregation sessions over the current active
+    /// roster. Masks must cancel exactly over the survivor set: the sync
+    /// schedules get one session spanning every active worker (dense
+    /// re-indexed in worker-id order; cancellation happens in the
+    /// leader's full sum), the buffered hierarchy one session per cloud
+    /// (cancellation happens in the gateway's per-cycle buffer sum). The
+    /// epoch-salted secret makes departed members' old pairwise seeds
+    /// useless against post-change traffic.
+    pub(crate) fn rekey_secure(&mut self) {
+        if !self.cfg.secure_agg {
+            return;
+        }
+        let n = self.cluster.n();
+        let secret = sa_secret(self.roster_epoch);
+        let active = self.cluster.active_nodes();
+        self.sa_index = vec![None; n];
+        for (i, &w) in active.iter().enumerate() {
+            self.sa_index[w] = Some(i);
+        }
+        self.secure = Some(SecureAggregator::new(active.len(), &secret));
+        if self.schedule() == crate::coordinator::Schedule::HierBufferedAsync {
+            self.sa_cloud_index = vec![None; n];
+            self.secure_clouds = (0..self.cluster.n_clouds())
+                .map(|c| {
+                    let members = self.cluster.active_members(c);
+                    for (i, &m) in members.iter().enumerate() {
+                        self.sa_cloud_index[m] = Some(i);
+                    }
+                    let mut s = secret.clone();
+                    s.extend_from_slice(b"-cloud");
+                    s.extend_from_slice(&(c as u64).to_le_bytes());
+                    SecureAggregator::new(members.len(), &s)
+                })
+                .collect();
+        }
     }
 
     /// The re-election sequence shared by every failover path (eager
@@ -638,9 +824,11 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
         round: u64,
     ) -> crate::crypto::MaskedUpdate {
         let sa = self.secure.as_ref().expect("secure agg enabled");
+        let idx = self.sa_index[u.worker]
+            .expect("masking an update from a worker outside the roster");
         let mut scaled = u.delta.clone();
         scaled.scale((u.n_samples as f64 / n_total) as f32);
-        sa.mask(u.worker, round, &scaled.to_flat())
+        sa.mask(idx, round, &scaled.to_flat())
     }
 
     /// Secure-aggregation path (star): mask pre-scaled updates, sum,
@@ -726,20 +914,23 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
     }
 
     /// Phase 1 of every synchronous round: run local training on all
-    /// workers against the current global model. When the backend offers
-    /// a [`ComputeBackend::sync_view`] the workers train on host threads
-    /// (`CROSSFED_THREADS`); each worker owns its RNG streams and reads
-    /// a shared `&global`, so the results are bit-identical to the
-    /// serial path in any thread count (host_secs is summed in worker
-    /// order afterwards). Thread-affine backends (PJRT) return `None`
-    /// and stay on the serial loop.
+    /// *active* workers against the current global model (inactive
+    /// members — preempted spot nodes — return `None` and cost nothing).
+    /// When the backend offers a [`ComputeBackend::sync_view`] the
+    /// workers train on host threads (`CROSSFED_THREADS`); each worker
+    /// owns its RNG streams and reads a shared `&global`, so the results
+    /// are bit-identical to the serial path in any thread count
+    /// (host_secs is summed in worker order afterwards). Thread-affine
+    /// backends (PJRT) return `None` from `sync_view` and stay on the
+    /// serial loop.
     pub(crate) fn train_all_workers(
         &mut self,
         step_counts: &[usize],
-    ) -> Result<Vec<LocalRound>> {
+    ) -> Result<Vec<Option<LocalRound>>> {
         let kind = self.cfg.aggregation.update_kind();
         if let Some(sv) = self.backend.sync_view() {
             let global = &self.global;
+            let cluster = &self.cluster;
             let (lr, secs, dp) =
                 (self.cfg.local_lr, self.cfg.base_step_secs, &self.cfg.dp);
             let mut out: Vec<Option<Result<LocalRound>>> =
@@ -749,20 +940,31 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
                     .map(|(i, (w, slot))| (i, w, slot))
                     .collect();
             crate::util::par::run_items(items, |(i, w, slot)| {
-                *slot = Some(w.local_round(
-                    sv, global, kind, step_counts[i], lr, secs, dp,
-                ));
+                if cluster.is_active(i) {
+                    *slot = Some(w.local_round(
+                        sv, global, kind, step_counts[i], lr, secs, dp,
+                    ));
+                }
             });
             let mut locals = Vec::with_capacity(out.len());
             for slot in out {
-                let r = slot.expect("every worker trained")?;
-                self.host_secs += r.host_secs;
-                locals.push(r);
+                match slot {
+                    Some(res) => {
+                        let r = res?;
+                        self.host_secs += r.host_secs;
+                        locals.push(Some(r));
+                    }
+                    None => locals.push(None),
+                }
             }
             return Ok(locals);
         }
         let mut locals = Vec::with_capacity(self.workers.len());
         for w in 0..self.workers.len() {
+            if !self.cluster.is_active(w) {
+                locals.push(None);
+                continue;
+            }
             let r = self.workers[w].local_round(
                 self.backend,
                 &self.global,
@@ -773,7 +975,7 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
                 &self.cfg.dp,
             )?;
             self.host_secs += r.host_secs;
-            locals.push(r);
+            locals.push(Some(r));
         }
         Ok(locals)
     }
@@ -786,7 +988,7 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
     pub(crate) fn finalize_round(
         &mut self,
         round: usize,
-        locals: &[LocalRound],
+        locals: &[Option<LocalRound>],
         round_start: f64,
         barrier_at: f64,
         round_end: f64,
@@ -795,8 +997,12 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
         self.wire_bytes += round_wire;
         self.sim_secs = round_end;
 
-        let compute_times: Vec<f64> =
-            locals.iter().map(|l| l.compute_secs).collect();
+        // inactive members contribute zero compute seconds (and are
+        // excluded from the train-loss mean below)
+        let compute_times: Vec<f64> = locals
+            .iter()
+            .map(|l| l.as_ref().map_or(0.0, |r| r.compute_secs))
+            .collect();
         let compute_max =
             compute_times.iter().cloned().fold(0.0f64, f64::max);
         let comm_secs = (barrier_at - round_start - compute_max)
@@ -807,8 +1013,10 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
         let cost = self.cost_observe(&compute_times);
 
         let (eval_loss, eval_acc) = self.round_eval(round)?;
-        let train_loss = locals.iter().map(|l| l.mean_loss).sum::<f32>()
-            / locals.len() as f32;
+        let trained: Vec<&LocalRound> =
+            locals.iter().flatten().collect();
+        let train_loss = trained.iter().map(|l| l.mean_loss).sum::<f32>()
+            / trained.len().max(1) as f32;
         log::debug!(
             "round {round}: train={train_loss:.3} eval={eval_loss:?} \
              sim={:.0}s wire={} inter-region={}",
@@ -827,6 +1035,7 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
             platform_secs: compute_times,
             epsilon: self.accountant.epsilon(),
             partition_gen: self.plan.generation,
+            active_members: self.cluster.n_active(),
             cost,
             cum_cost_usd: self.cost_ledger.cumulative().total_usd(),
         })
@@ -878,7 +1087,13 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
                 compute_times.iter().cloned().fold(0.0, f64::max);
             self.granularity.observe(compute_max, comm_secs.max(0.0));
         }
-        if self.monitor.observe(compute_times) {
+        // feed the monitor only when the full roster trained: an elastic
+        // round's zeroed compute entries would read as infinitely fast
+        // nodes and skew capacity estimates — churn runs re-plan through
+        // `roster_changed` instead
+        if self.cluster.n_active() == self.cluster.n()
+            && self.monitor.observe(compute_times)
+        {
             let caps = self.monitor.capacity_estimates();
             if let Some(plan) =
                 self.planner.replan(&self.corpus, &self.cluster, &caps)
@@ -1010,11 +1225,23 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
         {
             self.attach_wal()?;
         }
-        if self.aggregator.is_async() {
-            self.run_async()
-        } else {
-            self.run_sync()
+        match self.schedule() {
+            crate::coordinator::Schedule::FlatAsync => self.run_async(),
+            crate::coordinator::Schedule::HierBufferedAsync => {
+                self.run_buffered()
+            }
+            crate::coordinator::Schedule::SyncBarrier
+            | crate::coordinator::Schedule::HierSync => self.run_sync(),
         }
+    }
+
+    /// Which of the four round-pipeline policies this run executes
+    /// (derived from the aggregation kind and the hierarchy knob).
+    pub fn schedule(&self) -> crate::coordinator::Schedule {
+        crate::coordinator::Schedule::derive(
+            self.aggregator.is_async(),
+            self.cfg.hierarchical,
+        )
     }
 
     pub(crate) fn finish(&mut self, reached_target: bool) -> Result<RunResult> {

@@ -1,22 +1,29 @@
 //! The federation leader — the paper's coordination contribution.
 //!
 //! Owns the global model, the WAN, the partition plan and the aggregation
-//! algorithm; drives synchronous rounds (FedAvg / dynamic weighted /
-//! gradient aggregation), the hierarchical two-level reduce, or the
-//! asynchronous event loop (formula 4), with the full §3.1 partitioning
-//! cycle (granularity control, load balancing, encrypted distribution,
-//! real-time monitoring) in the loop. All schedulers are policies over
-//! one discrete-event engine ([`engine`]), so per-hop communication
-//! times overlap instead of being summed ad hoc.
+//! algorithm; drives one of the four [`Schedule`] policies — the flat
+//! synchronous barrier (FedAvg / dynamic weighted / gradient), the flat
+//! asynchronous event loop (formula 4), the hierarchical two-level
+//! reduce, or the buffered (FedBuff-style) asynchronous hierarchy — with
+//! the full §3.1 partitioning cycle (granularity control, load
+//! balancing, encrypted distribution, real-time monitoring) in the loop.
+//! All schedulers are policies over one discrete-event engine
+//! ([`engine`]), so per-hop communication times overlap instead of being
+//! summed ad hoc. Membership is elastic: `worker-leave`/`worker-join`
+//! faults shrink and regrow the roster mid-run, with secure-aggregation
+//! re-keying over the survivor set on every change.
 
 mod build;
 mod engine;
 mod run_async;
+mod run_buffered;
 mod run_hier;
 mod run_sync;
+mod schedule;
 mod wal_state;
 
 pub use build::Coordinator;
+pub use schedule::Schedule;
 
 /// The typed abort raised when a [`crate::netsim::FaultEvent::CoordinatorCrash`]
 /// strikes: the coordinator "process" dies at the start of a round, before

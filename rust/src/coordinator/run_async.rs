@@ -54,8 +54,10 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
             aggs = self.rounds_done * n;
             if aggs < total_aggs {
                 // faults due at the pseudo-round the crash interrupted
-                // (the crash event itself was stripped on resume)
+                // (the crash event itself was stripped on resume) — a
+                // worker-join among them needs its kick replayed too
                 self.apply_faults(self.rounds_done)?;
+                self.async_kick_idle(&mut engine, &mut pending)?;
             }
         } else {
             engine = EventEngine::new(self.sim_secs);
@@ -66,25 +68,9 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
             // any platform starts
             self.apply_faults(0)?;
 
-            // kick off every platform at t = now, all from the same
-            // global
-            let t_base = self.sim_secs;
-            for w in 0..n {
-                self.workers[w].base_version = self.global_version;
-                let global = self.global.clone();
-                let r = self.workers[w].local_round(
-                    self.backend,
-                    &global,
-                    kind,
-                    self.cfg.local_steps,
-                    self.cfg.local_lr,
-                    self.cfg.base_step_secs,
-                    &self.cfg.dp,
-                )?;
-                self.host_secs += r.host_secs;
-                engine.at(t_base + r.compute_secs, w);
-                pending[w] = Some((r.update, r.mean_loss, r.compute_secs));
-            }
+            // kick off every active platform at t = now, all from the
+            // same global
+            self.async_kick_idle(&mut engine, &mut pending)?;
         }
 
         let mut train_loss_acc = 0.0f32;
@@ -92,6 +78,14 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
         while aggs < total_aggs {
             let worker = engine.pop().expect("queue nonempty");
             let at = engine.now();
+
+            if !self.cluster.is_active(worker) {
+                // the node was preempted while its update was in flight:
+                // the work is lost (`async_kick_idle` restarts it when it
+                // rejoins)
+                let _ = pending[worker].take();
+                continue;
+            }
 
             // --- uplink (the leader-colocated worker: codec loopback,
             // no WAN/encrypt hop — its delta is compressed like everyone
@@ -187,6 +181,7 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
                     platform_secs,
                     epsilon: self.accountant.epsilon(),
                     partition_gen: self.plan.generation,
+                    active_members: self.cluster.n_active(),
                     cost,
                     cum_cost_usd: self.cost_ledger.cumulative().total_usd(),
                 };
@@ -214,12 +209,52 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
                     }
                 }
                 if aggs < total_aggs {
-                    // faults scheduled for the next pseudo-round
+                    // faults scheduled for the next pseudo-round; a
+                    // rejoining worker starts training against the
+                    // current global immediately
                     self.apply_faults(aggs / n)?;
+                    self.async_kick_idle(&mut engine, &mut pending)?;
                 }
             }
         }
         self.sim_events += engine.scheduled_total();
         self.finish(reached)
+    }
+
+    /// Start local training on every active worker that has neither a
+    /// pending update nor a queued completion event (fresh-start kick-off
+    /// and elastic rejoins share this). The `pending[w].is_some() ⇔ one
+    /// queued event for w` invariant makes idleness observable from
+    /// `pending` alone: a node that left with work in flight either had
+    /// its event discarded (pending None → re-kick on rejoin) or rejoins
+    /// before it fires (pending Some → the stale update applies with the
+    /// usual staleness discount).
+    fn async_kick_idle(
+        &mut self,
+        engine: &mut EventEngine<usize>,
+        pending: &mut [Option<(ParamSet, f32, f64)>],
+    ) -> Result<()> {
+        let kind = self.cfg.aggregation.update_kind();
+        let t_base = self.sim_secs;
+        for w in 0..self.workers.len() {
+            if !self.cluster.is_active(w) || pending[w].is_some() {
+                continue;
+            }
+            self.workers[w].base_version = self.global_version;
+            let global = self.global.clone();
+            let r = self.workers[w].local_round(
+                self.backend,
+                &global,
+                kind,
+                self.cfg.local_steps,
+                self.cfg.local_lr,
+                self.cfg.base_step_secs,
+                &self.cfg.dp,
+            )?;
+            self.host_secs += r.host_secs;
+            engine.at(t_base + r.compute_secs, w);
+            pending[w] = Some((r.update, r.mean_loss, r.compute_secs));
+        }
+        Ok(())
     }
 }

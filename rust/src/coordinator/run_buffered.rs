@@ -1,0 +1,586 @@
+//! Buffered asynchronous hierarchy — the FedBuff-style schedule.
+//!
+//! Two nested asynchronous loops over the shared [`EventEngine`]:
+//!
+//! ```text
+//! member w:  train vs gateway model ──codec/AZ hop──▶ gateway buffer
+//! gateway c: buffer mixes each arrival with α₀/(1+staleness)·n_w/Σn;
+//!            when every active member contributed once ──▶ ship cycle
+//! leader:    apply cloud buffer with the async mixing rate (formula 4),
+//!            unicast the fresh global back to that gateway
+//! ```
+//!
+//! Gateways run *cycles*, not rounds: a cycle closes when every active
+//! member of the cloud has contributed exactly once, the buffered
+//! aggregate ships over the WAN, and the next cycle opens immediately —
+//! fast members that lap the cycle stall with their update stashed until
+//! the flush (at most one stash per member), which keeps the
+//! exactly-once-per-cycle invariant secure aggregation needs. The leader
+//! applies cloud-level buffers on arrival like the flat async scheduler
+//! applies worker updates, so clouds never barrier against each other.
+//!
+//! With secure aggregation each cloud gets its own pairwise-mask session
+//! over its *active* members ([`Coordinator::rekey_secure`]): the
+//! gateway sees only masked member contributions and the masks cancel in
+//! the completed buffer sum, so the shipped aggregate is clean and the
+//! gateway learns nothing but the cloud total. Every roster change
+//! aborts the dirty cloud's in-progress cycle
+//! ([`Coordinator::buffered_roster_repair`]) — a partially-summed buffer
+//! under the old roster could never unmask.
+//!
+//! Pseudo-round accounting matches the flat async loop: one round ==
+//! `n_clouds` leader applies, and each boundary WAL-snapshots the full
+//! scheduler state (queues, buffers, stashes, clamps) so a crash resumes
+//! bit-identically.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::aggregation::ClientUpdate;
+use crate::coordinator::build::Coordinator;
+use crate::coordinator::engine::EventEngine;
+use crate::metrics::{RoundRecord, RunResult};
+use crate::model::ParamSet;
+use crate::runtime::ComputeBackend;
+
+/// Buffered-scheduler events.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub(crate) enum BufEv {
+    /// worker finished local training (`gen` guards against stale events
+    /// after a roster repair re-kicked the worker)
+    Member { worker: usize, gen: u64 },
+    /// a cloud's buffered aggregate reached the leader
+    Cloud { cloud: usize },
+    /// a fresh global model reached a cloud's gateway
+    Params { cloud: usize },
+}
+
+/// One gateway's buffered-cycle state.
+pub(crate) struct GwState {
+    /// the (lagged) model this cloud's members train against
+    pub(crate) params: ParamSet,
+    /// leader version `params` corresponds to (staleness bookkeeping)
+    pub(crate) version: u64,
+    /// current buffer cycle — also the mask round of the per-cloud
+    /// secure-aggregation session
+    pub(crate) cycle: u64,
+    /// the mixing buffer (None = empty)
+    pub(crate) buf: Option<ParamSet>,
+    /// Σ mean_loss · n_samples over the buffered contributions
+    pub(crate) buf_loss: f64,
+    /// Σ n_samples over the buffered contributions
+    pub(crate) buf_samples: usize,
+    /// contributed-to-current-cycle flags, indexed by global worker id
+    pub(crate) contributed: Vec<bool>,
+    /// Σ n_samples over the cloud's active members (weight normalizer,
+    /// fixed for the duration of one cycle)
+    pub(crate) ns_total: f64,
+    /// latest member-update arrival at this gateway — the earliest time
+    /// a completed buffer can start its WAN leg
+    pub(crate) last_arrive: f64,
+    /// FIFO clamps: a later cycle's buffer (or model) cannot overtake an
+    /// earlier one on the same gateway↔leader pipe
+    pub(crate) up_clamp: f64,
+    pub(crate) down_clamp: f64,
+}
+
+/// One cloud-level buffered aggregate in flight to (or queued at) the
+/// leader.
+pub(crate) struct CloudUpdate {
+    pub(crate) delta: ParamSet,
+    pub(crate) mean_loss: f32,
+    pub(crate) n_samples: usize,
+    /// leader version the gateway's model had when the buffer shipped —
+    /// the leader's staleness input
+    pub(crate) base_version: u64,
+}
+
+/// Full mutable state of the buffered scheduler, WAL-snapshotted at
+/// every pseudo-round boundary (see `wal_state.rs`).
+pub(crate) struct BufState {
+    /// per worker: update in flight (delta, mean_loss, compute_secs)
+    pub(crate) pending: Vec<Option<(ParamSet, f32, f64)>>,
+    /// per worker: a second same-cycle update parked until the flush
+    /// (delta, mean_loss) — the member stalls while this is Some
+    pub(crate) stash: Vec<Option<(ParamSet, f32)>>,
+    /// per worker: kick generation (stale-event guard across repairs)
+    pub(crate) kick_gen: Vec<u64>,
+    /// per worker: the gateway cycle its in-flight update trained under
+    pub(crate) base_cycle: Vec<u64>,
+    pub(crate) gw: Vec<GwState>,
+    /// per cloud: shipped buffers awaiting leader application (FIFO)
+    pub(crate) cloud_q: Vec<VecDeque<CloudUpdate>>,
+    /// per cloud: fresh (model, version) pairs in flight to the gateway
+    pub(crate) param_q: Vec<VecDeque<(ParamSet, u64)>>,
+}
+
+impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
+    /// Run the buffered hierarchy for `cfg.rounds * n_clouds` leader
+    /// applies (one pseudo-round == every cloud's buffer landing once on
+    /// average, mirroring the flat async loop's granularity).
+    pub(crate) fn run_buffered(&mut self) -> Result<RunResult> {
+        let n = self.workers.len();
+        let n_clouds = self.cluster.n_clouds();
+        let total = self.cfg.rounds * n_clouds;
+
+        let mut engine: EventEngine<BufEv>;
+        let mut st: BufState;
+        let mut applies: usize;
+        // compute seconds behind the updates picked up this pseudo-round
+        let mut round_compute = vec![0.0f64; n];
+
+        if let Some(snap) = self.buffered_resume.take() {
+            // WAL resume: replay the queue in pop order onto a fresh
+            // engine (seq numbers reassigned densely, relative order —
+            // and so every future pop — preserved exactly)
+            engine = EventEngine::new(snap.now);
+            for (at, ev) in snap.queued {
+                engine.at(at, ev);
+            }
+            st = snap.state;
+            applies = self.rounds_done * n_clouds;
+            if applies < total {
+                // faults due at the boundary the crash interrupted (the
+                // crash event itself was stripped on resume)
+                self.apply_faults(self.rounds_done)?;
+                self.buffered_roster_repair(&mut engine, &mut st)?;
+            }
+        } else {
+            engine = EventEngine::new(self.sim_secs);
+            applies = 0;
+            // round-0 faults strike before anything starts; the initial
+            // kicks below already cover the post-fault roster, so no
+            // cycle exists to abort yet
+            self.apply_faults(0)?;
+            self.roster_dirty.clear();
+            st = BufState {
+                pending: (0..n).map(|_| None).collect(),
+                stash: (0..n).map(|_| None).collect(),
+                kick_gen: vec![0; n],
+                base_cycle: vec![0; n],
+                gw: (0..n_clouds)
+                    .map(|c| GwState {
+                        params: self.global.clone(),
+                        version: self.global_version,
+                        cycle: 0,
+                        buf: None,
+                        buf_loss: 0.0,
+                        buf_samples: 0,
+                        contributed: vec![false; n],
+                        ns_total: self
+                            .cluster
+                            .active_members(c)
+                            .iter()
+                            .map(|&m| self.workers[m].n_samples as f64)
+                            .sum(),
+                        last_arrive: self.sim_secs,
+                        up_clamp: self.sim_secs,
+                        down_clamp: self.sim_secs,
+                    })
+                    .collect(),
+                cloud_q: (0..n_clouds).map(|_| VecDeque::new()).collect(),
+                param_q: (0..n_clouds).map(|_| VecDeque::new()).collect(),
+            };
+            // kick every active member; the model was distributed at
+            // setup, so the first cycle pays no downlink
+            let start = self.sim_secs;
+            for w in self.cluster.active_nodes() {
+                let c = self.cluster.cloud_of(w);
+                self.buf_kick(&mut engine, &mut st, c, w, start, false)?;
+            }
+        }
+
+        let mut train_loss_acc = 0.0f32;
+        let mut reached = false;
+        while applies < total {
+            match engine.pop().expect("buffered queue nonempty") {
+                BufEv::Member { worker: w, gen } => {
+                    if gen != st.kick_gen[w] || !self.cluster.is_active(w) {
+                        // aborted by a roster repair (or the node was
+                        // preempted mid-flight): the work is lost
+                        continue;
+                    }
+                    let (update, mean_loss, compute_secs) =
+                        st.pending[w].take().expect("pending update");
+                    round_compute[w] += compute_secs;
+                    let c = self.cluster.cloud_of(w);
+                    let gw_node = self.cluster.gateway(c);
+                    let now = engine.now();
+                    // gateway members loop back through the codec;
+                    // others pay the intra-cloud hop
+                    let (delivered, up_secs) = if w == gw_node {
+                        (self.up[w].codec_loopback(&update)?, 0.0)
+                    } else {
+                        let d = self.up[w].send_update(
+                            &update,
+                            mean_loss,
+                            self.workers[w].n_samples,
+                            1.0,
+                            &mut self.wan,
+                        )?;
+                        self.wire_bytes += d.wire_bytes;
+                        (d.update, d.secs)
+                    };
+                    let arrive = now + up_secs;
+                    self.sim_secs = self.sim_secs.max(arrive);
+                    st.gw[c].last_arrive = st.gw[c].last_arrive.max(arrive);
+                    if st.gw[c].contributed[w] {
+                        // second update inside one cycle: stall until
+                        // the flush drains the stash (exactly-once)
+                        st.stash[w] = Some((delivered, mean_loss));
+                    } else {
+                        self.buf_contribute(&mut st, c, w, delivered, mean_loss);
+                        if self.buf_cycle_complete(&st, c) {
+                            self.buf_flush(&mut engine, &mut st, c)?;
+                            // the member that completed the cycle
+                            // resumes under the fresh cycle
+                            let start = st.gw[c].last_arrive.max(engine.now());
+                            self.buf_kick(&mut engine, &mut st, c, w, start, true)?;
+                        } else {
+                            self.buf_kick(&mut engine, &mut st, c, w, arrive, true)?;
+                        }
+                    }
+                }
+                BufEv::Cloud { cloud: c } => {
+                    let cu =
+                        st.cloud_q[c].pop_front().expect("shipped buffer queued");
+                    self.sim_secs = self.sim_secs.max(engine.now());
+                    // --- apply with the staleness discount (formula 4),
+                    // cloud-level
+                    let staleness = self.global_version - cu.base_version;
+                    let u = ClientUpdate {
+                        worker: self.cluster.gateway(c),
+                        n_samples: cu.n_samples,
+                        local_loss: cu.mean_loss,
+                        delta: cu.delta,
+                        staleness,
+                    };
+                    let t0 = Instant::now();
+                    self.aggregator.apply_one(&mut self.global, &u);
+                    self.host_secs += t0.elapsed().as_secs_f64();
+                    self.accountant.record_round();
+                    self.global_version += 1;
+                    applies += 1;
+                    train_loss_acc += cu.mean_loss;
+
+                    // --- unicast the fresh model back to this gateway
+                    let gw_node = self.cluster.gateway(c);
+                    let secs = if gw_node == self.leader {
+                        0.0
+                    } else {
+                        let (secs, wire) = self.gw_down[c]
+                            .send_params(&self.global, &mut self.wan)?;
+                        self.wire_bytes += wire;
+                        secs
+                    };
+                    let arrival =
+                        (engine.now() + secs).max(st.gw[c].down_clamp);
+                    st.gw[c].down_clamp = arrival;
+                    st.param_q[c]
+                        .push_back((self.global.clone(), self.global_version));
+                    engine.at(arrival, BufEv::Params { cloud: c });
+                    self.sim_secs = self.sim_secs.max(arrival);
+
+                    // --- pseudo-round bookkeeping: every n_clouds applies
+                    if applies % n_clouds == 0 {
+                        let round = applies / n_clouds - 1;
+                        let do_eval = round % self.cfg.eval_every.max(1) == 0
+                            || applies == total;
+                        let (eval_loss, eval_acc) = if do_eval {
+                            let (l, a) = self.evaluate()?;
+                            (Some(l), Some(a))
+                        } else {
+                            (None, None)
+                        };
+                        let platform_secs = std::mem::replace(
+                            &mut round_compute,
+                            vec![0.0; n],
+                        );
+                        let cost = self.cost_observe(&platform_secs);
+                        let record = RoundRecord {
+                            round,
+                            sim_secs: self.sim_secs,
+                            wire_bytes: self.wire_bytes,
+                            train_loss: train_loss_acc / n_clouds as f32,
+                            eval_loss,
+                            eval_acc,
+                            platform_secs,
+                            epsilon: self.accountant.epsilon(),
+                            partition_gen: self.plan.generation,
+                            active_members: self.cluster.n_active(),
+                            cost,
+                            cum_cost_usd: self
+                                .cost_ledger
+                                .cumulative()
+                                .total_usd(),
+                        };
+                        let cum_cost = record.cum_cost_usd;
+                        train_loss_acc = 0.0;
+                        // snapshot the boundary durably before acting on
+                        // it: round_compute/train_loss_acc are freshly
+                        // zeroed, so queue + state capture everything
+                        self.wal_append_buffered(&record, &engine, &st)?;
+                        self.commit_round(record)?;
+                        if let (Some(l), Some(t)) =
+                            (eval_loss, self.cfg.target_loss)
+                        {
+                            if (l as f64) <= t {
+                                reached = true;
+                                break;
+                            }
+                        }
+                        if let Some(budget) = self.cfg.target_cost {
+                            if cum_cost >= budget {
+                                log::info!(
+                                    "pseudo-round {round}: cost budget \
+                                     {budget} USD exhausted, stopping"
+                                );
+                                break;
+                            }
+                        }
+                        if applies < total {
+                            // next boundary's faults, then abort any
+                            // cycle whose roster changed
+                            self.apply_faults(applies / n_clouds)?;
+                            self.buffered_roster_repair(&mut engine, &mut st)?;
+                        }
+                    }
+                }
+                BufEv::Params { cloud: c } => {
+                    let (params, version) =
+                        st.param_q[c].pop_front().expect("model in flight");
+                    st.gw[c].params = params;
+                    st.gw[c].version = version;
+                }
+            }
+        }
+        self.sim_events += engine.scheduled_total();
+        self.finish(reached)
+    }
+
+    /// Start (or restart) local training for member `w` of cloud `c`
+    /// against its gateway's current model. `pay_downlink` bills the
+    /// gateway→member model transfer (everything but the initial
+    /// kick-off, whose model arrived with the setup distribution).
+    fn buf_kick(
+        &mut self,
+        engine: &mut EventEngine<BufEv>,
+        st: &mut BufState,
+        c: usize,
+        w: usize,
+        start: f64,
+        pay_downlink: bool,
+    ) -> Result<()> {
+        let gw_node = self.cluster.gateway(c);
+        let down_secs = if pay_downlink && w != gw_node {
+            let (secs, wire) =
+                self.down[w].send_params(&st.gw[c].params, &mut self.wan)?;
+            self.wire_bytes += wire;
+            secs
+        } else {
+            0.0
+        };
+        st.base_cycle[w] = st.gw[c].cycle;
+        let kind = self.cfg.aggregation.update_kind();
+        let model = st.gw[c].params.clone();
+        let r = self.workers[w].local_round(
+            self.backend,
+            &model,
+            kind,
+            self.cfg.local_steps,
+            self.cfg.local_lr,
+            self.cfg.base_step_secs,
+            &self.cfg.dp,
+        )?;
+        self.host_secs += r.host_secs;
+        engine.at(
+            start + down_secs + r.compute_secs,
+            BufEv::Member { worker: w, gen: st.kick_gen[w] },
+        );
+        st.pending[w] = Some((r.update, r.mean_loss, r.compute_secs));
+        Ok(())
+    }
+
+    /// Mix one delivered member update into its gateway's buffer with
+    /// the FedBuff weight `α₀/(1+staleness) · n_w/Σn`. With secure
+    /// aggregation the scaled update is masked under the per-cloud
+    /// session first — the gateway's buffer then holds a sum that only
+    /// unmasks once every active member has contributed.
+    fn buf_contribute(
+        &mut self,
+        st: &mut BufState,
+        c: usize,
+        w: usize,
+        delta: ParamSet,
+        mean_loss: f32,
+    ) {
+        let cycle = st.gw[c].cycle;
+        let staleness = cycle - st.base_cycle[w];
+        let alpha = self
+            .hier
+            .as_ref()
+            .expect("buffered mode is hierarchical")
+            .mixing_rate(staleness);
+        let n_w = self.workers[w].n_samples;
+        let weight = alpha * (n_w as f64 / st.gw[c].ns_total) as f32;
+        let t0 = Instant::now();
+        let mut scaled = delta;
+        scaled.scale(weight);
+        let contrib = if self.cfg.secure_agg {
+            let idx = self.sa_cloud_index[w]
+                .expect("contributing member is in its cloud's session");
+            let masked =
+                self.secure_clouds[c].mask(idx, cycle, &scaled.to_flat());
+            ParamSet::from_flat(&masked.data, &scaled)
+                .expect("shape preserved")
+        } else {
+            scaled
+        };
+        let gw = &mut st.gw[c];
+        match gw.buf.as_mut() {
+            Some(b) => b.axpy(1.0, &contrib),
+            None => gw.buf = Some(contrib),
+        }
+        self.host_secs += t0.elapsed().as_secs_f64();
+        gw.buf_loss += mean_loss as f64 * n_w as f64;
+        gw.buf_samples += n_w;
+        gw.contributed[w] = true;
+    }
+
+    /// Has every active member of cloud `c` contributed to the current
+    /// cycle?
+    fn buf_cycle_complete(&self, st: &BufState, c: usize) -> bool {
+        self.cluster
+            .active_members(c)
+            .iter()
+            .all(|&m| st.gw[c].contributed[m])
+    }
+
+    /// Close cloud `c`'s cycle: assert exactly-once coverage of the
+    /// active roster (the secure masks cancel iff this holds), ship the
+    /// buffered aggregate toward the leader on the FIFO gateway pipe,
+    /// open the next cycle and drain stalled members into it.
+    fn buf_flush(
+        &mut self,
+        engine: &mut EventEngine<BufEv>,
+        st: &mut BufState,
+        c: usize,
+    ) -> Result<()> {
+        let active = self.cluster.active_members(c);
+        let covered = active.iter().filter(|&&m| st.gw[c].contributed[m]).count();
+        assert_eq!(
+            covered,
+            active.len(),
+            "buffered flush must cover every active member of cloud {c}"
+        );
+        if self.cfg.secure_agg {
+            assert_eq!(
+                self.secure_clouds[c].n(),
+                active.len(),
+                "cloud {c}'s secure session must span its active roster"
+            );
+        }
+        let gw_node = self.cluster.gateway(c);
+        let (delta, mean_loss, n_samples) = {
+            let gw = &mut st.gw[c];
+            let delta = gw.buf.take().expect("completed cycle has a buffer");
+            let mean_loss =
+                (gw.buf_loss / gw.buf_samples.max(1) as f64) as f32;
+            (delta, mean_loss, gw.buf_samples)
+        };
+        let (delivered, secs) = if gw_node == self.leader {
+            (self.gw_up[c].codec_loopback(&delta)?, 0.0)
+        } else {
+            let d = self.gw_up[c].send_update(
+                &delta,
+                mean_loss,
+                n_samples,
+                1.0,
+                &mut self.wan,
+            )?;
+            self.wire_bytes += d.wire_bytes;
+            (d.update, d.secs)
+        };
+        {
+            let gw = &mut st.gw[c];
+            // the buffer is complete at the last member arrival; the WAN
+            // leg cannot overtake the previous cycle's
+            let ready = gw.last_arrive.max(engine.now());
+            let arrival = (ready + secs).max(gw.up_clamp);
+            gw.up_clamp = arrival;
+            engine.at(arrival, BufEv::Cloud { cloud: c });
+            st.cloud_q[c].push_back(CloudUpdate {
+                delta: delivered,
+                mean_loss,
+                n_samples,
+                base_version: gw.version,
+            });
+            // open the next cycle
+            gw.cycle += 1;
+            gw.buf_loss = 0.0;
+            gw.buf_samples = 0;
+            gw.contributed.fill(false);
+        }
+        st.gw[c].ns_total = active
+            .iter()
+            .map(|&m| self.workers[m].n_samples as f64)
+            .sum();
+        self.sim_secs = self.sim_secs.max(st.gw[c].up_clamp);
+        // drain stalled members into the fresh cycle in worker-id order
+        // (cannot re-complete it: the flush-triggering member has not
+        // contributed yet)
+        for &m in &active {
+            if let Some((d, l)) = st.stash[m].take() {
+                self.buf_contribute(st, c, m, d, l);
+                let start = st.gw[c].last_arrive.max(engine.now());
+                self.buf_kick(engine, st, c, m, start, true)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Abort the in-progress cycle of every cloud whose roster changed
+    /// at this boundary (`roster_dirty`, set by `roster_changed`): a
+    /// buffer partially summed under the old roster's masks can never
+    /// unmask, so the cycle restarts clean — buffer cleared, cycle
+    /// bumped (fresh mask round), stalls dropped, in-flight member
+    /// events invalidated via `kick_gen`, and every active member
+    /// re-kicked from the gateway's current model. Already-shipped
+    /// buffers stay valid: their masks cancelled at flush time.
+    pub(crate) fn buffered_roster_repair(
+        &mut self,
+        engine: &mut EventEngine<BufEv>,
+        st: &mut BufState,
+    ) -> Result<()> {
+        let mut dirty = std::mem::take(&mut self.roster_dirty);
+        dirty.sort_unstable();
+        dirty.dedup();
+        for c in dirty {
+            let active = self.cluster.active_members(c);
+            {
+                let gw = &mut st.gw[c];
+                gw.cycle += 1;
+                gw.buf = None;
+                gw.buf_loss = 0.0;
+                gw.buf_samples = 0;
+                gw.contributed.fill(false);
+            }
+            st.gw[c].ns_total = active
+                .iter()
+                .map(|&m| self.workers[m].n_samples as f64)
+                .sum();
+            for m in self.cluster.cloud_members(c) {
+                st.pending[m] = None;
+                st.stash[m] = None;
+                st.kick_gen[m] += 1;
+            }
+            let start = self.sim_secs;
+            for &m in &active {
+                self.buf_kick(engine, st, c, m, start, true)?;
+            }
+        }
+        Ok(())
+    }
+}

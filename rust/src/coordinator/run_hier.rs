@@ -63,26 +63,35 @@ enum Ev {
 impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
     /// One hierarchical round (see module docs).
     pub(crate) fn hier_round(&mut self, round: usize) -> Result<RoundRecord> {
-        let n = self.workers.len();
-        let clouds = self.cluster.clouds();
-        let n_clouds = clouds.len();
+        // per-cloud *active* member lists: preempted members sit the
+        // round out, and every barrier below counts the active set only
+        let n_clouds = self.cluster.n_clouds();
+        let clouds: Vec<Vec<usize>> = (0..n_clouds)
+            .map(|c| self.cluster.active_members(c))
+            .collect();
+        let n_active: usize = clouds.iter().map(|m| m.len()).sum();
         let step_counts = self.local_step_counts();
         let round_start = self.sim_secs;
         let mut engine: EventEngine<Ev> = EventEngine::new(round_start);
 
-        // --- phase 1: local training on every worker node
+        // --- phase 1: local training on every active worker node
         let locals = self.train_all_workers(&step_counts)?;
         for (w, r) in locals.iter().enumerate() {
-            engine.at(round_start + r.compute_secs, Ev::ComputeDone(w));
+            if let Some(r) = r {
+                engine.at(round_start + r.compute_secs, Ev::ComputeDone(w));
+            }
         }
 
-        let n_total: f64 =
-            self.workers.iter().map(|w| w.n_samples as f64).sum();
+        let n_total: f64 = clouds
+            .iter()
+            .flatten()
+            .map(|&w| self.workers[w].n_samples as f64)
+            .sum();
         let sa_round = self.global_version;
 
         // --- phase 2: intra-cloud uplinks, gateway reduces, WAN legs
         let mut member_updates: Vec<Option<ClientUpdate>> =
-            (0..n).map(|_| None).collect();
+            (0..self.workers.len()).map(|_| None).collect();
         let mut cloud_pending: Vec<usize> =
             clouds.iter().map(|m| m.len()).collect();
         let mut partials: Vec<Option<PartialAggregate>> =
@@ -96,14 +105,15 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
                 Ev::ComputeDone(w) => {
                     let c = self.cluster.cloud_of(w);
                     let gw = self.cluster.gateway(c);
+                    let local = locals[w].as_ref().expect("active trained");
                     // gateway members loop back through the codec; others
                     // pay the intra-cloud hop
                     let (delivered, secs, wire) = if w == gw {
-                        (self.up[w].codec_loopback(&locals[w].update)?, 0.0, 0)
+                        (self.up[w].codec_loopback(&local.update)?, 0.0, 0)
                     } else {
                         let d = self.up[w].send_update(
-                            &locals[w].update,
-                            locals[w].mean_loss,
+                            &local.update,
+                            local.mean_loss,
                             self.workers[w].n_samples,
                             1.0,
                             &mut self.wan,
@@ -114,7 +124,7 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
                     member_updates[w] = Some(ClientUpdate {
                         worker: w,
                         n_samples: self.workers[w].n_samples,
-                        local_loss: locals[w].mean_loss,
+                        local_loss: local.mean_loss,
                         delta: delivered,
                         staleness: 0,
                     });
@@ -170,11 +180,15 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
         let t0 = Instant::now();
         if self.secure.is_some() {
             // sum of masked partials over *all* clouds: masks only cancel
-            // with every worker present exactly once — the per-cloud
-            // bookkeeping guarantees it, this assert keeps it honest
+            // with every member of the current roster present exactly
+            // once — the per-cloud bookkeeping and the roster-change
+            // re-keying guarantee it, this assert keeps it honest
             // (applying a still-masked sum would silently train garbage)
             let covered: usize = partials.iter().map(|p| p.n_members).sum();
-            assert_eq!(covered, n, "secure hier reduce must cover all workers");
+            assert_eq!(
+                covered, n_active,
+                "secure hier reduce must cover the active roster"
+            );
             let mut agg = partials[0].delta.clone();
             let terms: Vec<(f32, &crate::model::ParamSet)> = partials[1..]
                 .iter()
@@ -205,7 +219,7 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
             }
         }
         let mut have_model = 0usize;
-        while have_model < n {
+        while have_model < n_active {
             match engine.pop().expect("broadcast events pending") {
                 Ev::GwBcast { cloud } => {
                     have_model += 1; // the gateway itself
@@ -280,7 +294,9 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
         let step_counts = self.local_step_counts();
         let round_start = self.sim_secs;
 
-        // --- phase 1: local training on every worker node
+        // --- phase 1: local training on every worker node (validation
+        // keeps fault plans off the par-rounds path, so the roster is
+        // full and every slot is Some)
         let locals = self.train_all_workers(&step_counts)?;
 
         // --- phase 2: per-cloud parallel member uplinks + gateway reduce
@@ -329,12 +345,14 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
                     // worker-id order (the member list), so the reduce
                     // and the rng draws are arrival-order-independent
                     for (w, ch) in ups {
+                        let local =
+                            locals[w].as_ref().expect("full roster trained");
                         let (delivered, secs) = if w == gw {
-                            (ch.codec_loopback(&locals[w].update)?, 0.0)
+                            (ch.codec_loopback(&local.update)?, 0.0)
                         } else {
                             let d = ch.send_update_scoped(
-                                &locals[w].update,
-                                locals[w].mean_loss,
+                                &local.update,
+                                local.mean_loss,
                                 n_samples[w],
                                 1.0,
                                 wan,
@@ -345,11 +363,11 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
                             (d.update, d.secs)
                         };
                         ready_at = ready_at
-                            .max(round_start + locals[w].compute_secs + secs);
+                            .max(round_start + local.compute_secs + secs);
                         members.push(ClientUpdate {
                             worker: w,
                             n_samples: n_samples[w],
-                            local_loss: locals[w].mean_loss,
+                            local_loss: local.mean_loss,
                             delta: delivered,
                             staleness: 0,
                         });

@@ -72,10 +72,11 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
         self.finish(reached)
     }
 
-    /// One synchronous star round: local training on every platform →
-    /// (DP → compress → encrypt → WAN) → barrier → aggregate → broadcast
-    /// → monitor/re-partition. Uplinks overlap with slower workers'
-    /// compute; the barrier fires at the last arrival event.
+    /// One synchronous star round: local training on every active
+    /// platform → (DP → compress → encrypt → WAN) → barrier → aggregate →
+    /// broadcast → monitor/re-partition. Uplinks overlap with slower
+    /// workers' compute; the barrier fires at the last arrival event.
+    /// Inactive (preempted) members sit the round out entirely.
     fn sync_round(&mut self, round: usize) -> Result<RoundRecord> {
         let n = self.workers.len();
         let step_counts = self.local_step_counts();
@@ -83,10 +84,15 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
         let mut engine: EventEngine<Ev> = EventEngine::new(round_start);
 
         // --- phase 1: local training (platforms run in parallel in sim
-        // time; sequentially on the host against the shared backend)
+        // time; sequentially on the host against the shared backend).
+        // `locals[w]` is None for inactive members — they schedule no
+        // events and the barrier waits only for the active set.
         let locals = self.train_all_workers(&step_counts)?;
+        let n_active = locals.iter().flatten().count();
         for (w, r) in locals.iter().enumerate() {
-            engine.at(round_start + r.compute_secs, Ev::ComputeDone(w));
+            if let Some(r) = r {
+                engine.at(round_start + r.compute_secs, Ev::ComputeDone(w));
+            }
         }
 
         // --- phase 2: uplinks through the real pipeline, as events.
@@ -97,15 +103,16 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
             (0..n).map(|_| None).collect();
         let mut round_wire = 0u64;
         let mut n_arrived = 0usize;
-        while n_arrived < n {
+        while n_arrived < n_active {
             match engine.pop().expect("arrival events pending") {
                 Ev::ComputeDone(w) => {
+                    let local = locals[w].as_ref().expect("active trained");
                     let (delivered, up_secs, wire) = if w == self.leader {
-                        (self.up[w].codec_loopback(&locals[w].update)?, 0.0, 0)
+                        (self.up[w].codec_loopback(&local.update)?, 0.0, 0)
                     } else {
                         let d = self.up[w].send_update(
-                            &locals[w].update,
-                            locals[w].mean_loss,
+                            &local.update,
+                            local.mean_loss,
                             self.workers[w].n_samples,
                             1.0,
                             &mut self.wan,
@@ -116,7 +123,7 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
                     updates[w] = Some(ClientUpdate {
                         worker: w,
                         n_samples: self.workers[w].n_samples,
-                        local_loss: locals[w].mean_loss,
+                        local_loss: local.mean_loss,
                         delta: delivered,
                         staleness: 0,
                     });
@@ -128,7 +135,8 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
         }
         let barrier_at = engine.now();
         let updates: Vec<ClientUpdate> =
-            updates.into_iter().map(|u| u.expect("arrived")).collect();
+            updates.into_iter().flatten().collect();
+        debug_assert_eq!(updates.len(), n_active);
 
         // --- phase 3: aggregation at the barrier (leader host CPU is
         // profiled, not added to simulated time)
@@ -144,10 +152,12 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
         self.global_version += 1;
 
         // --- phase 4: broadcast the new global model (transfers overlap;
-        // the round ends at the last delivery event)
+        // the round ends at the last delivery event). Departed members
+        // receive nothing — a rejoining node trains against the then-
+        // current global, delivered with its re-planned shard.
         for w in 0..n {
-            if w == self.leader {
-                continue; // hosts the global model already
+            if w == self.leader || !self.cluster.is_active(w) {
+                continue; // hosts the global model already / preempted
             }
             let (secs, wire) =
                 self.down[w].send_params(&self.global, &mut self.wan)?;

@@ -1,0 +1,64 @@
+//! The round pipeline's scheduling policy.
+//!
+//! Every run is one of four policies over the shared
+//! [`EventEngine`](crate::coordinator::engine): the two config knobs
+//! (`aggregation`'s sync/async split and `hierarchical`) pick which one,
+//! and [`crate::coordinator::Coordinator::run`] dispatches on it. The
+//! schedulers themselves live in `run_sync.rs` (both barrier policies),
+//! `run_async.rs` and `run_buffered.rs` — this enum is the single place
+//! the mapping is written down, so config validation, the WAL's
+//! mode-compatibility checks and the dispatch can never disagree.
+
+/// Which round pipeline a configuration runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Schedule {
+    /// flat star: every worker uplinks to the leader, one barrier per
+    /// round (FedAvg / dynamic / gradient)
+    SyncBarrier,
+    /// flat star, no barrier: the leader applies each update on arrival
+    /// with the staleness-discounted mixing rate (paper formula 4)
+    FlatAsync,
+    /// two-level barrier: per-cloud gateway reduces, one WAN partial per
+    /// cloud, cross-cloud reduce at the leader
+    HierSync,
+    /// FedBuff-style buffered hierarchy: gateways mix member updates into
+    /// a cloud buffer as they arrive (local mixing rate over the lagged
+    /// gateway model), the leader consumes cloud-level buffered
+    /// aggregates asynchronously
+    HierBufferedAsync,
+}
+
+impl Schedule {
+    /// Derive the policy from the two config knobs.
+    pub fn derive(is_async: bool, hierarchical: bool) -> Schedule {
+        match (is_async, hierarchical) {
+            (false, false) => Schedule::SyncBarrier,
+            (true, false) => Schedule::FlatAsync,
+            (false, true) => Schedule::HierSync,
+            (true, true) => Schedule::HierBufferedAsync,
+        }
+    }
+
+    /// Policies without a per-round barrier (event-loop schedulers with
+    /// pseudo-round accounting).
+    pub fn is_async(self) -> bool {
+        matches!(self, Schedule::FlatAsync | Schedule::HierBufferedAsync)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn knobs_map_onto_the_four_policies() {
+        assert_eq!(Schedule::derive(false, false), Schedule::SyncBarrier);
+        assert_eq!(Schedule::derive(true, false), Schedule::FlatAsync);
+        assert_eq!(Schedule::derive(false, true), Schedule::HierSync);
+        assert_eq!(Schedule::derive(true, true), Schedule::HierBufferedAsync);
+        assert!(Schedule::FlatAsync.is_async());
+        assert!(Schedule::HierBufferedAsync.is_async());
+        assert!(!Schedule::SyncBarrier.is_async());
+        assert!(!Schedule::HierSync.is_async());
+    }
+}

@@ -8,9 +8,11 @@
 //! per-channel error-feedback scratch and AEAD sequence counters, the
 //! partition plan's generation + weights (the shards themselves are
 //! regenerated, not stored), the load monitor / granularity / privacy
-//! accountant positions, the gateway-election state, the cost ledger's
-//! volume-tier positions, and — in async mode — the event queue and the
-//! in-flight updates awaiting pickup.
+//! accountant positions, the gateway-election state, the roster epoch
+//! (secure-aggregation re-keying), the cost ledger's volume-tier
+//! positions, and — in the async schedulers — the event queue and the
+//! in-flight updates awaiting pickup (flat async) or the full
+//! gateway-buffer state (buffered hierarchy).
 //!
 //! Restore order matters and is fixed by the encode order: the partition
 //! plan is regenerated first (so `set_shard` rebuilds each worker's token
@@ -25,6 +27,7 @@ use crate::cluster::ClusterSpec;
 use crate::config::ExperimentConfig;
 use crate::coordinator::build::Coordinator;
 use crate::coordinator::engine::EventEngine;
+use crate::coordinator::run_buffered::{BufEv, BufState, CloudUpdate, GwState};
 use crate::cost::CostBreakdown;
 use crate::metrics::RoundRecord;
 use crate::model::ParamSet;
@@ -44,6 +47,18 @@ pub(crate) struct AsyncWalSnapshot {
     pub queued: Vec<(f64, usize)>,
     /// per-worker update awaiting pickup
     pub pending: Vec<Option<(ParamSet, f32, f64)>>,
+}
+
+/// Buffered-scheduler state decoded from the last WAL record: the event
+/// queue plus the complete per-gateway buffer/stash/queue state.
+/// `run_buffered` consumes this instead of re-kicking the workers.
+pub(crate) struct BufferedWalSnapshot {
+    /// simulated time the engine had advanced to at the boundary
+    pub now: f64,
+    /// queued events, in pop order
+    pub queued: Vec<(f64, BufEv)>,
+    /// the scheduler's full mutable state
+    pub state: BufState,
 }
 
 /// The chain/counter prefix shared by every record (decoded for *all*
@@ -104,10 +119,10 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
     /// Durably log the finished round's record (sync/hier schedulers;
     /// called before `commit_round`). No-op without an attached WAL.
     pub(crate) fn wal_append_sync(&mut self, record: &RoundRecord) -> Result<()> {
-        self.wal_append_with(record, None)
+        self.wal_append_with(record, None, None)
     }
 
-    /// Durably log the finished pseudo-round's record plus the async
+    /// Durably log the finished pseudo-round's record plus the flat async
     /// scheduler's live state (event queue + in-flight updates).
     pub(crate) fn wal_append_async(
         &mut self,
@@ -115,13 +130,26 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
         engine: &EventEngine<usize>,
         pending: &[Option<(ParamSet, f32, f64)>],
     ) -> Result<()> {
-        self.wal_append_with(record, Some((engine, pending)))
+        self.wal_append_with(record, Some((engine, pending)), None)
+    }
+
+    /// Durably log the finished pseudo-round's record plus the buffered
+    /// hierarchy's live state (event queue, gateway buffers, stashes and
+    /// both gateway↔leader queues).
+    pub(crate) fn wal_append_buffered(
+        &mut self,
+        record: &RoundRecord,
+        engine: &EventEngine<BufEv>,
+        st: &BufState,
+    ) -> Result<()> {
+        self.wal_append_with(record, None, Some((engine, st)))
     }
 
     fn wal_append_with(
         &mut self,
         record: &RoundRecord,
         async_state: Option<(&EventEngine<usize>, &[Option<(ParamSet, f32, f64)>])>,
+        buffered_state: Option<(&EventEngine<BufEv>, &BufState)>,
     ) -> Result<()> {
         if self.wal.is_none() {
             return Ok(());
@@ -177,6 +205,7 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
         }
         w.put_f64(rec.epsilon);
         w.put_u64(rec.partition_gen);
+        w.put_usize(rec.active_members);
         w.put_usize(rec.cost.compute_usd.len());
         for &usd in &rec.cost.compute_usd {
             w.put_f64(usd);
@@ -203,6 +232,7 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
             worker.wal_encode(&mut w);
         }
         self.cluster.wal_encode(&mut w);
+        w.put_u64(self.roster_epoch);
         for ch in &self.up {
             ch.wal_encode(&mut w);
         }
@@ -223,7 +253,7 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
         }
         self.wan.wal_encode(&mut w);
         self.cost_ledger.wal_encode(&mut w);
-        // --- async scheduler extras
+        // --- flat async scheduler extras
         match async_state {
             None => w.put_bool(false),
             Some((engine, pending)) => {
@@ -245,6 +275,101 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
                             w.put_f32(*loss);
                             w.put_f64(*secs);
                         }
+                    }
+                }
+            }
+        }
+        // --- buffered hierarchy extras
+        match buffered_state {
+            None => w.put_bool(false),
+            Some((engine, st)) => {
+                w.put_bool(true);
+                w.put_f64(engine.now());
+                let queued = engine.queued();
+                w.put_usize(queued.len());
+                for (at, ev) in queued {
+                    w.put_f64(at);
+                    match *ev {
+                        BufEv::Member { worker, gen } => {
+                            w.put_u8(0);
+                            w.put_u64(worker as u64);
+                            w.put_u64(gen);
+                        }
+                        BufEv::Cloud { cloud } => {
+                            w.put_u8(1);
+                            w.put_u64(cloud as u64);
+                        }
+                        BufEv::Params { cloud } => {
+                            w.put_u8(2);
+                            w.put_u64(cloud as u64);
+                        }
+                    }
+                }
+                debug_assert_eq!(st.pending.len(), self.workers.len());
+                for p in &st.pending {
+                    match p {
+                        None => w.put_bool(false),
+                        Some((delta, loss, secs)) => {
+                            w.put_bool(true);
+                            write_param_set(&mut w, delta);
+                            w.put_f32(*loss);
+                            w.put_f64(*secs);
+                        }
+                    }
+                }
+                for s in &st.stash {
+                    match s {
+                        None => w.put_bool(false),
+                        Some((delta, loss)) => {
+                            w.put_bool(true);
+                            write_param_set(&mut w, delta);
+                            w.put_f32(*loss);
+                        }
+                    }
+                }
+                for &g in &st.kick_gen {
+                    w.put_u64(g);
+                }
+                for &c in &st.base_cycle {
+                    w.put_u64(c);
+                }
+                w.put_usize(st.gw.len());
+                for gw in &st.gw {
+                    write_param_set(&mut w, &gw.params);
+                    w.put_u64(gw.version);
+                    w.put_u64(gw.cycle);
+                    match &gw.buf {
+                        None => w.put_bool(false),
+                        Some(b) => {
+                            w.put_bool(true);
+                            write_param_set(&mut w, b);
+                        }
+                    }
+                    w.put_f64(gw.buf_loss);
+                    w.put_usize(gw.buf_samples);
+                    debug_assert_eq!(gw.contributed.len(), self.workers.len());
+                    for &c in &gw.contributed {
+                        w.put_bool(c);
+                    }
+                    w.put_f64(gw.ns_total);
+                    w.put_f64(gw.last_arrive);
+                    w.put_f64(gw.up_clamp);
+                    w.put_f64(gw.down_clamp);
+                }
+                for q in &st.cloud_q {
+                    w.put_usize(q.len());
+                    for cu in q {
+                        write_param_set(&mut w, &cu.delta);
+                        w.put_f32(cu.mean_loss);
+                        w.put_usize(cu.n_samples);
+                        w.put_u64(cu.base_version);
+                    }
+                }
+                for q in &st.param_q {
+                    w.put_usize(q.len());
+                    for (params, version) in q {
+                        write_param_set(&mut w, params);
+                        w.put_u64(*version);
                     }
                 }
             }
@@ -332,6 +457,13 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
         }
         let epsilon = r.get_f64()?;
         let partition_gen = r.get_u64()?;
+        let active_members = r.get_usize()?;
+        anyhow::ensure!(
+            active_members <= self.workers.len(),
+            "WAL record {idx} claims {active_members} active members, \
+             run has {} workers",
+            self.workers.len()
+        );
         let n_clouds = r.get_usize()?;
         anyhow::ensure!(
             n_clouds == self.cluster.n_clouds(),
@@ -359,6 +491,7 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
                 platform_secs,
                 epsilon,
                 partition_gen,
+                active_members,
                 cost,
                 cum_cost_usd,
             },
@@ -409,6 +542,10 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
         // channels' own codec/EF/seq state is overlaid afterwards
         // (retargeting only moves the far end of the pipe)
         self.cluster.wal_decode(r)?;
+        // the roster epoch re-derives every secure-aggregation session
+        // (flat + per-cloud) over the restored active roster
+        self.roster_epoch = r.get_u64()?;
+        self.rekey_secure();
         for c in 0..self.cluster.n_clouds() {
             self.retarget_cloud_channels(c);
         }
@@ -442,13 +579,14 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
         }
         self.wan.wal_decode(r)?;
         self.cost_ledger.wal_decode(r)?;
-        // --- async scheduler extras
+        // --- flat async scheduler extras
         let is_async = r.get_bool()?;
         anyhow::ensure!(
-            is_async == self.aggregator.is_async(),
+            is_async == (self.aggregator.is_async() && !self.cfg.hierarchical),
             "aggregation mode changed across resume \
-             (WAL async={is_async}, config async={})",
-            self.aggregator.is_async()
+             (WAL flat-async={is_async}, config async={} hierarchical={})",
+            self.aggregator.is_async(),
+            self.cfg.hierarchical
         );
         if is_async {
             let now = r.get_f64()?;
@@ -476,6 +614,164 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
                 });
             }
             self.async_resume = Some(AsyncWalSnapshot { now, queued, pending });
+        }
+        // --- buffered hierarchy extras
+        let is_buffered = r.get_bool()?;
+        anyhow::ensure!(
+            is_buffered == (self.aggregator.is_async() && self.cfg.hierarchical),
+            "aggregation mode changed across resume \
+             (WAL buffered={is_buffered}, config async={} hierarchical={})",
+            self.aggregator.is_async(),
+            self.cfg.hierarchical
+        );
+        if is_buffered {
+            let n = self.workers.len();
+            let n_clouds = self.cluster.n_clouds();
+            let now = r.get_f64()?;
+            let nq = r.get_usize()?;
+            let mut queued = Vec::with_capacity(nq);
+            for _ in 0..nq {
+                let at = r.get_f64()?;
+                let ev = match r.get_u8()? {
+                    0 => {
+                        let worker = r.get_u64()? as usize;
+                        anyhow::ensure!(
+                            worker < n,
+                            "WAL queued event names worker {worker}, run \
+                             has {n}"
+                        );
+                        BufEv::Member { worker, gen: r.get_u64()? }
+                    }
+                    tag @ (1 | 2) => {
+                        let cloud = r.get_u64()? as usize;
+                        anyhow::ensure!(
+                            cloud < n_clouds,
+                            "WAL queued event names cloud {cloud}, run \
+                             has {n_clouds}"
+                        );
+                        if tag == 1 {
+                            BufEv::Cloud { cloud }
+                        } else {
+                            BufEv::Params { cloud }
+                        }
+                    }
+                    other => {
+                        anyhow::bail!("WAL buffered event: bad tag {other}")
+                    }
+                };
+                queued.push((at, ev));
+            }
+            let mut pending = Vec::with_capacity(n);
+            for _ in 0..n {
+                pending.push(if r.get_bool()? {
+                    let delta = read_param_set(r)?;
+                    let loss = r.get_f32()?;
+                    let secs = r.get_f64()?;
+                    Some((delta, loss, secs))
+                } else {
+                    None
+                });
+            }
+            let mut stash = Vec::with_capacity(n);
+            for _ in 0..n {
+                stash.push(if r.get_bool()? {
+                    let delta = read_param_set(r)?;
+                    let loss = r.get_f32()?;
+                    Some((delta, loss))
+                } else {
+                    None
+                });
+            }
+            let mut kick_gen = Vec::with_capacity(n);
+            for _ in 0..n {
+                kick_gen.push(r.get_u64()?);
+            }
+            let mut base_cycle = Vec::with_capacity(n);
+            for _ in 0..n {
+                base_cycle.push(r.get_u64()?);
+            }
+            let n_gw = r.get_usize()?;
+            anyhow::ensure!(
+                n_gw == n_clouds,
+                "WAL has {n_gw} gateway buffer states, run has {n_clouds} \
+                 clouds"
+            );
+            let mut gw = Vec::with_capacity(n_gw);
+            for _ in 0..n_gw {
+                let params = read_param_set(r)?;
+                let version = r.get_u64()?;
+                let cycle = r.get_u64()?;
+                let buf = if r.get_bool()? {
+                    Some(read_param_set(r)?)
+                } else {
+                    None
+                };
+                let buf_loss = r.get_f64()?;
+                let buf_samples = r.get_usize()?;
+                let mut contributed = Vec::with_capacity(n);
+                for _ in 0..n {
+                    contributed.push(r.get_bool()?);
+                }
+                let ns_total = r.get_f64()?;
+                let last_arrive = r.get_f64()?;
+                let up_clamp = r.get_f64()?;
+                let down_clamp = r.get_f64()?;
+                gw.push(GwState {
+                    params,
+                    version,
+                    cycle,
+                    buf,
+                    buf_loss,
+                    buf_samples,
+                    contributed,
+                    ns_total,
+                    last_arrive,
+                    up_clamp,
+                    down_clamp,
+                });
+            }
+            let mut cloud_q = Vec::with_capacity(n_clouds);
+            for _ in 0..n_clouds {
+                let len = r.get_usize()?;
+                let mut q = std::collections::VecDeque::with_capacity(len);
+                for _ in 0..len {
+                    let delta = read_param_set(r)?;
+                    let mean_loss = r.get_f32()?;
+                    let n_samples = r.get_usize()?;
+                    let base_version = r.get_u64()?;
+                    q.push_back(CloudUpdate {
+                        delta,
+                        mean_loss,
+                        n_samples,
+                        base_version,
+                    });
+                }
+                cloud_q.push(q);
+            }
+            let mut param_q = Vec::with_capacity(n_clouds);
+            for _ in 0..n_clouds {
+                let len = r.get_usize()?;
+                let mut q = std::collections::VecDeque::with_capacity(len);
+                for _ in 0..len {
+                    let params = read_param_set(r)?;
+                    let version = r.get_u64()?;
+                    q.push_back((params, version));
+                }
+                param_q.push(q);
+            }
+            self.buffered_resume = Some(BufferedWalSnapshot {
+                now,
+                queued,
+                state: BufState {
+                    pending,
+                    stash,
+                    kick_gen,
+                    base_cycle,
+                    gw,
+                    cloud_q,
+                    param_q,
+                },
+            });
         }
         Ok(())
     }

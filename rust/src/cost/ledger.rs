@@ -136,6 +136,9 @@ impl CostBreakdown {
 #[derive(Clone, Debug)]
 pub struct CostLedger {
     book: PriceBook,
+    /// bill compute at the book's spot/preemptible rates instead of
+    /// on-demand (egress prices are the same either way)
+    spot: bool,
     /// bytes already billed per (cloud, class) — the tier state
     billed_bytes: Vec<[u64; 3]>,
     cum: CostBreakdown,
@@ -145,6 +148,7 @@ impl CostLedger {
     pub fn new(book: PriceBook, n_clouds: usize) -> CostLedger {
         CostLedger {
             book,
+            spot: false,
             billed_bytes: vec![[0u64; 3]; n_clouds],
             cum: CostBreakdown::zero(n_clouds),
         }
@@ -152,6 +156,12 @@ impl CostLedger {
 
     pub fn book(&self) -> &PriceBook {
         &self.book
+    }
+
+    /// Switch compute billing to the book's spot rates (config, set once
+    /// at build — not WAL state).
+    pub fn set_spot(&mut self, spot: bool) {
+        self.spot = spot;
     }
 
     /// Price everything that happened since the last observation:
@@ -190,8 +200,12 @@ impl CostLedger {
         }
         for (w, secs) in platform_secs.iter().enumerate() {
             let cloud = cluster.cloud_of(w);
-            round.compute_usd[cloud] +=
-                secs / 3600.0 * self.book.compute_rate(cloud);
+            let rate = if self.spot {
+                self.book.spot_rate(cloud)
+            } else {
+                self.book.compute_rate(cloud)
+            };
+            round.compute_usd[cloud] += secs / 3600.0 * rate;
         }
         self.cum.add(&round);
         round
@@ -307,6 +321,22 @@ mod tests {
             (r1.egress_usd[0][2] + r2.egress_usd[0][2]).to_bits()
         );
         assert_eq!(cum.compute_usd[0].to_bits(), r1.compute_usd[0].to_bits());
+    }
+
+    #[test]
+    fn spot_billing_uses_spot_rates() {
+        let cluster = crate::cluster::ClusterSpec::paper_default();
+        let book = PriceBook::paper_default();
+        let mut on_demand = CostLedger::new(book.clone(), 3);
+        let mut spot = CostLedger::new(book.clone(), 3);
+        spot.set_spot(true);
+        let bytes = vec![[0u64; 3]; 3];
+        let secs = [3600.0, 0.0, 0.0];
+        let a = on_demand.observe(&bytes, &secs, &cluster);
+        let b = spot.observe(&bytes, &secs, &cluster);
+        assert!((a.compute_usd[0] - book.compute_rate(0)).abs() < 1e-12);
+        assert!((b.compute_usd[0] - book.spot_rate(0)).abs() < 1e-12);
+        assert!(b.compute_usd[0] < a.compute_usd[0] * 0.5);
     }
 
     #[test]

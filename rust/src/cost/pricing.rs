@@ -149,6 +149,13 @@ pub struct PriceBook {
     /// `default_compute_per_node_hour`
     pub compute_per_node_hour: Vec<f64>,
     pub default_compute_per_node_hour: f64,
+    /// $/node-hour for spot/preemptible capacity per cloud id; clouds
+    /// beyond the list pay `default_spot_per_node_hour`. Billed instead
+    /// of the on-demand rate when the experiment runs with `spot` set
+    /// (the capacity is interruptible — pair with
+    /// [`crate::netsim::FaultPlan::spot_preemptions`]).
+    pub spot_per_node_hour: Vec<f64>,
+    pub default_spot_per_node_hour: f64,
     /// base $/GB egress per link class, indexed by [`LinkClass::index`]
     pub egress: [EgressRate; 3],
     /// src-cloud-specific overrides `(cloud, class, rate)` — e.g. one
@@ -169,6 +176,9 @@ impl PriceBook {
             name: "paper-default".into(),
             compute_per_node_hour: vec![3.06, 2.48, 3.40],
             default_compute_per_node_hour: 3.0,
+            // spot capacity at the familiar ~70% discount off on-demand
+            spot_per_node_hour: vec![0.92, 0.74, 1.02],
+            default_spot_per_node_hour: 0.9,
             egress: [
                 // IntraAz: cross-AZ transfer inside one cloud
                 EgressRate::flat(0.01),
@@ -201,6 +211,9 @@ impl PriceBook {
             name: "uniform".into(),
             compute_per_node_hour: Vec::new(),
             default_compute_per_node_hour: compute_per_node_hour,
+            // uniform books price spot at the same ~70% discount
+            spot_per_node_hour: Vec::new(),
+            default_spot_per_node_hour: compute_per_node_hour * 0.3,
             egress: [
                 EgressRate::flat(usd_per_gb),
                 EgressRate::flat(usd_per_gb),
@@ -216,6 +229,14 @@ impl PriceBook {
             .get(cloud)
             .copied()
             .unwrap_or(self.default_compute_per_node_hour)
+    }
+
+    /// $/node-hour of spot/preemptible compute on `cloud`.
+    pub fn spot_rate(&self, cloud: usize) -> f64 {
+        self.spot_per_node_hour
+            .get(cloud)
+            .copied()
+            .unwrap_or(self.default_spot_per_node_hour)
     }
 
     /// The egress rate traffic leaving `cloud` over a `class` link pays
@@ -251,6 +272,16 @@ impl PriceBook {
         {
             bail!("default compute rate must be finite and >= 0");
         }
+        for (i, r) in self.spot_per_node_hour.iter().enumerate() {
+            if !(*r >= 0.0) || !r.is_finite() {
+                bail!("spot rate for cloud {i} must be finite and >= 0");
+            }
+        }
+        if !(self.default_spot_per_node_hour >= 0.0)
+            || !self.default_spot_per_node_hour.is_finite()
+        {
+            bail!("default spot rate must be finite and >= 0");
+        }
         for class in LinkClass::ALL {
             self.egress[class.index()]
                 .validate()
@@ -275,6 +306,14 @@ impl PriceBook {
             (
                 "default_compute_per_node_hour",
                 Json::num(self.default_compute_per_node_hour),
+            ),
+            (
+                "spot_per_node_hour",
+                Json::arr(self.spot_per_node_hour.iter().map(|&r| Json::num(r))),
+            ),
+            (
+                "default_spot_per_node_hour",
+                Json::num(self.default_spot_per_node_hour),
             ),
             (
                 "egress",
@@ -321,6 +360,14 @@ impl PriceBook {
             "default_compute_per_node_hour",
             book.default_compute_per_node_hour,
         );
+        if let Some(arr) = v.get("spot_per_node_hour").and_then(Json::as_arr) {
+            book.spot_per_node_hour = arr
+                .iter()
+                .map(|x| x.as_f64().context("spot rate must be a number"))
+                .collect::<Result<Vec<f64>>>()?;
+        }
+        book.default_spot_per_node_hour =
+            v.opt_f64("default_spot_per_node_hour", book.default_spot_per_node_hour);
         if let Some(eg) = v.get("egress") {
             for class in LinkClass::ALL {
                 if let Some(r) = eg.get(class.name()) {
@@ -434,6 +481,26 @@ mod tests {
         // compute falls back to the default beyond the listed clouds
         assert!((book.compute_rate(2) - 3.40).abs() < 1e-12);
         assert!((book.compute_rate(7) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spot_rates_discount_on_demand() {
+        let book = PriceBook::paper_default();
+        for c in 0..3 {
+            assert!(book.spot_rate(c) < 0.5 * book.compute_rate(c));
+        }
+        assert!((book.spot_rate(7) - 0.9).abs() < 1e-12);
+        // round-trips through JSON and parses from partial JSON
+        let back = PriceBook::parse(&book.to_json().to_string()).unwrap();
+        assert_eq!(book.spot_per_node_hour, back.spot_per_node_hour);
+        let custom = PriceBook::parse(
+            r#"{"spot_per_node_hour": [0.5], "default_spot_per_node_hour": 0.4}"#,
+        )
+        .unwrap();
+        assert!((custom.spot_rate(0) - 0.5).abs() < 1e-12);
+        assert!((custom.spot_rate(9) - 0.4).abs() < 1e-12);
+        // negative spot rates are rejected
+        assert!(PriceBook::parse(r#"{"spot_per_node_hour": [-1.0]}"#).is_err());
     }
 
     #[test]

@@ -28,6 +28,9 @@ pub struct RoundRecord {
     pub epsilon: f64,
     /// partition generation in effect
     pub partition_gen: u64,
+    /// roster size when the round committed — elastic membership
+    /// (worker-leave/worker-join faults) shrinks and regrows this
+    pub active_members: usize,
     /// this round's dollar bill (compute + egress, per cloud and class)
     pub cost: CostBreakdown,
     /// cumulative dollars at the end of this round (incl. setup)
@@ -37,19 +40,20 @@ pub struct RoundRecord {
 impl RoundRecord {
     /// Header line of the curve CSV ([`RoundRecord::csv_row`] columns).
     pub const CSV_HEADER: &'static str =
-        "round,sim_hours,comm_gb,cost_usd,train_loss,eval_loss,eval_acc\n";
+        "round,sim_hours,comm_gb,cost_usd,train_loss,active,eval_loss,eval_acc\n";
 
     /// One curve-CSV row (no trailing newline) — shared by
     /// [`RunResult::curve_csv`] and the coordinator's streaming metrics
     /// sink, so a streamed curve is byte-identical to a post-hoc one.
     pub fn csv_row(&self) -> String {
         format!(
-            "{},{:.4},{:.4},{:.4},{:.4},{},{}",
+            "{},{:.4},{:.4},{:.4},{:.4},{},{},{}",
             self.round,
             self.sim_secs / 3600.0,
             self.wire_bytes as f64 / 1e9,
             self.cum_cost_usd,
             self.train_loss,
+            self.active_members,
             self.eval_loss.map_or(String::new(), |x| format!("{x:.4}")),
             self.eval_acc.map_or(String::new(), |x| format!("{x:.4}")),
         )
@@ -173,6 +177,7 @@ mod tests {
             platform_secs: vec![1.0, 1.1],
             epsilon: 0.0,
             partition_gen: 0,
+            active_members: 2,
             cost: CostBreakdown::zero(2),
             cum_cost_usd: round as f64 * 0.5,
         }
@@ -216,9 +221,11 @@ mod tests {
         let lines: Vec<&str> = csv.trim().lines().collect();
         assert_eq!(lines.len(), 4);
         assert!(lines[0].starts_with("round,"));
+        assert!(lines[0].contains(",active,"));
         assert!(lines[2].contains("3.5"));
-        // eval columns empty on non-eval rounds
-        assert!(lines[1].ends_with(",,"));
+        // eval columns empty on non-eval rounds; the active-member count
+        // sits just before them
+        assert!(lines[1].ends_with(",2,,"));
     }
 
     #[test]

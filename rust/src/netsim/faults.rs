@@ -29,6 +29,13 @@
 //!   (`Coordinator::resume`), so recovery is a simulated, replayable,
 //!   priced scenario like any other fault. Requires `wal_dir` to be set
 //!   and `at >= 1` (a crash before round 0 leaves an empty log).
+//! * [`FaultEvent::WorkerLeave`] — `node` drops out of the training
+//!   roster (spot preemption, scale-down). Its shard is re-planned over
+//!   the survivors, secure aggregation re-keys over the new roster, and
+//!   if it held the gateway role the cloud re-elects.
+//! * [`FaultEvent::WorkerJoin`] — a previously departed `node` re-joins
+//!   the roster (spot capacity restored); the mirror image of
+//!   `WorkerLeave`.
 //!
 //! Spec grammar (CLI `--fault`, config JSON `"faults": [...]`, events
 //! separated by `;`):
@@ -39,6 +46,8 @@
 //! link-degrade:src=0,dst=4,at=2,factor=0.25
 //! node-slowdown:node=5,at=round4,factor=2
 //! coordinator-crash:at=round4
+//! worker-leave:node=4,at=round2
+//! worker-join:node=4,at=round6
 //! ```
 
 use std::fmt;
@@ -50,6 +59,9 @@ use crate::util::rng::Pcg64;
 
 /// RNG stream id for seed-generated chaos plans.
 const FAULT_STREAM: u64 = 0xFA117;
+
+/// RNG stream id for seed-generated spot-preemption plans.
+const SPOT_STREAM: u64 = 0x5907;
 
 /// One timed fault. `at` is the aggregation round (0-based) at whose
 /// start the fault strikes; in async mode, the pseudo-round boundary.
@@ -68,6 +80,12 @@ pub enum FaultEvent {
     /// fault due that round is applied (so resume replays them exactly
     /// once). Recovery goes through the write-ahead log.
     CoordinatorCrash { at: usize },
+    /// `node` leaves the training roster at the start of round `at`
+    /// (spot preemption / elastic scale-down).
+    WorkerLeave { node: usize, at: usize },
+    /// A previously departed `node` re-joins the roster at the start of
+    /// round `at`.
+    WorkerJoin { node: usize, at: usize },
 }
 
 impl FaultEvent {
@@ -78,7 +96,9 @@ impl FaultEvent {
             | FaultEvent::GatewayRestore { at, .. }
             | FaultEvent::LinkDegrade { at, .. }
             | FaultEvent::NodeSlowdown { at, .. }
-            | FaultEvent::CoordinatorCrash { at } => at,
+            | FaultEvent::CoordinatorCrash { at }
+            | FaultEvent::WorkerLeave { at, .. }
+            | FaultEvent::WorkerJoin { at, .. } => at,
         }
     }
 
@@ -99,10 +119,12 @@ impl FaultEvent {
             "link-degrade" => &["src", "dst", "at", "factor"],
             "node-slowdown" => &["node", "at", "factor"],
             "coordinator-crash" => &["at"],
+            "worker-leave" | "worker-join" => &["node", "at"],
             other => bail!(
                 "fault spec {spec:?}: unknown kind {other:?} \
                  (expected gateway-down | restore | link-degrade | \
-                 node-slowdown | coordinator-crash)"
+                 node-slowdown | coordinator-crash | worker-leave | \
+                 worker-join)"
             ),
         };
         let mut cloud = None;
@@ -173,6 +195,14 @@ impl FaultEvent {
             "coordinator-crash" => {
                 FaultEvent::CoordinatorCrash { at: req("at", at)? }
             }
+            "worker-leave" => FaultEvent::WorkerLeave {
+                node: req("node", node)?,
+                at: req("at", at)?,
+            },
+            "worker-join" => FaultEvent::WorkerJoin {
+                node: req("node", node)?,
+                at: req("at", at)?,
+            },
             _ => unreachable!("kind checked above"),
         };
         ev.validate()?;
@@ -204,7 +234,10 @@ impl FaultEvent {
                     );
                 }
             }
-            FaultEvent::GatewayDown { .. } | FaultEvent::GatewayRestore { .. } => {}
+            FaultEvent::GatewayDown { .. }
+            | FaultEvent::GatewayRestore { .. }
+            | FaultEvent::WorkerLeave { .. }
+            | FaultEvent::WorkerJoin { .. } => {}
         }
         Ok(())
     }
@@ -228,6 +261,12 @@ impl fmt::Display for FaultEvent {
             }
             FaultEvent::CoordinatorCrash { at } => {
                 write!(f, "coordinator-crash:at={at}")
+            }
+            FaultEvent::WorkerLeave { node, at } => {
+                write!(f, "worker-leave:node={node},at={at}")
+            }
+            FaultEvent::WorkerJoin { node, at } => {
+                write!(f, "worker-join:node={node},at={at}")
             }
         }
     }
@@ -339,6 +378,66 @@ impl FaultPlan {
         FaultPlan::new(events)
     }
 
+    /// A reproducible spot-market interruption schedule: every round,
+    /// each active node is preempted (`worker-leave:`) with probability
+    /// `p_preempt`, and a preempted node's capacity comes back
+    /// (`worker-join:`) `recovery_rounds` later — the "10%/hour
+    /// preemption" scenario from the paper's cost analysis, with a round
+    /// standing in for the billing hour. The generator tracks the roster
+    /// it is building and never preempts a cloud down to zero active
+    /// members; each cloud's first member is its on-demand anchor node
+    /// and is never preempted at all (real spot fleets keep one
+    /// on-demand instance per zone, and the coordinator refuses plans
+    /// that preempt the leader — which placement always puts on an
+    /// anchor). Every plan it emits is survivable by construction.
+    /// Same seed + cluster ⇒ same plan.
+    pub fn spot_preemptions(
+        seed: u64,
+        rounds: usize,
+        cluster: &ClusterSpec,
+        p_preempt: f64,
+        recovery_rounds: usize,
+    ) -> FaultPlan {
+        assert!((0.0..=1.0).contains(&p_preempt), "p_preempt must be in [0, 1]");
+        assert!(recovery_rounds >= 1, "recovery must take at least one round");
+        let mut rng = Pcg64::new(seed, SPOT_STREAM);
+        let n = cluster.n();
+        let mut active = vec![true; n];
+        // joins scheduled per round (round -> nodes coming back)
+        let mut rejoin_at = vec![Vec::new(); rounds];
+        let mut events = Vec::new();
+        for r in 1..rounds {
+            for &node in &rejoin_at[r] {
+                active[node] = true;
+                events.push(FaultEvent::WorkerJoin { node, at: r });
+            }
+            for node in 0..n {
+                if !active[node] {
+                    continue;
+                }
+                let cloud = cluster.cloud_of(node);
+                let survivors = cluster
+                    .cloud_members(cloud)
+                    .into_iter()
+                    .filter(|&m| active[m])
+                    .count();
+                // draw unconditionally so the stream does not depend on
+                // which nodes happen to be sole survivors or anchors
+                let hit = rng.uniform() < p_preempt;
+                let anchor = cluster.cloud_members(cloud)[0];
+                if hit && survivors >= 2 && node != anchor {
+                    active[node] = false;
+                    events.push(FaultEvent::WorkerLeave { node, at: r });
+                    let back = r + recovery_rounds;
+                    if back < rounds {
+                        rejoin_at[back].push(node);
+                    }
+                }
+            }
+        }
+        FaultPlan::new(events)
+    }
+
     pub fn events(&self) -> &[FaultEvent] {
         &self.events
     }
@@ -392,6 +491,14 @@ mod tests {
             FaultEvent::parse("coordinator-crash:at=round4").unwrap(),
             FaultEvent::CoordinatorCrash { at: 4 }
         );
+        assert_eq!(
+            FaultEvent::parse("worker-leave:node=4,at=round2").unwrap(),
+            FaultEvent::WorkerLeave { node: 4, at: 2 }
+        );
+        assert_eq!(
+            FaultEvent::parse("worker-join:node=4,at=6").unwrap(),
+            FaultEvent::WorkerJoin { node: 4, at: 6 }
+        );
     }
 
     #[test]
@@ -402,6 +509,8 @@ mod tests {
             "link-degrade:src=1,dst=0,at=0,factor=0.5",
             "node-slowdown:node=3,at=9,factor=3",
             "coordinator-crash:at=2",
+            "worker-leave:node=1,at=4",
+            "worker-join:node=1,at=8",
         ] {
             let ev = FaultEvent::parse(spec).unwrap();
             assert_eq!(FaultEvent::parse(&ev.to_string()).unwrap(), ev);
@@ -428,6 +537,10 @@ mod tests {
             "coordinator-crash:at=0",                      // empty-WAL crash
             "coordinator-crash:at=1,cloud=0",              // key of another kind
             "coordinator-crash:cloud=1",                   // missing at
+            "worker-leave:at=1",                           // missing node
+            "worker-leave:node=1,at=1,factor=2",           // key of another kind
+            "worker-join:node=1",                          // missing at
+            "worker-join:cloud=1,at=2",                    // key of another kind
         ] {
             assert!(FaultEvent::parse(bad).is_err(), "{bad:?} should fail");
         }
@@ -482,6 +595,56 @@ mod tests {
         assert!(kills.iter().all(|&k| k <= 1));
         let c = FaultPlan::random(8, 12, 10, &cluster);
         assert_ne!(a, c);
+    }
+
+    #[test]
+    fn spot_plan_is_deterministic_and_survivable() {
+        let cluster = crate::cluster::ClusterSpec::paper_default_scaled(3);
+        let a = FaultPlan::spot_preemptions(11, 20, &cluster, 0.2, 3);
+        let b = FaultPlan::spot_preemptions(11, 20, &cluster, 0.2, 3);
+        assert_eq!(a, b);
+        assert!(!a.is_empty(), "20 rounds at 20%/round must preempt someone");
+        assert_ne!(a, FaultPlan::spot_preemptions(12, 20, &cluster, 0.2, 3));
+        // replay the plan: the roster invariant (>= 1 active member per
+        // cloud) must hold at every round, and joins must only re-add
+        // nodes that left
+        let mut active = vec![true; cluster.n()];
+        for r in 0..20 {
+            for ev in a.due(r) {
+                match *ev {
+                    FaultEvent::WorkerLeave { node, at } => {
+                        assert_eq!(at, r);
+                        assert!(active[node], "leave of an inactive node");
+                        let cloud = cluster.cloud_of(node);
+                        assert_ne!(
+                            node,
+                            cluster.cloud_members(cloud)[0],
+                            "preempted an on-demand anchor node"
+                        );
+                        active[node] = false;
+                    }
+                    FaultEvent::WorkerJoin { node, .. } => {
+                        assert!(!active[node], "join of an active node");
+                        active[node] = true;
+                    }
+                    ref other => panic!("unexpected event {other:?}"),
+                }
+            }
+            for c in 0..cluster.n_clouds() {
+                let alive = cluster
+                    .cloud_members(c)
+                    .into_iter()
+                    .filter(|&m| active[m])
+                    .count();
+                assert!(alive >= 1, "cloud {c} emptied at round {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn spot_plan_with_zero_rate_is_empty() {
+        let cluster = crate::cluster::ClusterSpec::paper_default_scaled(2);
+        assert!(FaultPlan::spot_preemptions(1, 10, &cluster, 0.0, 2).is_empty());
     }
 
     #[test]

@@ -59,6 +59,20 @@ fn cfg(mode: &str) -> ExperimentConfig {
                 },
             ]);
         }
+        "hier-async-spot" => {
+            // the buffered asynchronous hierarchy under membership churn:
+            // gateway buffers, per-cloud secure re-keying and spot billing
+            // must all be pure functions of the seed
+            c.hierarchical = true;
+            c.aggregation = AggregationKind::Async { alpha: 0.6 };
+            c.secure_agg = true;
+            c.spot = true;
+            c.rounds = 4;
+            c.faults = crossfed::netsim::FaultPlan::new(vec![
+                crossfed::netsim::FaultEvent::WorkerLeave { node: 1, at: 1 },
+                crossfed::netsim::FaultEvent::WorkerJoin { node: 1, at: 3 },
+            ]);
+        }
         other => panic!("unknown mode {other}"),
     }
     c
@@ -121,6 +135,10 @@ fn assert_identical(a: &RunResult, b: &RunResult, ctx: &str) {
             "{ctx} round {r}: epsilon"
         );
         assert_eq!(ra.partition_gen, rb.partition_gen, "{ctx} round {r}");
+        assert_eq!(
+            ra.active_members, rb.active_members,
+            "{ctx} round {r}: active members"
+        );
         let pa: Vec<u64> = ra.platform_secs.iter().map(|x| x.to_bits()).collect();
         let pb: Vec<u64> = rb.platform_secs.iter().map(|x| x.to_bits()).collect();
         assert_eq!(pa, pb, "{ctx} round {r}: platform secs");
@@ -129,7 +147,9 @@ fn assert_identical(a: &RunResult, b: &RunResult, ctx: &str) {
 
 #[test]
 fn repeat_runs_are_bit_identical() {
-    for mode in ["sync", "async", "hier", "hier-par", "hier-faulty"] {
+    for mode in
+        ["sync", "async", "hier", "hier-par", "hier-faulty", "hier-async-spot"]
+    {
         let a = run(mode);
         let b = run(mode);
         assert_identical(&a, &b, mode);
@@ -138,7 +158,9 @@ fn repeat_runs_are_bit_identical() {
 
 #[test]
 fn thread_count_does_not_change_results() {
-    for mode in ["sync", "async", "hier", "hier-par", "hier-faulty"] {
+    for mode in
+        ["sync", "async", "hier", "hier-par", "hier-faulty", "hier-async-spot"]
+    {
         let serial = par::with_threads(1, || run(mode));
         let par4 = par::with_threads(4, || run(mode));
         assert_identical(&serial, &par4, &format!("{mode} 1T vs 4T"));

@@ -1,0 +1,199 @@
+//! Property test for the gateway failover / fail-back state machine.
+//!
+//! Random interleavings of egress kills, egress restores, roster leaves
+//! and rejoins are driven against [`ClusterSpec`] exactly the way the
+//! coordinator drives it (an election runs when the sitting gateway
+//! loses eligibility, and on every egress restore — the fail-back), and
+//! the elected gateway is compared after every step against a tiny
+//! reference model: *the lowest-id member of the cloud that is both on
+//! the roster and has working egress*. Killing the last eligible member
+//! of a cloud must be a clean election error that leaves the state
+//! machine usable (the op is rolled back and the sequence continues).
+
+use crossfed::cluster::ClusterSpec;
+use crossfed::testkit::proptest_kit::{forall, Gen};
+
+/// The reference spec, small enough to be obviously correct.
+struct RefModel {
+    cloud_of: Vec<usize>,
+    active: Vec<bool>,
+    egress_ok: Vec<bool>,
+    gateway: Vec<usize>,
+}
+
+impl RefModel {
+    fn new(cluster: &ClusterSpec) -> RefModel {
+        let n = cluster.n();
+        let n_clouds = cluster.n_clouds();
+        RefModel {
+            cloud_of: (0..n).map(|i| cluster.cloud_of(i)).collect(),
+            active: vec![true; n],
+            egress_ok: vec![true; n],
+            gateway: (0..n_clouds).map(|c| cluster.gateway(c)).collect(),
+        }
+    }
+
+    fn eligible(&self, node: usize) -> bool {
+        self.active[node] && self.egress_ok[node]
+    }
+
+    /// Lowest-id eligible member of cloud `c`, if any.
+    fn elect(&self, c: usize) -> Option<usize> {
+        (0..self.cloud_of.len())
+            .find(|&m| self.cloud_of[m] == c && self.eligible(m))
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+enum Op {
+    KillEgress,
+    RestoreEgress,
+    Leave,
+    Join,
+}
+
+#[test]
+fn prop_failover_matches_reference_spec() {
+    forall("gateway failover vs reference spec", 300, |g: &mut Gen| {
+        let npc = g.usize_in(2..5);
+        let mut cluster = ClusterSpec::paper_default_scaled(npc);
+        let mut model = RefModel::new(&cluster);
+        let n = cluster.n();
+        let n_clouds = cluster.n_clouds();
+
+        // seed gateways must agree before any fault
+        for c in 0..n_clouds {
+            assert_eq!(cluster.gateway(c), model.gateway[c], "initial gw");
+        }
+
+        let n_ops = g.usize_in(1..30);
+        for step in 0..n_ops {
+            let node = g.usize_in(0..n);
+            let c = model.cloud_of[node];
+            let op = *g.choose(&[
+                Op::KillEgress,
+                Op::RestoreEgress,
+                Op::Leave,
+                Op::Join,
+            ]);
+            match op {
+                Op::KillEgress => {
+                    model.egress_ok[node] = false;
+                    cluster.mark_egress_failed(node);
+                    if node == model.gateway[c] {
+                        match model.elect(c) {
+                            Some(expect) => {
+                                model.gateway[c] = expect;
+                                let got = cluster.reelect_gateway(c).unwrap();
+                                assert_eq!(got, expect, "step {step}: failover");
+                            }
+                            None => {
+                                // killing the last eligible member is a
+                                // clean error; roll back and continue
+                                assert!(
+                                    cluster.reelect_gateway(c).is_err(),
+                                    "step {step}: election must fail"
+                                );
+                                model.egress_ok[node] = true;
+                                cluster.mark_egress_restored(node);
+                            }
+                        }
+                    }
+                }
+                Op::RestoreEgress => {
+                    model.egress_ok[node] = true;
+                    cluster.mark_egress_restored(node);
+                    // fail-back: the coordinator re-runs the election on
+                    // every restore, so the lowest-id eligible member
+                    // (often the restored node itself) takes the role back
+                    let expect =
+                        model.elect(c).expect("restored node is eligible");
+                    model.gateway[c] = expect;
+                    let got = cluster.reelect_gateway(c).unwrap();
+                    assert_eq!(got, expect, "step {step}: fail-back");
+                }
+                Op::Leave => {
+                    model.active[node] = false;
+                    cluster.deactivate(node);
+                    if node == model.gateway[c] {
+                        match model.elect(c) {
+                            Some(expect) => {
+                                model.gateway[c] = expect;
+                                let got = cluster.reelect_gateway(c).unwrap();
+                                assert_eq!(got, expect, "step {step}: leave");
+                            }
+                            None => {
+                                assert!(
+                                    cluster.reelect_gateway(c).is_err(),
+                                    "step {step}: election must fail"
+                                );
+                                model.active[node] = true;
+                                cluster.activate(node);
+                            }
+                        }
+                    }
+                }
+                Op::Join => {
+                    // rejoins never trigger an election: the sitting
+                    // gateway keeps the role even if a lower-id member
+                    // comes back (only an egress restore fails back)
+                    model.active[node] = true;
+                    cluster.activate(node);
+                }
+            }
+
+            // global invariants after every step
+            for cl in 0..n_clouds {
+                assert_eq!(
+                    cluster.gateway(cl),
+                    model.gateway[cl],
+                    "step {step}: cloud {cl} gateway diverged"
+                );
+                let gw = cluster.gateway(cl);
+                assert_eq!(cluster.cloud_of(gw), cl, "gateway in its cloud");
+                // a sitting gateway is always eligible: every op that
+                // could invalidate it ran an election above
+                assert!(
+                    model.eligible(gw),
+                    "step {step}: cloud {cl} gateway {gw} ineligible"
+                );
+            }
+            assert_eq!(
+                cluster.n_active(),
+                model.active.iter().filter(|&&a| a).count(),
+                "step {step}: roster size"
+            );
+        }
+    });
+}
+
+/// Kill → restore → re-kill on one cloud: the exact scripted sequence
+/// the paper's transient-outage scenario uses, pinned step by step.
+#[test]
+fn scripted_kill_restore_rekill() {
+    let mut cluster = ClusterSpec::paper_default_scaled(3);
+    let c = 1;
+    let members = cluster.cloud_members(c);
+    assert_eq!(cluster.gateway(c), members[0]);
+
+    // kill: the next member takes over
+    cluster.mark_egress_failed(members[0]);
+    assert_eq!(cluster.reelect_gateway(c).unwrap(), members[1]);
+
+    // restore: the original (lowest-id) member fails back
+    cluster.mark_egress_restored(members[0]);
+    assert_eq!(cluster.reelect_gateway(c).unwrap(), members[0]);
+
+    // re-kill while the second member is also off the roster: the third
+    // member is the only eligible standby left
+    cluster.deactivate(members[1]);
+    cluster.mark_egress_failed(members[0]);
+    assert_eq!(cluster.reelect_gateway(c).unwrap(), members[2]);
+
+    // drop the last eligible member: election errors but the state
+    // machine survives — rejoining the second member elects it again
+    cluster.deactivate(members[2]);
+    assert!(cluster.reelect_gateway(c).is_err());
+    cluster.activate(members[1]);
+    assert_eq!(cluster.reelect_gateway(c).unwrap(), members[1]);
+}

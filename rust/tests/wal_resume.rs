@@ -207,6 +207,28 @@ fn hier_kill_at_every_round_with_failover() {
     );
 }
 
+#[test]
+fn hier_async_spot_kill_at_every_pseudo_round() {
+    // the buffered asynchronous hierarchy under membership churn: the
+    // WAL must capture gateway buffers, stalled stashes, both
+    // gateway↔leader queues and the roster epoch so that a kill at any
+    // pseudo-round resumes bit-identically — including the secure
+    // re-keying over the survivor set and the spot billing
+    crash_resume_matches(
+        "hier-async-spot",
+        || ClusterSpec::paper_default_scaled(2),
+        "worker-leave:node=1,at=1;worker-join:node=1,at=3",
+        |c| {
+            c.hierarchical = true;
+            c.aggregation =
+                crossfed::aggregation::AggregationKind::parse("async")
+                    .unwrap();
+            c.secure_agg = true;
+            c.spot = true;
+        },
+    );
+}
+
 /// A bad checksum on the *last* record is a torn tail: the WAL truncates
 /// it on open and the run resumes from one round earlier — and still
 /// ends bit-identical, because the re-run round is deterministic.
