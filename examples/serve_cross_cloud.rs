@@ -1,0 +1,152 @@
+//! Cross-cloud serving day: 1M+ requests from a diurnal population
+//! against the trained model, replicated on six clouds in two regions.
+//!
+//! Exercises the serving subsystem end-to-end on the arena event engine
+//! and the routed WAN (CI executes this): a population skewed toward
+//! cloud 0 (region 0, expensive compute) generates over a million
+//! requests in one simulated day; one replica per cloud serves them
+//! under each routing policy against a deliberately asymmetric price
+//! book (cloud 4, region 1, is by far the cheapest accelerator). The
+//! example asserts the economics the paper's "broad application
+//! prospects" framing rests on:
+//!
+//!   1. the latency-optimal placement differs from the cost-optimal one
+//!      (latency routing concentrates near the users, cost routing on
+//!      the cheap cloud);
+//!   2. blended routing dominates both pure policies on the weighted
+//!      objective it internalizes (J = w·lat/lat_ref + (1−w)·$/usd_ref);
+//!   3. two repeat runs are bit-identical — the serving simulator is a
+//!      pure function of its seed, like every other subsystem.
+//!
+//!     cargo run --release --example serve_cross_cloud
+
+use crossfed::cluster::ClusterSpec;
+use crossfed::cost::PriceBook;
+use crossfed::report;
+use crossfed::serve::{self, RoutePolicy, ServeConfig, ServeResult, TrafficSpec};
+
+const N_CLOUDS: usize = 6; // clouds 0-3 in region0, clouds 4-5 in region1
+// 1.6M requests/day averages 18.5 req/s — deliberately above the cheap
+// replica's ~17.4 req/s full-batch capacity, so pure cost routing
+// (which sends every request there) saturates and its queue melts down,
+// while any policy that spreads load stays comfortable.
+const USERS: u64 = 1_600_000;
+const BLEND_W: f64 = 0.5;
+const LAT_REF_SECS: f64 = 0.15;
+const USD_REF: f64 = 3e-5; // $30 per million requests
+
+fn config(route: RoutePolicy) -> ServeConfig {
+    // cloud 4 is ~3x cheaper than the user-heavy clouds: cost routing
+    // must leave the users' region to win
+    let mut book = PriceBook::uniform(3.2, 0.08);
+    book.name = "serve-asym".into();
+    book.compute_per_node_hour = vec![4.5, 3.9, 3.6, 3.3, 1.2, 2.8];
+    ServeConfig {
+        name: format!("serve-{}", route.name()),
+        route,
+        traffic: TrafficSpec { users: USERS, reqs_per_user_day: 1.0, ..TrafficSpec::default() },
+        price_book: book,
+        lat_ref_secs: LAT_REF_SECS,
+        usd_ref: USD_REF,
+        ..ServeConfig::default()
+    }
+}
+
+fn run(route: RoutePolicy) -> anyhow::Result<ServeResult> {
+    let cluster = ClusterSpec::scaled(N_CLOUDS, &[1]);
+    let r = serve::run(&config(route), &cluster)?;
+    println!(
+        "{:<18} req={:<8} p50={:>6.1}ms p99={:>7.1}ms maxq={:<5} \
+         stale={:>6.0}s busiest=cloud{} ${:>6.2}/M-req  J={:.3}",
+        r.policy,
+        r.requests,
+        r.p50_ms,
+        r.p99_ms,
+        r.max_queue_depth,
+        r.staleness_mean_secs,
+        r.busiest_replica(),
+        r.usd_per_million(),
+        objective(&r),
+    );
+    Ok(r)
+}
+
+/// The shared weighted objective (same normalizers the blended router
+/// scores with, so the comparison is on blended's own yardstick).
+fn objective(r: &ServeResult) -> f64 {
+    r.objective(BLEND_W, LAT_REF_SECS * 1e3, USD_REF * 1e6)
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("== serving day: {N_CLOUDS} clouds / 2 regions, {USERS} users, diurnal +/-60% ==");
+    let lat = run(RoutePolicy::Latency)?;
+    let cost = run(RoutePolicy::Cost)?;
+    let blend = run(RoutePolicy::Blended(BLEND_W))?;
+
+    // -- scale: a real serving day on the event engine
+    assert!(lat.requests >= 1_000_000, "expected 1M+ requests/day, got {}", lat.requests);
+    assert_eq!(lat.requests, cost.requests, "same population every run");
+    assert_eq!(lat.requests, blend.requests, "same population every run");
+
+    // -- 1. latency-optimal placement != cost-optimal placement
+    let (lat_hot, cost_hot) = (lat.busiest_replica(), cost.busiest_replica());
+    assert_ne!(
+        lat_hot, cost_hot,
+        "latency routing must concentrate near the users while cost \
+         routing concentrates on the cheap cloud"
+    );
+    assert_eq!(cost_hot, 4, "cloud 4 is priced to win every cost argmin");
+    assert!(
+        cost.usd_per_million() < lat.usd_per_million(),
+        "cost routing must be cheaper: ${:.2}/M vs ${:.2}/M",
+        cost.usd_per_million(),
+        lat.usd_per_million()
+    );
+    assert!(
+        lat.p50_ms < cost.p50_ms,
+        "latency routing must be faster at the median: {:.1}ms vs {:.1}ms",
+        lat.p50_ms,
+        cost.p50_ms
+    );
+
+    // -- 2. blended dominates both pure policies on the weighted objective
+    let (j_lat, j_cost, j_blend) = (objective(&lat), objective(&cost), objective(&blend));
+    assert!(
+        j_blend < j_lat && j_blend < j_cost,
+        "blended must dominate: J(blend)={j_blend:.3} vs \
+         J(latency)={j_lat:.3}, J(cost)={j_cost:.3}"
+    );
+    println!(
+        "blended dominates: J={j_blend:.3} < min(J_latency={j_lat:.3}, \
+         J_cost={j_cost:.3})"
+    );
+
+    // -- 3. repeats are bit-identical
+    let cluster = ClusterSpec::scaled(N_CLOUDS, &[1]);
+    let again = serve::run(&config(RoutePolicy::Latency), &cluster)?;
+    assert_eq!(again.requests, lat.requests, "repeat: request count");
+    assert_eq!(again.wire_bytes, lat.wire_bytes, "repeat: wire bytes");
+    assert_eq!(again.requests_by_replica, lat.requests_by_replica, "repeat: placement");
+    for (a, b, what) in [
+        (again.p50_ms, lat.p50_ms, "p50"),
+        (again.p99_ms, lat.p99_ms, "p99"),
+        (again.mean_ms, lat.mean_ms, "mean latency"),
+        (again.staleness_mean_secs, lat.staleness_mean_secs, "staleness"),
+        (again.cost.total_usd(), lat.cost.total_usd(), "dollars"),
+    ] {
+        assert_eq!(a.to_bits(), b.to_bits(), "repeat: {what} must be bit-identical");
+    }
+    println!("repeat run bit-identical (placement, latency, dollars)");
+
+    let rrefs = [&lat, &cost, &blend];
+    println!("\n{}", report::table_serve(&rrefs));
+    report::save(
+        "serve_cross_cloud.txt",
+        &format!(
+            "{}\nJ(latency)={j_lat:.4} J(cost)={j_cost:.4} \
+             J(blended)={j_blend:.4}\n",
+            report::table_serve(&rrefs)
+        ),
+    );
+    Ok(())
+}

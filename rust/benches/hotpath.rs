@@ -376,6 +376,59 @@ fn sim_scale_entry() -> Json {
     Json::arr(entries)
 }
 
+/// Serving throughput: one simulated day of cross-cloud inference on the
+/// arena event engine (EXPERIMENTS.md §Serving), measuring wall-clock
+/// requests/s and engine events/s. Quick mode trims the population so CI
+/// exercises the path without paying for the full day.
+fn serve_throughput_entry() -> Json {
+    use crossfed::serve::{RoutePolicy, ServeConfig, TrafficSpec};
+    use crossfed::testkit::bench_kit::quick_mode;
+    let users: u64 = if quick_mode() { 50_000 } else { 500_000 };
+    let cluster = ClusterSpec::scaled(6, &[1]);
+    let cfg = ServeConfig {
+        name: "bench-serve".into(),
+        route: RoutePolicy::Blended(0.5),
+        traffic: TrafficSpec { users, ..TrafficSpec::default() },
+        ..ServeConfig::default()
+    };
+    let t0 = std::time::Instant::now();
+    let r = crossfed::serve::run(&cfg, &cluster).expect("serve run");
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "\n== bench: serve throughput (6 clouds, {users} users, 1 day) ==\n\
+         {} requests / {} events in {wall:.3}s wall: {:.0} req/s  \
+         {:.0} events/s  (p50 {:.0} ms, p99 {:.0} ms, ${:.2}/M-req)",
+        r.requests,
+        r.events,
+        r.requests as f64 / wall.max(1e-9),
+        r.events as f64 / wall.max(1e-9),
+        r.p50_ms,
+        r.p99_ms,
+        r.usd_per_million()
+    );
+    Json::obj(vec![
+        ("users", Json::num(users as f64)),
+        ("clouds", Json::num(6.0)),
+        ("requests", Json::num(r.requests as f64)),
+        ("events", Json::num(r.events as f64)),
+        ("wall_secs", Json::num((wall * 1e3).round() / 1e3)),
+        (
+            "requests_per_sec",
+            Json::num((r.requests as f64 / wall.max(1e-9)).round()),
+        ),
+        (
+            "events_per_sec",
+            Json::num((r.events as f64 / wall.max(1e-9)).round()),
+        ),
+        ("p50_ms", Json::num((r.p50_ms * 10.0).round() / 10.0)),
+        ("p99_ms", Json::num((r.p99_ms * 10.0).round() / 10.0)),
+        (
+            "usd_per_million",
+            Json::num((r.usd_per_million() * 100.0).round() / 100.0),
+        ),
+    ])
+}
+
 /// WAL round-record durability: CRC + write + fsync of a snapshot-sized
 /// record — the per-round price of crash consistency (EXPERIMENTS.md
 /// §Durability).
@@ -466,6 +519,7 @@ fn main() {
         ("cost_star_vs_hier", cost_star_vs_hier_entry()),
         ("wal_append", wal_append_entry()),
         ("sim_scale", sim_scale_entry()),
+        ("serve_throughput", serve_throughput_entry()),
     ];
     write_json(hw, &serial, &parallel, sections);
 

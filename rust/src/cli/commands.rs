@@ -32,6 +32,11 @@ USAGE:
                  [--fault SPEC[;SPEC...]] [--mock] [--curve]
                  [--par-rounds] [--history-every N] [--history-csv FILE]
   crossfed sweep --presets a,b,c [--artifacts DIR] [--mock]
+  crossfed sweep --preset NAME --placements p1,p2 --codecs c1,c2 [--mock]
+  crossfed serve [--preset NAME] [--route latency,cost,blended:W]
+                 [--clouds N] [--users N] [--hours H] [--seed N]
+                 [--refresh-secs S] [--max-batch N] [--model-params N]
+                 [--from-checkpoint PATH] [--price-book FILE]
   crossfed inspect [--preset NAME]
   crossfed partition-plan [--strategy S] [--platforms N]
   crossfed list-presets
@@ -81,7 +86,20 @@ bill reaches the budget (the cost analogue of a loss target).
 (hierarchical only; deterministic at any thread count via per-cloud RNG
 streams — see CROSSFED_THREADS). --history-every N keeps every Nth round
 record in memory; --history-csv FILE streams every round to a CSV as it
-completes, so long runs don't need the full in-memory history.";
+completes, so long runs don't need the full in-memory history.
+`sweep --placements ... --codecs ...` runs one preset over the full
+placement × codec grid and prints the cost table plus a delta table
+against the first combination (the cost what-if ablation).
+`serve` deploys the trained model: one replica per cloud, a seeded
+diurnal request population (millions of users), and a routing policy
+per --route entry (comma-separated; each runs as its own sweep leg).
+latency stays near the user, cost ships requests to the cheapest
+cloud (same scoring as training's auto placement), blended:W weighs
+the two. --from-checkpoint serves the actual trained weights (param
+count sets service times, size sets refresh payloads); --refresh-secs
+republishes on that period, closing the train->deploy loop with a
+staleness column. Reports p50/p99 latency, queue depths and
+$/million-requests, billed by the same price book as training.";
 
 /// Entry point used by main.rs. Returns process exit code.
 pub fn run_cli(raw: &[String]) -> Result<i32> {
@@ -90,6 +108,7 @@ pub fn run_cli(raw: &[String]) -> Result<i32> {
     match cmd {
         "train" => cmd_train(&args),
         "sweep" => cmd_sweep(&args),
+        "serve" => cmd_serve(&args),
         "inspect" => cmd_inspect(&args),
         "partition-plan" => cmd_partition_plan(&args),
         "list-presets" => {
@@ -322,7 +341,167 @@ fn cmd_train(args: &Args) -> Result<i32> {
     Ok(0)
 }
 
+/// `serve`: deploy the trained model behind each requested routing
+/// policy and compare latency, queues, staleness and dollars.
+fn cmd_serve(args: &Args) -> Result<i32> {
+    use crate::serve::{RoutePolicy, ServeConfig, ServeResult};
+    let name = args.get("preset").unwrap_or("paper-serve");
+    let exp = preset(name).with_context(|| {
+        format!("unknown preset {name:?}; see `crossfed list-presets`")
+    })?;
+    let mut base = ServeConfig::from_experiment(&exp);
+    if let Some(path) = args.get("from-checkpoint") {
+        let ckpt =
+            crate::checkpoint::Checkpoint::load(std::path::Path::new(path))?;
+        base = base.with_checkpoint(&ckpt);
+    }
+    if let Some(seed) = args.get_usize("seed")? {
+        base.seed = seed as u64;
+    }
+    if let Some(u) = args.get_usize("users")? {
+        base.traffic.users = u as u64;
+    }
+    if let Some(h) = args.get_f64("hours")? {
+        if !(h > 0.0) {
+            bail!("--hours must be positive");
+        }
+        base.duration_secs = h * 3600.0;
+    }
+    if let Some(s) = args.get_f64("refresh-secs")? {
+        base.refresh_period_secs = s;
+    }
+    if let Some(b) = args.get_usize("max-batch")? {
+        base.max_batch = b;
+    }
+    if let Some(p) = args.get_usize("model-params")? {
+        base.service.n_params = p as u64;
+        base.model_bytes = p as u64 * 4;
+    }
+    if let Some(path) = args.get("price-book") {
+        base.price_book =
+            crate::cost::PriceBook::load(std::path::Path::new(path))?;
+    }
+    let cluster = match args.get_usize("clouds")? {
+        None | Some(0) => ClusterSpec::paper_default_scaled(1),
+        Some(n) => ClusterSpec::scaled(n, &[1]),
+    };
+    let routes = args.get("route").unwrap_or("latency,cost,blended:0.5");
+    let mut results = Vec::new();
+    for r in routes.split(',') {
+        let mut cfg = base.clone();
+        cfg.route = RoutePolicy::parse(r.trim())?;
+        cfg.name = format!("{}-{}", base.name, cfg.route.name());
+        let res = crate::serve::run(&cfg, &cluster)?;
+        println!(
+            "serve {:<26} req={:<9} p50={:.0}ms p99={:.0}ms queue(max)={} \
+             stale={:.0}s cost=${:.2} (${:.2}/M-req)",
+            res.name,
+            res.requests,
+            res.p50_ms,
+            res.p99_ms,
+            res.max_queue_depth,
+            res.staleness_mean_secs,
+            res.cost_usd(),
+            res.usd_per_million(),
+        );
+        results.push(res);
+    }
+    let rrefs: Vec<&ServeResult> = results.iter().collect();
+    println!("\n{}", report::table_serve(&rrefs));
+    let json =
+        crate::util::json::Json::arr(results.iter().map(|r| r.to_json()));
+    report::save("serve.json", &json.to_string_pretty());
+    Ok(0)
+}
+
+/// `sweep --placements ... --codecs ...`: one preset over the full
+/// placement × codec grid, with a delta table against the first combo.
+fn sweep_grid(args: &Args, placements: &str, codecs: &str) -> Result<i32> {
+    let name = args.get("preset").unwrap_or("paper-hier-cost");
+    let model_preset = args.get("model-preset").unwrap_or("tiny");
+    let base = preset(name)
+        .with_context(|| format!("unknown preset {name:?}"))?;
+    let mut results = Vec::new();
+    for p in placements.split(',') {
+        for c in codecs.split(',') {
+            let mut cfg = base.clone();
+            cfg.placement = crate::cost::Placement::parse(p.trim())?;
+            cfg.compression = crate::compress::Compression::parse(c.trim())
+                .with_context(|| format!("unknown compression {c:?}"))?;
+            cfg.name = format!("{}+{}", p.trim(), c.trim());
+            if let Some(r) = args.get_usize("rounds")? {
+                cfg.rounds = r;
+            }
+            cfg.validate()?;
+            log::info!("sweep grid: running {}", cfg.name);
+            let r = run_experiment(
+                &cfg,
+                build_cluster(args)?,
+                args.flag("mock"),
+                &artifacts_dir(args),
+                model_preset,
+            )?;
+            print_result(&r, false);
+            results.push(r);
+        }
+    }
+    let rrefs: Vec<&RunResult> = results.iter().collect();
+    println!("\n{}", report::table_cost(&rrefs));
+    let base_cost = results[0].cost_usd().max(1e-9);
+    let base_gb = results[0].comm_gb().max(1e-12);
+    let base_hours = results[0].sim_hours().max(1e-12);
+    let rows: Vec<(&str, Vec<(&str, String)>)> = results
+        .iter()
+        .map(|r| {
+            (
+                r.name.as_str(),
+                vec![
+                    ("cost $", format!("{:.2}", r.cost_usd())),
+                    (
+                        "Δcost %",
+                        format!(
+                            "{:+.1}",
+                            (r.cost_usd() / base_cost - 1.0) * 100.0
+                        ),
+                    ),
+                    ("comm GB", format!("{:.2}", r.comm_gb())),
+                    (
+                        "Δcomm %",
+                        format!(
+                            "{:+.1}",
+                            (r.comm_gb() / base_gb - 1.0) * 100.0
+                        ),
+                    ),
+                    (
+                        "Δtime %",
+                        format!(
+                            "{:+.1}",
+                            (r.sim_hours() / base_hours - 1.0) * 100.0
+                        ),
+                    ),
+                ],
+            )
+        })
+        .collect();
+    println!(
+        "{}",
+        report::comparison(
+            &format!(
+                "Placement × codec ablation on {name} (deltas vs {})",
+                results[0].name
+            ),
+            &rows,
+        )
+    );
+    Ok(0)
+}
+
 fn cmd_sweep(args: &Args) -> Result<i32> {
+    if args.get("placements").is_some() || args.get("codecs").is_some() {
+        let placements = args.get("placements").unwrap_or("fixed:0");
+        let codecs = args.get("codecs").unwrap_or("none");
+        return sweep_grid(args, placements, codecs);
+    }
     let list = args
         .get("presets")
         .unwrap_or("paper-fedavg,paper-dynamic,paper-gradient");
@@ -722,6 +901,81 @@ mod tests {
         )
         .unwrap();
         assert!(build_config(&args).is_err());
+    }
+
+    #[test]
+    fn serve_runs_each_policy() {
+        // a small population so the test stays quick: 3 paper clouds,
+        // two hours, all three routing policies end-to-end
+        assert_eq!(
+            run_cli(&s(&[
+                "serve", "--users", "20000", "--hours", "2",
+                "--refresh-secs", "1800",
+            ]))
+            .unwrap(),
+            0
+        );
+        // scaled topology + single policy + service-model override
+        assert_eq!(
+            run_cli(&s(&[
+                "serve", "--users", "10000", "--hours", "1", "--clouds",
+                "4", "--route", "cost", "--model-params", "100000000",
+                "--max-batch", "8", "--seed", "7",
+            ]))
+            .unwrap(),
+            0
+        );
+        // bad knobs are clean errors
+        assert!(run_cli(&s(&["serve", "--route", "teleport"])).is_err());
+        assert!(run_cli(&s(&["serve", "--hours", "0"])).is_err());
+        assert!(run_cli(&s(&["serve", "--preset", "zzz"])).is_err());
+    }
+
+    #[test]
+    fn serve_from_checkpoint_closes_the_loop() {
+        let base = std::env::temp_dir().join("crossfed-cli-serve-ckpt");
+        let b = base.to_str().unwrap();
+        assert_eq!(
+            run_cli(&s(&["train", "--preset", "quick", "--rounds", "2",
+                         "--mock", "--save-checkpoint", b]))
+            .unwrap(),
+            0
+        );
+        // the mock checkpoint's 96 params make service times trivial,
+        // but the version lineage and refresh payloads come from it
+        assert_eq!(
+            run_cli(&s(&[
+                "serve", "--from-checkpoint", b, "--users", "5000",
+                "--hours", "1", "--route", "latency",
+            ]))
+            .unwrap(),
+            0
+        );
+        std::fs::remove_file(base.with_extension("json")).ok();
+        std::fs::remove_file(base.with_extension("bin")).ok();
+    }
+
+    #[test]
+    fn sweep_grid_prints_delta_table() {
+        assert_eq!(
+            run_cli(&s(&[
+                "sweep", "--preset", "quick", "--mock", "--rounds", "2",
+                "--placements", "fixed:0,fixed:1",
+                "--codecs", "none,topk:0.5",
+            ]))
+            .unwrap(),
+            0
+        );
+        // unknown grid axes are clean errors
+        assert!(run_cli(&s(&[
+            "sweep", "--preset", "quick", "--mock",
+            "--placements", "nowhere",
+        ]))
+        .is_err());
+        assert!(run_cli(&s(&[
+            "sweep", "--preset", "quick", "--mock", "--codecs", "bogus",
+        ]))
+        .is_err());
     }
 
     #[test]

@@ -22,6 +22,7 @@ pub fn preset_names() -> Vec<&'static str> {
         "paper-hier-faulty",
         "paper-hier-cost",
         "paper-hier-async-spot",
+        "paper-serve",
         "hier-gradient",
         "fig-partition-fixed",
         "fig-partition-dynamic",
@@ -149,6 +150,20 @@ pub fn preset(name: &str) -> Option<ExperimentConfig> {
                 FaultEvent::WorkerLeave { node: 5, at: 8 },
                 FaultEvent::WorkerJoin { node: 3, at: 10 },
             ]),
+            ..paper_base
+        },
+        // the serving scenario (`crossfed serve`): identity config the
+        // serve subsystem derives its transport, seed and price book
+        // from ([`crate::serve::ServeConfig::from_experiment`]). Trained
+        // with the cost-aware hierarchy, deployed to every cloud.
+        "paper-serve" => ExperimentConfig {
+            aggregation: AggregationKind::FedAvg,
+            hierarchical: true,
+            compression: Compression::None,
+            placement: crate::cost::Placement::Auto,
+            price_book: crate::cost::PriceBook::paper_default(),
+            target_loss: None,
+            rounds: 20,
             ..paper_base
         },
         "hier-gradient" => ExperimentConfig {

@@ -1029,6 +1029,7 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
             round,
             sim_secs: self.sim_secs,
             wire_bytes: self.wire_bytes,
+            wire_bytes_class: self.wan_class_split(),
             train_loss,
             eval_loss,
             eval_acc,
@@ -1165,6 +1166,16 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
         self.wan.wire_bytes_class(class)
     }
 
+    /// The WAN ledger's cumulative per-class byte split, indexed by
+    /// [`LinkClass::index`] (the [`RoundRecord`]/[`RunResult`] layout).
+    pub(crate) fn wan_class_split(&self) -> [u64; 3] {
+        [
+            self.wan.wire_bytes_class(LinkClass::IntraAz),
+            self.wan.wire_bytes_class(LinkClass::IntraRegion),
+            self.wan.wire_bytes_class(LinkClass::InterRegion),
+        ]
+    }
+
     /// Bytes that paid the inter-region WAN — the hierarchical-vs-star
     /// headline number.
     pub fn inter_region_wire_bytes(&self) -> u64 {
@@ -1260,11 +1271,7 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
             rounds_run: self.rounds_done,
             sim_secs: self.sim_secs,
             wire_bytes: self.wire_bytes,
-            wire_bytes_class: [
-                self.wan.wire_bytes_class(LinkClass::IntraAz),
-                self.wan.wire_bytes_class(LinkClass::IntraRegion),
-                self.wan.wire_bytes_class(LinkClass::InterRegion),
-            ],
+            wire_bytes_class: self.wan_class_split(),
             final_train_loss: final_train,
             final_eval_loss: eval_loss,
             final_eval_acc: eval_acc,

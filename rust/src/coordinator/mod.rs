@@ -14,7 +14,7 @@
 //! re-keying over the survivor set on every change.
 
 mod build;
-mod engine;
+pub(crate) mod engine;
 mod run_async;
 mod run_buffered;
 mod run_hier;

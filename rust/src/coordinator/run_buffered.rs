@@ -303,6 +303,7 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
                             round,
                             sim_secs: self.sim_secs,
                             wire_bytes: self.wire_bytes,
+                            wire_bytes_class: self.wan_class_split(),
                             train_loss: train_loss_acc / n_clouds as f32,
                             eval_loss,
                             eval_acc,

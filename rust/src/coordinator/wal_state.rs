@@ -193,6 +193,9 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
         w.put_f64(self.sim_secs);
         w.put_u64(self.wire_bytes);
         w.put_f64(self.host_secs);
+        for &b in &record.wire_bytes_class {
+            w.put_u64(b);
+        }
         // --- the round's RoundRecord (round/sim/wire reuse the fields
         // above; they are identical at the boundary by construction)
         let rec = record;
@@ -442,6 +445,10 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
         let sim_secs = r.get_f64()?;
         let wire_bytes = r.get_u64()?;
         let host_secs = r.get_f64()?;
+        let mut wire_bytes_class = [0u64; 3];
+        for b in wire_bytes_class.iter_mut() {
+            *b = r.get_u64()?;
+        }
         let train_loss = r.get_f32()?;
         let eval_loss = r.get_opt_f32()?;
         let eval_acc = r.get_opt_f64()?;
@@ -485,6 +492,7 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
                 round,
                 sim_secs,
                 wire_bytes,
+                wire_bytes_class,
                 train_loss,
                 eval_loss,
                 eval_acc,

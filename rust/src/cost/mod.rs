@@ -14,5 +14,8 @@ pub mod placement;
 pub mod pricing;
 
 pub use ledger::{CostBreakdown, CostLedger};
-pub use placement::{choose_leader, score_leaders, LeaderScore, Placement, RoundTraffic};
+pub use placement::{
+    choose_leader, cloud_pair_class, score_leaders, LeaderScore, Placement,
+    RoundTraffic,
+};
 pub use pricing::{EgressRate, PriceBook, Tier};

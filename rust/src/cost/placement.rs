@@ -95,8 +95,10 @@ pub struct RoundTraffic {
 }
 
 /// Link class between two clouds' gateways (mirrors
-/// [`crate::netsim::Wan::from_cluster`]'s region rule).
-fn cloud_pair_class(cluster: &ClusterSpec, a: usize, b: usize) -> LinkClass {
+/// [`crate::netsim::Wan::from_cluster`]'s region rule). Shared with the
+/// serving router so request egress is priced exactly like training
+/// traffic.
+pub fn cloud_pair_class(cluster: &ClusterSpec, a: usize, b: usize) -> LinkClass {
     let (ga, gb) = (cluster.gateway(a), cluster.gateway(b));
     if cluster.platforms[ga].region == cluster.platforms[gb].region {
         LinkClass::IntraRegion

@@ -28,6 +28,7 @@ pub mod config;
 pub mod worker;
 pub mod coordinator;
 pub mod report;
+pub mod serve;
 pub mod cli;
 pub mod testkit;
 pub mod checkpoint;

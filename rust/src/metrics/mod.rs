@@ -14,6 +14,10 @@ pub struct RoundRecord {
     pub sim_secs: f64,
     /// cumulative wire bytes (up + down + distribution)
     pub wire_bytes: u64,
+    /// cumulative wire bytes split by link class, indexed by
+    /// [`LinkClass::index`] — keeps the streamed curve schema-identical
+    /// to [`RunResult`]'s per-class split
+    pub wire_bytes_class: [u64; 3],
     /// mean local training loss across platforms this round
     pub train_loss: f32,
     /// held-out eval loss (None between eval rounds)
@@ -39,18 +43,24 @@ pub struct RoundRecord {
 
 impl RoundRecord {
     /// Header line of the curve CSV ([`RoundRecord::csv_row`] columns).
-    pub const CSV_HEADER: &'static str =
-        "round,sim_hours,comm_gb,cost_usd,train_loss,active,eval_loss,eval_acc\n";
+    pub const CSV_HEADER: &'static str = "round,sim_hours,comm_gb,intra_az_gb,\
+         intra_region_gb,inter_region_gb,cost_usd,train_loss,active,\
+         eval_loss,eval_acc\n";
 
-    /// One curve-CSV row (no trailing newline) — shared by
-    /// [`RunResult::curve_csv`] and the coordinator's streaming metrics
-    /// sink, so a streamed curve is byte-identical to a post-hoc one.
+    /// One curve-CSV row (no trailing newline) — the ONE encoder shared
+    /// by [`RunResult::curve_csv`] and the coordinator's streaming
+    /// `--history-csv` sink, so a streamed curve is byte-identical to a
+    /// post-hoc one (same columns, incl. dollars and the per-class
+    /// byte split).
     pub fn csv_row(&self) -> String {
         format!(
-            "{},{:.4},{:.4},{:.4},{:.4},{},{},{}",
+            "{},{:.4},{:.4},{:.4},{:.4},{:.4},{:.4},{:.4},{},{},{}",
             self.round,
             self.sim_secs / 3600.0,
             self.wire_bytes as f64 / 1e9,
+            self.wire_bytes_class[0] as f64 / 1e9,
+            self.wire_bytes_class[1] as f64 / 1e9,
+            self.wire_bytes_class[2] as f64 / 1e9,
             self.cum_cost_usd,
             self.train_loss,
             self.active_members,
@@ -171,6 +181,7 @@ mod tests {
             round,
             sim_secs: round as f64 * 60.0,
             wire_bytes: round as u64 * 1_000_000,
+            wire_bytes_class: [round as u64 * 600_000, 0, round as u64 * 400_000],
             train_loss: 4.0 - round as f32 * 0.1,
             eval_loss: eval.map(|e| e.0),
             eval_acc: eval.map(|e| e.1),
@@ -243,9 +254,13 @@ mod tests {
         assert!((r.egress_usd() - 3.75).abs() < 1e-12);
         assert_eq!(r.wire_bytes_of(LinkClass::IntraAz), 3_000_000_000);
         assert_eq!(r.wire_bytes_of(LinkClass::InterRegion), 1_500_000_000);
-        // the curve carries the cumulative dollar column
+        // the curve carries the per-class byte split and the cumulative
+        // dollar column in one shared schema
         let csv = r.curve_csv();
-        assert!(csv.starts_with("round,sim_hours,comm_gb,cost_usd,"));
+        assert!(csv.starts_with(
+            "round,sim_hours,comm_gb,intra_az_gb,intra_region_gb,\
+             inter_region_gb,cost_usd,"
+        ));
         assert!(csv.lines().nth(2).unwrap().contains("1.0000"));
     }
 

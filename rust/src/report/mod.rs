@@ -152,6 +152,35 @@ pub fn table_cost_clouds(r: &RunResult) -> String {
     out
 }
 
+/// Render the serving table: latency percentiles, queue depths,
+/// staleness and serving economics — one row per routing policy.
+pub fn table_serve(results: &[&crate::serve::ServeResult]) -> String {
+    let mut out = String::new();
+    out.push_str("Table S: Cross-Cloud Serving by Routing Policy\n");
+    out.push_str(&format!(
+        "{:<26} | {:>8} | {:>8} | {:>8} | {:>9} | {:>8} | {:>9} | {:>10}\n",
+        "Run", "Req (M)", "p50 ms", "p99 ms", "Max queue", "Stale s", "Egress $", "$ / M-req"
+    ));
+    out.push_str(&format!(
+        "{:-<26}-+-{:-<8}-+-{:-<8}-+-{:-<8}-+-{:-<9}-+-{:-<8}-+-{:-<9}-+-{:-<10}\n",
+        "", "", "", "", "", "", "", ""
+    ));
+    for r in results {
+        out.push_str(&format!(
+            "{:<26} | {:>8.3} | {:>8.1} | {:>8.1} | {:>9} | {:>8.1} | {:>9.2} | {:>10.2}\n",
+            r.name,
+            r.requests as f64 / 1e6,
+            r.p50_ms,
+            r.p99_ms,
+            r.max_queue_depth,
+            r.staleness_mean_secs,
+            r.cost.egress_total_usd(),
+            r.usd_per_million(),
+        ));
+    }
+    out
+}
+
 /// Generic comparison table for ablation benches (figures).
 pub fn comparison(
     title: &str,
@@ -258,6 +287,39 @@ mod tests {
         assert!(per_cloud.contains("cloud0"));
         assert!(per_cloud.contains("cloud2"));
         assert!(per_cloud.contains("8.00"));
+    }
+
+    #[test]
+    fn table_serve_formats_rows() {
+        let mut cost = crate::cost::CostBreakdown::zero(2);
+        cost.compute_usd = vec![40.0, 0.0];
+        cost.egress_usd = vec![[0.0, 0.0, 2.0], [0.0, 0.0, 0.0]];
+        let r = crate::serve::ServeResult {
+            name: "serve-latency".into(),
+            policy: "latency".into(),
+            requests: 2_000_000,
+            sim_secs: 86_400.0,
+            events: 4_000_000,
+            p50_ms: 180.0,
+            p99_ms: 950.0,
+            mean_ms: 240.0,
+            max_ms: 1800.0,
+            mean_queue_depth: 3.5,
+            max_queue_depth: 41,
+            requests_by_replica: vec![1_500_000, 500_000],
+            staleness_mean_secs: 7200.0,
+            refreshes: 12,
+            wire_bytes: 30_000_000_000,
+            wire_bytes_class: [0, 0, 30_000_000_000],
+            cost,
+        };
+        let t = table_serve(&[&r]);
+        assert!(t.contains("Routing Policy"));
+        assert!(t.contains("serve-latency"));
+        // 2M requests, $42 total -> $21.00 per million
+        assert!(t.contains("2.000"), "{t}");
+        assert!(t.contains("21.00"), "{t}");
+        assert!(t.contains("950.0"), "{t}");
     }
 
     #[test]

@@ -1,0 +1,333 @@
+//! Cross-cloud inference serving: millions of users against the trained
+//! model (ROADMAP item 4).
+//!
+//! Training pools clouds to *build* the model; this module pools the
+//! same clouds to *serve* it. A seeded population ([`TrafficSpec`])
+//! generates diurnal request streams at each cloud's front door, one
+//! model [`Replica`] per cloud batches them FIFO with service times
+//! derived from the parameter count, and a pluggable [`Router`] decides
+//! — per request — whether to stay local (latency) or ship the request
+//! to the cheapest cloud (egress + compute dollars), mirroring the
+//! training-side [`crate::cost::placement`] scoring. Checkpoint
+//! publishes close the train→deploy loop: fresh weights fan out from
+//! the training leader's cloud over cold WAN connections and replicas
+//! report how stale the version they served was.
+//!
+//! Everything runs on the coordinator's arena event engine and the
+//! routed CSR [`crate::netsim::Wan`]; dollars flow through the same
+//! [`crate::cost::CostLedger`] as training. Results are bit-identical
+//! across repeats and thread counts.
+
+pub mod replica;
+pub mod router;
+pub mod sim;
+pub mod traffic;
+
+pub use replica::{QueuedRequest, Replica, ServiceModel};
+pub use router::{RoutePolicy, Router};
+pub use sim::run;
+pub use traffic::{ArrivalStream, TrafficSpec, SECS_PER_DAY};
+
+use anyhow::{ensure, Result};
+
+use crate::checkpoint::Checkpoint;
+use crate::config::ExperimentConfig;
+use crate::cost::{CostBreakdown, PriceBook};
+use crate::netsim::Protocol;
+use crate::util::json::Json;
+
+/// Everything one serving run needs. Defaults describe a day of
+/// paper-scale traffic against a 1.3B-parameter model.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub name: String,
+    pub seed: u64,
+    pub traffic: TrafficSpec,
+    /// simulated wall-clock to generate arrivals for, seconds
+    pub duration_secs: f64,
+    pub route: RoutePolicy,
+    /// request payload (prompt) bytes
+    pub req_bytes: u64,
+    /// response payload (completion) bytes
+    pub resp_bytes: u64,
+    pub service: ServiceModel,
+    /// replica batch capacity
+    pub max_batch: usize,
+    /// training publishes a fresh checkpoint this often (0 = never)
+    pub refresh_period_secs: f64,
+    /// serialized model bytes pushed per refresh
+    pub model_bytes: u64,
+    /// cloud the training leader publishes from
+    pub source_cloud: usize,
+    pub protocol: Protocol,
+    pub streams: usize,
+    pub price_book: PriceBook,
+    /// ledger observation window (compute + egress billing cadence)
+    pub tick_secs: f64,
+    /// latency normalizer for blended routing, seconds
+    pub lat_ref_secs: f64,
+    /// dollar normalizer for blended routing, $ per request
+    pub usd_ref: f64,
+    /// version replicas start on (a restored checkpoint's
+    /// `global_version`)
+    pub initial_version: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            name: "serve".into(),
+            seed: 42,
+            traffic: TrafficSpec::default(),
+            duration_secs: SECS_PER_DAY,
+            route: RoutePolicy::Latency,
+            req_bytes: 2_048,
+            resp_bytes: 8_192,
+            service: ServiceModel::default(),
+            max_batch: 16,
+            refresh_period_secs: 4.0 * 3600.0,
+            model_bytes: 5_200_000_000,
+            source_cloud: 0,
+            protocol: Protocol::Grpc,
+            streams: 16,
+            price_book: PriceBook::paper_default(),
+            tick_secs: 3600.0,
+            lat_ref_secs: 0.25,
+            usd_ref: 3e-5,
+            initial_version: 0,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Borrow the training experiment's identity: seed, transport,
+    /// price book and name, so a serve run prices and transfers exactly
+    /// like the training run it deploys.
+    pub fn from_experiment(exp: &ExperimentConfig) -> ServeConfig {
+        ServeConfig {
+            name: format!("{}-serve", exp.name),
+            seed: exp.seed,
+            protocol: exp.protocol,
+            streams: exp.streams,
+            price_book: exp.price_book.clone(),
+            ..ServeConfig::default()
+        }
+    }
+
+    /// Serve the model a training checkpoint actually holds: parameter
+    /// count (service times), serialized size (refresh payloads) and
+    /// version lineage all come from the checkpoint.
+    pub fn with_checkpoint(mut self, ckpt: &Checkpoint) -> ServeConfig {
+        let numel = ckpt.params.numel() as u64;
+        self.service.n_params = numel;
+        self.model_bytes = numel * 4;
+        self.initial_version = ckpt.global_version;
+        self.name = format!("{}@r{}", self.name, ckpt.round);
+        self
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.duration_secs > 0.0, "duration must be positive");
+        ensure!(self.tick_secs > 0.0, "tick must be positive");
+        ensure!(self.traffic.users >= 1, "need at least one user");
+        ensure!(
+            self.traffic.reqs_per_user_day > 0.0,
+            "requests per user per day must be positive"
+        );
+        ensure!(
+            (0.0..1.0).contains(&self.traffic.amplitude),
+            "amplitude must be in [0, 1)"
+        );
+        ensure!(self.traffic.skew >= 0.0, "skew must be non-negative");
+        ensure!(self.req_bytes >= 1, "request payload must be non-empty");
+        ensure!(self.resp_bytes >= 1, "response payload must be non-empty");
+        ensure!(self.max_batch >= 1, "batch capacity must be positive");
+        ensure!(self.service.n_params >= 1, "model needs parameters");
+        ensure!(
+            self.service.flops_per_sec > 0.0,
+            "replica FLOP/s must be positive"
+        );
+        ensure!(
+            self.service.batch_marginal > 0.0
+                && self.service.batch_marginal <= 1.0,
+            "batch marginal must be in (0, 1]"
+        );
+        ensure!(
+            self.refresh_period_secs >= 0.0,
+            "refresh period must be non-negative"
+        );
+        ensure!(self.lat_ref_secs > 0.0, "latency normalizer must be positive");
+        ensure!(self.usd_ref > 0.0, "dollar normalizer must be positive");
+        self.price_book.validate()?;
+        Ok(())
+    }
+}
+
+/// What one serving run measured.
+#[derive(Clone, Debug)]
+pub struct ServeResult {
+    pub name: String,
+    /// the routing policy's canonical name
+    pub policy: String,
+    /// requests generated (== requests served; the engine drains)
+    pub requests: u64,
+    /// simulated seconds until the engine drained
+    pub sim_secs: f64,
+    /// events the engine scheduled (throughput denominator)
+    pub events: u64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub mean_ms: f64,
+    pub max_ms: f64,
+    /// mean queue depth sampled at every enqueue
+    pub mean_queue_depth: f64,
+    /// deepest queue any replica saw
+    pub max_queue_depth: usize,
+    /// requests routed to each replica (index = cloud)
+    pub requests_by_replica: Vec<u64>,
+    /// mean checkpoint age at serve time, seconds
+    pub staleness_mean_secs: f64,
+    /// refresh transfers applied across replicas
+    pub refreshes: u64,
+    pub wire_bytes: u64,
+    pub wire_bytes_class: [u64; 3],
+    pub cost: CostBreakdown,
+}
+
+impl ServeResult {
+    pub fn cost_usd(&self) -> f64 {
+        self.cost.total_usd()
+    }
+
+    /// Dollars per million requests — the serving-economics headline.
+    pub fn usd_per_million(&self) -> f64 {
+        self.cost.total_usd() / (self.requests.max(1) as f64) * 1e6
+    }
+
+    /// The replica that absorbed the most requests (lowest cloud id on
+    /// ties) — the effective placement a policy converges to.
+    pub fn busiest_replica(&self) -> usize {
+        let mut best = 0;
+        for (r, &n) in self.requests_by_replica.iter().enumerate().skip(1) {
+            if n > self.requests_by_replica[best] {
+                best = r;
+            }
+        }
+        best
+    }
+
+    /// The blended objective `w·lat/lat_ref + (1−w)·$/usd_ref` this run
+    /// achieved — the yardstick for "blended dominates both".
+    pub fn objective(&self, w: f64, lat_ref_ms: f64, usd_ref_per_m: f64) -> f64 {
+        w * self.mean_ms / lat_ref_ms
+            + (1.0 - w) * self.usd_per_million() / usd_ref_per_m
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("policy", Json::str(self.policy.clone())),
+            ("requests", Json::num(self.requests as f64)),
+            ("sim_secs", Json::num(self.sim_secs)),
+            ("events", Json::num(self.events as f64)),
+            ("p50_ms", Json::num(self.p50_ms)),
+            ("p99_ms", Json::num(self.p99_ms)),
+            ("mean_ms", Json::num(self.mean_ms)),
+            ("max_ms", Json::num(self.max_ms)),
+            ("mean_queue_depth", Json::num(self.mean_queue_depth)),
+            ("max_queue_depth", Json::num(self.max_queue_depth as f64)),
+            (
+                "requests_by_replica",
+                Json::arr(
+                    self.requests_by_replica
+                        .iter()
+                        .map(|&n| Json::num(n as f64)),
+                ),
+            ),
+            ("staleness_mean_secs", Json::num(self.staleness_mean_secs)),
+            ("refreshes", Json::num(self.refreshes as f64)),
+            ("wire_bytes", Json::num(self.wire_bytes as f64)),
+            (
+                "wire_bytes_class",
+                Json::arr(
+                    self.wire_bytes_class.iter().map(|&b| Json::num(b as f64)),
+                ),
+            ),
+            ("usd_per_million", Json::num(self.usd_per_million())),
+            ("cost", self.cost.to_json()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ParamSet;
+
+    #[test]
+    fn default_config_validates() {
+        ServeConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn bad_configs_are_rejected() {
+        let mut c = ServeConfig { duration_secs: 0.0, ..Default::default() };
+        assert!(c.validate().is_err());
+        c.duration_secs = 10.0;
+        c.traffic.amplitude = 1.0;
+        assert!(c.validate().is_err());
+        c.traffic.amplitude = 0.5;
+        c.max_batch = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn checkpoint_wiring_scales_the_service_model() {
+        let ckpt = Checkpoint {
+            params: ParamSet { leaves: vec![vec![0.5; 64], vec![1.0; 32]] },
+            round: 7,
+            global_version: 21,
+            sim_secs: 123.0,
+            wire_bytes: 456,
+            experiment: "paper-base".into(),
+        };
+        let cfg = ServeConfig::default().with_checkpoint(&ckpt);
+        assert_eq!(cfg.service.n_params, 96);
+        assert_eq!(cfg.model_bytes, 96 * 4);
+        assert_eq!(cfg.initial_version, 21);
+        assert!(cfg.name.ends_with("@r7"));
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn objective_blends_latency_and_dollars() {
+        let mut r = ServeResult {
+            name: "x".into(),
+            policy: "latency".into(),
+            requests: 1_000_000,
+            sim_secs: 1.0,
+            events: 1,
+            p50_ms: 100.0,
+            p99_ms: 200.0,
+            mean_ms: 100.0,
+            max_ms: 300.0,
+            mean_queue_depth: 0.0,
+            max_queue_depth: 0,
+            requests_by_replica: vec![10, 30, 30],
+            staleness_mean_secs: 0.0,
+            refreshes: 0,
+            wire_bytes: 0,
+            wire_bytes_class: [0; 3],
+            cost: CostBreakdown::zero(3),
+        };
+        r.cost.compute_usd[0] = 30.0;
+        // $30 over 1M requests = $30/M; objective at the refs is 1.0
+        assert!((r.usd_per_million() - 30.0).abs() < 1e-9);
+        let j = r.objective(0.5, 100.0, 30.0);
+        assert!((j - 1.0).abs() < 1e-12, "{j}");
+        // ties in requests_by_replica resolve to the lowest replica id
+        assert_eq!(r.busiest_replica(), 1);
+        let json = r.to_json().to_string();
+        assert!(json.contains("\"usd_per_million\""));
+    }
+}

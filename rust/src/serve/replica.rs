@@ -1,0 +1,224 @@
+//! Per-cloud model replicas: a FIFO queue with greedy dynamic batching
+//! and batch-size-dependent service times derived from the model's
+//! parameter count.
+
+use std::collections::VecDeque;
+
+/// Inference cost model. One request generates `gen_tokens` tokens at
+/// ~2 FLOPs per parameter per token; a replica sustains
+/// `flops_per_sec · compute_speed` effective FLOP/s. Batching amortizes:
+/// each request beyond the first costs only `batch_marginal` of a solo
+/// request (weights are read once per batch), plus a fixed per-batch
+/// scheduling overhead — the standard continuous-batching shape.
+#[derive(Clone, Copy, Debug)]
+pub struct ServiceModel {
+    /// parameter count of the served model (checkpoint-derived)
+    pub n_params: u64,
+    /// decoded tokens per request
+    pub gen_tokens: u64,
+    /// effective accelerator FLOP/s at `compute_speed` 1.0
+    pub flops_per_sec: f64,
+    /// marginal cost of each extra request in a batch, in (0, 1]
+    pub batch_marginal: f64,
+    /// fixed per-batch overhead (scheduling, KV setup), seconds
+    pub batch_overhead_secs: f64,
+}
+
+impl Default for ServiceModel {
+    fn default() -> Self {
+        ServiceModel {
+            n_params: 1_300_000_000,
+            gen_tokens: 64,
+            flops_per_sec: 2e12,
+            batch_marginal: 0.55,
+            batch_overhead_secs: 0.015,
+        }
+    }
+}
+
+impl ServiceModel {
+    /// Seconds one solo request's decode takes on a `speed`-rated node.
+    pub fn per_request_secs(&self, speed: f64) -> f64 {
+        assert!(speed > 0.0, "compute speed must be positive");
+        2.0 * self.n_params as f64 * self.gen_tokens as f64
+            / (self.flops_per_sec * speed)
+    }
+
+    /// Seconds a batch of `batch` requests occupies the replica.
+    pub fn batch_secs(&self, batch: usize, speed: f64) -> f64 {
+        assert!(batch >= 1, "empty batches don't run");
+        let one = self.per_request_secs(speed);
+        self.batch_overhead_secs
+            + one * (1.0 + (batch - 1) as f64 * self.batch_marginal)
+    }
+
+    /// Marginal replica-seconds one request adds to a full batch — the
+    /// router's compute-cost and expected-wait unit.
+    pub fn marginal_secs(&self, speed: f64) -> f64 {
+        self.per_request_secs(speed) * self.batch_marginal
+    }
+}
+
+/// One queued request (its front-door cloud and front-door arrival time).
+#[derive(Clone, Copy, Debug)]
+pub struct QueuedRequest {
+    pub src_cloud: usize,
+    pub arrived: f64,
+}
+
+/// One model replica: FIFO queue, greedy dynamic batching (when the
+/// replica frees up it takes up to `max_batch` queued requests as the
+/// next batch), per-window busy-seconds for compute billing, and the
+/// checkpoint version it currently serves.
+#[derive(Clone, Debug)]
+pub struct Replica {
+    /// the cloud this replica lives in
+    pub cloud: usize,
+    /// the hosting node (the cloud's gateway)
+    pub node: usize,
+    /// the node's compute speed (cluster profile)
+    pub speed: f64,
+    pub max_batch: usize,
+    pub queue: VecDeque<QueuedRequest>,
+    /// requests in the batch currently on the accelerator
+    pub serving: Vec<QueuedRequest>,
+    /// total requests completed
+    pub served: u64,
+    /// cumulative accelerator seconds (compute billing numerator)
+    pub busy_secs: f64,
+    /// busy seconds since the last ledger observation window
+    pub window_busy_secs: f64,
+    /// high-water queue depth (excluding the in-flight batch)
+    pub max_depth: usize,
+    /// Σ queue depth sampled at every enqueue (mean-depth numerator)
+    pub depth_sum: u64,
+    /// checkpoint version currently served
+    pub version: u64,
+    /// simulated time that version was published
+    pub version_time: f64,
+    /// Σ (request completion staleness) over served requests
+    pub staleness_sum: f64,
+}
+
+impl Replica {
+    pub fn new(cloud: usize, node: usize, speed: f64, max_batch: usize) -> Replica {
+        assert!(max_batch >= 1, "replica needs a batch capacity");
+        Replica {
+            cloud,
+            node,
+            speed,
+            max_batch,
+            queue: VecDeque::new(),
+            serving: Vec::new(),
+            served: 0,
+            busy_secs: 0.0,
+            window_busy_secs: 0.0,
+            max_depth: 0,
+            depth_sum: 0,
+            version: 0,
+            version_time: 0.0,
+            staleness_sum: 0.0,
+        }
+    }
+
+    pub fn idle(&self) -> bool {
+        self.serving.is_empty()
+    }
+
+    /// Queue one request, tracking depth statistics.
+    pub fn enqueue(&mut self, req: QueuedRequest) {
+        self.queue.push_back(req);
+        self.max_depth = self.max_depth.max(self.queue.len());
+        self.depth_sum += self.queue.len() as u64;
+    }
+
+    /// Move up to `max_batch` queued requests onto the accelerator and
+    /// return the batch's service time. Call only when idle and the
+    /// queue is non-empty.
+    pub fn start_batch(&mut self, model: &ServiceModel) -> f64 {
+        debug_assert!(self.idle(), "replica already serving");
+        debug_assert!(!self.queue.is_empty(), "nothing to serve");
+        let take = self.queue.len().min(self.max_batch);
+        self.serving.extend(self.queue.drain(..take));
+        let secs = model.batch_secs(self.serving.len(), self.speed);
+        self.busy_secs += secs;
+        self.window_busy_secs += secs;
+        secs
+    }
+
+    /// Finish the in-flight batch, returning its requests for latency
+    /// accounting.
+    pub fn finish_batch(&mut self) -> Vec<QueuedRequest> {
+        debug_assert!(!self.serving.is_empty(), "no batch in flight");
+        self.served += self.serving.len() as u64;
+        std::mem::take(&mut self.serving)
+    }
+
+    /// The router's wait estimate: everything queued or on the
+    /// accelerator ahead of a new request, in marginal service units.
+    pub fn backlog(&self) -> usize {
+        self.queue.len() + self.serving.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn service_times_scale_with_params_and_speed() {
+        let m = ServiceModel::default();
+        // 2 · 1.3e9 · 64 / 2e12 = 83.2 ms per solo request
+        assert!((m.per_request_secs(1.0) - 0.0832).abs() < 1e-9);
+        // a slower node is proportionally slower
+        assert!(
+            (m.per_request_secs(0.5) - 2.0 * m.per_request_secs(1.0)).abs()
+                < 1e-12
+        );
+        let big = ServiceModel { n_params: 2 * m.n_params, ..m };
+        assert!(
+            (big.per_request_secs(1.0) - 2.0 * m.per_request_secs(1.0)).abs()
+                < 1e-12
+        );
+    }
+
+    #[test]
+    fn batching_amortizes_but_never_wins_below_marginal() {
+        let m = ServiceModel::default();
+        let solo = m.batch_secs(1, 1.0);
+        let batch8 = m.batch_secs(8, 1.0);
+        // 8 requests in one batch beat 8 solo batches...
+        assert!(batch8 < 8.0 * solo);
+        // ...but still cost at least the marginal floor
+        assert!(batch8 > m.per_request_secs(1.0) * 8.0 * m.batch_marginal);
+        // batch time is monotone in batch size
+        for b in 2..=16 {
+            assert!(m.batch_secs(b, 1.0) > m.batch_secs(b - 1, 1.0));
+        }
+    }
+
+    #[test]
+    fn replica_fifo_batching_lifecycle() {
+        let m = ServiceModel::default();
+        let mut r = Replica::new(0, 0, 1.0, 4);
+        for i in 0..6 {
+            r.enqueue(QueuedRequest { src_cloud: i % 2, arrived: i as f64 });
+        }
+        assert_eq!(r.max_depth, 6);
+        assert!(r.idle());
+        let secs = r.start_batch(&m);
+        assert!((secs - m.batch_secs(4, 1.0)).abs() < 1e-12);
+        assert_eq!(r.serving.len(), 4);
+        assert_eq!(r.queue.len(), 2);
+        assert_eq!(r.backlog(), 6);
+        let done = r.finish_batch();
+        // FIFO: the first four arrivals complete first, in order
+        let arrivals: Vec<f64> = done.iter().map(|q| q.arrived).collect();
+        assert_eq!(arrivals, vec![0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(r.served, 4);
+        assert!(r.idle());
+        let secs2 = r.start_batch(&m);
+        assert!((secs2 - m.batch_secs(2, 1.0)).abs() < 1e-12);
+        assert!((r.busy_secs - (secs + secs2)).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,203 @@
+//! Pluggable request router: score every replica by expected latency
+//! and by marginal dollars, pick per policy.
+//!
+//! The cost side mirrors [`crate::cost::placement`]: bytes leaving a
+//! cloud are priced at that cloud's *first-tier* marginal egress rate
+//! for the crossed link class, and compute at the replica cloud's
+//! $/node-hour — volume tiers and framing scale every candidate alike,
+//! so they cannot flip the argmin (the realized bill stays the
+//! [`crate::cost::CostLedger`]'s job). The latency side is the static
+//! network round trip (precomputed from the routed WAN) plus a
+//! backlog-proportional queue-wait estimate, so latency routing load-
+//! balances while cost routing deliberately concentrates on cheap
+//! clouds.
+
+use anyhow::{bail, Context, Result};
+
+use crate::serve::replica::{Replica, ServiceModel};
+
+/// The `--route` knob.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum RoutePolicy {
+    /// minimize expected request latency (net + queue + service)
+    Latency,
+    /// minimize marginal dollars (egress + compute)
+    Cost,
+    /// minimize `w·latency/lat_ref + (1−w)·cost/usd_ref`
+    Blended(f64),
+}
+
+impl RoutePolicy {
+    /// Parse `"latency"`, `"cost"` or `"blended:W"` with `W ∈ [0, 1]`.
+    pub fn parse(s: &str) -> Result<RoutePolicy> {
+        let s = s.trim();
+        match s {
+            "latency" => return Ok(RoutePolicy::Latency),
+            "cost" => return Ok(RoutePolicy::Cost),
+            _ => {}
+        }
+        if let Some(w) = s.strip_prefix("blended:") {
+            let w: f64 = w.parse().with_context(|| format!("route {s:?}: bad weight"))?;
+            if !(0.0..=1.0).contains(&w) {
+                bail!("route {s:?}: weight must be in [0, 1]");
+            }
+            return Ok(RoutePolicy::Blended(w));
+        }
+        bail!("unknown route {s:?} (expected latency | cost | blended:W)")
+    }
+
+    /// Canonical name (round-trips through [`RoutePolicy::parse`]).
+    pub fn name(&self) -> String {
+        match self {
+            RoutePolicy::Latency => "latency".into(),
+            RoutePolicy::Cost => "cost".into(),
+            RoutePolicy::Blended(w) => format!("blended:{w}"),
+        }
+    }
+}
+
+/// Static per-(front-door cloud, replica) scoring tables plus the
+/// policy. Built once by the sim from the routed WAN and the price
+/// book; `pick` is then O(replicas) per request with no allocation.
+#[derive(Clone, Debug)]
+pub struct Router {
+    pub policy: RoutePolicy,
+    /// `net_secs[src][r]`: request + response network seconds between
+    /// cloud `src`'s front door and replica `r` (0-adjacent for local)
+    pub net_secs: Vec<Vec<f64>>,
+    /// `egress_usd[src][r]`: marginal egress dollars one request +
+    /// response pays on that path (0 for local)
+    pub egress_usd: Vec<Vec<f64>>,
+    /// `compute_usd[r]`: marginal compute dollars per request at
+    /// replica `r` (batch-marginal seconds × the cloud's $/h)
+    pub compute_usd: Vec<f64>,
+    /// latency normalizer for blended scoring, seconds
+    pub lat_ref_secs: f64,
+    /// dollar normalizer for blended scoring, $ per request
+    pub usd_ref: f64,
+}
+
+impl Router {
+    /// Expected latency of sending one request from `src` to replica
+    /// `r` right now: network round trip + backlog drain + own service.
+    pub fn latency_estimate(
+        &self,
+        src: usize,
+        r: usize,
+        replica: &Replica,
+        model: &ServiceModel,
+    ) -> f64 {
+        self.net_secs[src][r]
+            + replica.backlog() as f64 * model.marginal_secs(replica.speed)
+            + model.batch_secs(1, replica.speed)
+    }
+
+    /// Marginal dollars of serving one request from `src` at replica
+    /// `r` (queue-independent, so cost routing is a static placement).
+    pub fn cost_estimate(&self, src: usize, r: usize) -> f64 {
+        self.egress_usd[src][r] + self.compute_usd[r]
+    }
+
+    /// Pick the replica for a request arriving at cloud `src`.
+    /// Strictly-less argmin: ties resolve to the lowest replica id,
+    /// deterministic across runs and platforms (the
+    /// [`crate::cost::choose_leader`] convention).
+    pub fn pick(&self, src: usize, replicas: &[Replica], model: &ServiceModel) -> usize {
+        let score = |r: usize| -> f64 {
+            match self.policy {
+                RoutePolicy::Latency => self.latency_estimate(src, r, &replicas[r], model),
+                RoutePolicy::Cost => self.cost_estimate(src, r),
+                RoutePolicy::Blended(w) => {
+                    let lat = self.latency_estimate(src, r, &replicas[r], model);
+                    let usd = self.cost_estimate(src, r);
+                    w * lat / self.lat_ref_secs + (1.0 - w) * usd / self.usd_ref
+                }
+            }
+        };
+        let mut best = 0;
+        let mut best_score = score(0);
+        for r in 1..replicas.len() {
+            let s = score(r);
+            if s < best_score {
+                best = r;
+                best_score = s;
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_parses_and_round_trips() {
+        assert_eq!(RoutePolicy::parse("latency").unwrap(), RoutePolicy::Latency);
+        assert_eq!(RoutePolicy::parse("cost").unwrap(), RoutePolicy::Cost);
+        assert_eq!(RoutePolicy::parse("blended:0.5").unwrap(), RoutePolicy::Blended(0.5));
+        assert!(RoutePolicy::parse("blended:1.5").is_err());
+        assert!(RoutePolicy::parse("blended:x").is_err());
+        assert!(RoutePolicy::parse("teleport").is_err());
+        for p in [RoutePolicy::Latency, RoutePolicy::Cost, RoutePolicy::Blended(0.25)] {
+            assert_eq!(RoutePolicy::parse(&p.name()).unwrap(), p);
+        }
+    }
+
+    fn router(policy: RoutePolicy) -> Router {
+        Router {
+            policy,
+            // src 0: replica 0 local, replica 1 is 100 ms away
+            net_secs: vec![vec![0.004, 0.1], vec![0.1, 0.004]],
+            egress_usd: vec![vec![0.0, 2e-6], vec![2e-6, 0.0]],
+            // replica 0 expensive, replica 1 cheap
+            compute_usd: vec![5e-5, 1e-5],
+            lat_ref_secs: 0.15,
+            usd_ref: 3e-5,
+        }
+    }
+
+    fn replicas() -> Vec<Replica> {
+        vec![Replica::new(0, 0, 1.0, 8), Replica::new(1, 1, 1.0, 8)]
+    }
+
+    #[test]
+    fn latency_prefers_local_cost_prefers_cheap() {
+        let model = ServiceModel::default();
+        let reps = replicas();
+        assert_eq!(router(RoutePolicy::Latency).pick(0, &reps, &model), 0);
+        assert_eq!(router(RoutePolicy::Cost).pick(0, &reps, &model), 1);
+        // pure-latency blend is latency; pure-cost blend is cost
+        assert_eq!(router(RoutePolicy::Blended(1.0)).pick(0, &reps, &model), 0);
+        assert_eq!(router(RoutePolicy::Blended(0.0)).pick(0, &reps, &model), 1);
+    }
+
+    #[test]
+    fn latency_routing_sheds_load_off_a_deep_queue() {
+        let model = ServiceModel::default();
+        let mut reps = replicas();
+        // pile a backlog onto the local replica until the 100 ms hop to
+        // the idle one is the faster choice
+        let r = router(RoutePolicy::Latency);
+        for i in 0..4 {
+            reps[0].enqueue(crate::serve::replica::QueuedRequest {
+                src_cloud: 0,
+                arrived: i as f64,
+            });
+        }
+        assert_eq!(r.pick(0, &reps, &model), 1);
+        // cost routing ignores the queue entirely
+        assert_eq!(router(RoutePolicy::Cost).pick(0, &reps, &model), 1);
+    }
+
+    #[test]
+    fn ties_resolve_to_the_lowest_replica_id() {
+        let model = ServiceModel::default();
+        let reps = replicas();
+        let mut r = router(RoutePolicy::Cost);
+        r.egress_usd = vec![vec![0.0, 0.0]; 2];
+        r.compute_usd = vec![1e-5, 1e-5];
+        assert_eq!(r.pick(0, &reps, &model), 0);
+        assert_eq!(r.pick(1, &reps, &model), 0);
+    }
+}

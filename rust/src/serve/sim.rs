@@ -1,0 +1,363 @@
+//! Event-driven cross-cloud serving simulator.
+//!
+//! Runs on the same arena [`EventEngine`] the training coordinator uses,
+//! against the routed CSR [`Wan`]: requests arrive at each cloud's front
+//! door on its diurnal stream, the [`Router`] picks a replica, the
+//! replica batches FIFO, and completed batches record latency and
+//! staleness. Checkpoint publishes push a fresh model version from the
+//! source cloud to every replica over cold WAN connections.
+//!
+//! Millions of requests make per-request [`Wan::transfer`] calls (and
+//! their jitter RNG draws) prohibitive, so every (cloud, cloud) path is
+//! profiled ONCE up front — routed hop by hop with one dedicated RNG —
+//! and each request replays the frozen profile: fixed seconds plus fixed
+//! per-(cloud, class) wire-byte charges. The simulation is therefore a
+//! pure function of the config seed: single event stream, fixed-order
+//! float accumulation, bit-identical across repeats and thread counts.
+
+use anyhow::{ensure, Context, Result};
+
+use crate::cluster::ClusterSpec;
+use crate::coordinator::engine::EventEngine;
+use crate::cost::CostLedger;
+use crate::netsim::{LinkClass, Wan};
+use crate::serve::replica::{QueuedRequest, Replica};
+use crate::serve::router::Router;
+use crate::serve::traffic::ArrivalStream;
+use crate::serve::{ServeConfig, ServeResult};
+use crate::util::rng::Pcg64;
+
+/// Same-cloud front-door → replica round trip (no WAN hop to price).
+const LOCAL_NET_SECS: f64 = 0.004;
+
+/// Dedicated RNG stream tag for path profiling ("SRVP").
+const PROFILE_STREAM: u64 = 0x5352_5650;
+
+/// What the simulation schedules.
+enum Ev {
+    /// a request hits cloud `cloud`'s front door
+    Arrive { cloud: u32 },
+    /// replica `replica`'s in-flight batch completes
+    BatchDone { replica: u32 },
+    /// training publishes checkpoint `version` at the source cloud
+    Publish { version: u64 },
+    /// the `version` weights finish transferring to replica `replica`
+    Refreshed { replica: u32, version: u64 },
+    /// hourly ledger observation window
+    Tick,
+}
+
+/// One frozen network path: end-to-end seconds and the per-hop
+/// (source cloud, link-class index, wire bytes) egress charges.
+#[derive(Clone, Debug, Default)]
+struct PathProfile {
+    secs: f64,
+    charges: Vec<(usize, usize, u64)>,
+}
+
+/// Profile gateway `src_gw` → `dst_gw` for a `payload`-byte transfer.
+#[allow(clippy::too_many_arguments)]
+fn profile_path(
+    wan: &Wan,
+    cluster: &ClusterSpec,
+    src_gw: usize,
+    dst_gw: usize,
+    payload: u64,
+    cfg: &ServeConfig,
+    warm: bool,
+    rng: &mut Pcg64,
+) -> Result<PathProfile> {
+    let mut p = PathProfile::default();
+    for (a, b) in wan.route(src_gw, dst_gw)? {
+        let link = wan.link(a, b).context("routed hop must have a link")?;
+        let class = wan.link_class(a, b).context("routed hop must have a class")?;
+        let st = link.transfer(payload, cfg.protocol, warm, cfg.streams, rng);
+        p.secs += st.time_s;
+        p.charges.push((cluster.cloud_of(a), class.index(), st.wire_bytes));
+    }
+    Ok(p)
+}
+
+/// Replay a frozen profile's egress charges into the byte ledgers.
+fn charge(p: &PathProfile, bytes: &mut [[u64; 3]], wire: &mut u64) {
+    for &(c, k, b) in &p.charges {
+        bytes[c][k] += b;
+        *wire += b;
+    }
+}
+
+/// Run the serving simulation to completion (arrivals stop at
+/// `duration_secs`; the engine then drains in-flight batches).
+pub fn run(cfg: &ServeConfig, cluster: &ClusterSpec) -> Result<ServeResult> {
+    cfg.validate()?;
+    let n_clouds = cluster.n_clouds();
+    ensure!(n_clouds >= 1, "serving needs at least one cloud");
+    ensure!(cfg.source_cloud < n_clouds, "source cloud {} out of {n_clouds}", cfg.source_cloud);
+
+    let wan = Wan::from_cluster(cluster, cfg.seed);
+    let mut prof_rng = Pcg64::new(cfg.seed, PROFILE_STREAM);
+
+    // ---- freeze every (cloud, cloud) path once ---------------------------
+    let local = PathProfile { secs: LOCAL_NET_SECS, charges: Vec::new() };
+    let mut req_path = vec![vec![PathProfile::default(); n_clouds]; n_clouds];
+    let mut resp_path = vec![vec![PathProfile::default(); n_clouds]; n_clouds];
+    for s in 0..n_clouds {
+        for d in 0..n_clouds {
+            if s == d {
+                // request + response share the fixed local round trip
+                req_path[s][d] = local.clone();
+                resp_path[s][d] = PathProfile { secs: 0.0, charges: Vec::new() };
+                continue;
+            }
+            let (gs, gd) = (cluster.gateway(s), cluster.gateway(d));
+            req_path[s][d] = profile_path(
+                &wan,
+                cluster,
+                gs,
+                gd,
+                cfg.req_bytes,
+                cfg,
+                true,
+                &mut prof_rng,
+            )?;
+            resp_path[s][d] = profile_path(
+                &wan,
+                cluster,
+                gs,
+                gd,
+                cfg.resp_bytes,
+                cfg,
+                true,
+                &mut prof_rng,
+            )?;
+        }
+    }
+    // checkpoint pushes: cold connections, model-sized payloads
+    let mut refresh_path = Vec::with_capacity(n_clouds);
+    for r in 0..n_clouds {
+        if r == cfg.source_cloud {
+            // staging copy inside the source cloud (25 Gbps local fabric)
+            refresh_path.push(PathProfile {
+                secs: cfg.model_bytes as f64 * 8.0 / 25e9,
+                charges: Vec::new(),
+            });
+        } else {
+            refresh_path.push(profile_path(
+                &wan,
+                cluster,
+                cluster.gateway(cfg.source_cloud),
+                cluster.gateway(r),
+                cfg.model_bytes,
+                cfg,
+                false,
+                &mut prof_rng,
+            )?);
+        }
+    }
+
+    // ---- replicas: one per cloud, hosted at the gateway ------------------
+    let mut replicas: Vec<Replica> = (0..n_clouds)
+        .map(|c| {
+            let node = cluster.gateway(c);
+            let speed = cluster.platforms[node].compute_speed;
+            let mut r = Replica::new(c, node, speed, cfg.max_batch);
+            r.version = cfg.initial_version;
+            r
+        })
+        .collect();
+
+    // ---- router scoring tables from the frozen profiles ------------------
+    let book = &cfg.price_book;
+    let charge_usd = |p: &PathProfile| -> f64 {
+        let mut usd = 0.0;
+        for &(c, k, b) in &p.charges {
+            usd += b as f64 / 1e9 * book.egress_rate(c, LinkClass::ALL[k]).marginal_rate(0.0);
+        }
+        usd
+    };
+    let mut net_secs = vec![vec![0.0; n_clouds]; n_clouds];
+    let mut egress_usd = vec![vec![0.0; n_clouds]; n_clouds];
+    for s in 0..n_clouds {
+        for r in 0..n_clouds {
+            net_secs[s][r] = req_path[s][r].secs + resp_path[r][s].secs;
+            egress_usd[s][r] = charge_usd(&req_path[s][r]) + charge_usd(&resp_path[r][s]);
+        }
+    }
+    let mut compute_usd = vec![0.0; n_clouds];
+    for (usd, r) in compute_usd.iter_mut().zip(replicas.iter()) {
+        *usd = cfg.service.marginal_secs(r.speed) / 3600.0 * book.compute_rate(r.cloud);
+    }
+    let router = Router {
+        policy: cfg.route,
+        net_secs,
+        egress_usd,
+        compute_usd,
+        lat_ref_secs: cfg.lat_ref_secs,
+        usd_ref: cfg.usd_ref,
+    };
+
+    // ---- event loop ------------------------------------------------------
+    let mut engine: EventEngine<Ev> = EventEngine::new(0.0);
+    let mut streams: Vec<ArrivalStream> = (0..n_clouds)
+        .map(|c| ArrivalStream::new(&cfg.traffic, c, n_clouds, cfg.seed))
+        .collect();
+    for (c, s) in streams.iter_mut().enumerate() {
+        let t = s.next(0.0);
+        if t <= cfg.duration_secs {
+            engine.at(t, Ev::Arrive { cloud: c as u32 });
+        }
+    }
+    if cfg.refresh_period_secs > 0.0 && cfg.refresh_period_secs <= cfg.duration_secs {
+        engine.at(cfg.refresh_period_secs, Ev::Publish { version: cfg.initial_version + 1 });
+    }
+    if cfg.tick_secs <= cfg.duration_secs {
+        engine.at(cfg.tick_secs, Ev::Tick);
+    }
+
+    let mut ledger = CostLedger::new(book.clone(), n_clouds);
+    let mut bytes_by_cloud_class = vec![[0u64; 3]; n_clouds];
+    let mut wire_bytes: u64 = 0;
+    // version -> publish time (index: version - initial_version)
+    let mut published_at: Vec<f64> = vec![0.0];
+    let mut latencies: Vec<f64> = Vec::new();
+    let mut requests: u64 = 0;
+    let mut requests_by_replica = vec![0u64; n_clouds];
+    let mut staleness_sum = 0.0;
+    let mut refreshes: u64 = 0;
+
+    while let Some(ev) = engine.pop() {
+        let now = engine.now();
+        match ev {
+            Ev::Arrive { cloud } => {
+                let c = cloud as usize;
+                requests += 1;
+                let r = router.pick(c, &replicas, &cfg.service);
+                requests_by_replica[r] += 1;
+                charge(&req_path[c][r], &mut bytes_by_cloud_class, &mut wire_bytes);
+                replicas[r].enqueue(QueuedRequest { src_cloud: c, arrived: now });
+                if replicas[r].idle() {
+                    let secs = replicas[r].start_batch(&cfg.service);
+                    engine.after(secs, Ev::BatchDone { replica: r as u32 });
+                }
+                let t = streams[c].next(now);
+                if t <= cfg.duration_secs {
+                    engine.at(t, Ev::Arrive { cloud });
+                }
+            }
+            Ev::BatchDone { replica } => {
+                let r = replica as usize;
+                let version_age = now - replicas[r].version_time;
+                let done = replicas[r].finish_batch();
+                for q in &done {
+                    // total latency = uplink + queue/service + downlink
+                    let lat = req_path[q.src_cloud][r].secs
+                        + (now - q.arrived)
+                        + resp_path[r][q.src_cloud].secs;
+                    latencies.push(lat);
+                    charge(&resp_path[r][q.src_cloud], &mut bytes_by_cloud_class, &mut wire_bytes);
+                    staleness_sum += version_age;
+                    replicas[r].staleness_sum += version_age;
+                }
+                if !replicas[r].queue.is_empty() {
+                    let secs = replicas[r].start_batch(&cfg.service);
+                    engine.after(secs, Ev::BatchDone { replica });
+                }
+            }
+            Ev::Publish { version } => {
+                published_at.push(now);
+                for r in 0..n_clouds {
+                    charge(&refresh_path[r], &mut bytes_by_cloud_class, &mut wire_bytes);
+                    let secs = refresh_path[r].secs;
+                    engine.after(secs, Ev::Refreshed { replica: r as u32, version });
+                }
+                let next = now + cfg.refresh_period_secs;
+                if next <= cfg.duration_secs {
+                    engine.at(next, Ev::Publish { version: version + 1 });
+                }
+            }
+            Ev::Refreshed { replica, version } => {
+                let r = replica as usize;
+                if version > replicas[r].version {
+                    let idx = (version - cfg.initial_version) as usize;
+                    replicas[r].version = version;
+                    replicas[r].version_time = published_at[idx];
+                    refreshes += 1;
+                }
+            }
+            Ev::Tick => {
+                let mut platform_secs = vec![0.0; cluster.n()];
+                for rep in replicas.iter_mut() {
+                    platform_secs[rep.node] += rep.window_busy_secs;
+                    rep.window_busy_secs = 0.0;
+                }
+                ledger.observe(&bytes_by_cloud_class, &platform_secs, cluster);
+                let next = now + cfg.tick_secs;
+                if next <= cfg.duration_secs {
+                    engine.at(next, Ev::Tick);
+                }
+            }
+        }
+    }
+
+    // tail window: bytes and busy-seconds since the last tick
+    let mut platform_secs = vec![0.0; cluster.n()];
+    for rep in replicas.iter_mut() {
+        platform_secs[rep.node] += rep.window_busy_secs;
+        rep.window_busy_secs = 0.0;
+    }
+    ledger.observe(&bytes_by_cloud_class, &platform_secs, cluster);
+
+    // ---- aggregate -------------------------------------------------------
+    latencies.sort_by(f64::total_cmp);
+    let pct = |p: f64| -> f64 {
+        if latencies.is_empty() {
+            return 0.0;
+        }
+        let idx = ((latencies.len() as f64 - 1.0) * p).round() as usize;
+        latencies[idx]
+    };
+    let mean = if latencies.is_empty() {
+        0.0
+    } else {
+        latencies.iter().sum::<f64>() / latencies.len() as f64
+    };
+    let max_lat = latencies.last().copied().unwrap_or(0.0);
+    let depth_sum: u64 = replicas.iter().map(|r| r.depth_sum).sum();
+    let max_queue_depth = replicas.iter().map(|r| r.max_depth).max().unwrap_or(0);
+    let served: u64 = replicas.iter().map(|r| r.served).sum();
+
+    let mut wire_class = [0u64; 3];
+    for per_cloud in &bytes_by_cloud_class {
+        for (w, b) in wire_class.iter_mut().zip(per_cloud.iter()) {
+            *w += *b;
+        }
+    }
+
+    Ok(ServeResult {
+        name: cfg.name.clone(),
+        policy: cfg.route.name(),
+        requests,
+        sim_secs: engine.now(),
+        events: engine.scheduled_total(),
+        p50_ms: pct(0.50) * 1e3,
+        p99_ms: pct(0.99) * 1e3,
+        mean_ms: mean * 1e3,
+        max_ms: max_lat * 1e3,
+        mean_queue_depth: if served == 0 {
+            0.0
+        } else {
+            depth_sum as f64 / served as f64
+        },
+        max_queue_depth,
+        requests_by_replica,
+        staleness_mean_secs: if served == 0 {
+            0.0
+        } else {
+            staleness_sum / served as f64
+        },
+        refreshes,
+        wire_bytes,
+        wire_bytes_class: wire_class,
+        cost: ledger.cumulative().clone(),
+    })
+}

@@ -1,0 +1,236 @@
+//! Seeded request-population generator: millions of users spread across
+//! the clouds, each cloud's front door following a per-region diurnal
+//! sinusoid, arrivals drawn as a non-homogeneous Poisson process by
+//! thinning — deterministic per (seed, cloud) stream.
+
+use crate::util::rng::Pcg64;
+
+/// Seconds in one simulated day (the diurnal period).
+pub const SECS_PER_DAY: f64 = 86_400.0;
+
+/// Dedicated RNG stream tag for arrival sampling ("SRVA").
+const ARRIVAL_STREAM: u64 = 0x5352_5641;
+
+/// The request population hitting the serving fleet.
+///
+/// Each cloud is a regional front door; its users generate requests at
+///
+/// ```text
+/// rate_c(t) = base_c · (1 + amplitude · sin(2π t / day + phase_c))
+/// ```
+///
+/// where `base_c = users · share_c · reqs_per_user_day / 86 400` and
+/// `phase_c = 2π c / n_clouds` staggers the peaks around the globe. Over
+/// a whole day the sinusoid integrates to zero, so the arrival mass is
+/// exactly `users · reqs_per_user_day` in expectation regardless of the
+/// amplitude (pinned by the unit tests below).
+#[derive(Clone, Debug)]
+pub struct TrafficSpec {
+    /// total user population across every cloud
+    pub users: u64,
+    /// mean requests per user per day
+    pub reqs_per_user_day: f64,
+    /// diurnal swing in [0, 1): peak/trough = (1+a)/(1-a)
+    pub amplitude: f64,
+    /// population skew: cloud `c` weighs `1/(1 + skew·c)` before
+    /// normalization (0 = uniform; the default front door, cloud 0, is
+    /// the biggest market)
+    pub skew: f64,
+}
+
+impl Default for TrafficSpec {
+    fn default() -> Self {
+        TrafficSpec {
+            users: 1_000_000,
+            reqs_per_user_day: 2.0,
+            amplitude: 0.6,
+            skew: 0.35,
+        }
+    }
+}
+
+impl TrafficSpec {
+    /// Cloud `c`'s share of the user population (sums to 1 over clouds).
+    pub fn pop_share(&self, cloud: usize, n_clouds: usize) -> f64 {
+        assert!(cloud < n_clouds, "cloud {cloud} out of {n_clouds}");
+        let w = |c: usize| 1.0 / (1.0 + self.skew * c as f64);
+        w(cloud) / (0..n_clouds).map(w).sum::<f64>()
+    }
+
+    /// Cloud `c`'s mean arrival rate (requests/sec, diurnal-averaged).
+    pub fn base_rps(&self, cloud: usize, n_clouds: usize) -> f64 {
+        let day_reqs = self.users as f64 * self.reqs_per_user_day;
+        day_reqs * self.pop_share(cloud, n_clouds) / SECS_PER_DAY
+    }
+
+    /// Instantaneous arrival rate of cloud `c` at simulated time `t`.
+    pub fn rate(&self, cloud: usize, n_clouds: usize, t_secs: f64) -> f64 {
+        let phase = std::f64::consts::TAU * cloud as f64 / n_clouds as f64;
+        let swing = (std::f64::consts::TAU * t_secs / SECS_PER_DAY + phase).sin();
+        self.base_rps(cloud, n_clouds) * (1.0 + self.amplitude * swing)
+    }
+
+    /// Cloud `c`'s peak arrival rate (the thinning envelope).
+    pub fn peak_rps(&self, cloud: usize, n_clouds: usize) -> f64 {
+        self.base_rps(cloud, n_clouds) * (1.0 + self.amplitude)
+    }
+
+    /// Expected total requests over `duration_secs` across all clouds
+    /// (exact for whole days; the sinusoid's partial-day residual is
+    /// bounded by `amplitude · base · day / 2π` per cloud).
+    pub fn expected_requests(&self, duration_secs: f64) -> f64 {
+        self.users as f64 * self.reqs_per_user_day * duration_secs / SECS_PER_DAY
+    }
+}
+
+/// One cloud's deterministic arrival stream: a non-homogeneous Poisson
+/// process realized by thinning against the peak-rate envelope. Each
+/// stream owns a dedicated [`Pcg64`] stream keyed by (seed, cloud), so
+/// the sequence is a pure function of the experiment seed — independent
+/// of host thread count and of every other cloud's stream.
+#[derive(Clone, Debug)]
+pub struct ArrivalStream {
+    cloud: usize,
+    n_clouds: usize,
+    spec: TrafficSpec,
+    peak: f64,
+    rng: Pcg64,
+}
+
+impl ArrivalStream {
+    pub fn new(spec: &TrafficSpec, cloud: usize, n_clouds: usize, seed: u64) -> ArrivalStream {
+        let peak = spec.peak_rps(cloud, n_clouds);
+        assert!(peak > 0.0, "cloud {cloud} has zero traffic");
+        ArrivalStream {
+            cloud,
+            n_clouds,
+            spec: spec.clone(),
+            peak,
+            rng: Pcg64::new(seed, ARRIVAL_STREAM ^ cloud as u64),
+        }
+    }
+
+    /// The next arrival strictly after `now` (thinning: candidate gaps
+    /// are Exp(peak); a candidate at `t` survives with probability
+    /// `rate(t)/peak`).
+    pub fn next(&mut self, now: f64) -> f64 {
+        let mut t = now;
+        loop {
+            t += self.rng.exponential(self.peak);
+            let accept = self.rng.uniform() * self.peak;
+            if accept <= self.spec.rate(self.cloud, self.n_clouds, t) {
+                return t;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> TrafficSpec {
+        TrafficSpec {
+            users: 500_000,
+            reqs_per_user_day: 1.5,
+            amplitude: 0.6,
+            skew: 0.35,
+        }
+    }
+
+    #[test]
+    fn population_shares_sum_to_one_and_skew_orders_them() {
+        let s = spec();
+        let n = 6;
+        let shares: Vec<f64> = (0..n).map(|c| s.pop_share(c, n)).collect();
+        let total: f64 = shares.iter().sum();
+        assert!((total - 1.0).abs() < 1e-12, "{total}");
+        for c in 1..n {
+            assert!(shares[c] < shares[c - 1], "skew must order shares");
+        }
+        let uniform = TrafficSpec { skew: 0.0, ..s };
+        for c in 0..n {
+            assert!((uniform.pop_share(c, n) - 1.0 / n as f64).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn arrival_mass_is_conserved_over_a_day() {
+        // ∫ rate dt over one full day == base · day for every cloud: the
+        // sinusoid redistributes load across hours, it never adds any
+        let s = spec();
+        let n = 4;
+        for cloud in 0..n {
+            let dt = 10.0;
+            let steps = (SECS_PER_DAY / dt) as usize;
+            let mass: f64 = (0..steps)
+                .map(|i| s.rate(cloud, n, (i as f64 + 0.5) * dt) * dt)
+                .sum();
+            let expect = s.base_rps(cloud, n) * SECS_PER_DAY;
+            assert!((mass - expect).abs() / expect < 1e-3, "cloud {cloud}: {mass} vs {expect}");
+        }
+        // and the all-cloud total is the advertised population mass
+        let total: f64 = (0..n).map(|c| s.base_rps(c, n) * SECS_PER_DAY).sum();
+        assert!((total - s.expected_requests(SECS_PER_DAY)).abs() < 1e-6 * total);
+    }
+
+    #[test]
+    fn peak_to_trough_ratio_matches_the_amplitude() {
+        let s = spec();
+        let n = 3;
+        let rates: Vec<f64> = (0..8640).map(|i| s.rate(1, n, i as f64 * 10.0)).collect();
+        let peak = rates.iter().cloned().fold(f64::MIN, f64::max);
+        let trough = rates.iter().cloned().fold(f64::MAX, f64::min);
+        let want = (1.0 + s.amplitude) / (1.0 - s.amplitude);
+        assert!((peak / trough - want).abs() < 0.01, "{} vs {want}", peak / trough);
+        assert!(peak <= s.peak_rps(1, n) + 1e-9, "envelope must dominate");
+    }
+
+    #[test]
+    fn arrivals_are_seed_stable_and_strictly_increasing() {
+        let s = spec();
+        let mut a = ArrivalStream::new(&s, 2, 4, 42);
+        let mut b = ArrivalStream::new(&s, 2, 4, 42);
+        let mut c = ArrivalStream::new(&s, 2, 4, 43);
+        let mut t_a = 0.0;
+        let mut t_b = 0.0;
+        let mut t_c = 0.0;
+        let mut diverged = false;
+        for _ in 0..200 {
+            let prev = t_a;
+            t_a = a.next(t_a);
+            t_b = b.next(t_b);
+            t_c = c.next(t_c);
+            assert_eq!(t_a.to_bits(), t_b.to_bits(), "same seed, same stream");
+            assert!(t_a > prev, "arrivals must move forward");
+            diverged |= t_a.to_bits() != t_c.to_bits();
+        }
+        assert!(diverged, "different seeds must give different streams");
+    }
+
+    #[test]
+    fn empirical_arrival_count_matches_the_mass() {
+        // one simulated day on one cloud: the realized Poisson count
+        // lands within 5 standard deviations of ∫ rate dt
+        let s = TrafficSpec {
+            users: 100_000,
+            reqs_per_user_day: 1.0,
+            amplitude: 0.8,
+            skew: 0.0,
+        };
+        let n = 2;
+        let mut stream = ArrivalStream::new(&s, 0, n, 7);
+        let mut t = 0.0;
+        let mut count = 0u64;
+        loop {
+            t = stream.next(t);
+            if t > SECS_PER_DAY {
+                break;
+            }
+            count += 1;
+        }
+        let expect = s.base_rps(0, n) * SECS_PER_DAY;
+        let sd = expect.sqrt();
+        assert!((count as f64 - expect).abs() < 5.0 * sd, "{count} vs {expect} (sd {sd:.0})");
+    }
+}

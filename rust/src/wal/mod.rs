@@ -41,7 +41,8 @@ use crate::model::ParamSet;
 /// First bytes of every WAL file.
 pub const WAL_MAGIC: &[u8; 8] = b"XFEDWAL1";
 /// Bump on any incompatible record-layout change.
-pub const WAL_VERSION: u32 = 1;
+/// v2: RoundRecord gained the per-class wire-byte split.
+pub const WAL_VERSION: u32 = 2;
 /// Frame overhead per record (length + checksum).
 pub const FRAME_BYTES: u64 = 12;
 /// A full parameter snapshot is written every this many records; records

@@ -1,0 +1,125 @@
+//! Serving-subsystem determinism: a serving day is a pure function of
+//! its seed. Same seed + config ⇒ bit-identical `ServeResult` across
+//! repeat runs AND across host thread counts (the serving simulator is
+//! a single event stream; nothing may read the thread pool). Also pins
+//! the economics the router exists for: on an asymmetric price book the
+//! latency-optimal placement differs from the cost-optimal one.
+
+use crossfed::cluster::ClusterSpec;
+use crossfed::cost::PriceBook;
+use crossfed::serve::{self, RoutePolicy, ServeConfig, ServeResult, TrafficSpec};
+use crossfed::util::par;
+
+/// Small enough for a debug-build test, large enough that every replica
+/// sees traffic and batches actually form (~10k requests over 6 hours).
+fn cfg(route: RoutePolicy, seed: u64) -> ServeConfig {
+    ServeConfig {
+        name: format!("det-{}", route.name()),
+        seed,
+        route,
+        traffic: TrafficSpec { users: 20_000, ..TrafficSpec::default() },
+        duration_secs: 6.0 * 3600.0,
+        refresh_period_secs: 2.0 * 3600.0,
+        ..ServeConfig::default()
+    }
+}
+
+/// Asymmetric book: cloud 2 is ~8x cheaper than everyone else, so the
+/// cost argmin leaves the fast clouds; latency routing never volunteers
+/// for cloud 2 (it runs the slowest accelerator profile).
+fn asymmetric_book() -> PriceBook {
+    let mut book = PriceBook::uniform(4.0, 0.09);
+    book.name = "det-asym".into();
+    book.compute_per_node_hour = vec![5.0, 4.0, 0.5, 4.5];
+    book
+}
+
+fn cluster() -> ClusterSpec {
+    ClusterSpec::scaled(4, &[1])
+}
+
+fn run(route: RoutePolicy, seed: u64) -> ServeResult {
+    let mut c = cfg(route, seed);
+    c.price_book = asymmetric_book();
+    serve::run(&c, &cluster()).expect("serve run")
+}
+
+/// Every observable field, floats as raw bits, in fixed order.
+fn fingerprint(r: &ServeResult) -> Vec<u64> {
+    let mut fp = vec![
+        r.requests,
+        r.events,
+        r.refreshes,
+        r.wire_bytes,
+        r.max_queue_depth as u64,
+        r.sim_secs.to_bits(),
+        r.p50_ms.to_bits(),
+        r.p99_ms.to_bits(),
+        r.mean_ms.to_bits(),
+        r.max_ms.to_bits(),
+        r.mean_queue_depth.to_bits(),
+        r.staleness_mean_secs.to_bits(),
+        r.cost.total_usd().to_bits(),
+        r.cost.egress_total_usd().to_bits(),
+        r.cost.compute_total_usd().to_bits(),
+    ];
+    fp.extend_from_slice(&r.wire_bytes_class);
+    fp.extend_from_slice(&r.requests_by_replica);
+    fp
+}
+
+#[test]
+fn repeat_runs_are_bit_identical() {
+    for route in [RoutePolicy::Latency, RoutePolicy::Cost, RoutePolicy::Blended(0.5)] {
+        let a = run(route, 42);
+        let b = run(route, 42);
+        assert_eq!(
+            fingerprint(&a),
+            fingerprint(&b),
+            "repeat run diverged under {} routing",
+            a.policy
+        );
+        assert!(a.requests > 1_000, "population too small to mean anything");
+    }
+}
+
+#[test]
+fn thread_count_does_not_change_results() {
+    let narrow = par::with_threads(1, || run(RoutePolicy::Blended(0.5), 42));
+    let wide = par::with_threads(4, || run(RoutePolicy::Blended(0.5), 42));
+    assert_eq!(
+        fingerprint(&narrow),
+        fingerprint(&wide),
+        "serving results depend on the host thread count"
+    );
+}
+
+#[test]
+fn different_seeds_diverge() {
+    let a = run(RoutePolicy::Latency, 42);
+    let b = run(RoutePolicy::Latency, 43);
+    assert_ne!(
+        fingerprint(&a),
+        fingerprint(&b),
+        "different seeds must produce different serving days"
+    );
+}
+
+#[test]
+fn latency_optimal_differs_from_cost_optimal() {
+    let lat = run(RoutePolicy::Latency, 42);
+    let cost = run(RoutePolicy::Cost, 42);
+    assert_eq!(cost.busiest_replica(), 2, "cloud 2 is priced to win every cost argmin");
+    assert_ne!(
+        lat.busiest_replica(),
+        cost.busiest_replica(),
+        "latency routing must not converge to the same placement as \
+         cost routing on an asymmetric book"
+    );
+    assert!(
+        cost.usd_per_million() < lat.usd_per_million(),
+        "cost routing must actually be cheaper: ${:.2}/M vs ${:.2}/M",
+        cost.usd_per_million(),
+        lat.usd_per_million()
+    );
+}

@@ -1,0 +1,115 @@
+#!/usr/bin/env python3
+"""Numeric perf regression gate for the CI bench-smoke job.
+
+Usage: perf_gate.py FLOORS.json FRESH.json
+
+FLOORS is the committed BENCH_hotpath.json (the baseline the repo
+promises); FRESH is the copy the bench just rewrote on this runner.
+Compared metrics:
+
+  - sim_scale[*].nodes_per_sec   (arena engine + indexed WAN core)
+  - sim_scale[*].events_per_sec
+  - serve_throughput.events_per_sec  (serving day on the event engine)
+  - serve_throughput.requests_per_sec
+
+A fresh number more than TOLERANCE below its floor is a regression.
+While the committed floors are null (no authoring container has had a
+Rust toolchain yet) the gate soft-passes loudly; once real floors are
+committed, regressions make the job fail. Runner noise is real, so the
+tolerance is deliberately generous — this gate catches collapses, not
+percent-level drift.
+
+Exit codes: 0 pass / soft-pass, 1 regression against a real floor,
+2 malformed input.
+"""
+
+import json
+import sys
+
+TOLERANCE = 0.30  # fresh may be up to 30% below the floor
+
+
+def annotate(kind, msg):
+    # GitHub Actions annotation; plain stderr elsewhere
+    print(f"::{kind}::perf-gate: {msg}")
+
+
+def pick(doc, path):
+    """Walk a dotted path; list indexes are numeric components."""
+    cur = doc
+    for part in path.split("."):
+        if isinstance(cur, list):
+            cur = cur[int(part)]
+        elif isinstance(cur, dict):
+            cur = cur.get(part)
+        else:
+            return None
+        if cur is None:
+            return None
+    return cur
+
+
+def metric_paths(floors):
+    paths = []
+    scale = floors.get("sim_scale")
+    if isinstance(scale, list):
+        for i in range(len(scale)):
+            paths.append(f"sim_scale.{i}.nodes_per_sec")
+            paths.append(f"sim_scale.{i}.events_per_sec")
+    if isinstance(floors.get("serve_throughput"), dict):
+        paths.append("serve_throughput.events_per_sec")
+        paths.append("serve_throughput.requests_per_sec")
+    return paths
+
+
+def main(argv):
+    if len(argv) != 3:
+        print(__doc__.strip(), file=sys.stderr)
+        return 2
+    try:
+        with open(argv[1]) as f:
+            floors = json.load(f)
+        with open(argv[2]) as f:
+            fresh = json.load(f)
+    except (OSError, ValueError) as e:
+        annotate("error", f"cannot read inputs: {e}")
+        return 2
+
+    regressions, soft, checked = [], [], 0
+    for path in metric_paths(floors):
+        floor = pick(floors, path)
+        now = pick(fresh, path)
+        if not isinstance(floor, (int, float)):
+            soft.append(path)
+            continue
+        checked += 1
+        if not isinstance(now, (int, float)):
+            regressions.append(f"{path}: floor {floor:.0f} but no fresh value")
+        elif now < floor * (1.0 - TOLERANCE):
+            regressions.append(
+                f"{path}: {now:.0f} < floor {floor:.0f} "
+                f"(-{(1.0 - now / floor) * 100.0:.0f}%, tolerance "
+                f"{TOLERANCE * 100:.0f}%)"
+            )
+        else:
+            print(f"perf-gate: {path}: {now:.0f} >= floor {floor:.0f} ok")
+
+    if regressions:
+        for r in regressions:
+            annotate("error", r)
+        return 1
+    if soft:
+        annotate(
+            "warning",
+            f"SOFT PASS — {len(soft)} metric(s) have no committed floor "
+            "(BENCH_hotpath.json floors are null; no authoring container "
+            "has had a Rust toolchain). Commit a measured "
+            "BENCH_hotpath.json to arm the gate: " + ", ".join(soft),
+        )
+    if checked:
+        annotate("notice", f"{checked} metric(s) within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
