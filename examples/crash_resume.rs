@@ -84,6 +84,19 @@ fn main() -> anyhow::Result<()> {
         human_bytes(wal_bytes),
         human_bytes(wal_bytes / logged.max(1) as u64),
     );
+    // the parameter chain (snapshots + XOR deltas) rides the
+    // delta-varint lossless stage on disk; report what that saves
+    let (param_raw, param_enc) = coord.wal_param_bytes();
+    assert!(
+        param_enc < param_raw,
+        "delta-varint WAL params must beat raw words ({param_enc} vs {param_raw})"
+    );
+    println!(
+        "WAL parameter chain: {} raw -> {} on disk ({:.2}x)",
+        human_bytes(param_raw),
+        human_bytes(param_enc),
+        param_raw as f64 / param_enc.max(1) as f64,
+    );
     drop(coord); // the coordinator process is gone
 
     // --- resume against the same directory and finish the run

@@ -1,0 +1,126 @@
+//! Lossless wire compression in egress dollars: the same hierarchical
+//! training run (paper-hier preset, 3 clouds) priced with and without
+//! the `--lossless auto` stage.
+//!
+//! Asserts (CI runs this — a regression fails the build):
+//!
+//! * the loss history is bit-identical with the stage on — lossless
+//!   means *lossless*, training cannot tell it is there,
+//! * training-round egress dollars drop by ≥20% at that equal loss,
+//! * the staged run's dollars still decompose exactly
+//!   (total == sum of per-cloud compute + egress entries).
+//!
+//! Runs on the mock backend (no artifacts needed):
+//!
+//!     cargo run --release --example lossless_egress
+
+use crossfed::cluster::ClusterSpec;
+use crossfed::compress::LosslessStage;
+use crossfed::config::{preset, ExperimentConfig};
+use crossfed::coordinator::Coordinator;
+use crossfed::data::CorpusConfig;
+use crossfed::metrics::RunResult;
+use crossfed::model::ParamSet;
+use crossfed::runtime::MockRuntime;
+
+const ROUNDS: usize = 4;
+const NODES_PER_CLOUD: usize = 8;
+
+/// Params big enough that update traffic dwarfs the one-off shard
+/// distribution, patterned like a real dense gradient (smooth ramps).
+fn init_params() -> ParamSet {
+    let a: Vec<f32> = (0..8192).map(|i| ((i % 97) as f32) * 0.01 - 0.5).collect();
+    let b: Vec<f32> = (0..4096).map(|i| ((i % 89) as f32) * -0.01 + 0.4).collect();
+    ParamSet { leaves: vec![a, b] }
+}
+
+fn cfg(name: &str, stage: LosslessStage) -> ExperimentConfig {
+    let mut c = preset("paper-hier").expect("builtin preset");
+    c.name = name.to_string();
+    c.lossless = stage;
+    c.rounds = ROUNDS;
+    c.eval_every = 2;
+    c.eval_batches = 1;
+    c.local_steps = 2;
+    c.local_lr = 3.0;
+    c.server_lr = 3.0;
+    c.target_loss = None;
+    c.corpus = CorpusConfig { n_docs: 240, doc_sentences: 2, n_topics: 6, seed: 5 };
+    c
+}
+
+fn run(c: ExperimentConfig) -> anyhow::Result<RunResult> {
+    let cluster = ClusterSpec::paper_default_scaled(NODES_PER_CLOUD);
+    let backend = MockRuntime::new(0.4);
+    let mut coord = Coordinator::new(c, cluster, &backend, init_params(), 4, 16)?;
+    coord.run()
+}
+
+fn egress_usd(r: &RunResult) -> f64 {
+    r.history.iter().map(|h| h.cost.egress_total_usd()).sum()
+}
+
+fn main() -> anyhow::Result<()> {
+    crossfed::util::logging::init();
+
+    let plain = run(cfg("paper-hier-plain", LosslessStage::None))?;
+    let staged = run(cfg("paper-hier-lossless", LosslessStage::Auto))?;
+
+    let plain_usd = egress_usd(&plain);
+    let staged_usd = egress_usd(&staged);
+    println!(
+        "{:>12} {:>14} {:>16} {:>14}",
+        "mode", "wire bytes", "egress $ total", "final loss"
+    );
+    println!(
+        "{:>12} {:>14} {:>16.4} {:>14.4}",
+        "plain", plain.wire_bytes, plain_usd, plain.final_eval_loss
+    );
+    println!(
+        "{:>12} {:>14} {:>16.4} {:>14.4}",
+        "lossless", staged.wire_bytes, staged_usd, staged.final_eval_loss
+    );
+
+    // --- the lossless story, asserted ----------------------------------
+    // 1. training cannot tell the stage is there: every loss bit matches
+    anyhow::ensure!(plain.history.len() == staged.history.len());
+    for (a, b) in plain.history.iter().zip(&staged.history) {
+        anyhow::ensure!(
+            a.train_loss.to_bits() == b.train_loss.to_bits()
+                && a.eval_loss.map(f32::to_bits) == b.eval_loss.map(f32::to_bits),
+            "round {}: lossless stage perturbed the loss ({} vs {})",
+            a.round,
+            a.train_loss,
+            b.train_loss
+        );
+    }
+    anyhow::ensure!(
+        plain.final_eval_loss.to_bits() == staged.final_eval_loss.to_bits(),
+        "final eval loss diverged under the lossless stage"
+    );
+    // 2. the stage pays for itself: ≥20% fewer egress dollars
+    anyhow::ensure!(
+        staged_usd <= plain_usd * 0.8,
+        "lossless stage saved under 20%: plain ${plain_usd:.4} vs \
+         staged ${staged_usd:.4}"
+    );
+    println!(
+        "\negress dollars: lossless stage at {:.1}% of the plain run, \
+         equal losses",
+        staged_usd / plain_usd.max(1e-12) * 100.0
+    );
+    // 3. staged dollars still decompose exactly
+    let mut manual = 0.0f64;
+    for c in 0..staged.cost.n_clouds() {
+        manual += staged.cost.compute_usd[c];
+        for e in &staged.cost.egress_usd[c] {
+            manual += e;
+        }
+    }
+    anyhow::ensure!(
+        manual.to_bits() == staged.cost.total_usd().to_bits(),
+        "staged cost breakdown does not decompose exactly"
+    );
+    println!("all lossless-egress assertions hold");
+    Ok(())
+}

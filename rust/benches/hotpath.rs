@@ -429,6 +429,53 @@ fn serve_throughput_entry() -> Json {
     ])
 }
 
+/// Lossless stage codecs on a 4 MB smooth-gradient payload
+/// (EXPERIMENTS.md §Compression): encode/decode GB/s and the achieved
+/// ratio per stage — the numbers the perf gate floors.
+fn lossless_entry() -> Json {
+    use crossfed::compress::{lossless, LosslessStage};
+    let xs: Vec<f32> =
+        (0..N).map(|i| ((i as f32) * 1e-4).sin() * 0.1).collect();
+    let bytes: Vec<u8> = xs.iter().flat_map(|x| x.to_le_bytes()).collect();
+    let total = bytes.len() as f64;
+    let mut b = BenchSet::new("lossless stage (4 MB smooth gradient)");
+    b.measure_iters = 10;
+    let mut ratios = Vec::new();
+    for stage in [
+        LosslessStage::XorFloat,
+        LosslessStage::DeltaVarint,
+        LosslessStage::Auto,
+    ] {
+        let name = stage.name();
+        let mut enc = Vec::new();
+        b.bench_throughput(&format!("{name} encode"), total, || {
+            enc.clear();
+            lossless::encode_append(stage, &bytes, &mut enc)
+        });
+        let mut dec = Vec::new();
+        b.bench_throughput(&format!("{name} decode"), total, || {
+            lossless::decode_into(&enc, &mut dec).unwrap()
+        });
+        assert_eq!(dec, bytes, "{name}: bench payload must roundtrip");
+        ratios.push(total / enc.len() as f64);
+    }
+    b.report();
+    let g3 = |r: &BenchResult| (gbps(r) * 1e3).round() / 1e3;
+    let r3 = |x: f64| (x * 1e3).round() / 1e3;
+    Json::obj(vec![
+        ("payload_bytes", Json::num(total)),
+        ("xor_encode_gbps", Json::num(g3(&b.results[0]))),
+        ("xor_decode_gbps", Json::num(g3(&b.results[1]))),
+        ("xor_ratio", Json::num(r3(ratios[0]))),
+        ("varint_encode_gbps", Json::num(g3(&b.results[2]))),
+        ("varint_decode_gbps", Json::num(g3(&b.results[3]))),
+        ("varint_ratio", Json::num(r3(ratios[1]))),
+        ("auto_encode_gbps", Json::num(g3(&b.results[4]))),
+        ("auto_decode_gbps", Json::num(g3(&b.results[5]))),
+        ("auto_ratio", Json::num(r3(ratios[2]))),
+    ])
+}
+
 /// WAL round-record durability: CRC + write + fsync of a snapshot-sized
 /// record — the per-round price of crash consistency (EXPERIMENTS.md
 /// §Durability).
@@ -517,6 +564,7 @@ fn main() {
         ("hier_vs_star", hier_vs_star_entry()),
         ("hier_async", hier_async_entry()),
         ("cost_star_vs_hier", cost_star_vs_hier_entry()),
+        ("lossless", lossless_entry()),
         ("wal_append", wal_append_entry()),
         ("sim_scale", sim_scale_entry()),
         ("serve_throughput", serve_throughput_entry()),

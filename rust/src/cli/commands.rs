@@ -24,6 +24,7 @@ crossfed — cross-cloud federated LLM training (Yang et al. 2024 reproduction)
 USAGE:
   crossfed train [--preset NAME | --config FILE] [--agg A] [--rounds N]
                  [--protocol P] [--compression C] [--partition S]
+                 [--lossless none|xor|varint|auto]
                  [--artifacts DIR] [--model-preset M] [--seed N]
                  [--save-checkpoint PATH] [--resume PATH]
                  [--wal DIR] [--target-cost USD]
@@ -154,6 +155,10 @@ fn build_config(args: &Args) -> Result<ExperimentConfig> {
     if let Some(c) = args.get("compression") {
         cfg.compression = crate::compress::Compression::parse(c)
             .with_context(|| format!("unknown compression {c:?}"))?;
+    }
+    if let Some(l) = args.get("lossless") {
+        cfg.lossless = crate::compress::LosslessStage::parse(l)
+            .with_context(|| format!("unknown lossless stage {l:?}"))?;
     }
     if let Some(s) = args.get("partition") {
         cfg.partition = crate::partition::PartitionStrategy::parse(s)
@@ -375,7 +380,7 @@ fn cmd_serve(args: &Args) -> Result<i32> {
     }
     if let Some(p) = args.get_usize("model-params")? {
         base.service.n_params = p as u64;
-        base.model_bytes = p as u64 * 4;
+        base.model_bytes = crate::transport::dense_param_bytes(p as u64);
     }
     if let Some(path) = args.get("price-book") {
         base.price_book =
@@ -772,7 +777,8 @@ mod tests {
         let args = Args::parse(
             &s(&["train", "--preset", "quick", "--agg", "gradient",
                  "--rounds", "7", "--protocol", "quic",
-                 "--compression", "topk:0.1", "--no-encrypt"]),
+                 "--compression", "topk:0.1", "--lossless", "auto",
+                 "--no-encrypt"]),
             &FLAGS,
         )
         .unwrap();
@@ -780,7 +786,15 @@ mod tests {
         assert_eq!(cfg.aggregation.name(), "gradient");
         assert_eq!(cfg.rounds, 7);
         assert_eq!(cfg.protocol.name(), "quic");
+        assert_eq!(cfg.lossless, crate::compress::LosslessStage::Auto);
         assert!(!cfg.encrypt);
+        // bad stage is a clean error
+        let args = Args::parse(
+            &s(&["train", "--preset", "quick", "--lossless", "gzip"]),
+            &FLAGS,
+        )
+        .unwrap();
+        assert!(build_config(&args).is_err());
     }
 
     #[test]

@@ -11,6 +11,7 @@
 
 use anyhow::{bail, Result};
 
+use crate::compress::lossless::{self, LosslessStage};
 use crate::util::bytes::{f32s_to_le_into, le_to_f32s_into};
 use crate::util::par;
 use crate::util::rng::Pcg64;
@@ -74,6 +75,9 @@ impl Compression {
 #[derive(Clone, Debug)]
 pub struct CompressedPayload {
     pub scheme: Compression,
+    /// lossless byte stage the data went through after `scheme`
+    /// (`None` = legacy unframed bytes)
+    pub stage: LosslessStage,
     pub n: usize,
     pub data: Vec<u8>,
 }
@@ -98,8 +102,14 @@ struct CodecScratch {
 #[derive(Clone, Debug)]
 pub struct Compressor {
     pub scheme: Compression,
+    /// lossless byte stage applied after `scheme` on encode, stripped
+    /// before it on decode (`None` = legacy unframed layout)
+    pub lossless: LosslessStage,
     rng: Pcg64,
     scratch: CodecScratch,
+    /// staged-encode scratch: the lossy codec writes here, the lossless
+    /// stage reads it back (round-persistent, no steady-state alloc)
+    stage_buf: Vec<u8>,
 }
 
 const INT8_CHUNK: usize = 4096;
@@ -108,16 +118,30 @@ impl Compressor {
     pub fn new(scheme: Compression, seed: u64) -> Compressor {
         Compressor {
             scheme,
+            lossless: LosslessStage::None,
             rng: Pcg64::new(seed, 0xC0DEC),
             scratch: CodecScratch::default(),
+            stage_buf: Vec::new(),
         }
+    }
+
+    /// Attach a lossless byte stage (builder form so `new` keeps its
+    /// signature; `None` is the default and changes nothing).
+    pub fn with_lossless(mut self, stage: LosslessStage) -> Compressor {
+        self.lossless = stage;
+        self
     }
 
     /// Compress a flat vector. Exactly reversible layout via `decompress`.
     pub fn compress(&mut self, xs: &[f32]) -> CompressedPayload {
         let mut data = Vec::with_capacity(self.encoded_size_hint(xs.len()));
         self.compress_append(xs, &mut data);
-        CompressedPayload { scheme: self.scheme, n: xs.len(), data }
+        CompressedPayload {
+            scheme: self.scheme,
+            stage: self.lossless,
+            n: xs.len(),
+            data,
+        }
     }
 
     fn encoded_size_hint(&self, n: usize) -> usize {
@@ -134,9 +158,26 @@ impl Compressor {
     /// Append the compressed image of `xs` to `out` — the zero-copy entry
     /// point the transport pipeline uses to build its frame in place.
     /// Writes directly into the output buffer (no intermediate index or
-    /// value vectors) and parallelizes per block. Returns the number of
+    /// value vectors) and parallelizes per block. With a lossless stage
+    /// attached, the lossy codec encodes into compressor-owned scratch
+    /// and the staged frame lands in `out`; without one the bytes are
+    /// identical to before the stage existed. Returns the number of
     /// bytes appended.
     pub fn compress_append(&mut self, xs: &[f32], out: &mut Vec<u8>) -> usize {
+        if self.lossless.is_none() {
+            return self.lossy_append(xs, out);
+        }
+        // take/put keeps the borrows of self disjoint
+        let mut inner = std::mem::take(&mut self.stage_buf);
+        inner.clear();
+        self.lossy_append(xs, &mut inner);
+        let n = lossless::encode_append(self.lossless, &inner, out);
+        self.stage_buf = inner;
+        n
+    }
+
+    /// The lossy codec pass (everything below the lossless stage).
+    fn lossy_append(&mut self, xs: &[f32], out: &mut Vec<u8>) -> usize {
         let start = out.len();
         match self.scheme {
             Compression::None => {
@@ -176,8 +217,33 @@ impl Compressor {
     /// Decompress back to a dense vector of length `payload.n`.
     pub fn decompress(payload: &CompressedPayload) -> Result<Vec<f32>> {
         let mut out = vec![0.0f32; payload.n];
-        Self::decompress_into(payload.scheme, &payload.data, &mut out)?;
+        let mut scratch = Vec::new();
+        Self::decompress_staged_into(
+            payload.scheme,
+            payload.stage,
+            &payload.data,
+            &mut scratch,
+            &mut out,
+        )?;
         Ok(out)
+    }
+
+    /// [`Compressor::decompress_into`] for frames that went through a
+    /// lossless stage: strips the stage into `scratch` first, then runs
+    /// the lossy decode. `LosslessStage::None` is a straight passthrough
+    /// (legacy unframed bytes, zero extra work).
+    pub fn decompress_staged_into(
+        scheme: Compression,
+        stage: LosslessStage,
+        data: &[u8],
+        scratch: &mut Vec<u8>,
+        out: &mut [f32],
+    ) -> Result<()> {
+        if stage.is_none() {
+            return Self::decompress_into(scheme, data, out);
+        }
+        lossless::decode_into(data, scratch)?;
+        Self::decompress_into(scheme, scratch, out)
     }
 
     /// Decompress raw payload bytes into a caller-sized buffer
@@ -683,6 +749,64 @@ mod tests {
     }
 
     #[test]
+    fn lossless_stage_composes_with_every_scheme() {
+        let xs = sample(6000, 31);
+        for scheme in [
+            Compression::None,
+            Compression::Fp16,
+            Compression::Int8,
+            Compression::TopK { ratio: 0.05 },
+            Compression::RandK { ratio: 0.05 },
+        ] {
+            for stage in LosslessStage::ALL {
+                // twin compressors, same seed: the staged frame must
+                // decode to exactly what the unstaged one decodes to
+                // (bit-exact — the stage is lossless by construction)
+                let mut plain = Compressor::new(scheme, 77);
+                let mut staged = Compressor::new(scheme, 77).with_lossless(stage);
+                let p = plain.compress(&xs);
+                let s = staged.compress(&xs);
+                assert_eq!(s.stage, stage);
+                let a = Compressor::decompress(&p).unwrap();
+                let b = Compressor::decompress(&s).unwrap();
+                let a_bits: Vec<u32> = a.iter().map(|x| x.to_bits()).collect();
+                let b_bits: Vec<u32> = b.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(a_bits, b_bits, "{scheme:?} + {stage:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn lossless_none_is_byte_identical_to_legacy() {
+        // `with_lossless(None)` must not perturb a single byte — the
+        // pinned payload sizes all over the test suite depend on it
+        let xs = sample(2048, 32);
+        for scheme in [Compression::None, Compression::Int8] {
+            let mut a = Compressor::new(scheme, 3);
+            let mut b =
+                Compressor::new(scheme, 3).with_lossless(LosslessStage::None);
+            assert_eq!(a.compress(&xs).data, b.compress(&xs).data);
+        }
+    }
+
+    #[test]
+    fn auto_stage_shrinks_constant_dense_frames() {
+        // the mock backend's constant-leaf params are the motivating
+        // case: dense f32 frames collapse under the XOR stage
+        let xs = vec![2.0f32; 8192];
+        let mut c =
+            Compressor::new(Compression::None, 0).with_lossless(LosslessStage::Auto);
+        let p = c.compress(&xs);
+        assert!(
+            (p.data.len() as f64) < 8192.0 * 4.0 * 0.1,
+            "constant frame did not compress: {} bytes",
+            p.data.len()
+        );
+        let back = Compressor::decompress(&p).unwrap();
+        assert_eq!(back, xs);
+    }
+
+    #[test]
     fn sample_indices_into_matches_pcg64_sample_indices() {
         // the scratch-based sampler must keep the exact draw sequence of
         // Pcg64::sample_indices (RandK streams are pinned by experiments);
@@ -724,6 +848,7 @@ mod tests {
         };
         let p = CompressedPayload {
             scheme: Compression::TopK { ratio: 0.1 },
+            stage: LosslessStage::None,
             n: 10,
             data,
         };

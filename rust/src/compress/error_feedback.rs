@@ -22,6 +22,8 @@ pub struct ErrorFeedback {
     enabled: bool,
     corrected: Vec<f32>,
     sent: Vec<f32>,
+    /// lossless-stage strip buffer for the what-the-server-sees decode
+    stage_scratch: Vec<u8>,
 }
 
 impl ErrorFeedback {
@@ -31,6 +33,7 @@ impl ErrorFeedback {
             enabled,
             corrected: Vec::new(),
             sent: Vec::new(),
+            stage_scratch: Vec::new(),
         }
     }
 
@@ -46,6 +49,7 @@ impl ErrorFeedback {
         self.compress_append(update, compressor, &mut data)?;
         Ok(CompressedPayload {
             scheme: compressor.scheme,
+            stage: compressor.lossless,
             n: update.len(),
             data,
         })
@@ -82,8 +86,15 @@ impl ErrorFeedback {
         let nbytes = compressor.compress_append(&self.corrected, out);
 
         // what the server will see, decoded from the appended bytes
+        // (through the lossless stage, exactly as the receiver will)
         self.sent.resize(update.len(), 0.0);
-        Compressor::decompress_into(compressor.scheme, &out[start..], &mut self.sent)?;
+        Compressor::decompress_staged_into(
+            compressor.scheme,
+            compressor.lossless,
+            &out[start..],
+            &mut self.stage_scratch,
+            &mut self.sent,
+        )?;
 
         // e' = corrected - sent (block-parallel)
         let items: Vec<((&mut [f32], &[f32]), &[f32])> = self
@@ -184,6 +195,38 @@ mod tests {
             got += Compressor::decompress(&p).unwrap()[1];
         }
         assert_eq!(got, 0.0);
+    }
+
+    #[test]
+    fn lossless_stage_leaves_residual_exact() {
+        // a lossless stage over a lossy codec must not perturb the
+        // residual maths: what the server sees is bit-identical to the
+        // unstaged decode, so the memory stays byte-for-byte the same
+        use crate::compress::lossless::LosslessStage;
+        let mut rng = Pcg64::new(2, 0);
+        let update: Vec<f32> = (0..512).map(|_| rng.normal() as f32).collect();
+        let mut ef_a = ErrorFeedback::new(512, true);
+        let mut ef_b = ErrorFeedback::new(512, true);
+        let mut ca = Compressor::new(Compression::TopK { ratio: 0.1 }, 4);
+        let mut cb = Compressor::new(Compression::TopK { ratio: 0.1 }, 4)
+            .with_lossless(LosslessStage::Auto);
+        let pa = ef_a.compress(&update, &mut ca).unwrap();
+        let pb = ef_b.compress(&update, &mut cb).unwrap();
+        let sa = Compressor::decompress(&pa).unwrap();
+        let sb = Compressor::decompress(&pb).unwrap();
+        assert_eq!(
+            sa.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            sb.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(ef_a.residual, ef_b.residual);
+
+        // and an exact codec + exact stage leaves no residual at all
+        let mut ef = ErrorFeedback::new(512, true);
+        let mut c = Compressor::new(Compression::None, 0)
+            .with_lossless(LosslessStage::XorFloat);
+        let p = ef.compress(&update, &mut c).unwrap();
+        assert_eq!(Compressor::decompress(&p).unwrap(), update);
+        assert_eq!(ef.residual_norm(), 0.0);
     }
 
     #[test]

@@ -1,0 +1,710 @@
+//! Lossless byte-stage wire compression (ROADMAP item 3).
+//!
+//! A second, *exact* stage applied to every transport frame after the
+//! lossy codec (fp16/int8/sparse) has run: cross-cloud WANs bill per
+//! byte, so entropy left in the quantized payload is pure egress
+//! dollars at zero accuracy cost. Two codecs:
+//!
+//! * [`xor_float`] — Chimp/Gorilla-family XOR float coding over
+//!   `f32::to_bits`: consecutive words are XORed and the surviving
+//!   significant bits are bit-packed behind leading/trailing-zero
+//!   window headers. Wins on smooth float streams (dense updates,
+//!   model broadcasts).
+//! * [`delta_varint`] — delta + zigzag + LEB128 varint over the words
+//!   as little-endian `u32`s. Wins on integer-ish streams (sparse
+//!   index blocks, the WAL's XOR-of-bit-pattern parameter deltas).
+//!
+//! Both read the payload as a stream of 32-bit words *in place* through
+//! the unaligned [`WordFrame`] wrapper (the arroy `UnalignedVector`
+//! idiom — no aligned-`Vec` copy on decode or trial-encode), and both
+//! cut the stream into fixed [`par::BLOCK`]-word blocks whose
+//! delta/XOR chains restart per block: output bytes are bit-identical
+//! at any thread count and blocks decode in parallel.
+//!
+//! Frame layout (self-framing; follows the transport frame header):
+//!
+//! ```text
+//! [tag u8][raw_len u64]                            tag 0 = raw bytes
+//! [n_blocks u32][block_len u32 × n][tail_len u32]  tags 1 (xor) / 2 (varint)
+//! [encoded blocks ...][raw tail bytes]
+//! ```
+//!
+//! `raw_len % 4` trailing bytes never form a word and are stored
+//! verbatim. [`LosslessStage::Auto`] trial-encodes both codecs and
+//! keeps the smallest of {xor, varint, raw} (ties resolve in that
+//! order), so a staged frame is never more than the 9-byte raw frame
+//! header over the unstaged payload.
+
+use anyhow::{ensure, Context, Result};
+
+use crate::util::par;
+
+pub mod delta_varint;
+pub mod xor_float;
+
+/// Which lossless stage a [`crate::compress::Compressor`] applies after
+/// its lossy codec. `None` keeps the legacy unframed byte layout —
+/// frames are byte-identical to before this stage existed.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum LosslessStage {
+    #[default]
+    None,
+    /// XOR float coding (Gorilla/Chimp family), [`xor_float`]
+    XorFloat,
+    /// delta + zigzag + LEB128 varint, [`delta_varint`]
+    DeltaVarint,
+    /// trial-encode both and keep the smallest (raw fallback)
+    Auto,
+}
+
+impl LosslessStage {
+    pub fn name(&self) -> &'static str {
+        match self {
+            LosslessStage::None => "none",
+            LosslessStage::XorFloat => "xor",
+            LosslessStage::DeltaVarint => "varint",
+            LosslessStage::Auto => "auto",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<LosslessStage> {
+        match s.to_ascii_lowercase().as_str() {
+            "none" => Some(LosslessStage::None),
+            "xor" | "xor-float" | "chimp" => Some(LosslessStage::XorFloat),
+            "varint" | "delta-varint" => Some(LosslessStage::DeltaVarint),
+            "auto" => Some(LosslessStage::Auto),
+            _ => None,
+        }
+    }
+
+    pub fn is_none(&self) -> bool {
+        matches!(self, LosslessStage::None)
+    }
+
+    /// All stages (CLI help / test enumeration).
+    pub const ALL: [LosslessStage; 4] = [
+        LosslessStage::None,
+        LosslessStage::XorFloat,
+        LosslessStage::DeltaVarint,
+        LosslessStage::Auto,
+    ];
+}
+
+/// Frame tags (the first payload byte of a staged frame).
+const TAG_RAW: u8 = 0;
+const TAG_XOR: u8 = 1;
+const TAG_VARINT: u8 = 2;
+
+/// Fixed per-frame overhead of the raw fallback: tag + raw_len.
+pub const RAW_FRAME_OVERHEAD: usize = 9;
+
+/// A 32-bit-word source the block codecs read from — implemented by the
+/// zero-copy [`WordFrame`] byte view (transport frames) and by plain
+/// `[u32]` (WAL bit chains), so both paths share one encoder.
+pub trait Words: Sync {
+    fn len_words(&self) -> usize;
+    fn word(&self, i: usize) -> u32;
+    /// Copy the whole-word region verbatim (raw-frame fast path).
+    fn copy_words_into(&self, out: &mut Vec<u8>) {
+        for i in 0..self.len_words() {
+            out.extend_from_slice(&self.word(i).to_le_bytes());
+        }
+    }
+}
+
+/// Unaligned in-place word view of a byte payload (the arroy
+/// `UnalignedVector` idiom): `#[repr(transparent)]` over `[u8]`, so a
+/// `&[u8]` casts to a `&WordFrame` with no copy and no alignment
+/// requirement — the codecs read frames where they sit in the transport
+/// buffer.
+#[repr(transparent)]
+pub struct WordFrame {
+    bytes: [u8],
+}
+
+impl WordFrame {
+    pub fn new(bytes: &[u8]) -> &WordFrame {
+        // SAFETY: `WordFrame` is `#[repr(transparent)]` over `[u8]` —
+        // identical layout, alignment 1, every bit pattern valid — so
+        // the cast only changes the slice's nominal type; the returned
+        // reference inherits the input lifetime.
+        unsafe { &*(bytes as *const [u8] as *const WordFrame) }
+    }
+
+    /// Bytes past the last whole word (`len % 4`), stored verbatim.
+    pub fn tail(&self) -> &[u8] {
+        &self.bytes[self.len_words() * 4..]
+    }
+}
+
+impl Words for WordFrame {
+    fn len_words(&self) -> usize {
+        self.bytes.len() / 4
+    }
+
+    #[inline]
+    fn word(&self, i: usize) -> u32 {
+        let b = &self.bytes[i * 4..i * 4 + 4];
+        u32::from_le_bytes([b[0], b[1], b[2], b[3]])
+    }
+
+    fn copy_words_into(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.bytes[..self.len_words() * 4]);
+    }
+}
+
+impl Words for [u32] {
+    fn len_words(&self) -> usize {
+        self.len()
+    }
+
+    #[inline]
+    fn word(&self, i: usize) -> u32 {
+        self[i]
+    }
+}
+
+// ---- bit I/O (shared by the codecs) ---------------------------------------
+
+/// MSB-first bit writer over a byte vector (u64 accumulator).
+pub(crate) struct BitWriter<'a> {
+    out: &'a mut Vec<u8>,
+    acc: u64,
+    nbits: u32,
+}
+
+impl<'a> BitWriter<'a> {
+    pub(crate) fn new(out: &'a mut Vec<u8>) -> BitWriter<'a> {
+        BitWriter { out, acc: 0, nbits: 0 }
+    }
+
+    /// Append the low `n` bits of `bits` (MSB first), `1 <= n <= 32`.
+    #[inline]
+    pub(crate) fn put(&mut self, bits: u32, n: u32) {
+        debug_assert!((1..=32).contains(&n));
+        debug_assert!(n == 32 || bits >> n == 0);
+        self.acc = (self.acc << n) | u64::from(bits);
+        self.nbits += n;
+        while self.nbits >= 8 {
+            self.nbits -= 8;
+            self.out.push((self.acc >> self.nbits) as u8);
+        }
+    }
+
+    /// Flush the partial last byte, zero-padded on the right.
+    pub(crate) fn finish(self) {
+        if self.nbits > 0 {
+            self.out.push(((self.acc << (8 - self.nbits)) & 0xff) as u8);
+        }
+    }
+}
+
+/// MSB-first bit reader matching [`BitWriter`].
+pub(crate) struct BitReader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+    acc: u64,
+    nbits: u32,
+}
+
+impl<'a> BitReader<'a> {
+    pub(crate) fn new(bytes: &'a [u8]) -> BitReader<'a> {
+        BitReader { bytes, pos: 0, acc: 0, nbits: 0 }
+    }
+
+    #[inline]
+    pub(crate) fn get(&mut self, n: u32) -> Result<u32> {
+        debug_assert!((1..=32).contains(&n));
+        while self.nbits < n {
+            let b = *self
+                .bytes
+                .get(self.pos)
+                .context("lossless frame: bitstream truncated")?;
+            self.pos += 1;
+            self.acc = (self.acc << 8) | u64::from(b);
+            self.nbits += 8;
+        }
+        self.nbits -= n;
+        Ok(((self.acc >> self.nbits) & ((1u64 << n) - 1)) as u32)
+    }
+
+    /// Every input byte consumed, with only zero padding left over?
+    pub(crate) fn fully_consumed(&self) -> bool {
+        self.pos == self.bytes.len()
+            && self.acc & ((1u64 << self.nbits) - 1) == 0
+    }
+}
+
+// ---- frame encode ---------------------------------------------------------
+
+/// Append the staged encoding of `data` to `out`; returns bytes
+/// appended. A `None`/unknown stage writes the raw frame (tag 0) — the
+/// [`crate::compress::Compressor`] short-circuits `None` to the legacy
+/// unframed layout before ever calling this.
+pub fn encode_append(
+    stage: LosslessStage,
+    data: &[u8],
+    out: &mut Vec<u8>,
+) -> usize {
+    let frame = WordFrame::new(data);
+    encode_src_append(stage, frame, frame.tail(), out)
+}
+
+/// Stage a plain word slice (the WAL parameter-chain path; no tail).
+pub fn encode_words_append(
+    stage: LosslessStage,
+    words: &[u32],
+    out: &mut Vec<u8>,
+) -> usize {
+    encode_src_append(stage, words, &[], out)
+}
+
+fn encode_src_append<W: Words + ?Sized>(
+    stage: LosslessStage,
+    src: &W,
+    tail: &[u8],
+    out: &mut Vec<u8>,
+) -> usize {
+    let start = out.len();
+    match stage {
+        LosslessStage::None => encode_raw(src, tail, out),
+        LosslessStage::XorFloat => encode_blocks(TAG_XOR, src, tail, out),
+        LosslessStage::DeltaVarint => {
+            encode_blocks(TAG_VARINT, src, tail, out)
+        }
+        LosslessStage::Auto => {
+            // trial-encode both, keep the smallest framed image; ties
+            // and the raw fallback resolve xor < varint < raw, so the
+            // choice is a pure function of the payload bytes
+            let raw_framed =
+                RAW_FRAME_OVERHEAD + src.len_words() * 4 + tail.len();
+            let mut xor = Vec::new();
+            encode_blocks(TAG_XOR, src, tail, &mut xor);
+            let mut var = Vec::new();
+            encode_blocks(TAG_VARINT, src, tail, &mut var);
+            if xor.len() <= var.len() && xor.len() <= raw_framed {
+                out.extend_from_slice(&xor);
+            } else if var.len() <= raw_framed {
+                out.extend_from_slice(&var);
+            } else {
+                encode_raw(src, tail, out);
+            }
+        }
+    }
+    out.len() - start
+}
+
+fn encode_raw<W: Words + ?Sized>(src: &W, tail: &[u8], out: &mut Vec<u8>) {
+    out.push(TAG_RAW);
+    put_u64(out, (src.len_words() * 4 + tail.len()) as u64);
+    src.copy_words_into(out);
+    out.extend_from_slice(tail);
+}
+
+fn encode_blocks<W: Words + ?Sized>(
+    tag: u8,
+    src: &W,
+    tail: &[u8],
+    out: &mut Vec<u8>,
+) {
+    let n_words = src.len_words();
+    let n_blocks = n_words.div_ceil(par::BLOCK);
+    let mut blocks: Vec<Vec<u8>> = vec![Vec::new(); n_blocks];
+    let items: Vec<(usize, &mut Vec<u8>)> =
+        blocks.iter_mut().enumerate().collect();
+    par::run_items_auto(n_words, items, |(b, buf)| {
+        let lo = b * par::BLOCK;
+        let hi = (lo + par::BLOCK).min(n_words);
+        match tag {
+            TAG_XOR => xor_float::encode_block(src, lo, hi, buf),
+            _ => delta_varint::encode_block(src, lo, hi, buf),
+        }
+    });
+    out.push(tag);
+    put_u64(out, (n_words * 4 + tail.len()) as u64);
+    put_u32(out, n_blocks as u32);
+    for b in &blocks {
+        put_u32(out, b.len() as u32);
+    }
+    put_u32(out, tail.len() as u32);
+    for b in &blocks {
+        out.extend_from_slice(b);
+    }
+    out.extend_from_slice(tail);
+}
+
+// ---- frame decode ---------------------------------------------------------
+
+/// Decode a staged frame into `out` (cleared and resized to `raw_len`).
+/// The encoded blocks are read in place (no intermediate copy); their
+/// outputs land at fixed offsets, so the parallel per-block decode is
+/// thread-count invariant.
+pub fn decode_into(data: &[u8], out: &mut Vec<u8>) -> Result<()> {
+    let mut off = 0usize;
+    let tag = *data.first().context("lossless frame: empty")?;
+    off += 1;
+    let raw_len = read_u64(data, &mut off)? as usize;
+    if tag == TAG_RAW {
+        ensure!(
+            data.len() - off == raw_len,
+            "lossless frame: raw body {} bytes != declared {raw_len}",
+            data.len() - off
+        );
+        out.clear();
+        out.extend_from_slice(&data[off..]);
+        return Ok(());
+    }
+    ensure!(
+        tag == TAG_XOR || tag == TAG_VARINT,
+        "lossless frame: unknown tag {tag}"
+    );
+    let n_words = raw_len / 4;
+    let want_blocks = n_words.div_ceil(par::BLOCK);
+    let n_blocks = read_u32(data, &mut off)? as usize;
+    ensure!(
+        n_blocks == want_blocks,
+        "lossless frame: {n_blocks} blocks for {n_words} words \
+         (want {want_blocks})"
+    );
+    let mut lens = Vec::with_capacity(n_blocks);
+    for _ in 0..n_blocks {
+        lens.push(read_u32(data, &mut off)? as usize);
+    }
+    let tail_len = read_u32(data, &mut off)? as usize;
+    ensure!(
+        tail_len == raw_len % 4,
+        "lossless frame: tail {tail_len} bytes != {}",
+        raw_len % 4
+    );
+    let enc_total: usize = lens.iter().sum();
+    ensure!(
+        data.len() - off == enc_total + tail_len,
+        "lossless frame: body {} bytes != blocks {enc_total} + tail \
+         {tail_len}",
+        data.len() - off
+    );
+
+    out.clear();
+    out.resize(raw_len, 0);
+    let (word_out, tail_out) = out.split_at_mut(n_words * 4);
+    let mut results: Vec<Result<()>> = Vec::with_capacity(n_blocks);
+    results.resize_with(n_blocks, || Ok(()));
+    let mut enc_at = off;
+    let mut items: Vec<((&[u8], &mut [u8]), &mut Result<()>)> =
+        Vec::with_capacity(n_blocks);
+    let mut dst_iter = word_out.chunks_mut(par::BLOCK * 4);
+    for (b, res) in results.iter_mut().enumerate() {
+        let enc = &data[enc_at..enc_at + lens[b]];
+        enc_at += lens[b];
+        let dst = dst_iter.next().expect("block count checked above");
+        items.push(((enc, dst), res));
+    }
+    par::run_items_auto(n_words, items, |((enc, dst), res)| {
+        *res = match tag {
+            TAG_XOR => xor_float::decode_block(enc, dst),
+            _ => delta_varint::decode_block(enc, dst),
+        };
+    });
+    for r in results {
+        r?;
+    }
+    tail_out.copy_from_slice(&data[enc_at..]);
+    Ok(())
+}
+
+/// Decode a staged frame back to words (the WAL parameter-chain path).
+pub fn decode_words(data: &[u8], out: &mut Vec<u32>) -> Result<()> {
+    let mut bytes = Vec::new();
+    decode_into(data, &mut bytes)?;
+    ensure!(
+        bytes.len() % 4 == 0,
+        "lossless frame: {} bytes is not a whole word count",
+        bytes.len()
+    );
+    out.clear();
+    out.extend(
+        bytes
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]])),
+    );
+    Ok(())
+}
+
+// ---- LE field helpers -----------------------------------------------------
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn read_u32(data: &[u8], off: &mut usize) -> Result<u32> {
+    let b = data
+        .get(*off..*off + 4)
+        .context("lossless frame: header truncated")?;
+    *off += 4;
+    Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+}
+
+fn read_u64(data: &[u8], off: &mut usize) -> Result<u64> {
+    let b = data
+        .get(*off..*off + 8)
+        .context("lossless frame: header truncated")?;
+    *off += 8;
+    Ok(u64::from_le_bytes([
+        b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+    ]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn roundtrip(stage: LosslessStage, data: &[u8]) -> usize {
+        let mut enc = vec![0x5Au8; 3]; // dirty prefix: append-only check
+        let n = encode_append(stage, data, &mut enc);
+        assert_eq!(enc.len(), 3 + n);
+        assert_eq!(&enc[..3], &[0x5A; 3]);
+        let mut dec = vec![1u8; 7]; // dirty output: cleared by decode
+        decode_into(&enc[3..], &mut dec).unwrap();
+        assert_eq!(dec, data, "stage {stage:?} ({} bytes)", data.len());
+        n
+    }
+
+    fn walk_bytes(n_words: usize, seed: u64) -> Vec<u8> {
+        let mut rng = Pcg64::new(seed, 77);
+        let mut out = Vec::with_capacity(n_words * 4);
+        let mut x = 1.0f32;
+        for _ in 0..n_words {
+            x += rng.normal_ms(0.0, 0.01) as f32;
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+        out
+    }
+
+    #[test]
+    fn word_frame_reads_unaligned_in_place() {
+        // views at every offset of a misaligned buffer decode the same
+        // words — the wrapper must not require 4-byte alignment
+        let bytes: Vec<u8> = (0u8..41).collect();
+        for shift in 0..4 {
+            let f = WordFrame::new(&bytes[shift..]);
+            assert_eq!(f.len_words(), (41 - shift) / 4);
+            for i in 0..f.len_words() {
+                let at = shift + i * 4;
+                let want = u32::from_le_bytes([
+                    bytes[at],
+                    bytes[at + 1],
+                    bytes[at + 2],
+                    bytes[at + 3],
+                ]);
+                assert_eq!(f.word(i), want);
+            }
+            assert_eq!(f.tail().len(), (41 - shift) % 4);
+        }
+    }
+
+    #[test]
+    fn bit_io_roundtrips_mixed_widths() {
+        let mut rng = Pcg64::new(9, 9);
+        let fields: Vec<(u32, u32)> = (0..500)
+            .map(|_| {
+                let n = 1 + (rng.next_u64() % 32) as u32;
+                let v = (rng.next_u64() as u32)
+                    & if n == 32 { u32::MAX } else { (1 << n) - 1 };
+                (v, n)
+            })
+            .collect();
+        let mut buf = Vec::new();
+        let mut bw = BitWriter::new(&mut buf);
+        for &(v, n) in &fields {
+            bw.put(v, n);
+        }
+        bw.finish();
+        let mut br = BitReader::new(&buf);
+        for &(v, n) in &fields {
+            assert_eq!(br.get(n).unwrap(), v);
+        }
+        assert!(br.fully_consumed());
+        assert!(br.get(8).is_err(), "read past the end must fail");
+    }
+
+    #[test]
+    fn all_stages_roundtrip_all_lengths() {
+        // cover: empty, tail-only, single word, word+tail, block
+        // boundary -1/0/+1, multi-block
+        let b = par::BLOCK * 4;
+        for len in
+            [0, 1, 3, 4, 5, 17, 4096, b - 4, b, b + 4, 3 * b + 7]
+        {
+            let full = walk_bytes(len / 4 + 1, 5);
+            for stage in LosslessStage::ALL {
+                roundtrip(stage, &full[..len]);
+            }
+        }
+    }
+
+    #[test]
+    fn adversarial_float_patterns_roundtrip_exactly() {
+        let specials = [
+            f32::NAN,
+            f32::from_bits(0x7FC0_0001), // quiet NaN payload
+            f32::from_bits(0xFF80_0001), // signaling-ish NaN
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::from_bits(1),           // smallest denormal
+            f32::from_bits(0x8000_0001), // negative denormal
+            f32::MIN_POSITIVE,
+            0.0,
+            -0.0,
+            f32::MAX,
+            f32::MIN,
+        ];
+        let mut cases: Vec<Vec<f32>> = vec![
+            specials.to_vec(),
+            vec![2.0; 300],                                    // constant
+            (0..300).map(|i| if i % 2 == 0 { 1.5 } else { -1.5 }).collect(),
+            (0..300).map(|i| i as f32 * 0.1).collect(),        // ramp
+        ];
+        // random walk sprinkled with specials
+        let mut rng = Pcg64::new(3, 3);
+        let mut walk: Vec<f32> = Vec::new();
+        let mut x = 0.5f32;
+        for i in 0..2000 {
+            x += rng.normal_ms(0.0, 0.05) as f32;
+            walk.push(if i % 97 == 0 {
+                specials[(i / 97) % specials.len()]
+            } else {
+                x
+            });
+        }
+        cases.push(walk);
+        for xs in &cases {
+            let bytes: Vec<u8> =
+                xs.iter().flat_map(|x| x.to_le_bytes()).collect();
+            for stage in LosslessStage::ALL {
+                let mut enc = Vec::new();
+                encode_append(stage, &bytes, &mut enc);
+                let mut dec = Vec::new();
+                decode_into(&enc, &mut dec).unwrap();
+                // to_bits-exact: compare the raw bytes, NaNs included
+                assert_eq!(dec, bytes, "stage {stage:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn auto_never_beats_neither_and_never_expands_past_raw() {
+        let mut rng = Pcg64::new(8, 8);
+        let noise: Vec<u8> =
+            (0..4096).map(|_| rng.next_u64() as u8).collect();
+        let smooth = walk_bytes(1024, 2);
+        for data in [&noise, &smooth, &Vec::new()] {
+            let mut xor = Vec::new();
+            encode_append(LosslessStage::XorFloat, data, &mut xor);
+            let mut var = Vec::new();
+            encode_append(LosslessStage::DeltaVarint, data, &mut var);
+            let mut auto = Vec::new();
+            encode_append(LosslessStage::Auto, data, &mut auto);
+            let best = xor
+                .len()
+                .min(var.len())
+                .min(RAW_FRAME_OVERHEAD + data.len());
+            assert_eq!(auto.len(), best);
+            assert!(auto.len() <= RAW_FRAME_OVERHEAD + data.len());
+        }
+    }
+
+    #[test]
+    fn auto_picks_raw_on_incompressible_noise() {
+        let mut rng = Pcg64::new(4, 4);
+        let noise: Vec<u8> =
+            (0..8192).map(|_| rng.next_u64() as u8).collect();
+        let mut enc = Vec::new();
+        encode_append(LosslessStage::Auto, &noise, &mut enc);
+        assert_eq!(enc[0], TAG_RAW);
+        assert_eq!(enc.len(), RAW_FRAME_OVERHEAD + noise.len());
+    }
+
+    #[test]
+    fn constant_floats_compress_massively() {
+        let data: Vec<u8> =
+            std::iter::repeat(2.0f32.to_le_bytes()).take(4096).flatten().collect();
+        let mut enc = Vec::new();
+        encode_append(LosslessStage::XorFloat, &data, &mut enc);
+        // first word 32 bits + 1 bit per repeat ≈ 4+512 bytes + header
+        assert!(
+            enc.len() < data.len() / 20,
+            "{} vs {}",
+            enc.len(),
+            data.len()
+        );
+        let mut dec = Vec::new();
+        decode_into(&enc, &mut dec).unwrap();
+        assert_eq!(dec, data);
+    }
+
+    #[test]
+    fn word_path_matches_byte_path() {
+        // the WAL's &[u32] source must produce the identical frame to
+        // the byte view of the same words
+        let words: Vec<u32> = (0..5000u32).map(|i| i.wrapping_mul(40_503)).collect();
+        let bytes: Vec<u8> =
+            words.iter().flat_map(|w| w.to_le_bytes()).collect();
+        for stage in LosslessStage::ALL {
+            let mut from_words = Vec::new();
+            encode_words_append(stage, &words, &mut from_words);
+            let mut from_bytes = Vec::new();
+            encode_append(stage, &bytes, &mut from_bytes);
+            assert_eq!(from_words, from_bytes, "stage {stage:?}");
+            let mut back = Vec::new();
+            decode_words(&from_words, &mut back).unwrap();
+            assert_eq!(back, words, "stage {stage:?}");
+        }
+    }
+
+    #[test]
+    fn corrupt_frames_rejected_not_panicking() {
+        let data = walk_bytes(600, 6);
+        for stage in [LosslessStage::XorFloat, LosslessStage::DeltaVarint] {
+            let mut enc = Vec::new();
+            encode_append(stage, &data, &mut enc);
+            let mut out = Vec::new();
+            // truncations at every layer of the frame
+            for cut in [0, 1, 5, 9, 13, enc.len() - 1] {
+                assert!(
+                    decode_into(&enc[..cut], &mut out).is_err(),
+                    "stage {stage:?} cut {cut}"
+                );
+            }
+            // unknown tag
+            let mut bad = enc.clone();
+            bad[0] = 9;
+            assert!(decode_into(&bad, &mut out).is_err());
+            // declared length lies
+            let mut bad = enc.clone();
+            bad[1] ^= 0xFF;
+            assert!(decode_into(&bad, &mut out).is_err());
+        }
+        assert!(decode_into(&[], &mut Vec::new()).is_err());
+    }
+
+    #[test]
+    fn stage_parse_roundtrips_names() {
+        for stage in LosslessStage::ALL {
+            assert_eq!(LosslessStage::parse(stage.name()), Some(stage));
+        }
+        assert_eq!(LosslessStage::parse("chimp"), Some(LosslessStage::XorFloat));
+        assert_eq!(
+            LosslessStage::parse("delta-varint"),
+            Some(LosslessStage::DeltaVarint)
+        );
+        assert_eq!(LosslessStage::parse("lz4"), None);
+        assert!(LosslessStage::None.is_none());
+        assert!(!LosslessStage::Auto.is_none());
+        assert_eq!(LosslessStage::default(), LosslessStage::None);
+    }
+}

@@ -7,9 +7,18 @@
 //! dense vectors the aggregator consumes. Error feedback (Seide et al.)
 //! keeps compression from stalling convergence: the residual of each
 //! lossy step is added back before the next one.
+//!
+//! On top of the lossy codecs sits an optional *lossless* byte stage
+//! ([`lossless`]): Chimp/Gorilla-style XOR float coding or
+//! delta+zigzag+varint over the encoded payload, exact to the bit and
+//! applied inside [`Compressor::compress_append`] so every transport
+//! frame — uplink, gateway leg, broadcast, serve checkpoint refresh —
+//! composes with it transparently.
 
 mod codec;
 mod error_feedback;
+pub mod lossless;
 
 pub use codec::{CompressedPayload, Compression, Compressor};
 pub use error_feedback::ErrorFeedback;
+pub use lossless::LosslessStage;

@@ -7,7 +7,7 @@ pub use presets::{preset, preset_names};
 use anyhow::{bail, Context, Result};
 
 use crate::aggregation::AggregationKind;
-use crate::compress::Compression;
+use crate::compress::{Compression, LosslessStage};
 use crate::cost::{Placement, PriceBook};
 use crate::data::CorpusConfig;
 use crate::netsim::{FaultPlan, Protocol};
@@ -46,6 +46,10 @@ pub struct ExperimentConfig {
     pub protocol: Protocol,
     pub streams: usize,
     pub compression: Compression,
+    /// lossless byte stage applied after the lossy codec on every
+    /// transport frame (exact; does not change what the receiver
+    /// decodes, only the bytes priced on the wire)
+    pub lossless: LosslessStage,
     pub error_feedback: bool,
     pub encrypt: bool,
     pub secure_agg: bool,
@@ -129,6 +133,7 @@ impl Default for ExperimentConfig {
             protocol: Protocol::Grpc,
             streams: 16,
             compression: Compression::None,
+            lossless: LosslessStage::None,
             error_feedback: false,
             encrypt: true,
             secure_agg: false,
@@ -306,6 +311,10 @@ impl ExperimentConfig {
             c.compression = Compression::parse(s)
                 .with_context(|| format!("unknown compression {s:?}"))?;
         }
+        if let Some(s) = v.get("lossless").and_then(Json::as_str) {
+            c.lossless = LosslessStage::parse(s)
+                .with_context(|| format!("unknown lossless stage {s:?}"))?;
+        }
         c.error_feedback = v.opt_bool("error_feedback", c.error_feedback);
         c.encrypt = v.opt_bool("encrypt", c.encrypt);
         c.secure_agg = v.opt_bool("secure_agg", c.secure_agg);
@@ -412,6 +421,7 @@ impl ExperimentConfig {
             ("protocol", Json::str(self.protocol.name())),
             ("streams", Json::num(self.streams as f64)),
             ("compression", Json::str(compression)),
+            ("lossless", Json::str(self.lossless.name())),
             ("error_feedback", Json::Bool(self.error_feedback)),
             ("encrypt", Json::Bool(self.encrypt)),
             ("secure_agg", Json::Bool(self.secure_agg)),
@@ -456,7 +466,8 @@ mod tests {
         let text = r#"{
             "name": "t2", "rounds": 50, "aggregation": "gradient",
             "partition": "dirichlet:0.3", "protocol": "quic",
-            "compression": "topk:0.05", "error_feedback": true,
+            "compression": "topk:0.05", "lossless": "auto",
+            "error_feedback": true,
             "local_steps": 8, "target_loss": 2.5,
             "dp": {"clip_norm": 1.0, "noise_multiplier": 0.5}
         }"#;
@@ -466,6 +477,7 @@ mod tests {
         assert_eq!(c.aggregation, AggregationKind::GradientAgg);
         assert_eq!(c.protocol, Protocol::Quic);
         assert!(matches!(c.compression, Compression::TopK { ratio } if (ratio - 0.05).abs() < 1e-9));
+        assert_eq!(c.lossless, LosslessStage::Auto);
         assert!(c.error_feedback);
         assert_eq!(c.target_loss, Some(2.5));
         assert!(c.dp.enabled());

@@ -115,6 +115,11 @@ pub struct Coordinator<'a, B: ComputeBackend + ?Sized> {
     /// bit patterns of the global params as last written to the WAL —
     /// the base of the next record's XOR delta
     pub(crate) wal_prev_params: Option<Vec<Vec<u32>>>,
+    /// WAL parameter-chain bytes: raw (words × 4) vs. as stored after
+    /// the delta-varint lossless stage — the compression-ratio report
+    /// in `examples/crash_resume.rs`
+    pub(crate) wal_param_raw: u64,
+    pub(crate) wal_param_enc: u64,
     /// async-scheduler state decoded from the WAL, consumed by
     /// `run_async` on its first iteration after a resume
     pub(crate) async_resume: Option<crate::coordinator::wal_state::AsyncWalSnapshot>,
@@ -360,7 +365,8 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
                 hub,
                 cfg.protocol,
                 cfg.streams,
-                Compressor::new(cfg.compression, cfg.seed ^ i as u64),
+                Compressor::new(cfg.compression, cfg.seed ^ i as u64)
+                    .with_lossless(cfg.lossless),
                 cfg.error_feedback,
                 n_params,
                 secret,
@@ -370,7 +376,8 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
                 i,
                 cfg.protocol,
                 cfg.streams,
-                Compressor::new(crate::compress::Compression::None, 0),
+                Compressor::new(crate::compress::Compression::None, 0)
+                    .with_lossless(cfg.lossless),
                 false,
                 n_params,
                 secret,
@@ -391,7 +398,8 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
                     leader,
                     cfg.protocol,
                     cfg.streams,
-                    Compressor::new(cfg.compression, cfg.seed ^ ((0x6A7Eu64 << 16) | c as u64)),
+                    Compressor::new(cfg.compression, cfg.seed ^ ((0x6A7Eu64 << 16) | c as u64))
+                        .with_lossless(cfg.lossless),
                     cfg.error_feedback,
                     n_params,
                     secret,
@@ -401,7 +409,8 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
                     gw,
                     cfg.protocol,
                     cfg.streams,
-                    Compressor::new(crate::compress::Compression::None, 0),
+                    Compressor::new(crate::compress::Compression::None, 0)
+                        .with_lossless(cfg.lossless),
                     false,
                     n_params,
                     secret,
@@ -481,6 +490,8 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
             seq_len,
             wal: None,
             wal_prev_params: None,
+            wal_param_raw: 0,
+            wal_param_enc: 0,
             async_resume: None,
             buffered_resume: None,
         };
@@ -1180,6 +1191,14 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
     /// headline number.
     pub fn inter_region_wire_bytes(&self) -> u64 {
         self.wan.inter_region_bytes()
+    }
+
+    /// WAL parameter-chain bytes `(raw, stored)`: what the per-round
+    /// param records would have cost as plain words × 4 vs. what the
+    /// delta-varint lossless stage actually wrote. `(0, 0)` when no WAL
+    /// is attached.
+    pub fn wal_param_bytes(&self) -> (u64, u64) {
+        (self.wal_param_raw, self.wal_param_enc)
     }
 
     /// The node hosting the global model (the placement decision).

@@ -166,27 +166,36 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
         w.put_u64(idx as u64);
         // --- global params: periodic full snapshot, XOR delta between.
         // XOR of bit patterns (never f32 arithmetic) keeps the chain
-        // bit-exact through NaNs, -0.0 and denormals alike.
+        // bit-exact through NaNs, -0.0 and denormals alike. Each leaf's
+        // words go through the delta-varint lossless stage (WAL v3):
+        // XOR deltas are mostly zero and collapse to ~1 byte per word.
         let snapshot =
             idx % SNAPSHOT_EVERY == 0 || self.wal_prev_params.is_none();
         w.put_u8(if snapshot { 0 } else { 1 });
         w.put_usize(bits.len());
-        if snapshot {
-            for leaf in &bits {
-                w.put_usize(leaf.len());
-                for &b in leaf {
-                    w.put_u32(b);
-                }
-            }
-        } else {
-            let prev = self.wal_prev_params.as_ref().expect("delta has a base");
-            for (leaf, pleaf) in bits.iter().zip(prev) {
+        let mut delta_words: Vec<u32> = Vec::new();
+        let mut blob: Vec<u8> = Vec::new();
+        for (li, leaf) in bits.iter().enumerate() {
+            w.put_usize(leaf.len());
+            let words: &[u32] = if snapshot {
+                leaf
+            } else {
+                let prev = self.wal_prev_params.as_ref().expect("delta has a base");
+                let pleaf = &prev[li];
                 debug_assert_eq!(leaf.len(), pleaf.len(), "model shape is fixed");
-                w.put_usize(leaf.len());
-                for (&b, &p) in leaf.iter().zip(pleaf) {
-                    w.put_u32(b ^ p);
-                }
-            }
+                delta_words.clear();
+                delta_words.extend(leaf.iter().zip(pleaf).map(|(&b, &p)| b ^ p));
+                &delta_words
+            };
+            blob.clear();
+            crate::compress::lossless::encode_words_append(
+                crate::compress::LosslessStage::DeltaVarint,
+                words,
+                &mut blob,
+            );
+            w.put_bytes(&blob);
+            self.wal_param_raw += words.len() as u64 * 4;
+            self.wal_param_enc += blob.len() as u64;
         }
         // --- running counters
         w.put_u64(self.global_version);
@@ -404,16 +413,22 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
         );
         let tag = r.get_u8()?;
         let n_leaves = r.get_usize()?;
+        let mut words: Vec<u32> = Vec::new();
         match tag {
             0 => {
                 bits.clear();
                 for _ in 0..n_leaves {
                     let n = r.get_usize()?;
-                    let mut leaf = Vec::with_capacity(n);
-                    for _ in 0..n {
-                        leaf.push(r.get_u32()?);
-                    }
-                    bits.push(leaf);
+                    let blob = r.get_bytes()?;
+                    crate::compress::lossless::decode_words(blob, &mut words)
+                        .with_context(|| format!("WAL record {idx}: snapshot leaf"))?;
+                    anyhow::ensure!(
+                        words.len() == n,
+                        "WAL record {idx}: snapshot leaf decodes to {} words, \
+                         header says {n}",
+                        words.len()
+                    );
+                    bits.push(words.clone());
                 }
             }
             1 => {
@@ -434,8 +449,17 @@ impl<'a, B: ComputeBackend + ?Sized> Coordinator<'a, B> {
                         "WAL record {idx}: delta leaf size {n} != {}",
                         leaf.len()
                     );
-                    for b in leaf.iter_mut() {
-                        *b ^= r.get_u32()?;
+                    let blob = r.get_bytes()?;
+                    crate::compress::lossless::decode_words(blob, &mut words)
+                        .with_context(|| format!("WAL record {idx}: delta leaf"))?;
+                    anyhow::ensure!(
+                        words.len() == n,
+                        "WAL record {idx}: delta leaf decodes to {} words, \
+                         header says {n}",
+                        words.len()
+                    );
+                    for (b, &d) in leaf.iter_mut().zip(&words) {
+                        *b ^= d;
                     }
                 }
             }

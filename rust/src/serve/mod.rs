@@ -31,6 +31,7 @@ pub use traffic::{ArrivalStream, TrafficSpec, SECS_PER_DAY};
 use anyhow::{ensure, Result};
 
 use crate::checkpoint::Checkpoint;
+use crate::compress::LosslessStage;
 use crate::config::ExperimentConfig;
 use crate::cost::{CostBreakdown, PriceBook};
 use crate::netsim::Protocol;
@@ -57,6 +58,10 @@ pub struct ServeConfig {
     pub refresh_period_secs: f64,
     /// serialized model bytes pushed per refresh
     pub model_bytes: u64,
+    /// lossless wire stage the publisher applies to refresh payloads
+    /// (the training run's `cfg.lossless`; sizes flow through
+    /// [`crate::transport::dense_payload_bytes`])
+    pub lossless: LosslessStage,
     /// cloud the training leader publishes from
     pub source_cloud: usize,
     pub protocol: Protocol,
@@ -87,6 +92,7 @@ impl Default for ServeConfig {
             max_batch: 16,
             refresh_period_secs: 4.0 * 3600.0,
             model_bytes: 5_200_000_000,
+            lossless: LosslessStage::None,
             source_cloud: 0,
             protocol: Protocol::Grpc,
             streams: 16,
@@ -110,6 +116,7 @@ impl ServeConfig {
             protocol: exp.protocol,
             streams: exp.streams,
             price_book: exp.price_book.clone(),
+            lossless: exp.lossless,
             ..ServeConfig::default()
         }
     }
@@ -118,9 +125,11 @@ impl ServeConfig {
     /// count (service times), serialized size (refresh payloads) and
     /// version lineage all come from the checkpoint.
     pub fn with_checkpoint(mut self, ckpt: &Checkpoint) -> ServeConfig {
-        let numel = ckpt.params.numel() as u64;
-        self.service.n_params = numel;
-        self.model_bytes = numel * 4;
+        self.service.n_params = ckpt.params.numel() as u64;
+        // the same payload-size accessor the training broadcast uses,
+        // so a lossless stage reprices the refresh push identically
+        self.model_bytes =
+            crate::transport::dense_payload_bytes(&ckpt.params, self.lossless);
         self.initial_version = ckpt.global_version;
         self.name = format!("{}@r{}", self.name, ckpt.round);
         self
@@ -297,6 +306,22 @@ mod tests {
         assert_eq!(cfg.initial_version, 21);
         assert!(cfg.name.ends_with("@r7"));
         cfg.validate().unwrap();
+
+        // a lossless stage reprices the refresh payload through the
+        // same accessor the training broadcast uses — smaller on this
+        // constant-leaf checkpoint, and exactly the transport's number
+        let mut staged = ServeConfig::default();
+        staged.lossless = LosslessStage::Auto;
+        let staged = staged.with_checkpoint(&ckpt);
+        assert_eq!(
+            staged.model_bytes,
+            crate::transport::dense_payload_bytes(
+                &ckpt.params,
+                LosslessStage::Auto
+            )
+        );
+        assert!(staged.model_bytes < 96 * 4, "{}", staged.model_bytes);
+        staged.validate().unwrap();
     }
 
     #[test]

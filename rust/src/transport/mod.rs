@@ -13,7 +13,7 @@
 
 use anyhow::{Context, Result};
 
-use crate::compress::{Compressor, ErrorFeedback};
+use crate::compress::{lossless, Compressor, ErrorFeedback, LosslessStage};
 use crate::crypto::{open_in_place, seal_in_place, TransportKey, SEAL_OVERHEAD_BYTES};
 use crate::model::ParamSet;
 use crate::netsim::{NetError, Protocol, TransferStats, Wan, WanScratch};
@@ -43,6 +43,9 @@ pub struct Channel {
     flat_buf: Vec<f32>,
     frame_buf: Vec<u8>,
     recv_flat: Vec<f32>,
+    /// lossless-stage strip buffer for receive-side decodes (recomputed
+    /// every call, so it is not part of the WAL'd channel state)
+    stage_scratch: Vec<u8>,
 }
 
 /// What arrives at the far end, plus the cost of getting it there.
@@ -90,6 +93,7 @@ impl Channel {
             flat_buf: Vec::new(),
             frame_buf: Vec::new(),
             recv_flat: Vec::new(),
+            stage_scratch: Vec::new(),
         }
     }
 
@@ -198,9 +202,11 @@ impl Channel {
         let n_elems =
             u32::from_le_bytes(self.frame_buf[20..24].try_into().unwrap()) as usize;
         self.recv_flat.resize(n_elems, 0.0);
-        Compressor::decompress_into(
+        Compressor::decompress_staged_into(
             self.compressor.scheme,
+            self.compressor.lossless,
             &self.frame_buf[FRAME_HEADER_BYTES..],
+            &mut self.stage_scratch,
             &mut self.recv_flat,
         )?;
 
@@ -234,9 +240,11 @@ impl Channel {
             }
         }
         self.recv_flat.resize(self.flat_buf.len(), 0.0);
-        Compressor::decompress_into(
+        Compressor::decompress_staged_into(
             self.compressor.scheme,
+            self.compressor.lossless,
             &self.frame_buf,
+            &mut self.stage_scratch,
             &mut self.recv_flat,
         )?;
         ParamSet::from_flat(&self.recv_flat, update)
@@ -329,9 +337,12 @@ impl Channel {
     {
         self.flat_buf.resize(params.numel(), 0.0);
         params.write_flat(&mut self.flat_buf);
-        self.frame_buf.clear();
-        self.frame_buf.resize(self.flat_buf.len() * 4, 0);
-        f32s_to_le_into(&self.flat_buf, &mut self.frame_buf);
+        encode_dense_payload(
+            &self.flat_buf,
+            self.compressor.lossless,
+            &mut self.stage_scratch,
+            &mut self.frame_buf,
+        );
         let n_bytes = match &mut self.send_key {
             Some(key) => {
                 let (nonce, tag) = seal_in_place(key, &mut self.frame_buf);
@@ -353,6 +364,52 @@ impl Channel {
             .context("params broadcast transfer")?;
         Ok((stats.time_s, stats.wire_bytes))
     }
+}
+
+/// Encode a flat dense f32 payload under `stage` into `out` (cleared
+/// first): exactly the broadcast-frame body [`Channel::send_params`]
+/// puts on the wire before sealing. `LosslessStage::None` yields the
+/// raw little-endian bytes; any other stage yields its lossless frame.
+fn encode_dense_payload(
+    flat: &[f32],
+    stage: LosslessStage,
+    scratch: &mut Vec<u8>,
+    out: &mut Vec<u8>,
+) {
+    if stage.is_none() {
+        out.clear();
+        out.resize(flat.len() * 4, 0);
+        f32s_to_le_into(flat, out);
+        return;
+    }
+    scratch.clear();
+    scratch.resize(flat.len() * 4, 0);
+    f32s_to_le_into(flat, scratch);
+    out.clear();
+    lossless::encode_append(stage, scratch, out);
+}
+
+/// Exact dense-broadcast payload size (pre-seal) for `params` under
+/// `stage`. This is the single source of truth shared by the training
+/// broadcast ([`Channel::send_params`]) and the serve checkpoint-refresh
+/// maths (`ServeConfig::with_checkpoint`), so a lossless stage reprices
+/// both consistently.
+pub fn dense_payload_bytes(params: &ParamSet, stage: LosslessStage) -> u64 {
+    if stage.is_none() {
+        return dense_param_bytes(params.numel() as u64);
+    }
+    let mut flat = vec![0.0f32; params.numel()];
+    params.write_flat(&mut flat);
+    let (mut scratch, mut out) = (Vec::new(), Vec::new());
+    encode_dense_payload(&flat, stage, &mut scratch, &mut out);
+    out.len() as u64
+}
+
+/// Raw dense parameter bytes (`numel × 4`) — the value-independent size
+/// used where only a parameter *count* is known (CLI `--model-params`,
+/// failover forward pricing).
+pub fn dense_param_bytes(numel: u64) -> u64 {
+    numel * 4
 }
 
 #[cfg(test)]
@@ -461,6 +518,70 @@ mod tests {
         // lossless codec: loopback is the identity
         let mut dense = channel(Compression::None, false);
         assert_eq!(dense.codec_loopback(&u).unwrap(), u);
+    }
+
+    fn staged_channel(stage: LosslessStage, encrypted: bool) -> Channel {
+        Channel::new(
+            1,
+            0,
+            Protocol::Grpc,
+            8,
+            Compressor::new(Compression::None, 3).with_lossless(stage),
+            false,
+            256,
+            encrypted.then_some(b"secret".as_slice()),
+        )
+    }
+
+    #[test]
+    fn staged_channel_roundtrips_and_shrinks_payload() {
+        // a near-constant dense update collapses under the stage; decode
+        // stays bit-exact and payload_bytes sees post-lossless sizes
+        let u = ParamSet {
+            leaves: vec![vec![1.5f32; 256]],
+        };
+        let mut w = wan();
+        let mut plain = channel(Compression::None, true);
+        let mut staged = staged_channel(LosslessStage::Auto, true);
+        let dp = plain.send_update(&u, 0.1, 5, 1.0, &mut w).unwrap();
+        let ds = staged.send_update(&u, 0.1, 5, 1.0, &mut w).unwrap();
+        assert_eq!(ds.update, u);
+        assert_eq!(ds.update, dp.update);
+        assert!(
+            staged.payload_bytes < plain.payload_bytes / 4,
+            "staged={} plain={}",
+            staged.payload_bytes,
+            plain.payload_bytes
+        );
+        // loopback composes with the stage too
+        assert_eq!(staged.codec_loopback(&u).unwrap(), u);
+        // and a sine-ramp update survives every stage exactly
+        let ramp = update(256);
+        for stage in LosslessStage::ALL {
+            let mut ch = staged_channel(stage, false);
+            let d = ch.send_update(&ramp, 0.0, 1, 1.0, &mut w).unwrap();
+            assert_eq!(d.update, ramp, "{stage:?}");
+        }
+    }
+
+    #[test]
+    fn staged_broadcast_matches_payload_accessor() {
+        // broadcast pricing and the serve-side accessor must agree exactly
+        let u = ParamSet {
+            leaves: vec![vec![2.0f32; 192], vec![-1.0f32; 64]],
+        };
+        for stage in LosslessStage::ALL {
+            let mut ch = staged_channel(stage, false);
+            let mut w = wan();
+            ch.send_params(&u, &mut w).unwrap();
+            assert_eq!(ch.payload_bytes, dense_payload_bytes(&u, stage), "{stage:?}");
+        }
+        // never expands past the raw-frame tag, and a constant-ish model
+        // shrinks hard under Auto
+        let auto = dense_payload_bytes(&u, LosslessStage::Auto);
+        assert!(auto <= dense_param_bytes(256) + lossless::RAW_FRAME_OVERHEAD as u64);
+        assert!(auto < dense_param_bytes(256) / 4, "{auto}");
+        assert_eq!(dense_param_bytes(256), 1024);
     }
 
     #[test]

@@ -42,7 +42,9 @@ use crate::model::ParamSet;
 pub const WAL_MAGIC: &[u8; 8] = b"XFEDWAL1";
 /// Bump on any incompatible record-layout change.
 /// v2: RoundRecord gained the per-class wire-byte split.
-pub const WAL_VERSION: u32 = 2;
+/// v3: parameter snapshots/deltas are stored as delta-varint lossless
+/// blobs (see [`crate::compress::lossless`]) instead of raw `u32` words.
+pub const WAL_VERSION: u32 = 3;
 /// Frame overhead per record (length + checksum).
 pub const FRAME_BYTES: u64 = 12;
 /// A full parameter snapshot is written every this many records; records

@@ -37,6 +37,7 @@ fn cfg(mode: &str) -> ExperimentConfig {
     c.corpus = CorpusConfig { n_docs: 90, doc_sentences: 3, n_topics: 6, seed: 7 };
     match mode {
         "sync" => {}
+        "lossless" => c.lossless = crossfed::compress::LosslessStage::Auto,
         "async" => c.aggregation = AggregationKind::Async { alpha: 0.6 },
         "hier" => c.hierarchical = true,
         "hier-par" => {
@@ -147,9 +148,15 @@ fn assert_identical(a: &RunResult, b: &RunResult, ctx: &str) {
 
 #[test]
 fn repeat_runs_are_bit_identical() {
-    for mode in
-        ["sync", "async", "hier", "hier-par", "hier-faulty", "hier-async-spot"]
-    {
+    for mode in [
+        "sync",
+        "lossless",
+        "async",
+        "hier",
+        "hier-par",
+        "hier-faulty",
+        "hier-async-spot",
+    ] {
         let a = run(mode);
         let b = run(mode);
         assert_identical(&a, &b, mode);
@@ -158,13 +165,58 @@ fn repeat_runs_are_bit_identical() {
 
 #[test]
 fn thread_count_does_not_change_results() {
-    for mode in
-        ["sync", "async", "hier", "hier-par", "hier-faulty", "hier-async-spot"]
-    {
+    for mode in [
+        "sync",
+        "lossless",
+        "async",
+        "hier",
+        "hier-par",
+        "hier-faulty",
+        "hier-async-spot",
+    ] {
         let serial = par::with_threads(1, || run(mode));
         let par4 = par::with_threads(4, || run(mode));
         assert_identical(&serial, &par4, &format!("{mode} 1T vs 4T"));
     }
+}
+
+#[test]
+fn lossless_stage_never_perturbs_losses() {
+    // the lossless stage is pure wire pricing: every loss / eval /
+    // epsilon in the history is bit-identical to the unstaged run,
+    // while the staged run ships strictly fewer bytes
+    let base = run("sync");
+    let staged = run("lossless");
+    assert_eq!(base.history.len(), staged.history.len());
+    for (a, b) in base.history.iter().zip(&staged.history) {
+        let r = a.round;
+        assert_eq!(
+            a.train_loss.to_bits(),
+            b.train_loss.to_bits(),
+            "round {r}: train loss"
+        );
+        assert_eq!(
+            a.eval_loss.map(f32::to_bits),
+            b.eval_loss.map(f32::to_bits),
+            "round {r}: eval loss"
+        );
+        assert_eq!(
+            a.eval_acc.map(f64::to_bits),
+            b.eval_acc.map(f64::to_bits),
+            "round {r}: eval acc"
+        );
+        assert_eq!(a.epsilon.to_bits(), b.epsilon.to_bits(), "round {r}");
+    }
+    assert_eq!(
+        base.final_eval_loss.to_bits(),
+        staged.final_eval_loss.to_bits()
+    );
+    assert!(
+        staged.wire_bytes < base.wire_bytes,
+        "staged {} vs plain {}",
+        staged.wire_bytes,
+        base.wire_bytes
+    );
 }
 
 #[test]

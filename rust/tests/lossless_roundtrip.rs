@@ -1,0 +1,181 @@
+//! Property tests for the lossless wire-compression stage.
+//!
+//! Every frame must roundtrip byte-exact — `to_bits`-exact for float
+//! payloads, including NaN payload bits, ±infinity, denormals, ±0.0 and
+//! alternating signs — at any input length and alignment. The Auto
+//! stage must pick the smallest of {xor, varint, raw} every time, and
+//! truncated frames must fail cleanly rather than decode garbage.
+
+use crossfed::compress::{lossless, Compression, Compressor, LosslessStage};
+use crossfed::testkit::proptest_kit::{forall, Gen};
+
+/// Encode under `stage`, decode, demand byte equality; returns the
+/// encoded size.
+fn roundtrip(stage: LosslessStage, bytes: &[u8]) -> usize {
+    let mut enc = Vec::new();
+    lossless::encode_append(stage, bytes, &mut enc);
+    let mut dec = Vec::new();
+    lossless::decode_into(&enc, &mut dec).unwrap();
+    assert_eq!(dec, bytes, "{stage:?} {} bytes", bytes.len());
+    enc.len()
+}
+
+fn specials() -> Vec<u32> {
+    vec![
+        f32::NAN.to_bits(),
+        0x7FC0_0001, // NaN with payload bits
+        0xFF80_0001, // negative NaN variant
+        f32::INFINITY.to_bits(),
+        f32::NEG_INFINITY.to_bits(),
+        1,           // smallest positive denormal
+        0x8000_0001, // smallest negative denormal
+        0,           // +0.0
+        0x8000_0000, // -0.0
+        f32::MAX.to_bits(),
+        f32::MIN.to_bits(),
+        f32::MIN_POSITIVE.to_bits(),
+    ]
+}
+
+#[test]
+fn random_walk_floats_roundtrip_exact() {
+    forall("lossless random walk", 24, |g: &mut Gen| {
+        let n = g.usize_in(0..20_000);
+        let mut x = g.f32_in(-10.0..10.0);
+        let mut bytes = Vec::with_capacity(n * 4 + 3);
+        for _ in 0..n {
+            x += g.f32_in(-0.01..0.01);
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        // sometimes leave an unaligned tail behind the word view
+        for _ in 0..g.usize_in(0..4) {
+            bytes.push(0x5A);
+        }
+        for stage in LosslessStage::ALL {
+            roundtrip(stage, &bytes);
+        }
+        // a smooth walk shares exponents and high mantissa bits — the
+        // float stage must actually win on it (not just roundtrip)
+        if n >= 4096 {
+            let xor = roundtrip(LosslessStage::XorFloat, &bytes);
+            assert!(xor < bytes.len(), "xor {xor} >= raw {}", bytes.len());
+        }
+    });
+}
+
+#[test]
+fn adversarial_floats_roundtrip_bit_exact() {
+    let specials = specials();
+    forall("lossless adversarial", 24, |g: &mut Gen| {
+        let n = g.usize_in(1..5_000);
+        let kind = g.usize_in(0..4);
+        let mut bytes = Vec::with_capacity(n * 4);
+        for i in 0..n {
+            let w = match kind {
+                // pure special-value soup
+                0 => *g.choose(&specials),
+                // constant stream
+                1 => 0x3FC0_0000,
+                // alternating sign, same magnitude
+                2 => 2.5f32.to_bits() | ((i as u32 & 1) << 31),
+                // smooth ramp with specials sprinkled in
+                _ => {
+                    if i % 97 == 0 {
+                        *g.choose(&specials)
+                    } else {
+                        ((i as f32) * 0.001).to_bits()
+                    }
+                }
+            };
+            bytes.extend_from_slice(&w.to_le_bytes());
+        }
+        for stage in LosslessStage::ALL {
+            let n_enc = roundtrip(stage, &bytes);
+            if stage == LosslessStage::Auto {
+                // Auto never expands past the raw-frame overhead
+                assert!(n_enc <= bytes.len() + lossless::RAW_FRAME_OVERHEAD);
+            }
+        }
+    });
+}
+
+#[test]
+fn auto_never_loses_to_either_stage_or_raw() {
+    forall("auto minimality", 16, |g: &mut Gen| {
+        let n = g.usize_in(0..8_192);
+        let bytes: Vec<u8> = (0..n).map(|_| (g.u64() & 0xFF) as u8).collect();
+        let best = [LosslessStage::XorFloat, LosslessStage::DeltaVarint]
+            .iter()
+            .map(|&s| {
+                let mut e = Vec::new();
+                lossless::encode_append(s, &bytes, &mut e);
+                e.len()
+            })
+            .chain([bytes.len() + lossless::RAW_FRAME_OVERHEAD])
+            .min()
+            .unwrap();
+        let mut auto = Vec::new();
+        lossless::encode_append(LosslessStage::Auto, &bytes, &mut auto);
+        assert_eq!(auto.len(), best, "n={n}");
+        let mut dec = Vec::new();
+        lossless::decode_into(&auto, &mut dec).unwrap();
+        assert_eq!(dec, bytes);
+    });
+}
+
+#[test]
+fn staged_codec_decodes_identically_to_unstaged() {
+    // the stage wraps the lossy codec transparently: what the receiver
+    // decodes is bit-identical with and without it, for every scheme
+    forall("staged codec roundtrip", 8, |g: &mut Gen| {
+        let n = g.usize_in(1..10_000);
+        let xs: Vec<f32> = (0..n).map(|_| g.f32_in(-1.0..1.0)).collect();
+        for &scheme in &[
+            Compression::None,
+            Compression::Fp16,
+            Compression::Int8,
+            Compression::TopK { ratio: 0.05 },
+            Compression::RandK { ratio: 0.02 },
+        ] {
+            let mut plain = Compressor::new(scheme, 9);
+            let want = Compressor::decompress(&plain.compress(&xs)).unwrap();
+            let want: Vec<u32> = want.iter().map(|x| x.to_bits()).collect();
+            for stage in LosslessStage::ALL {
+                let mut c = Compressor::new(scheme, 9).with_lossless(stage);
+                let mut frame = Vec::new();
+                c.compress_append(&xs, &mut frame);
+                let mut scratch = Vec::new();
+                let mut out = vec![0.0f32; n];
+                Compressor::decompress_staged_into(
+                    scheme,
+                    stage,
+                    &frame,
+                    &mut scratch,
+                    &mut out,
+                )
+                .unwrap();
+                let got: Vec<u32> = out.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(got, want, "{scheme:?} {stage:?} n={n}");
+            }
+        }
+    });
+}
+
+#[test]
+fn truncated_frames_error_cleanly() {
+    forall("truncated frames", 12, |g: &mut Gen| {
+        let n = g.usize_in(1..2_000);
+        let bytes: Vec<u8> = (0..n * 4).map(|i| (i % 251) as u8).collect();
+        for stage in [LosslessStage::XorFloat, LosslessStage::DeltaVarint] {
+            let mut enc = Vec::new();
+            lossless::encode_append(stage, &bytes, &mut enc);
+            let cut = g.usize_in(0..enc.len());
+            let mut dec = Vec::new();
+            assert!(
+                lossless::decode_into(&enc[..cut], &mut dec).is_err(),
+                "{stage:?} cut={cut} of {}",
+                enc.len()
+            );
+        }
+    });
+}

@@ -123,6 +123,42 @@ fn codecs_bit_identical_serial_vs_parallel() {
 }
 
 #[test]
+fn lossless_stages_bit_identical_serial_vs_parallel() {
+    use crossfed::compress::{lossless, LosslessStage};
+    for &n in &[0usize, 1, 5, 4095, 4096, 4097, 100_003] {
+        let xs: Vec<f32> =
+            (0..n).map(|i| ((i as f32) * 0.013).sin() * 3.0).collect();
+        let mut bytes: Vec<u8> =
+            xs.iter().flat_map(|x| x.to_le_bytes()).collect();
+        // odd tail so the word view is misaligned with the byte length
+        bytes.extend_from_slice(&[0xAB, 0xCD, 0xEF][..n.min(3)]);
+        for stage in LosslessStage::ALL {
+            let enc = |threads: usize| {
+                par::with_threads(threads, || {
+                    let mut out = Vec::new();
+                    lossless::encode_append(stage, &bytes, &mut out);
+                    out
+                })
+            };
+            let es = enc(1);
+            let ep = enc(PAR_T);
+            assert_eq!(es, ep, "{stage:?} n={n} encode");
+            let dec = |threads: usize| {
+                par::with_threads(threads, || {
+                    let mut out = Vec::new();
+                    lossless::decode_into(&es, &mut out).unwrap();
+                    out
+                })
+            };
+            let ds = dec(1);
+            let dp = dec(PAR_T);
+            assert_eq!(ds, dp, "{stage:?} n={n} decode");
+            assert_eq!(ds, bytes, "{stage:?} n={n} roundtrip");
+        }
+    }
+}
+
+#[test]
 fn error_feedback_residual_identical_across_thread_counts() {
     let n = 50_000;
     let xs: Vec<f32> = (0..n).map(|i| ((i as f32) * 0.11).cos()).collect();

@@ -11,6 +11,8 @@ Compared metrics:
   - sim_scale[*].events_per_sec
   - serve_throughput.events_per_sec  (serving day on the event engine)
   - serve_throughput.requests_per_sec
+  - lossless.{xor,varint,auto}_{encode,decode}_gbps  (wire stage codecs)
+  - lossless.{xor,varint,auto}_ratio  (compression on the bench payload)
 
 A fresh number more than TOLERANCE below its floor is a regression.
 While the committed floors are null (no authoring container has had a
@@ -59,6 +61,11 @@ def metric_paths(floors):
     if isinstance(floors.get("serve_throughput"), dict):
         paths.append("serve_throughput.events_per_sec")
         paths.append("serve_throughput.requests_per_sec")
+    if isinstance(floors.get("lossless"), dict):
+        for stage in ("xor", "varint", "auto"):
+            paths.append(f"lossless.{stage}_encode_gbps")
+            paths.append(f"lossless.{stage}_decode_gbps")
+            paths.append(f"lossless.{stage}_ratio")
     return paths
 
 
